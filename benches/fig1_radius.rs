@@ -1,0 +1,48 @@
+//! Bench: regenerate **paper Fig. 1** — E[Rad(D_new)/Rad(D_gap)] vs
+//! duality gap, 2 dictionaries x 3 lambda ratios, 50 trials at
+//! (m, n) = (100, 500).
+//!
+//! Expected shape (paper): every ratio <= 1 (Theorem 2); ratios dip to
+//! ~0.4-0.6 at moderate gaps; curves level near ~0.7 as gap -> 0.
+//!
+//! Env: HOLDER_BENCH_QUICK=1 shrinks shapes for smoke runs.
+
+use holder_screening::experiments::fig1;
+
+fn main() {
+    let quick = std::env::var("HOLDER_BENCH_QUICK").is_ok();
+    let mut cfg = if quick {
+        fig1::Fig1Config::quick()
+    } else {
+        fig1::Fig1Config::default()
+    };
+    cfg.threads = holder_screening::par::default_threads();
+    let sw = holder_screening::util::timer::Stopwatch::start();
+    let curves = fig1::run(&cfg);
+    let secs = sw.elapsed_secs();
+
+    println!("# Fig. 1 — radius ratio Rad(holder)/Rad(gap_dome) vs gap");
+    println!("# {} trials, (m, n) = ({}, {}), {:.1}s\n",
+             cfg.trials, cfg.m, cfg.n, secs);
+    println!("{}", fig1::table(&curves).render());
+
+    // Headline numbers: min ratio and the gap->0 plateau per cell.
+    println!("\n## headline");
+    for c in &curves {
+        let min = c.ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+        let plateau = c.ratios.last().cloned().unwrap_or(f64::NAN);
+        println!(
+            "{:<9} lam/lam_max={:.1}: min ratio {:.3}, smallest-gap ratio {:.3}",
+            c.dict.name(), c.lam_ratio, min, plateau
+        );
+    }
+    let bad = fig1::check_shape(&curves);
+    if bad.is_empty() {
+        println!("\nshape check vs paper: OK");
+    } else {
+        for b in &bad {
+            println!("\nshape check FAILED: {b}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,66 @@
+//! Bench: regenerate **paper Fig. 2** — Dolan-More performance profiles
+//! of FISTA + {GAP sphere, GAP dome, Holder dome} screening under a
+//! calibrated flop budget (rho(1e-7) = 50% for the Holder dome).
+//!
+//! Expected shape (paper): the Holder-dome profile dominates in (at
+//! least) 5 of 6 panels, with the easy Gaussian panel roughly tied —
+//! the sphere's cheaper test buys extra iterations there.
+//!
+//! Env: HOLDER_BENCH_QUICK=1 shrinks shapes; HOLDER_BENCH_TRIALS=N
+//! overrides the per-cell trial count (paper: 200).
+
+use holder_screening::dict::DictKind;
+use holder_screening::experiments::fig2;
+
+fn main() {
+    let quick = std::env::var("HOLDER_BENCH_QUICK").is_ok();
+    let trials_override: Option<usize> = std::env::var("HOLDER_BENCH_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let mut cfg = if quick {
+        fig2::Fig2Config::quick()
+    } else {
+        fig2::Fig2Config::default()
+    };
+    if let Some(t) = trials_override {
+        cfg.trials = t;
+    }
+    cfg.threads = holder_screening::par::default_threads();
+    cfg.include_baseline = true;
+
+    println!("# Fig. 2 — performance profiles, {} trials/cell, (m, n) = ({}, {})",
+             cfg.trials, cfg.m, cfg.n);
+    let sw = holder_screening::util::timer::Stopwatch::start();
+
+    // Run cell-by-cell so progress is visible and Toeplitz cells can
+    // use fewer trials (they converge ~10x slower per instance).
+    let mut panels = Vec::new();
+    for &dict in &[DictKind::Gaussian, DictKind::Toeplitz] {
+        for &ratio in &[0.3, 0.5, 0.8] {
+            let mut cell = cfg.clone();
+            cell.dicts = vec![dict];
+            cell.lam_ratios = vec![ratio];
+            if dict == DictKind::Toeplitz && !quick {
+                cell.trials = cfg.trials.min(60);
+            }
+            let t0 = holder_screening::util::timer::Stopwatch::start();
+            let mut out = fig2::run(&cell);
+            eprintln!("cell {}:{ratio} done in {:.1}s (budget {})",
+                      dict.name(), t0.elapsed_secs(), out[0].budget);
+            panels.append(&mut out);
+        }
+    }
+    println!("# total {:.1}s\n", sw.elapsed_secs());
+    for p in &panels {
+        println!("{}", fig2::panel_table(p));
+    }
+    let bad = fig2::check_shape(&panels, cfg.calib_tau);
+    if bad.is_empty() {
+        println!("shape check vs paper: OK (Holder dome leads / ties)");
+    } else {
+        for b in &bad {
+            println!("shape check FAILED: {b}");
+        }
+        std::process::exit(1);
+    }
+}

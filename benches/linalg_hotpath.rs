@@ -1,0 +1,63 @@
+//! Bench: the BLAS-1/2 substrate hot paths (profiling anchor for the
+//! EXPERIMENTS.md perf log).  Reports GB/s and GFLOP/s.
+
+use holder_screening::benchkit::Bench;
+use holder_screening::linalg::{self, Mat};
+use holder_screening::util::rng::Pcg64;
+
+fn main() {
+    let bench = Bench::default();
+    let mut rng = Pcg64::new(0);
+    println!("# linalg hot paths");
+
+    for (m, n) in [(100, 500), (100, 5000), (400, 4000)] {
+        let mut a = Mat::zeros(m, n);
+        for j in 0..n {
+            for v in a.col_mut(j) {
+                *v = rng.normal();
+            }
+        }
+        let mut r = vec![0.0; m];
+        rng.fill_normal(&mut r);
+        let mut x = vec![0.0; n];
+        rng.fill_normal(&mut x);
+        let mut out_n = vec![0.0; n];
+        let mut out_m = vec![0.0; m];
+
+        let flops = 2.0 * m as f64 * n as f64;
+        let bytes = 8.0 * (m * n) as f64;
+
+        let s = bench.report(&format!("gemv_t {m}x{n}"), || {
+            linalg::gemv_t(&a, &r, &mut out_n);
+            out_n[0]
+        });
+        println!(
+            "    -> {:.2} GFLOP/s, {:.2} GB/s",
+            flops / s.mean / 1e9,
+            bytes / s.mean / 1e9
+        );
+        let s = bench.report(&format!("gemv   {m}x{n}"), || {
+            linalg::gemv(&a, &x, &mut out_m);
+            out_m[0]
+        });
+        println!(
+            "    -> {:.2} GFLOP/s, {:.2} GB/s",
+            flops / s.mean / 1e9,
+            bytes / s.mean / 1e9
+        );
+    }
+
+    let v: Vec<f64> = (0..100_000).map(|i| i as f64 * 0.1).collect();
+    let w: Vec<f64> = (0..100_000).map(|i| i as f64 * 0.2).collect();
+    let s = bench.report("dot 100k", || linalg::dot(&v, &w));
+    println!(
+        "    -> {:.2} GFLOP/s",
+        2.0 * 100_000.0 / s.mean / 1e9
+    );
+    let mut st = vec![0.0; 100_000];
+    let s = bench.report("soft_threshold 100k", || {
+        linalg::soft_threshold(&v, 5.0, &mut st);
+        st[0]
+    });
+    println!("    -> {:.2} Gelem/s", 100_000.0 / s.mean / 1e9);
+}

@@ -1,0 +1,60 @@
+//! Bench: per-iteration screening overhead — the paper's "same
+//! computational burden" claim, measured.
+//!
+//! Times, at (m, n) = (100, 500):
+//!   * one gemv_t (the solver's unavoidable matvec) as the yardstick,
+//!   * region construction + test application for each of the five
+//!     regions (statistics via correlation reuse, no matvecs).
+//!
+//! Expected: every region's screen cost is a small fraction of one
+//! matvec, and holder ~ gap_dome >> gap_sphere only by the
+//! f(psi1, psi2) evaluation.
+
+use holder_screening::benchkit::Bench;
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::flops::FlopCounter;
+use holder_screening::regions::{RegionKind, SafeRegion};
+use holder_screening::screening::{ScreeningEngine, ScreeningState};
+
+fn main() {
+    let cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    let p = generate(&cfg, 0).problem;
+    // A mid-trajectory iterate.
+    let mut x = vec![0.0; p.n()];
+    let step = p.default_step();
+    for _ in 0..10 {
+        let ev = p.eval(&x);
+        for i in 0..p.n() {
+            x[i] = holder_screening::linalg::soft_threshold_scalar(
+                x[i] + step * ev.atr[i], step * p.lam());
+        }
+    }
+    let ev = p.eval(&x);
+
+    let bench = Bench::default();
+    println!("# screening overhead at (m, n) = ({}, {})", p.m(), p.n());
+
+    // Yardstick: one full gemv_t.
+    let mut out = vec![0.0; p.n()];
+    let base = bench.report("gemv_t (A^T r, the solver matvec)", || {
+        holder_screening::linalg::gemv_t(p.a(), &ev.r, &mut out);
+        out[0]
+    });
+
+    for kind in RegionKind::ALL {
+        let label = format!("build+test {}", kind.name());
+        let s = bench.report(&label, || {
+            let region = SafeRegion::build(kind, &p, &x, &ev);
+            let mut engine = ScreeningEngine::new();
+            let state = ScreeningState::new(p.n());
+            let mut flops = FlopCounter::new();
+            engine
+                .compute_keep(&region, &p, &state, &ev.atr, &mut flops)
+                .len()
+        });
+        println!(
+            "    -> {:.2}x of one matvec",
+            s.mean / base.mean.max(1e-12)
+        );
+    }
+}

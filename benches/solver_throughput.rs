@@ -1,0 +1,75 @@
+//! Bench: end-to-end solver throughput (native path) per region, plus
+//! the PJRT artifact path when `make artifacts` has run.
+//!
+//! This is the serving-facing number: solves/second to gap <= 1e-7 on
+//! the paper's instance family.
+
+use holder_screening::benchkit::Bench;
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{solve, Budget, SolverConfig};
+
+fn main() {
+    let cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    let problems: Vec<_> =
+        (0..8u64).map(|s| generate(&cfg, s).problem).collect();
+    let bench = Bench::default();
+    println!("# solver throughput, gap target 1e-7, (m, n) = (100, 500)");
+
+    for region in [
+        None,
+        Some(RegionKind::GapSphere),
+        Some(RegionKind::GapDome),
+        Some(RegionKind::HolderDome),
+    ] {
+        let scfg = SolverConfig {
+            region,
+            budget: Budget::gap(1e-7),
+            ..Default::default()
+        };
+        let mut k = 0usize;
+        let label = format!(
+            "fista + {}",
+            region.map(|r| r.name()).unwrap_or("no_screen")
+        );
+        let s = bench.report(&label, || {
+            let rep = solve(&problems[k % problems.len()], &scfg);
+            k += 1;
+            rep.gap
+        });
+        println!("    -> {:.1} solves/s", 1.0 / s.mean.max(1e-12));
+    }
+
+    // PJRT path (optional).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if dir.join("manifest.json").exists() {
+        use holder_screening::runtime::{
+            ArtifactRegistry, Manifest, PjrtSolver,
+        };
+        let reg = ArtifactRegistry::load(
+            &dir,
+            Some(Manifest::required_for_solver()),
+        )
+        .expect("artifact load");
+        let pjrt = PjrtSolver::new(&reg).unwrap();
+        if reg.manifest.m == 100 && reg.manifest.n == 500 {
+            let mut k = 0usize;
+            let s = bench.report("pjrt fused_holder (f32, masked)", || {
+                let out = pjrt
+                    .solve(
+                        &problems[k % problems.len()],
+                        Some(RegionKind::HolderDome),
+                        400,
+                        1e-5,
+                    )
+                    .unwrap();
+                k += 1;
+                out.gap
+            });
+            println!("    -> {:.2} solves/s", 1.0 / s.mean.max(1e-12));
+        }
+    } else {
+        println!("(artifacts missing; skipping the PJRT path)");
+    }
+}

@@ -1,0 +1,152 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! This example proves all layers compose:
+//!
+//!   L1  Pallas kernels (matvec / prox / dome-screen)          [python]
+//!   L2  fused FISTA+screen JAX graphs, AOT-lowered to HLO     [python]
+//!   RT  PJRT CPU client loads + executes the artifacts        [rust]
+//!   L3  coordinator schedules a 200-instance benchmark batch  [rust]
+//!
+//! Workload: the paper's Fig. 2 protocol — batch Lasso solving over
+//! random (Gaussian-dictionary) instances with Hölder-dome screening —
+//! served once through the PJRT artifact path and once through the
+//! native Rust path, reporting throughput, latency percentiles, and the
+//! headline metric ρ(τ) (fraction of instances reaching gap ≤ τ).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example batch_engine_e2e
+//! ```
+
+use holder_screening::coordinator::{JobEngine, SolveJob};
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::metrics::Registry;
+use holder_screening::regions::RegionKind;
+use holder_screening::runtime::{ArtifactRegistry, Manifest, PjrtSolver};
+use holder_screening::solver::{Budget, SolverConfig};
+use holder_screening::util::timer::Stopwatch;
+
+const REQUESTS: usize = 200;
+const TAU_F32: f64 = 1e-5; // f32 artifact accuracy target
+const TAU_F64: f64 = 1e-7; // native accuracy target (paper's headline τ)
+
+fn main() -> anyhow::Result<()> {
+    // ---- load the AOT artifacts -----------------------------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let reg = ArtifactRegistry::load(
+        &dir,
+        Some(Manifest::required_for_solver()),
+    )?;
+    println!(
+        "PJRT platform: {} | artifact shape {}x{} | fused graphs: {:?}",
+        reg.platform(),
+        reg.manifest.m,
+        reg.manifest.n,
+        reg.loaded_names()
+    );
+    let pjrt = PjrtSolver::new(&reg)?;
+
+    let icfg = InstanceConfig {
+        m: reg.manifest.m,
+        n: reg.manifest.n,
+        kind: DictKind::Gaussian,
+        lam_ratio: 0.5,
+        pulse_width: 4.0,
+    };
+
+    // ---- phase 1: serve the batch through the PJRT artifacts -------
+    println!("\n== phase 1: PJRT artifact path ({REQUESTS} requests) ==");
+    let metrics = Registry::new();
+    let sw = Stopwatch::start();
+    let mut pjrt_hits = 0usize;
+    let mut pjrt_gaps = Vec::with_capacity(REQUESTS);
+    for i in 0..REQUESTS {
+        let p = generate(&icfg, i as u64).problem;
+        let t0 = Stopwatch::start();
+        let out =
+            pjrt.solve(&p, Some(RegionKind::HolderDome), 400, TAU_F32)?;
+        metrics.observe_secs("request_secs", t0.elapsed_secs());
+        if out.gap <= TAU_F32 {
+            pjrt_hits += 1;
+        }
+        pjrt_gaps.push(out.gap);
+    }
+    let pjrt_secs = sw.elapsed_secs();
+    let snap = metrics.snapshot();
+    println!(
+        "throughput: {:.1} req/s | latency p50 {:.1}ms p99 {:.1}ms | \
+         rho({TAU_F32:.0e}) = {:.2}",
+        REQUESTS as f64 / pjrt_secs,
+        snap.f64_or("histograms.request_secs.p50", 0.0) * 1e3,
+        snap.f64_or("histograms.request_secs.p99", 0.0) * 1e3,
+        pjrt_hits as f64 / REQUESTS as f64
+    );
+
+    // ---- phase 2: same batch through the native coordinator --------
+    println!("\n== phase 2: native path via the job engine ==");
+    let engine = JobEngine::new(holder_screening::par::default_threads());
+    let jobs: Vec<SolveJob> = (0..REQUESTS as u64)
+        .map(|i| SolveJob {
+            id: i,
+            instance: icfg.clone(),
+            seed: i,
+            solver: SolverConfig {
+                region: Some(RegionKind::HolderDome),
+                budget: Budget::gap(TAU_F64),
+                ..Default::default()
+            },
+        })
+        .collect();
+    let sw = Stopwatch::start();
+    let results = engine.run_all(jobs);
+    let native_secs = sw.elapsed_secs();
+    let native_hits = results
+        .iter()
+        .filter(|r| r.report.gap <= TAU_F64)
+        .count();
+    println!(
+        "throughput: {:.1} req/s on {} threads | rho({TAU_F64:.0e}) = {:.2}",
+        REQUESTS as f64 / native_secs,
+        engine.threads(),
+        native_hits as f64 / REQUESTS as f64
+    );
+
+    // ---- phase 3: cross-validate the two paths ---------------------
+    println!("\n== phase 3: cross-validation ==");
+    let mut max_diff = 0.0f64;
+    for i in 0..5 {
+        let p = generate(&icfg, i as u64).problem;
+        let a =
+            pjrt.solve(&p, Some(RegionKind::HolderDome), 400, TAU_F32)?;
+        let b = &results[i].report;
+        let d = holder_screening::linalg::max_abs_diff(&a.x, &b.x);
+        max_diff = max_diff.max(d);
+    }
+    println!(
+        "max |x_pjrt − x_native| over 5 shared instances: {max_diff:.2e} \
+         (f32 vs f64 tolerance)"
+    );
+    assert!(max_diff < 1e-2, "backends disagree");
+
+    // headline summary
+    println!("\n== summary ==");
+    println!(
+        "all three layers compose: Pallas kernels -> fused HLO -> PJRT \
+         execute -> coordinator batch"
+    );
+    println!(
+        "PJRT path:   {:.1} req/s, rho({TAU_F32:.0e}) = {:.2}",
+        REQUESTS as f64 / pjrt_secs,
+        pjrt_hits as f64 / REQUESTS as f64
+    );
+    println!(
+        "native path: {:.1} req/s, rho({TAU_F64:.0e}) = {:.2}",
+        REQUESTS as f64 / native_secs,
+        native_hits as f64 / REQUESTS as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: build a Lasso instance, solve it with Hölder-dome
+//! screening, and inspect the report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use holder_screening::prelude::*;
+use holder_screening::regions::RegionKind;
+use holder_screening::solver;
+
+fn main() {
+    // The paper's instance family: (m, n) = (100, 500), columns of A
+    // normalized, y uniform on the sphere, λ = 0.5·λ_max.
+    let config = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    let instance = holder_screening::dict::generate(&config, 42);
+    let problem = &instance.problem;
+    println!(
+        "Lasso instance: A is {}x{}, λ = {:.4} ({}% of λ_max)",
+        problem.m(),
+        problem.n(),
+        problem.lam(),
+        (100.0 * problem.lam() / problem.lam_max()).round()
+    );
+
+    // Solve with FISTA + the paper's Hölder dome, then without
+    // screening, and compare the work done.
+    let with_screen = solver::solve(
+        problem,
+        &SolverConfig {
+            region: Some(RegionKind::HolderDome),
+            budget: Budget::gap(1e-9),
+            ..Default::default()
+        },
+    );
+    let without = solver::solve(
+        problem,
+        &SolverConfig {
+            region: None,
+            budget: Budget::gap(1e-9),
+            ..Default::default()
+        },
+    );
+
+    println!("\n                 with Hölder dome    no screening");
+    println!(
+        "iterations       {:>12}        {:>12}",
+        with_screen.iters, without.iters
+    );
+    println!(
+        "flops            {:>12}        {:>12}",
+        with_screen.flops, without.flops
+    );
+    println!(
+        "final gap        {:>12.2e}        {:>12.2e}",
+        with_screen.gap, without.gap
+    );
+    println!(
+        "atoms screened   {:>9}/{:<3}        {:>9}/{:<3}",
+        with_screen.screened,
+        problem.n(),
+        without.screened,
+        problem.n()
+    );
+    println!(
+        "\nflop saving from screening: {:.0}%",
+        100.0 * (1.0 - with_screen.flops as f64 / without.flops as f64)
+    );
+
+    // Safe screening never changes the solution.
+    let diff = holder_screening::linalg::max_abs_diff(
+        &with_screen.x,
+        &without.x,
+    );
+    println!("solution difference (max |Δx_i|): {diff:.2e}");
+    assert!(diff < 1e-5);
+    println!(
+        "support: {:?}",
+        with_screen.support(1e-9)
+    );
+}

@@ -1,0 +1,90 @@
+//! Sparse deconvolution — the signal-processing workload that motivates
+//! Toeplitz dictionaries (paper §V, dictionary (ii)).
+//!
+//! A sparse spike train is convolved with a Gaussian pulse and observed
+//! in noise; the Lasso over the shifted-pulse dictionary recovers the
+//! spikes.  Screening is hardest here: adjacent atoms are > 0.99
+//! correlated.
+//!
+//! ```bash
+//! cargo run --release --example sparse_deconvolution
+//! ```
+
+use holder_screening::dict::{generate_planted, DictKind, InstanceConfig};
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{solve, Budget, SolverConfig};
+
+fn main() {
+    let config = InstanceConfig {
+        m: 200,
+        n: 600,
+        kind: DictKind::Toeplitz,
+        lam_ratio: 0.2,
+        pulse_width: 4.0,
+    };
+    let spikes = 8;
+    let noise = 0.01;
+    let (instance, x_true) = generate_planted(&config, spikes, noise, 7);
+    let p = &instance.problem;
+
+    let planted: Vec<usize> =
+        (0..config.n).filter(|&i| x_true[i] != 0.0).collect();
+    println!(
+        "planted {} spikes at {:?} (pulse width {} rows, noise σ {})",
+        spikes, planted, config.pulse_width, noise
+    );
+
+    // Compare the three paper regions on this hard instance.
+    println!("\nregion         iters    flops        screened  gap");
+    let mut x_hat = Vec::new();
+    for region in [
+        Some(RegionKind::GapSphere),
+        Some(RegionKind::GapDome),
+        Some(RegionKind::HolderDome),
+        None,
+    ] {
+        // The Toeplitz dictionary is severely ill-conditioned
+        // (adjacent atoms > 0.99 correlated), so FISTA's attainable gap
+        // in reasonable time is ~1e-7 — plenty for spike localization.
+        let rep = solve(
+            p,
+            &SolverConfig {
+                region,
+                budget: Budget {
+                    max_iters: 30_000,
+                    max_flops: None,
+                    target_gap: 1e-7,
+                },
+                ..Default::default()
+            },
+        );
+        println!(
+            "{:<14} {:>5}  {:>11}  {:>4}/{:<4}  {:.1e}",
+            region.map(|r| r.name()).unwrap_or("none"),
+            rep.iters,
+            rep.flops,
+            rep.screened,
+            config.n,
+            rep.gap
+        );
+        if region == Some(RegionKind::HolderDome) {
+            x_hat = rep.x.clone();
+        }
+    }
+
+    // Spike localization quality (±4-atom tolerance — adjacent Toeplitz
+    // atoms are near-duplicates).
+    let detected: Vec<usize> = (0..config.n)
+        .filter(|&i| x_hat[i].abs() > 1e-3)
+        .collect();
+    let near = |i: usize, set: &[usize]| {
+        set.iter().any(|&j| (i as i64 - j as i64).abs() <= 4)
+    };
+    let hits = planted.iter().filter(|&&i| near(i, &detected)).count();
+    println!(
+        "\nrecovered {hits}/{spikes} spikes (within ±4 atoms); \
+         estimate support size {}",
+        detected.len()
+    );
+    assert!(hits >= spikes - 1, "deconvolution failed");
+}

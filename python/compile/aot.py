@@ -1,0 +1,124 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts + manifest.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Every artifact is lowered with `return_tuple=True`, so the Rust side always
+unwraps an N-tuple.  The manifest records, per artifact, the ordered input
+names/shapes and output names/shapes; `rust/src/runtime/artifact.rs` parses
+it with the in-repo JSON reader.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --m 100 --n 500
+The Makefile invokes this; it is a no-op at runtime (Python never sits on
+the request path).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def artifact_table(m: int, n: int):
+    """(name, fn, [(input_name, shape)], [(output_name, shape)]) rows."""
+    A = ("a_mat", (m, n))
+    Y = ("y", (m,))
+    VN = lambda name: (name, (n,))  # noqa: E731
+    VM = lambda name: (name, (m,))  # noqa: E731
+    S = lambda name: (name, (1,))  # noqa: E731
+
+    step_io = [A, Y, VN("z"), VN("x_old"), S("t"), VN("mask"),
+               S("lam"), S("step")]
+    fused_in = [A, Y, VN("z"), VN("x_old"), S("t"), VN("mask"),
+                S("lam"), S("step"), VN("colnorms"), VN("aty")]
+    fused_out = [VN("x_new"), VN("z_new"), S("t_new"), VM("u"),
+                 S("gap"), S("p"), S("d"), VN("new_mask")]
+    screen_out = [VN("maxabs"), VN("new_mask")]
+
+    rows = [
+        ("precompute", model.precompute, [A, Y],
+         [VN("colnorms"), VN("aty")]),
+        ("fista_step", model.fista_step, step_io,
+         [VN("x_new"), VN("z_new"), S("t_new")]),
+        ("dual_gap", model.dual_gap, [A, Y, VN("x"), S("lam")],
+         [VM("u"), S("gap"), S("p"), S("d"), VN("atr")]),
+        ("screen_gap_sphere", model.screen_gap_sphere,
+         [VM("u"), S("gap"), S("lam"), VN("mask"), VN("colnorms"),
+          VN("atu")], screen_out),
+        ("screen_gap_dome", model.screen_gap_dome,
+         [Y, VM("u"), S("gap"), S("lam"), VN("mask"), VN("colnorms"),
+          VN("aty"), VN("atu")], screen_out),
+        ("screen_holder_dome", model.screen_holder_dome,
+         [A, Y, VN("x"), VM("u"), S("lam"), VN("mask"), VN("colnorms"),
+          VN("aty"), VN("atr")], screen_out),
+        ("fused_holder", model.fused_holder, fused_in, fused_out),
+        ("fused_gap_dome", model.fused_gap_dome, fused_in, fused_out),
+        ("fused_gap_sphere", model.fused_gap_sphere, fused_in, fused_out),
+        ("fused_no_screen", model.fused_no_screen, fused_in, fused_out),
+        ("at_r", model.at_r, [A, VM("r")], [VN("atr")]),
+    ]
+    return rows
+
+
+def lower_all(out_dir: str, m: int, n: int, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"m": m, "n": n, "dtype": "f32", "artifacts": {}}
+    for name, fn, ins, outs in artifact_table(m, n):
+        specs = [_spec(shape) for _, shape in ins]
+        # keep_unused: some graphs deliberately share a uniform signature
+        # (e.g. all fused_* variants) so the Rust runtime can feed literals
+        # positionally without per-artifact special cases.
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [{"name": nm, "shape": list(sh)} for nm, sh in ins],
+            "outputs": [{"name": nm, "shape": list(sh)} for nm, sh in outs],
+        }
+        if verbose:
+            print(f"  lowered {name:<20} ({len(text):>8} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--m", type=int, default=100,
+                    help="observation dimension (paper: 100)")
+    ap.add_argument("--n", type=int, default=500,
+                    help="number of atoms (paper: 500)")
+    args = ap.parse_args()
+    lower_all(args.out_dir, args.m, args.n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the Lasso + safe-screening hot spots.
+
+Modules:
+  matvec — column/row panel matvecs (A^T r, A x) and column norms
+  prox   — soft-threshold and fused FISTA coordinate update
+  screen — dome screening test, eq. (14)-(15), one kernel for all regions
+  ref    — pure-jnp oracle each kernel is tested against
+"""
+
+from . import matvec, prox, ref, screen  # noqa: F401

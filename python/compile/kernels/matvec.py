@@ -1,0 +1,122 @@
+"""Pallas matvec kernels — the solver/screening hot spot.
+
+Two kernels:
+  * ``at_r``: A^T r, tiled over atoms (columns).  Each grid step loads an
+    (m, TILE_N) panel of A into VMEM and contracts it against the shared
+    residual r.  This is the dominant cost of FISTA (gradient) *and* of the
+    dome screening test (A^T c, A^T g), so one kernel serves both.
+  * ``ax``: A x, tiled over rows.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper is CPU/flop-count
+oriented, so there is no GPU kernel to port — instead the HBM<->VMEM
+schedule is expressed with BlockSpec: panels of ``TILE`` columns (or rows)
+stream through VMEM while ``r`` (resp. ``x``) stays resident.  Tile sizes
+are multiples of the (8, 128) f32 VPU lane layout; the contraction maps to
+an MXU panel-matvec.  On this image kernels run ``interpret=True`` (CPU
+PJRT cannot execute Mosaic custom-calls); TPU perf is estimated in
+EXPERIMENTS.md §Perf.
+
+Shapes that do not divide the tile are zero-padded by the wrappers (zero
+columns/rows contribute nothing to the contraction), keeping the kernels
+branch-free.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# f32 VPU lane width; block columns in multiples of this.
+LANE = 128
+# Default panel widths.  At the paper's scale (m=100, n=500 -> padded 512)
+# a panel is 100*128*4B = 51 KiB, far under the ~16 MiB VMEM budget, so the
+# full r / x vectors stay resident alongside.
+TILE_N = 128
+TILE_M = 128
+
+
+def _pad_to(v, mult, axis):
+    """Zero-pad `v` along `axis` up to the next multiple of `mult`."""
+    size = v.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return v
+    widths = [(0, 0)] * v.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(v, widths)
+
+
+def _at_r_kernel(a_ref, r_ref, o_ref):
+    # a_ref: (m, TILE_N) panel; r_ref: (m,); o_ref: (TILE_N,)
+    o_ref[...] = jnp.dot(a_ref[...].T, r_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def at_r(a_mat, r, tile_n=TILE_N):
+    """A^T @ r via a column-panel Pallas kernel.  a_mat: (m, n), r: (m,)."""
+    m, n = a_mat.shape
+    a_p = _pad_to(a_mat, tile_n, axis=1)
+    n_p = a_p.shape[1]
+    out = pl.pallas_call(
+        _at_r_kernel,
+        grid=(n_p // tile_n,),
+        in_specs=[
+            pl.BlockSpec((m, tile_n), lambda j: (0, j)),
+            pl.BlockSpec((m,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n_p,), jnp.float32),
+        interpret=True,
+    )(a_p, r)
+    return out[:n]
+
+
+def _ax_kernel(a_ref, x_ref, o_ref):
+    # a_ref: (TILE_M, n) panel; x_ref: (n,); o_ref: (TILE_M,)
+    o_ref[...] = jnp.dot(a_ref[...], x_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def ax(a_mat, x, tile_m=TILE_M):
+    """A @ x via a row-panel Pallas kernel.  a_mat: (m, n), x: (n,)."""
+    m, n = a_mat.shape
+    a_p = _pad_to(a_mat, tile_m, axis=0)
+    m_p = a_p.shape[0]
+    out = pl.pallas_call(
+        _ax_kernel,
+        grid=(m_p // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m_p,), jnp.float32),
+        interpret=True,
+    )(a_p, x)
+    return out[:m]
+
+
+def _col_norms_kernel(a_ref, o_ref):
+    # a_ref: (m, TILE_N); o_ref: (TILE_N,)
+    blk = a_ref[...]
+    o_ref[...] = jnp.sqrt(jnp.sum(blk * blk, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def col_norms(a_mat, tile_n=TILE_N):
+    """Per-atom l2 norms, column-panel tiled (computed once per problem)."""
+    m, n = a_mat.shape
+    a_p = _pad_to(a_mat, tile_n, axis=1)
+    n_p = a_p.shape[1]
+    out = pl.pallas_call(
+        _col_norms_kernel,
+        grid=(n_p // tile_n,),
+        in_specs=[pl.BlockSpec((m, tile_n), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((tile_n,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n_p,), jnp.float32),
+        interpret=True,
+    )(a_p)
+    return out[:n]

@@ -1,0 +1,182 @@
+"""Pure-jnp reference oracle for every Pallas kernel (L1 correctness anchor).
+
+Each function here is the *semantic definition* of the corresponding Pallas
+kernel in `matvec.py`, `prox.py` and `screen.py`.  The pytest suite
+(`python/tests/test_kernels.py`) sweeps shapes/dtypes with hypothesis and
+asserts `assert_allclose(kernel(...), ref(...))`.
+
+Everything is written with plain `jnp` ops (no pallas, no custom calls) so
+it lowers to vanilla HLO and can also serve as a fallback compute path.
+
+Notation follows the paper (Tran et al., 2022):
+  P(x) = 0.5 ||y - Ax||^2 + lam ||x||_1           (primal, eq. 1)
+  D(u) = 0.5 ||y||^2 - 0.5 ||y - u||^2            (dual, eq. 2)
+  dome D(c, R, g, delta) = B(c,R) ∩ {u : <g,u> <= delta}   (eq. 12)
+  max_{u in D} <a, u> = <a,c> + R ||a|| f(psi1, psi2)      (eq. 15)
+"""
+
+import jax.numpy as jnp
+
+# Numerical guard used consistently across ref, pallas and the Rust port.
+EPS = 1e-12
+
+
+# ----------------------------------------------------------------------------
+# Dense linear algebra
+# ----------------------------------------------------------------------------
+
+def ax(a_mat, x):
+    """A @ x  (the residual-forming matvec)."""
+    return a_mat @ x
+
+
+def at_r(a_mat, r):
+    """A^T @ r  (the correlation matvec; solver + screening hot spot)."""
+    return a_mat.T @ r
+
+
+def col_norms(a_mat):
+    """Per-atom l2 norms ||a_i||_2."""
+    return jnp.sqrt(jnp.sum(a_mat * a_mat, axis=0))
+
+
+# ----------------------------------------------------------------------------
+# Proximal operators / FISTA algebra
+# ----------------------------------------------------------------------------
+
+def soft_threshold(v, tau):
+    """prox of tau*||.||_1 : sign(v) * max(|v| - tau, 0)."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - tau, 0.0)
+
+
+def fista_combine(x_new, x_old, beta):
+    """Momentum extrapolation z = x_new + beta (x_new - x_old)."""
+    return x_new + beta * (x_new - x_old)
+
+
+def fista_step(a_mat, y, z, x_old, t, mask, lam, step):
+    """One masked FISTA iteration (Beck & Teboulle).
+
+    `mask` in {0,1}^n marks the surviving (non-screened) atoms; screened
+    coordinates are forced to zero so a full-shape (static HLO) computation
+    is equivalent to solving the reduced problem.
+
+    Returns (x_new, z_new, t_new).
+    """
+    grad = at_r(a_mat, ax(a_mat, z) - y)
+    x_new = soft_threshold(z - step * grad, step * lam) * mask
+    t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+    beta = (t - 1.0) / t_new
+    z_new = fista_combine(x_new, x_old, beta)
+    return x_new, z_new, t_new
+
+
+# ----------------------------------------------------------------------------
+# Duality
+# ----------------------------------------------------------------------------
+
+def primal_value(a_mat, y, x, lam):
+    r = y - ax(a_mat, x)
+    return 0.5 * jnp.dot(r, r) + lam * jnp.sum(jnp.abs(x))
+
+
+def dual_value(y, u):
+    d = y - u
+    return 0.5 * jnp.dot(y, y) - 0.5 * jnp.dot(d, d)
+
+
+def dual_scale(a_mat, y, x, lam):
+    """Dual-feasible point by residual rescaling (El Ghaoui et al. §3.3).
+
+    u = s * (y - Ax) with s = min(1, lam / ||A^T (y-Ax)||_inf), so that
+    ||A^T u||_inf <= lam always holds and u -> u* as x -> x*.
+    """
+    r = y - ax(a_mat, x)
+    corr = jnp.max(jnp.abs(at_r(a_mat, r)))
+    s = jnp.minimum(1.0, lam / jnp.maximum(corr, EPS))
+    return s * r
+
+
+def dual_gap(a_mat, y, x, lam):
+    """Returns (u, gap, P, D) for the rescaled dual point."""
+    u = dual_scale(a_mat, y, x, lam)
+    p = primal_value(a_mat, y, x, lam)
+    d = dual_value(y, u)
+    return u, p - d, p, d
+
+
+# ----------------------------------------------------------------------------
+# Dome screening test, eq. (14)-(15)
+# ----------------------------------------------------------------------------
+
+def _f_dome(psi1, psi2):
+    """f(psi1, psi2) from eq. (15), with clamped sqrt arguments."""
+    s1 = jnp.sqrt(jnp.maximum(1.0 - psi1 * psi1, 0.0))
+    s2 = jnp.sqrt(jnp.maximum(1.0 - psi2 * psi2, 0.0))
+    return jnp.where(psi1 <= psi2, 1.0, psi1 * psi2 + s1 * s2)
+
+
+def dome_max_abs(atc, atg, anrm, radius, gnorm, psi2):
+    """max_{u in D} |<a_i, u>| per eq. (14)-(15), vectorized over atoms.
+
+    Inputs are per-atom statistics:
+      atc  = <a_i, c>,  atg = <a_i, g>,  anrm = ||a_i||
+    and scalars radius=R, gnorm=||g||, psi2 (already clipped to [-1,1];
+    callers encode "no half-space cut" as psi2 = 1, which forces f = 1 and
+    recovers the sphere test of eq. (11)).
+    """
+    denom = jnp.maximum(anrm * gnorm, EPS)
+    psi1 = jnp.clip(atg / denom, -1.0, 1.0)
+    f_pos = _f_dome(psi1, psi2)
+    f_neg = _f_dome(-psi1, psi2)
+    up = atc + radius * anrm * f_pos
+    dn = -atc + radius * anrm * f_neg
+    return jnp.maximum(up, dn)
+
+
+def dome_screen_mask(atc, atg, anrm, radius, gnorm, psi2, lam, mask):
+    """Monotone screening update: 1.0 = atom survives, 0.0 = screened.
+
+    The (1 - 1e-6) relative guard keeps boundary atoms (|<a_i,u*>| = lam
+    exactly on the support) safe under f32 rounding.
+    """
+    keep = dome_max_abs(atc, atg, anrm, radius, gnorm, psi2) \
+        >= lam * (1.0 - 1e-6)
+    return mask * keep.astype(mask.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Region parameterizations (paper §III-C and §IV)
+# ----------------------------------------------------------------------------
+
+def gap_sphere_params(y, u, gap):
+    """GAP sphere (eq. 16-17): ball B(u, sqrt(2 gap)); no half-space."""
+    c = u
+    radius = jnp.sqrt(2.0 * jnp.maximum(gap, 0.0))
+    return c, radius
+
+
+def gap_dome_params(y, u, gap):
+    """GAP dome (eq. 18-21). Returns (c, R, g, psi2) with ||g|| = R."""
+    c = 0.5 * (y + u)
+    radius = 0.5 * jnp.sqrt(jnp.dot(y - u, y - u))
+    g = y - c
+    # delta - <g,c> = gap - R^2 and ||g|| = R, so psi2 = (gap - R^2)/R^2.
+    psi2_raw = (gap - radius * radius) / jnp.maximum(radius * radius, EPS)
+    psi2 = jnp.clip(jnp.where(radius < EPS, 1.0, psi2_raw), -1.0, 1.0)
+    return c, radius, g, psi2
+
+
+def holder_dome_params(a_mat, y, x, u, lam):
+    """Hölder dome (Theorem 1). Returns (c, R, g, gnorm, psi2)."""
+    c = 0.5 * (y + u)
+    radius = 0.5 * jnp.sqrt(jnp.dot(y - u, y - u))
+    g = ax(a_mat, x)
+    delta = lam * jnp.sum(jnp.abs(x))
+    gnorm = jnp.sqrt(jnp.dot(g, g))
+    margin = delta - jnp.dot(g, c)
+    psi2_raw = margin / jnp.maximum(radius * gnorm, EPS)
+    # g = 0 (x = 0): delta >= 0 so H = R^m and the dome is the full ball.
+    degenerate = jnp.logical_or(gnorm < EPS, radius < EPS)
+    psi2 = jnp.clip(jnp.where(degenerate, 1.0, psi2_raw), -1.0, 1.0)
+    return c, radius, g, gnorm, psi2

@@ -1,0 +1,89 @@
+"""Pallas dome-screening kernel — eq. (14)-(15) vectorized over atoms.
+
+Given per-atom statistics (A^T c, A^T g, ||a_i||) and the dome scalars
+(R, ||g||, psi2), this kernel evaluates the closed-form
+
+    max_{u in D} |<a_i, u>| = max( <a_i,c> + R ||a_i|| f( psi1_i, psi2),
+                                  -<a_i,c> + R ||a_i|| f(-psi1_i, psi2) )
+
+and emits the updated monotone keep-mask  mask_i * [max >= lam].
+
+One kernel serves all three regions of the paper:
+  * GAP sphere  — psi2 = 1 forces f = 1, recovering eq. (11);
+  * GAP dome    — psi2 = clip(gap/R^2 - 1, -1, 1), g = (y-u)/2;
+  * Hölder dome — psi2 = clip((lam||x||_1 - <Ax,c>)/(R||Ax||), -1, 1), g = Ax.
+
+The per-atom statistics are produced by the `matvec.at_r` panel kernel, so
+screening reuses the exact memory schedule of the gradient.  This kernel is
+a pure-VPU elementwise pipeline (no MXU); its cost per atom is O(1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matvec
+
+TILE = 128
+EPS = 1e-12
+
+
+def _f_dome(psi1, psi2):
+    s1 = jnp.sqrt(jnp.maximum(1.0 - psi1 * psi1, 0.0))
+    s2 = jnp.sqrt(jnp.maximum(1.0 - psi2 * psi2, 0.0))
+    return jnp.where(psi1 <= psi2, 1.0, psi1 * psi2 + s1 * s2)
+
+
+def _dome_screen_kernel(atc_ref, atg_ref, anrm_ref, mask_ref,
+                        radius_ref, gnorm_ref, psi2_ref, lam_ref,
+                        maxabs_ref, newmask_ref):
+    atc = atc_ref[...]
+    atg = atg_ref[...]
+    anrm = anrm_ref[...]
+    radius = radius_ref[0]
+    gnorm = gnorm_ref[0]
+    psi2 = psi2_ref[0]
+    lam = lam_ref[0]
+
+    denom = jnp.maximum(anrm * gnorm, EPS)
+    psi1 = jnp.clip(atg / denom, -1.0, 1.0)
+    up = atc + radius * anrm * _f_dome(psi1, psi2)
+    dn = -atc + radius * anrm * _f_dome(-psi1, psi2)
+    maxabs = jnp.maximum(up, dn)
+    maxabs_ref[...] = maxabs
+    # Relative guard: support atoms have |<a_i, u*>| = lam exactly, so
+    # their bound converges to lam from above; f32 rounding must not
+    # screen them (mirrors rust/src/screening/engine.rs).
+    newmask_ref[...] = mask_ref[...] * \
+        (maxabs >= lam * (1.0 - 1e-6)).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def dome_screen(atc, atg, anrm, mask, radius, gnorm, psi2, lam, tile=TILE):
+    """Apply the dome test to every atom.
+
+    Returns (maxabs, new_mask); new_mask is monotone (once screened an atom
+    stays screened — each region is individually safe, so this only ever
+    removes provably-zero atoms).
+
+    Padded atoms get anrm = 0 => maxabs = 0 < lam => screened; harmless
+    because the wrapper slices them off.
+    """
+    n = atc.shape[0]
+    pads = [matvec._pad_to(v, tile, axis=0) for v in (atc, atg, anrm, mask)]
+    n_p = pads[0].shape[0]
+    scal = [jnp.reshape(jnp.asarray(s, jnp.float32), (1,))
+            for s in (radius, gnorm, psi2, lam)]
+    vec = pl.BlockSpec((tile,), lambda j: (j,))
+    sc = pl.BlockSpec((1,), lambda j: (0,))
+    maxabs, new_mask = pl.pallas_call(
+        _dome_screen_kernel,
+        grid=(n_p // tile,),
+        in_specs=[vec] * 4 + [sc] * 4,
+        out_specs=[vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((n_p,), jnp.float32)] * 2,
+        interpret=True,
+    )(*pads, *scal)
+    return maxabs[:n], new_mask[:n]

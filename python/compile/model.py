@@ -1,0 +1,189 @@
+"""L2: the Lasso solver compute graphs, built on the L1 Pallas kernels.
+
+Each public function is an AOT-lowering target (see `aot.py`): a pure jax
+function over fixed-shape f32 arrays that `jax.jit(...).lower(...)` turns
+into one HLO artifact loaded by the Rust runtime.  Scalars travel as
+shape-(1,) arrays so the Rust side only ever deals with f32 buffers.
+
+Screening removes atoms — a dynamic-shape operation — so these graphs are
+*masked*: `mask` in {0,1}^n marks surviving atoms and screened coordinates
+are pinned to zero.  The native Rust backend instead physically compacts
+the active set; `rust/tests/` cross-checks the two backends.
+
+Correlation-reuse convention (mirrors `rust/src/flops`): per iteration the
+solver computes A z (residual at z), A^T r_z (gradient), A x_new (residual)
+and A^T r_new (dual scaling).  Every screening statistic is then an O(n)
+or O(m) combination:
+    A^T u      = s * A^T r_new
+    A^T c      = (A^T y + A^T u) / 2
+    A^T g_gap  = (A^T y - A^T u) / 2          (GAP dome,   g = (y-u)/2)
+    A^T g_new  = A^T y - A^T r_new            (Hölder,     g = A x_new)
+with A^T y precomputed once per problem (input `aty`).  This is what makes
+the Hölder dome "the same computational burden" as the GAP dome (paper §IV).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import matvec, prox, screen
+from .kernels.ref import EPS
+
+
+def _s1(v):
+    """Promote a python/traced scalar to a shape-(1,) f32 array."""
+    return jnp.reshape(jnp.asarray(v, jnp.float32), (1,))
+
+
+# ----------------------------------------------------------------------------
+# Per-problem precomputation
+# ----------------------------------------------------------------------------
+
+def precompute(a_mat, y):
+    """Artifact `precompute`: (col_norms, A^T y) — run once per problem."""
+    return matvec.col_norms(a_mat), matvec.at_r(a_mat, y)
+
+
+# ----------------------------------------------------------------------------
+# Solver iteration
+# ----------------------------------------------------------------------------
+
+def fista_step(a_mat, y, z, x_old, t, mask, lam, step):
+    """Artifact `fista_step`: one masked FISTA iteration.
+
+    Returns (x_new, z_new, t_new).  lam/step/t are shape-(1,).
+    """
+    r_z = y - matvec.ax(a_mat, z)
+    grad = -matvec.at_r(a_mat, r_z)
+    t0 = t[0]
+    t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t0 * t0))
+    beta = (t0 - 1.0) / t_new
+    x_new, z_new = prox.fista_update(z, grad, x_old, mask,
+                                     step[0], lam[0], beta)
+    return x_new, z_new, _s1(t_new)
+
+
+def dual_gap(a_mat, y, x, lam):
+    """Artifact `dual_gap`: rescaled dual point + duality gap at x.
+
+    Returns (u, gap, p, d, atr) with atr = A^T (y - Ax) exposed for reuse.
+    """
+    r = y - matvec.ax(a_mat, x)
+    atr = matvec.at_r(a_mat, r)
+    corr = jnp.max(jnp.abs(atr))
+    s = jnp.minimum(1.0, lam[0] / jnp.maximum(corr, EPS))
+    u = s * r
+    p = 0.5 * jnp.dot(r, r) + lam[0] * jnp.sum(jnp.abs(x))
+    d = 0.5 * jnp.dot(y, y) - 0.5 * jnp.dot(y - u, y - u)
+    return u, _s1(p - d), _s1(p), _s1(d), atr
+
+
+# ----------------------------------------------------------------------------
+# Screening graphs (one per safe region)
+# ----------------------------------------------------------------------------
+
+def _midpoint_stats(y, u, aty, atu):
+    """c = (y+u)/2 statistics shared by both dome regions."""
+    diff = y - u
+    radius = 0.5 * jnp.sqrt(jnp.dot(diff, diff))
+    atc = 0.5 * (aty + atu)
+    return radius, atc
+
+
+def screen_gap_sphere(u, gap, lam, mask, colnorms, atu):
+    """Artifact `screen_gap_sphere`: eq. (11) with c=u, R=sqrt(2 gap)."""
+    radius = jnp.sqrt(2.0 * jnp.maximum(gap[0], 0.0))
+    # psi2 = 1 => f = 1: pure sphere test through the shared dome kernel.
+    maxabs, new_mask = screen.dome_screen(
+        atu, atu, colnorms, mask, radius, 1.0, 1.0, lam[0])
+    return maxabs, new_mask
+
+
+def screen_gap_dome(y, u, gap, lam, mask, colnorms, aty, atu):
+    """Artifact `screen_gap_dome`: eq. (18)-(21).
+
+    g = (y-u)/2, ||g|| = R, delta - <g,c> = gap - R^2.
+    """
+    radius, atc = _midpoint_stats(y, u, aty, atu)
+    atg = 0.5 * (aty - atu)
+    r2 = jnp.maximum(radius * radius, EPS)
+    psi2 = jnp.clip((gap[0] - radius * radius) / r2, -1.0, 1.0)
+    psi2 = jnp.where(radius < EPS, 1.0, psi2)
+    maxabs, new_mask = screen.dome_screen(
+        atc, atg, colnorms, mask, radius, radius, psi2, lam[0])
+    return maxabs, new_mask
+
+
+def screen_holder_dome(a_mat, y, x, u, lam, mask, colnorms, aty, atr):
+    """Artifact `screen_holder_dome`: Theorem 1.
+
+    g = Ax = y - r (no extra matvec), delta = lam ||x||_1,
+    A^T g = aty - atr.  A^T u is recovered as s * atr with the dual-scaling
+    factor s reconstructed robustly from <u, r>/||r||^2 (u is collinear
+    with r by construction).
+    """
+    r = y - matvec.ax(a_mat, x)
+    rnorm2 = jnp.maximum(jnp.dot(r, r), EPS)
+    s = jnp.dot(u, r) / rnorm2
+    atu = s * atr
+    radius, atc = _midpoint_stats(y, u, aty, atu)
+    g = y - r  # = Ax
+    atg = aty - atr
+    delta = lam[0] * jnp.sum(jnp.abs(x))
+    gnorm = jnp.sqrt(jnp.dot(g, g))
+    c_dot_g = 0.5 * (jnp.dot(g, y) + jnp.dot(g, u))
+    psi2 = (delta - c_dot_g) / jnp.maximum(radius * gnorm, EPS)
+    degenerate = jnp.logical_or(gnorm < EPS, radius < EPS)
+    psi2 = jnp.clip(jnp.where(degenerate, 1.0, psi2), -1.0, 1.0)
+    maxabs, new_mask = screen.dome_screen(
+        atc, atg, colnorms, mask, radius, gnorm, psi2, lam[0])
+    return maxabs, new_mask
+
+
+# ----------------------------------------------------------------------------
+# Fused iteration artifacts: step + dual/gap + screen in ONE PJRT call.
+# These are the serving hot path: the Rust coordinator issues exactly one
+# execute() per solver iteration.
+# ----------------------------------------------------------------------------
+
+def _fused_common(a_mat, y, z, x_old, t, mask, lam, step):
+    x_new, z_new, t_new = fista_step(a_mat, y, z, x_old, t, mask, lam, step)
+    u, gap, p, d, atr = dual_gap(a_mat, y, x_new, lam)
+    return x_new, z_new, t_new, u, gap, p, d, atr
+
+
+def fused_holder(a_mat, y, z, x_old, t, mask, lam, step, colnorms, aty):
+    out = _fused_common(a_mat, y, z, x_old, t, mask, lam, step)
+    x_new, z_new, t_new, u, gap, p, d, atr = out
+    _, new_mask = screen_holder_dome(
+        a_mat, y, x_new, u, lam, mask, colnorms, aty, atr)
+    return x_new, z_new, t_new, u, gap, p, d, new_mask
+
+
+def fused_gap_dome(a_mat, y, z, x_old, t, mask, lam, step, colnorms, aty):
+    out = _fused_common(a_mat, y, z, x_old, t, mask, lam, step)
+    x_new, z_new, t_new, u, gap, p, d, atr = out
+    r = y - matvec.ax(a_mat, x_new)
+    s = jnp.dot(u, r) / jnp.maximum(jnp.dot(r, r), EPS)
+    _, new_mask = screen_gap_dome(
+        y, u, gap, lam, mask, colnorms, aty, s * atr)
+    return x_new, z_new, t_new, u, gap, p, d, new_mask
+
+
+def fused_gap_sphere(a_mat, y, z, x_old, t, mask, lam, step, colnorms, aty):
+    out = _fused_common(a_mat, y, z, x_old, t, mask, lam, step)
+    x_new, z_new, t_new, u, gap, p, d, atr = out
+    r = y - matvec.ax(a_mat, x_new)
+    s = jnp.dot(u, r) / jnp.maximum(jnp.dot(r, r), EPS)
+    _, new_mask = screen_gap_sphere(u, gap, lam, mask, colnorms, s * atr)
+    return x_new, z_new, t_new, u, gap, p, d, new_mask
+
+
+def fused_no_screen(a_mat, y, z, x_old, t, mask, lam, step, colnorms, aty):
+    """Baseline: identical plumbing, mask passes through unchanged."""
+    out = _fused_common(a_mat, y, z, x_old, t, mask, lam, step)
+    x_new, z_new, t_new, u, gap, p, d, _ = out
+    return x_new, z_new, t_new, u, gap, p, d, mask
+
+
+# Microbench artifact: the raw panel matvec.
+def at_r(a_mat, r):
+    return matvec.at_r(a_mat, r)

@@ -1,0 +1,220 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes (including non-tile-multiples, which exercise the
+zero-padding wrappers) and value distributions.  Tolerances are f32-scale.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matvec, prox, ref, screen
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _mat(rng, m, n, scale=1.0):
+    return jnp.asarray(rng.normal(size=(m, n)) * scale, jnp.float32)
+
+
+def _vec(rng, n, scale=1.0):
+    return jnp.asarray(rng.normal(size=n) * scale, jnp.float32)
+
+
+shape_st = st.tuples(st.integers(1, 70), st.integers(1, 300))
+seed_st = st.integers(0, 2**31 - 1)
+tile_st = st.sampled_from([8, 32, 128])
+
+
+# ----------------------------------------------------------------------------
+# matvec kernels
+# ----------------------------------------------------------------------------
+
+class TestMatvec:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=shape_st, seed=seed_st, tile=tile_st)
+    def test_at_r_matches_ref(self, shape, seed, tile):
+        m, n = shape
+        rng = _rng(seed)
+        a, r = _mat(rng, m, n), _vec(rng, m)
+        np.testing.assert_allclose(
+            matvec.at_r(a, r, tile_n=tile), ref.at_r(a, r),
+            rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(shape=shape_st, seed=seed_st, tile=tile_st)
+    def test_ax_matches_ref(self, shape, seed, tile):
+        m, n = shape
+        rng = _rng(seed)
+        a, x = _mat(rng, m, n), _vec(rng, n)
+        np.testing.assert_allclose(
+            matvec.ax(a, x, tile_m=tile), ref.ax(a, x),
+            rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(shape=shape_st, seed=seed_st)
+    def test_col_norms_matches_ref(self, shape, seed):
+        m, n = shape
+        a = _mat(_rng(seed), m, n)
+        np.testing.assert_allclose(
+            matvec.col_norms(a), ref.col_norms(a), rtol=RTOL, atol=ATOL)
+
+    def test_at_r_zero_matrix(self):
+        a = jnp.zeros((10, 20), jnp.float32)
+        r = _vec(_rng(0), 10)
+        np.testing.assert_array_equal(np.asarray(matvec.at_r(a, r)),
+                                      np.zeros(20, np.float32))
+
+    def test_at_r_paper_scale(self):
+        """(m, n) = (100, 500): the paper's experimental shape."""
+        rng = _rng(7)
+        a, r = _mat(rng, 100, 500), _vec(rng, 100)
+        np.testing.assert_allclose(matvec.at_r(a, r), ref.at_r(a, r),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_ax_identity_padding(self):
+        """n not a multiple of the tile: padding must not leak."""
+        rng = _rng(3)
+        a, x = _mat(rng, 33, 129), _vec(rng, 129)
+        np.testing.assert_allclose(matvec.ax(a, x), ref.ax(a, x),
+                                   rtol=RTOL, atol=ATOL)
+
+
+# ----------------------------------------------------------------------------
+# prox kernels
+# ----------------------------------------------------------------------------
+
+class TestProx:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 400), seed=seed_st,
+           tau=st.floats(0.0, 5.0))
+    def test_soft_threshold_matches_ref(self, n, seed, tau):
+        v = _vec(_rng(seed), n, scale=3.0)
+        np.testing.assert_allclose(
+            prox.soft_threshold(v, tau), ref.soft_threshold(v, tau),
+            rtol=RTOL, atol=ATOL)
+
+    def test_soft_threshold_kills_small(self):
+        v = jnp.asarray([0.5, -0.5, 2.0, -2.0], jnp.float32)
+        out = np.asarray(prox.soft_threshold(v, 1.0))
+        np.testing.assert_allclose(out, [0.0, 0.0, 1.0, -1.0], atol=1e-7)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 400), seed=seed_st,
+           step=st.floats(1e-3, 1.0), lam=st.floats(1e-3, 2.0),
+           beta=st.floats(0.0, 1.0))
+    def test_fista_update_matches_ref(self, n, seed, step, lam, beta):
+        rng = _rng(seed)
+        z, grad, x_old = (_vec(rng, n) for _ in range(3))
+        mask = jnp.asarray(rng.integers(0, 2, size=n), jnp.float32)
+        x_new, z_new = prox.fista_update(z, grad, x_old, mask,
+                                         step, lam, beta)
+        x_ref = ref.soft_threshold(z - step * grad, step * lam) * mask
+        z_ref = ref.fista_combine(x_ref, x_old, beta)
+        np.testing.assert_allclose(x_new, x_ref, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(z_new, z_ref, rtol=RTOL, atol=ATOL)
+
+    def test_fista_update_respects_mask(self):
+        rng = _rng(11)
+        n = 50
+        z, grad, x_old = (_vec(rng, n) for _ in range(3))
+        mask = jnp.zeros(n, jnp.float32)
+        x_new, _ = prox.fista_update(z, grad, x_old, mask, 0.5, 0.1, 0.2)
+        np.testing.assert_array_equal(np.asarray(x_new), np.zeros(n))
+
+
+# ----------------------------------------------------------------------------
+# screening kernel
+# ----------------------------------------------------------------------------
+
+class TestDomeScreen:
+    @settings(max_examples=40, deadline=None)
+    @given(n=st.integers(1, 400), seed=seed_st,
+           radius=st.floats(0.0, 3.0), gnorm=st.floats(0.0, 3.0),
+           psi2=st.floats(-1.0, 1.0), lam=st.floats(1e-3, 2.0))
+    def test_matches_ref(self, n, seed, radius, gnorm, psi2, lam):
+        rng = _rng(seed)
+        atc, atg = _vec(rng, n), _vec(rng, n)
+        anrm = jnp.asarray(np.abs(rng.normal(size=n)) + 0.1, jnp.float32)
+        mask = jnp.asarray(rng.integers(0, 2, size=n), jnp.float32)
+        maxabs, new_mask = screen.dome_screen(
+            atc, atg, anrm, mask, radius, gnorm, psi2, lam)
+        np.testing.assert_allclose(
+            maxabs, ref.dome_max_abs(atc, atg, anrm, radius, gnorm, psi2),
+            rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(
+            new_mask,
+            ref.dome_screen_mask(atc, atg, anrm, radius, gnorm, psi2,
+                                 lam, mask),
+            rtol=RTOL, atol=ATOL)
+
+    def test_sphere_mode_is_eq11(self):
+        """psi2 = 1 must reduce to |<a,c>| + R ||a||  (eq. 11)."""
+        rng = _rng(5)
+        n = 64
+        atc = _vec(rng, n)
+        anrm = jnp.asarray(np.abs(rng.normal(size=n)) + 0.1, jnp.float32)
+        maxabs, _ = screen.dome_screen(
+            atc, atc, anrm, jnp.ones(n), 0.7, 1.0, 1.0, 0.5)
+        expect = np.abs(np.asarray(atc)) + 0.7 * np.asarray(anrm)
+        np.testing.assert_allclose(maxabs, expect, rtol=RTOL, atol=ATOL)
+
+    def test_halfspace_only_shrinks(self):
+        """Dome max <= sphere max for any psi2 <= 1 (cut can only help)."""
+        rng = _rng(9)
+        n = 128
+        atc, atg = _vec(rng, n), _vec(rng, n)
+        anrm = jnp.ones(n, jnp.float32)
+        sphere, _ = screen.dome_screen(
+            atc, atg, anrm, jnp.ones(n), 0.9, 1.3, 1.0, 0.5)
+        for psi2 in (-0.9, -0.5, 0.0, 0.5, 0.9):
+            dome, _ = screen.dome_screen(
+                atc, atg, anrm, jnp.ones(n), 0.9, 1.3, psi2, 0.5)
+            assert np.all(np.asarray(dome) <= np.asarray(sphere) + 1e-5)
+
+    def test_mask_is_monotone(self):
+        rng = _rng(13)
+        n = 100
+        atc, atg = _vec(rng, n), _vec(rng, n)
+        anrm = jnp.ones(n, jnp.float32)
+        mask0 = jnp.asarray(rng.integers(0, 2, size=n), jnp.float32)
+        _, new_mask = screen.dome_screen(
+            atc, atg, anrm, mask0, 0.4, 1.0, 0.0, 0.8)
+        assert np.all(np.asarray(new_mask) <= np.asarray(mask0))
+
+    def test_dome_max_vs_monte_carlo(self):
+        """Closed form eq. (15) equals a dense sample max over the dome."""
+        rng = _rng(21)
+        m, n = 6, 40
+        a = _mat(rng, m, n)
+        c = _vec(rng, m, 0.5)
+        radius = 0.8
+        g = _vec(rng, m)
+        gn = float(np.linalg.norm(np.asarray(g)))
+        psi2 = -0.3
+        delta = float(np.dot(np.asarray(g), np.asarray(c))) \
+            + psi2 * radius * gn
+        # Dense rejection sample of the dome.
+        pts = rng.normal(size=(200000, m))
+        pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+        pts = np.asarray(c) + radius * pts * \
+            rng.uniform(0, 1, size=(200000, 1)) ** (1.0 / m)
+        keep = pts @ np.asarray(g) <= delta + 1e-9
+        pts = pts[keep]
+        mc = np.max(np.abs(pts @ np.asarray(a)), axis=0)
+        atc = ref.at_r(a, c)
+        atg = ref.at_r(a, g)
+        anrm = ref.col_norms(a)
+        maxabs, _ = screen.dome_screen(
+            atc, atg, anrm, jnp.ones(n), radius, gn, psi2, 0.5)
+        # MC is an inner approximation: closed form >= MC (safety), and
+        # reasonably tight (rejection sampling in 6-D is sparse near the
+        # boundary, so allow a generous gap).
+        assert np.all(np.asarray(maxabs) >= mc - 1e-4)
+        assert np.max(np.asarray(maxabs) - mc) < 0.3

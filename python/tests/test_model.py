@@ -1,0 +1,172 @@
+"""L2 semantic tests: the solver/screening graphs behave like Lasso theory
+says they must (descent, weak duality, safety, region inclusions)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_problem(seed=0, m=40, n=120, lam_ratio=0.5):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, n))
+    a /= np.linalg.norm(a, axis=0, keepdims=True)
+    y = rng.normal(size=m)
+    y /= np.linalg.norm(y)
+    lam_max = np.max(np.abs(a.T @ y))
+    lam = lam_ratio * lam_max
+    a, y = jnp.asarray(a, jnp.float32), jnp.asarray(y, jnp.float32)
+    # Lipschitz constant of the gradient: ||A||_2^2.
+    step = 1.0 / float(np.linalg.norm(np.asarray(a), 2) ** 2)
+    return a, y, float(lam), step
+
+
+def s1(v):
+    return jnp.asarray([v], jnp.float32)
+
+
+def run_fista(a, y, lam, step, iters, fused=None):
+    """Drive the artifact graphs exactly like the Rust runtime does."""
+    m, n = a.shape
+    colnorms, aty = model.precompute(a, y)
+    x = jnp.zeros(n, jnp.float32)
+    z = jnp.zeros(n, jnp.float32)
+    t = s1(1.0)
+    mask = jnp.ones(n, jnp.float32)
+    hist = []
+    for _ in range(iters):
+        if fused is None:
+            x_new, z, t = model.fista_step(a, y, z, x, t, mask,
+                                           s1(lam), s1(step))
+            u, gap, p, d, atr = model.dual_gap(a, y, x_new, s1(lam))
+            x = x_new
+        else:
+            x, z, t, u, gap, p, d, mask = fused(
+                a, y, z, x, t, mask, s1(lam), s1(step), colnorms, aty)
+        hist.append((float(p[0]), float(d[0]), float(gap[0]),
+                     float(jnp.sum(mask))))
+    return x, u, mask, hist
+
+
+class TestFistaStep:
+    def test_objective_decreases(self):
+        a, y, lam, step = make_problem(1)
+        _, _, _, hist = run_fista(a, y, lam, step, 60)
+        p = [h[0] for h in hist]
+        assert p[-1] < p[0]
+        # FISTA is not strictly monotone, but the trend must be down.
+        assert p[-1] <= min(p) + 1e-6
+
+    def test_gap_nonnegative_and_shrinks(self):
+        a, y, lam, step = make_problem(2)
+        _, _, _, hist = run_fista(a, y, lam, step, 200)
+        gaps = [h[2] for h in hist]
+        assert all(g >= -1e-5 for g in gaps)
+        assert gaps[-1] < 1e-4 * gaps[0]
+
+    def test_lam_above_lam_max_gives_zero(self):
+        a, y, _, step = make_problem(3)
+        lam_max = float(jnp.max(jnp.abs(ref.at_r(a, y))))
+        x, _, _, _ = run_fista(a, y, 1.01 * lam_max, step, 50)
+        np.testing.assert_allclose(np.asarray(x), 0.0, atol=1e-6)
+
+    def test_dual_point_is_feasible(self):
+        a, y, lam, step = make_problem(4)
+        x, u, _, _ = run_fista(a, y, lam, step, 30)
+        corr = float(jnp.max(jnp.abs(ref.at_r(a, u))))
+        assert corr <= lam * (1.0 + 1e-5)
+
+
+class TestFusedGraphs:
+    @pytest.mark.parametrize("fused_name", [
+        "fused_holder", "fused_gap_dome", "fused_gap_sphere",
+        "fused_no_screen"])
+    def test_fused_converges(self, fused_name):
+        a, y, lam, step = make_problem(5)
+        fused = getattr(model, fused_name)
+        _, _, _, hist = run_fista(a, y, lam, step, 150, fused=fused)
+        assert hist[-1][2] < 1e-5
+
+    def test_screening_is_safe(self):
+        """Atoms screened by any region are zero in the reference sol."""
+        a, y, lam, step = make_problem(6)
+        # High-accuracy reference support.
+        x_ref, _, _, _ = run_fista(a, y, lam, step, 4000)
+        support = np.abs(np.asarray(x_ref)) > 1e-7
+        for fused in (model.fused_holder, model.fused_gap_dome,
+                      model.fused_gap_sphere):
+            _, _, mask, _ = run_fista(a, y, lam, step, 120, fused=fused)
+            screened = np.asarray(mask) == 0.0
+            assert not np.any(screened & support), \
+                "screened atom is in the true support — UNSAFE"
+
+    def test_holder_screens_at_least_gap_dome(self):
+        """Thm 2 corollary: same iterates => Hölder mask <= GAP-dome mask
+        (after identical histories this holds statistically; we test the
+        one-shot dominance on identical (x,u) below in TestOneShot)."""
+        a, y, lam, step = make_problem(7)
+        _, _, mh, _ = run_fista(a, y, lam, step, 100,
+                                fused=model.fused_holder)
+        _, _, mg, _ = run_fista(a, y, lam, step, 100,
+                                fused=model.fused_gap_dome)
+        assert float(jnp.sum(mh)) <= float(jnp.sum(mg)) + 1e-6
+
+    def test_fused_matches_unfused(self):
+        """fused_no_screen must reproduce the plain step+gap pipeline."""
+        a, y, lam, step = make_problem(8)
+        x1, _, _, h1 = run_fista(a, y, lam, step, 40)
+        x2, _, _, h2 = run_fista(a, y, lam, step, 40,
+                                 fused=model.fused_no_screen)
+        np.testing.assert_allclose(np.asarray(x1), np.asarray(x2),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose([h[2] for h in h1], [h[2] for h in h2],
+                                   rtol=1e-4, atol=1e-6)
+
+
+class TestOneShot:
+    """Single-(x,u) screening: the paper's dominance chain, eq. (9)/(30)."""
+
+    def setup_method(self):
+        self.a, self.y, self.lam, step = make_problem(9)
+        x, u, _, _ = run_fista(self.a, self.y, self.lam, step, 25)
+        self.x, self.u = x, u
+        self.colnorms, self.aty = model.precompute(self.a, self.y)
+        _, gap, _, _, atr = model.dual_gap(self.a, self.y, x, s1(self.lam))
+        self.gap, self.atr = gap, atr
+        r = self.y - ref.ax(self.a, x)
+        s = float(jnp.dot(u, r) / jnp.maximum(jnp.dot(r, r), 1e-12))
+        self.atu = s * atr
+        self.mask = jnp.ones(self.a.shape[1], jnp.float32)
+
+    def masks(self):
+        _, m_sph = model.screen_gap_sphere(
+            self.u, self.gap, s1(self.lam), self.mask, self.colnorms,
+            self.atu)
+        _, m_gap = model.screen_gap_dome(
+            self.y, self.u, self.gap, s1(self.lam), self.mask,
+            self.colnorms, self.aty, self.atu)
+        _, m_hld = model.screen_holder_dome(
+            self.a, self.y, self.x, self.u, s1(self.lam), self.mask,
+            self.colnorms, self.aty, self.atr)
+        return (np.asarray(m_sph), np.asarray(m_gap), np.asarray(m_hld))
+
+    def test_dominance_chain(self):
+        m_sph, m_gap, m_hld = self.masks()
+        # smaller region => screens more => mask pointwise <=
+        assert np.all(m_gap <= m_sph + 1e-6), "GAP dome ⊆ GAP sphere violated"
+        assert np.all(m_hld <= m_gap + 1e-6), "Hölder ⊆ GAP dome violated"
+
+    def test_maxabs_dominance(self):
+        ma_sph, _ = model.screen_gap_sphere(
+            self.u, self.gap, s1(self.lam), self.mask, self.colnorms,
+            self.atu)
+        ma_gap, _ = model.screen_gap_dome(
+            self.y, self.u, self.gap, s1(self.lam), self.mask,
+            self.colnorms, self.aty, self.atu)
+        ma_hld, _ = model.screen_holder_dome(
+            self.a, self.y, self.x, self.u, s1(self.lam), self.mask,
+            self.colnorms, self.aty, self.atr)
+        assert np.all(np.asarray(ma_gap) <= np.asarray(ma_sph) + 1e-4)
+        assert np.all(np.asarray(ma_hld) <= np.asarray(ma_gap) + 1e-4)

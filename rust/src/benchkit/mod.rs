@@ -1,0 +1,106 @@
+//! Benchmark substrate (no criterion): warmup + timed iterations with
+//! robust statistics and markdown table rendering.
+//!
+//! `cargo bench` targets use `harness = false` and drive [`Bench`]
+//! directly; each paper table/figure gets one bench binary under
+//! `benches/`.
+
+pub mod stats;
+pub mod table;
+
+pub use stats::Summary;
+pub use table::Table;
+
+use crate::util::timer::{fmt_duration, Stopwatch};
+
+/// Configuration for a timing run.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    /// Minimum number of timed iterations.
+    pub min_iters: usize,
+    /// Minimum total measurement time (seconds).
+    pub min_secs: f64,
+    /// Warmup time (seconds).
+    pub warmup_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { min_iters: 10, min_secs: 1.0, warmup_secs: 0.3 }
+    }
+}
+
+impl Bench {
+    /// Quick preset for CI / smoke runs.
+    pub fn quick() -> Self {
+        Bench { min_iters: 5, min_secs: 0.2, warmup_secs: 0.05 }
+    }
+
+    /// Time `f`, returning per-iteration statistics.
+    ///
+    /// `f` is treated as one measurable unit; use a closure that consumes
+    /// pre-generated inputs to exclude setup.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Summary {
+        // Warmup.
+        let sw = Stopwatch::start();
+        while sw.elapsed_secs() < self.warmup_secs {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let total = Stopwatch::start();
+        while samples.len() < self.min_iters
+            || total.elapsed_secs() < self.min_secs
+        {
+            let it = Stopwatch::start();
+            std::hint::black_box(f());
+            samples.push(it.elapsed_secs());
+            if samples.len() > 10_000_000 {
+                break; // pathological fast function
+            }
+        }
+        Summary::from_samples(&samples)
+    }
+
+    /// Run and print one line: `name  mean ± σ (p50 p99) × iters`.
+    pub fn report<T>(&self, name: &str, f: impl FnMut() -> T) -> Summary {
+        let s = self.run(f);
+        println!(
+            "{name:<40} {:>10} ± {:<10} p50={} p99={} n={}",
+            fmt_duration(s.mean),
+            fmt_duration(s.std_dev),
+            fmt_duration(s.p50),
+            fmt_duration(s.p99),
+            s.n
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_enough_samples() {
+        let b = Bench { min_iters: 8, min_secs: 0.0, warmup_secs: 0.0 };
+        let s = b.run(|| (0..100).sum::<u64>());
+        assert!(s.n >= 8);
+        assert!(s.mean >= 0.0);
+        assert!(s.p50 <= s.p99 + 1e-12);
+    }
+
+    #[test]
+    fn mean_tracks_workload() {
+        let b = Bench { min_iters: 5, min_secs: 0.0, warmup_secs: 0.0 };
+        let fast = b.run(|| std::hint::black_box(1 + 1));
+        let slow = b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..200_000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            acc
+        });
+        assert!(slow.mean > fast.mean);
+    }
+}

@@ -1,0 +1,8 @@
+//! CLI substrate (no clap): declarative flag specs, subcommands, `--help`
+//! generation and typed accessors.
+
+pub mod parser;
+pub mod spec;
+
+pub use parser::{Args, CliError};
+pub use spec::{Command, Flag, FlagKind};

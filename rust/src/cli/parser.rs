@@ -1,0 +1,204 @@
+//! Flag parsing against a [`Command`] spec.
+
+use std::collections::BTreeMap;
+
+use super::spec::{Command, FlagKind};
+
+/// Parse error (unknown flag, missing value, bad type...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Parsed arguments: typed access by flag name.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    /// Non-flag positional arguments, in order.
+    pub positional: Vec<String>,
+    pub help_requested: bool,
+}
+
+impl Args {
+    /// Parse `argv` (without program/command names) against `spec`.
+    pub fn parse(spec: &Command, argv: &[String]) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut switches = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut help = false;
+
+        // Seed defaults.
+        for f in spec.flags {
+            if let Some(d) = f.default {
+                values.insert(f.name.to_string(), d.to_string());
+            }
+            if f.kind == FlagKind::Switch {
+                switches.insert(f.name.to_string(), false);
+            }
+        }
+
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                help = true;
+                i += 1;
+                continue;
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let flag = spec
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| {
+                        CliError(format!(
+                            "unknown flag --{name} for '{}'",
+                            spec.name
+                        ))
+                    })?;
+                match flag.kind {
+                    FlagKind::Switch => {
+                        if inline.is_some() {
+                            return Err(CliError(format!(
+                                "--{name} takes no value"
+                            )));
+                        }
+                        switches.insert(name.to_string(), true);
+                    }
+                    _ => {
+                        let val = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| {
+                                        CliError(format!(
+                                            "--{name} requires a value"
+                                        ))
+                                    })?
+                            }
+                        };
+                        // Type-check eagerly for better messages.
+                        match flag.kind {
+                            FlagKind::Num => {
+                                val.parse::<f64>().map_err(|_| {
+                                    CliError(format!(
+                                        "--{name}: '{val}' is not a number"
+                                    ))
+                                })?;
+                            }
+                            FlagKind::Int => {
+                                val.parse::<usize>().map_err(|_| {
+                                    CliError(format!(
+                                        "--{name}: '{val}' is not an integer"
+                                    ))
+                                })?;
+                            }
+                            _ => {}
+                        }
+                        values.insert(name.to_string(), val);
+                    }
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { values, switches, positional, help_requested: help })
+    }
+
+    pub fn str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.str(name).unwrap_or(default)
+    }
+
+    pub fn num(&self, name: &str) -> Option<f64> {
+        self.values.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn num_or(&self, name: &str, default: f64) -> f64 {
+        self.num(name).unwrap_or(default)
+    }
+
+    pub fn int(&self, name: &str) -> Option<usize> {
+        self.values.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn int_or(&self, name: &str, default: usize) -> usize {
+        self.int(name).unwrap_or(default)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::spec::Flag;
+
+    const FLAGS: &[Flag] = &[
+        Flag::int("seed", Some("7"), "seed"),
+        Flag::num("lam", Some("0.5"), "lambda ratio"),
+        Flag::str("dict", Some("gaussian"), "dictionary"),
+        Flag::switch("verbose", "chatty"),
+    ];
+    const CMD: Command =
+        Command { name: "solve", summary: "s", flags: FLAGS };
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&CMD, &sv(&[])).unwrap();
+        assert_eq!(a.int_or("seed", 0), 7);
+        assert_eq!(a.num_or("lam", 0.0), 0.5);
+        assert_eq!(a.str_or("dict", ""), "gaussian");
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn parses_space_and_equals_forms() {
+        let a = Args::parse(
+            &CMD,
+            &sv(&["--seed", "9", "--lam=0.8", "--verbose", "pos1"]),
+        )
+        .unwrap();
+        assert_eq!(a.int_or("seed", 0), 9);
+        assert_eq!(a.num_or("lam", 0.0), 0.8);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&CMD, &sv(&["--nope"])).is_err());
+        assert!(Args::parse(&CMD, &sv(&["--seed"])).is_err());
+        assert!(Args::parse(&CMD, &sv(&["--seed", "abc"])).is_err());
+        assert!(Args::parse(&CMD, &sv(&["--lam", "xyz"])).is_err());
+        assert!(Args::parse(&CMD, &sv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_flag() {
+        let a = Args::parse(&CMD, &sv(&["--help"])).unwrap();
+        assert!(a.help_requested);
+    }
+}

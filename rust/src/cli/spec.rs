@@ -1,0 +1,128 @@
+//! Declarative command/flag specifications.
+
+/// The type a flag accepts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlagKind {
+    /// Boolean presence flag (`--verbose`).
+    Switch,
+    /// `--key value` (or `--key=value`) parsed as string.
+    Str,
+    /// `--key value` parsed as f64.
+    Num,
+    /// `--key value` parsed as usize.
+    Int,
+}
+
+/// One flag in a command spec.
+#[derive(Clone, Copy, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub kind: FlagKind,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+impl Flag {
+    pub const fn switch(name: &'static str, help: &'static str) -> Self {
+        Flag { name, kind: FlagKind::Switch, default: None, help }
+    }
+    pub const fn str(
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        Flag { name, kind: FlagKind::Str, default, help }
+    }
+    pub const fn num(
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        Flag { name, kind: FlagKind::Num, default, help }
+    }
+    pub const fn int(
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        Flag { name, kind: FlagKind::Int, default, help }
+    }
+}
+
+/// A subcommand: name, summary and accepted flags.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flags: &'static [Flag],
+}
+
+impl Command {
+    /// Render `--help` text for this command.
+    pub fn help(&self, program: &str) -> String {
+        let mut out = format!(
+            "{program} {}\n  {}\n\nFlags:\n",
+            self.name, self.summary
+        );
+        for f in self.flags {
+            let kind = match f.kind {
+                FlagKind::Switch => String::new(),
+                FlagKind::Str => " <str>".to_string(),
+                FlagKind::Num => " <num>".to_string(),
+                FlagKind::Int => " <int>".to_string(),
+            };
+            let dflt = f
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "  --{}{kind}\n      {}{dflt}\n",
+                f.name, f.help
+            ));
+        }
+        out
+    }
+}
+
+/// Render top-level help over a command list.
+pub fn top_help(program: &str, about: &str, commands: &[Command]) -> String {
+    let mut out = format!("{program} — {about}\n\nCommands:\n");
+    let width = commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in commands {
+        out.push_str(&format!("  {:width$}  {}\n", c.name, c.summary));
+    }
+    out.push_str(&format!(
+        "\nRun `{program} <command> --help` for command flags.\n"
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FLAGS: &[Flag] = &[
+        Flag::int("seed", Some("0"), "RNG seed"),
+        Flag::switch("verbose", "chatty output"),
+    ];
+
+    #[test]
+    fn help_contains_flags_and_defaults() {
+        let cmd = Command { name: "solve", summary: "solve one", flags: FLAGS };
+        let h = cmd.help("prog");
+        assert!(h.contains("--seed <int>"));
+        assert!(h.contains("[default: 0]"));
+        assert!(h.contains("--verbose"));
+    }
+
+    #[test]
+    fn top_help_lists_commands() {
+        let cmds = [
+            Command { name: "a", summary: "first", flags: &[] },
+            Command { name: "bb", summary: "second", flags: &[] },
+        ];
+        let h = top_help("prog", "about", &cmds);
+        assert!(h.contains("first"));
+        assert!(h.contains("bb"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Config & serialization substrate (no serde): a dynamic [`Value`] tree,
+//! a JSON reader/writer (artifact manifests, result files) and a
+//! TOML-subset reader (experiment/solver config files).
+
+pub mod json;
+pub mod toml;
+pub mod value;
+
+pub use value::Value;

@@ -1,0 +1,220 @@
+//! TOML-subset reader for experiment/solver config files.
+//!
+//! Supported: `[section]` and `[nested.section]` headers, `key = value`
+//! with strings, numbers, booleans and flat arrays, `#` comments, and
+//! bare/dotted keys.  Unsupported (rejected, not silently misread):
+//! multi-line strings, inline tables, array-of-tables, datetimes.
+//!
+//! This covers every config this repo ships (see `examples/` and the
+//! `campaign` CLI); anything fancier belongs in JSON.
+
+use std::collections::BTreeMap;
+
+use super::Value;
+
+/// TOML parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TOML error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+/// Parse a TOML-subset document into a [`Value::Obj`] tree.
+pub fn parse(input: &str) -> Result<Value, TomlError> {
+    let mut root = BTreeMap::new();
+    // Current section path (empty = root).
+    let mut section: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        let err = |msg: &str| TomlError { msg: msg.into(), line: lineno + 1 };
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated section header"))?;
+            if inner.starts_with('[') {
+                return Err(err("array-of-tables not supported"));
+            }
+            section = inner
+                .split('.')
+                .map(|s| s.trim().to_string())
+                .collect();
+            if section.iter().any(String::is_empty) {
+                return Err(err("empty section name"));
+            }
+            // Materialize the section object.
+            ensure_path(&mut root, &section)
+                .map_err(|m| err(&m))?;
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+        let key_part = line[..eq].trim();
+        let val_part = line[eq + 1..].trim();
+        if key_part.is_empty() {
+            return Err(err("empty key"));
+        }
+        let mut path = section.clone();
+        path.extend(key_part.split('.').map(|s| {
+            s.trim().trim_matches('"').to_string()
+        }));
+        let value = parse_value(val_part)
+            .map_err(|m| err(&m))?;
+        let (leaf, parents) = path.split_last().unwrap();
+        let map = ensure_path(&mut root, parents).map_err(|m| err(&m))?;
+        if map.insert(leaf.clone(), value).is_some() {
+            return Err(err(&format!("duplicate key '{leaf}'")));
+        }
+    }
+    Ok(Value::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_path<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Value>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(Value::obj);
+        cur = match entry {
+            Value::Obj(map) => map,
+            _ => return Err(format!("'{part}' is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote (escapes unsupported)".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        return inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Value::Arr);
+    }
+    // Number (allow underscores à la TOML).
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = r#"
+# campaign config
+name = "fig2-gaussian"
+trials = 200
+
+[problem]
+m = 100
+n = 500
+lam_ratio = 0.5
+dict = "gaussian"
+
+[solver]
+kind = "fista"
+budget_flops = 1_000_000
+taus = [1e-7, 1e-9]
+screen = true
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.str_or("name", ""), "fig2-gaussian");
+        assert_eq!(v.usize_or("trials", 0), 200);
+        assert_eq!(v.usize_or("problem.m", 0), 100);
+        assert_eq!(v.f64_or("problem.lam_ratio", 0.0), 0.5);
+        assert_eq!(v.str_or("solver.kind", ""), "fista");
+        assert_eq!(v.f64_or("solver.budget_flops", 0.0), 1e6);
+        assert!(v.bool_or("solver.screen", false));
+        let taus = v.get_path("solver.taus").unwrap().as_arr().unwrap();
+        assert_eq!(taus[0].as_f64(), Some(1e-7));
+    }
+
+    #[test]
+    fn nested_sections_and_dotted_keys() {
+        let doc = "[a.b]\nc.d = 3\n";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.usize_or("a.b.c.d", 0), 3);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = "# top\n\nx = 1 # trailing\ns = \"a # not comment\"\n";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.usize_or("x", 0), 1);
+        assert_eq!(v.str_or("s", ""), "a # not comment");
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let e = parse("x = 1\ny == 2\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("x = \n").is_err());
+        assert!(parse("x = 1\nx = 2\n").is_err(), "duplicate key");
+        assert!(parse("[[aot]]\n").is_err(), "array of tables");
+    }
+
+    #[test]
+    fn arrays() {
+        let v = parse("a = [1, 2, 3]\nb = []\nc = [\"x\", \"y\"]\n").unwrap();
+        assert_eq!(v.get_path("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get_path("b").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(
+            v.get_path("c").unwrap().as_arr().unwrap()[1].as_str(),
+            Some("y")
+        );
+    }
+}

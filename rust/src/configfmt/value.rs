@@ -1,0 +1,181 @@
+//! Dynamic config value tree shared by the JSON and TOML front-ends.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A dynamically-typed configuration / data value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// All numbers are f64 (adequate for configs and metrics; integers up
+    /// to 2^53 round-trip exactly).
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    /// BTreeMap for deterministic serialization order.
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn obj() -> Value {
+        Value::Obj(BTreeMap::new())
+    }
+
+    /// Insert into an object value (panics on non-objects — builder use).
+    pub fn set(&mut self, key: &str, v: impl Into<Value>) -> &mut Self {
+        match self {
+            Value::Obj(map) => {
+                map.insert(key.to_string(), v.into());
+            }
+            _ => panic!("Value::set on non-object"),
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(map) => map.get(key),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get_path("solver.fista.step")`.
+    pub fn get_path(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 => {
+                Some(*x as usize)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Typed fetch with default (config ergonomics).
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get_path(path).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get_path(path).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get_path(path).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get_path(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(x: f64) -> Self {
+        Value::Num(x)
+    }
+}
+impl From<usize> for Value {
+    fn from(x: usize) -> Self {
+        Value::Num(x as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(x: u64) -> Self {
+        Value::Num(x as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(x: i64) -> Self {
+        Value::Num(x as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", super::json::to_string(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_lookup() {
+        let mut root = Value::obj();
+        let mut solver = Value::obj();
+        solver.set("iters", 100usize).set("tol", 1e-9);
+        root.set("solver", solver).set("name", "fista");
+        assert_eq!(root.get_path("solver.iters").unwrap().as_usize(),
+                   Some(100));
+        assert_eq!(root.f64_or("solver.tol", 0.0), 1e-9);
+        assert_eq!(root.str_or("name", "?"), "fista");
+        assert_eq!(root.str_or("missing", "dflt"), "dflt");
+        assert!(root.get_path("solver.missing").is_none());
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Value::from(3usize).as_usize(), Some(3));
+        assert_eq!(Value::from(true).as_bool(), Some(true));
+        assert_eq!(Value::from(2.5).as_usize(), None);
+        assert_eq!(Value::from(-1i64).as_usize(), None);
+        let arr: Value = vec![1.0, 2.0].into();
+        assert_eq!(arr.as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,261 @@
+//! Benchmark campaigns: the Fig. 2 protocol.
+//!
+//! A campaign runs `variants` solver configurations on the *same* set of
+//! random instances under a shared flop budget and collects final
+//! duality gaps.  The paper's calibration rule is implemented by
+//! [`Campaign::calibrate_budget`]: "the budget is adjusted so that
+//! ρ(10⁻⁷) = 50% for the solver using the Hölder dome" — i.e. the budget
+//! is the median flop count the calibration variant needs to reach
+//! `gap ≤ τ`.
+
+use crate::dict::{generate, InstanceConfig};
+use crate::par::par_map;
+use crate::perfprof::AccuracyProfile;
+use crate::solver::{solve, Budget, SolverConfig};
+
+/// A named solver variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub label: String,
+    pub config: SolverConfig,
+}
+
+/// Campaign specification.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    pub instance: InstanceConfig,
+    pub trials: usize,
+    pub base_seed: u64,
+    pub variants: Vec<Variant>,
+    /// Flop budget applied to every variant.
+    pub budget_flops: u64,
+    pub threads: usize,
+}
+
+/// Campaign output: per-variant, per-trial terminal state.
+#[derive(Clone, Debug)]
+pub struct CampaignResult {
+    pub labels: Vec<String>,
+    /// `gaps[v][i]`: final duality gap of variant `v` on instance `i`.
+    pub gaps: Vec<Vec<f64>>,
+    /// `flops[v][i]`: flops actually spent.
+    pub flops: Vec<Vec<u64>>,
+    /// `screen_rate[v][i]`: fraction of atoms screened at termination.
+    pub screen_rate: Vec<Vec<f64>>,
+    /// `iters[v][i]`.
+    pub iters: Vec<Vec<usize>>,
+    pub budget: u64,
+}
+
+impl Campaign {
+    /// Run every variant on every instance (instances shared across
+    /// variants via the per-trial seed).
+    pub fn run(&self) -> CampaignResult {
+        let v_count = self.variants.len();
+        let total = v_count * self.trials;
+        // Flatten (variant, trial) so the pool stays busy end-to-end.
+        let outcomes = par_map(total, self.threads, |k| {
+            let v = k / self.trials;
+            let i = k % self.trials;
+            let seed = self.base_seed + i as u64;
+            let problem = generate(&self.instance, seed).problem;
+            let mut cfg = self.variants[v].config.clone();
+            cfg.budget = Budget {
+                max_flops: Some(self.budget_flops),
+                target_gap: cfg.budget.target_gap,
+                max_iters: cfg.budget.max_iters,
+            };
+            let rep = solve(&problem, &cfg);
+            (
+                rep.gap,
+                rep.flops,
+                rep.screened as f64 / problem.n() as f64,
+                rep.iters,
+            )
+        });
+        let mut gaps = vec![vec![0.0; self.trials]; v_count];
+        let mut flops = vec![vec![0u64; self.trials]; v_count];
+        let mut rate = vec![vec![0.0; self.trials]; v_count];
+        let mut iters = vec![vec![0usize; self.trials]; v_count];
+        for (k, (g, f, s, it)) in outcomes.into_iter().enumerate() {
+            let v = k / self.trials;
+            let i = k % self.trials;
+            gaps[v][i] = g;
+            flops[v][i] = f;
+            rate[v][i] = s;
+            iters[v][i] = it;
+        }
+        CampaignResult {
+            labels: self.variants.iter().map(|v| v.label.clone()).collect(),
+            gaps,
+            flops,
+            screen_rate: rate,
+            iters,
+            budget: self.budget_flops,
+        }
+    }
+
+    /// Fig. 2 budget calibration: run `calib` (usually the Hölder-dome
+    /// variant) to `gap ≤ tau` on every instance with unlimited flops and
+    /// return the median flop count — the budget at which ρ(τ) = 50%.
+    pub fn calibrate_budget(
+        instance: &InstanceConfig,
+        trials: usize,
+        base_seed: u64,
+        calib: &SolverConfig,
+        tau: f64,
+        threads: usize,
+    ) -> u64 {
+        let needed = par_map(trials, threads, |i| {
+            let problem = generate(instance, base_seed + i as u64).problem;
+            let mut cfg = calib.clone();
+            cfg.budget = Budget {
+                max_iters: cfg.budget.max_iters,
+                max_flops: None,
+                target_gap: tau,
+            };
+            let rep = solve(&problem, &cfg);
+            rep.flops
+        });
+        let mut sorted = needed;
+        sorted.sort_unstable();
+        sorted[sorted.len() / 2]
+    }
+
+    /// Build the accuracy profile (ρ vs τ) from a result.
+    pub fn profile(result: &CampaignResult, taus: &[f64]) -> AccuracyProfile {
+        AccuracyProfile::from_gaps(&result.labels, &result.gaps, taus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dict::DictKind;
+    use crate::regions::RegionKind;
+
+    fn small() -> InstanceConfig {
+        let mut c = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+        c.m = 20;
+        c.n = 60;
+        c
+    }
+
+    fn variants() -> Vec<Variant> {
+        RegionKind::PAPER
+            .iter()
+            .map(|&r| Variant {
+                label: r.name().to_string(),
+                config: SolverConfig {
+                    region: Some(r),
+                    ..Default::default()
+                },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn calibration_hits_fifty_percent() {
+        let inst = small();
+        let calib = SolverConfig {
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        };
+        let tau = 1e-7;
+        let trials = 16;
+        let budget =
+            Campaign::calibrate_budget(&inst, trials, 7, &calib, tau, 4);
+        assert!(budget > 0);
+        let camp = Campaign {
+            instance: inst,
+            trials,
+            base_seed: 7,
+            variants: vec![Variant {
+                label: "holder".into(),
+                config: calib,
+            }],
+            budget_flops: budget,
+            threads: 4,
+        };
+        let res = camp.run();
+        let hit = res.gaps[0].iter().filter(|&&g| g <= tau).count();
+        // Median budget ⇒ roughly half the instances converge.
+        assert!(
+            (hit as f64 - trials as f64 / 2.0).abs() <= trials as f64 * 0.3,
+            "hit {hit}/{trials}"
+        );
+    }
+
+    #[test]
+    fn campaign_is_deterministic() {
+        let camp = Campaign {
+            instance: small(),
+            trials: 6,
+            base_seed: 3,
+            variants: variants(),
+            budget_flops: 300_000,
+            threads: 3,
+        };
+        let a = camp.run();
+        let b = camp.run();
+        assert_eq!(a.gaps, b.gaps);
+        assert_eq!(a.flops, b.flops);
+    }
+
+    #[test]
+    fn budget_respected_and_screening_ordered() {
+        // NOTE: at this toy scale (m=20, n=60) the per-atom test cost is
+        // comparable to the matvec cost, so the *profile* ordering of
+        // Fig. 2 need not emerge (the paper itself reports one tied
+        // panel).  Shape claims are checked at representative scale in
+        // `experiments::fig2`; here we verify the campaign mechanics.
+        let camp = Campaign {
+            instance: small(),
+            trials: 12,
+            base_seed: 11,
+            variants: variants(),
+            budget_flops: 250_000,
+            threads: 4,
+        };
+        let res = camp.run();
+        let slack = 6 * 2 * 20 * 60; // ~ a couple of iterations
+        for v in 0..res.labels.len() {
+            for i in 0..12 {
+                assert!(res.gaps[v][i] >= 0.0);
+                assert!(
+                    res.flops[v][i] <= camp.budget_flops + slack as u64,
+                    "{}: flops {} blew budget {}",
+                    res.labels[v],
+                    res.flops[v][i],
+                    camp.budget_flops
+                );
+            }
+        }
+        // Per-instance screening effectiveness follows Thm 2 on average:
+        // holder >= gap_dome - slack (same-iterate dominance is exact;
+        // across different trajectories we allow statistical slack).
+        let mean = |v: usize| -> f64 {
+            res.screen_rate[v].iter().sum::<f64>() / 12.0
+        };
+        let (sph, dom, hld) = (mean(0), mean(1), mean(2));
+        assert!(hld >= dom - 0.1, "holder {hld} << gap dome {dom}");
+        assert!(dom >= sph - 0.1, "gap dome {dom} << sphere {sph}");
+    }
+
+    #[test]
+    fn profile_shapes() {
+        let camp = Campaign {
+            instance: small(),
+            trials: 4,
+            base_seed: 1,
+            variants: variants(),
+            budget_flops: 100_000,
+            threads: 2,
+        };
+        let res = camp.run();
+        let taus = crate::perfprof::log_tau_grid(1e-1, 1e-12, 10);
+        let prof = Campaign::profile(&res, &taus);
+        assert_eq!(prof.rho.len(), 3);
+        assert_eq!(prof.rho[0].len(), 10);
+    }
+}

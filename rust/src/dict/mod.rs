@@ -1,0 +1,256 @@
+//! Dictionary / instance generators reproducing the paper's §V setup.
+//!
+//! * `y` drawn uniformly on the unit sphere `S^{m-1}`;
+//! * `A` either (i) i.i.d. `N(0,1)` entries, or (ii) a Toeplitz
+//!   structure whose columns are shifted samples of a Gaussian curve
+//!   (a convolutional dictionary — the sparse-deconvolution workload);
+//! * columns normalized to `‖a_i‖₂ = 1`;
+//! * `λ = ratio · λ_max` with `ratio ∈ {0.3, 0.5, 0.8}` in the paper.
+
+use crate::linalg::Mat;
+use crate::problem::LassoProblem;
+use crate::util::rng::Pcg64;
+
+/// Which dictionary family to draw (paper §V).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DictKind {
+    /// i.i.d. standard-normal entries, normalized columns.
+    Gaussian,
+    /// Toeplitz: column `j` is a Gaussian pulse centred at row
+    /// `j·m/n` (cyclically shifted), normalized.  Adjacent atoms are
+    /// highly correlated — the hard case for screening.
+    Toeplitz,
+}
+
+impl DictKind {
+    pub fn parse(s: &str) -> Option<DictKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "gaussian" | "iid" | "normal" => Some(DictKind::Gaussian),
+            "toeplitz" | "conv" | "convolutional" => Some(DictKind::Toeplitz),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DictKind::Gaussian => "gaussian",
+            DictKind::Toeplitz => "toeplitz",
+        }
+    }
+}
+
+/// Instance-generation configuration.
+#[derive(Clone, Debug)]
+pub struct InstanceConfig {
+    pub m: usize,
+    pub n: usize,
+    pub kind: DictKind,
+    /// λ as a fraction of λ_max (paper: 0.3 / 0.5 / 0.8).
+    pub lam_ratio: f64,
+    /// Width (std dev, in rows) of the Toeplitz Gaussian pulse.
+    pub pulse_width: f64,
+}
+
+impl InstanceConfig {
+    /// The paper's base setup: (m, n) = (100, 500).
+    pub fn paper(kind: DictKind, lam_ratio: f64) -> Self {
+        InstanceConfig { m: 100, n: 500, kind, lam_ratio, pulse_width: 4.0 }
+    }
+}
+
+/// A generated instance: problem + provenance.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub problem: LassoProblem,
+    pub config: InstanceConfig,
+    pub seed: u64,
+}
+
+/// Draw the dictionary matrix only (unnormalized-then-normalized).
+pub fn draw_dictionary(
+    kind: DictKind,
+    m: usize,
+    n: usize,
+    pulse_width: f64,
+    rng: &mut Pcg64,
+) -> Mat {
+    let mut a = match kind {
+        DictKind::Gaussian => {
+            let mut mat = Mat::zeros(m, n);
+            for j in 0..n {
+                for v in mat.col_mut(j) {
+                    *v = rng.normal();
+                }
+            }
+            mat
+        }
+        DictKind::Toeplitz => {
+            let mut mat = Mat::zeros(m, n);
+            let w2 = 2.0 * pulse_width * pulse_width;
+            for j in 0..n {
+                // Pulse centre moves linearly through the rows so the
+                // atoms tile the observation window (cyclic wrap).
+                let centre = (j as f64) * (m as f64) / (n as f64);
+                let col = mat.col_mut(j);
+                for (i, v) in col.iter_mut().enumerate() {
+                    // cyclic distance
+                    let mut d = (i as f64 - centre).abs();
+                    d = d.min(m as f64 - d);
+                    *v = (-d * d / w2).exp();
+                }
+            }
+            mat
+        }
+    };
+    a.normalize_columns();
+    a
+}
+
+/// Draw `y` uniformly on the unit sphere.
+pub fn draw_observation(m: usize, rng: &mut Pcg64) -> Vec<f64> {
+    rng.unit_sphere(m)
+}
+
+/// Generate a full instance.  λ is `lam_ratio · λ_max(A, y)`, recomputed
+/// per draw as in the paper.
+pub fn generate(config: &InstanceConfig, seed: u64) -> Instance {
+    assert!(config.lam_ratio > 0.0 && config.lam_ratio < 1.0,
+            "lam_ratio must be in (0, 1) for a non-trivial instance");
+    let mut rng = Pcg64::new(seed);
+    let a = draw_dictionary(config.kind, config.m, config.n,
+                            config.pulse_width, &mut rng);
+    let y = draw_observation(config.m, &mut rng);
+    // Probe λ_max via a throwaway problem at λ = 1.
+    let probe = LassoProblem::new(a, y, 1.0);
+    let lam = config.lam_ratio * probe.lam_max();
+    let problem = probe.with_lambda(lam);
+    Instance { problem, config: config.clone(), seed }
+}
+
+/// A planted sparse-recovery instance: `y = A x₀ + σ·noise` with `k`
+/// spikes.  Not in the paper's evaluation, but the natural workload for
+/// the deconvolution example.
+pub fn generate_planted(
+    config: &InstanceConfig,
+    k: usize,
+    noise_sigma: f64,
+    seed: u64,
+) -> (Instance, Vec<f64>) {
+    let mut rng = Pcg64::new(seed);
+    let a = draw_dictionary(config.kind, config.m, config.n,
+                            config.pulse_width, &mut rng);
+    let mut x0 = vec![0.0; config.n];
+    for idx in rng.sample_indices(config.n, k) {
+        // Amplitudes bounded away from zero so the support is meaningful.
+        x0[idx] = (1.0 + rng.uniform()) * if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+    }
+    let mut y = vec![0.0; config.m];
+    crate::linalg::gemv(&a, &x0, &mut y);
+    for v in y.iter_mut() {
+        *v += noise_sigma * rng.normal();
+    }
+    let probe = LassoProblem::new(a, y, 1.0);
+    let lam = config.lam_ratio * probe.lam_max();
+    let problem = probe.with_lambda(lam);
+    (Instance { problem, config: config.clone(), seed }, x0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{self};
+
+    #[test]
+    fn gaussian_instance_matches_paper_setup() {
+        let cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+        let inst = generate(&cfg, 0);
+        let p = &inst.problem;
+        assert_eq!(p.m(), 100);
+        assert_eq!(p.n(), 500);
+        // Columns normalized.
+        for j in 0..p.n() {
+            assert!((linalg::norm2(p.a().col(j)) - 1.0).abs() < 1e-12);
+        }
+        // y on unit sphere.
+        assert!((linalg::norm2(p.y()) - 1.0).abs() < 1e-12);
+        // λ at the requested ratio.
+        assert!((p.lam() / p.lam_max() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toeplitz_columns_are_shifted_pulses() {
+        let cfg = InstanceConfig {
+            m: 64,
+            n: 128,
+            kind: DictKind::Toeplitz,
+            lam_ratio: 0.5,
+            pulse_width: 3.0,
+        };
+        let inst = generate(&cfg, 1);
+        let a = inst.problem.a();
+        // Each column peaks at its pulse centre.
+        for j in [0usize, 32, 64, 127] {
+            let col = a.col(j);
+            let (imax, _) = crate::linalg::argmax_abs(col);
+            let centre = (j as f64 * 64.0 / 128.0).round() as i64;
+            let d = (imax as i64 - centre).rem_euclid(64).min(
+                (centre - imax as i64).rem_euclid(64),
+            );
+            assert!(d <= 1, "col {j}: peak {imax} vs centre {centre}");
+        }
+        // Adjacent atoms strongly correlated (the screening-hard case).
+        let c = linalg::dot(a.col(10), a.col(11));
+        assert!(c > 0.8, "adjacent correlation {c}");
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let cfg = InstanceConfig::paper(DictKind::Gaussian, 0.3);
+        let a = generate(&cfg, 7);
+        let b = generate(&cfg, 7);
+        let c = generate(&cfg, 8);
+        assert_eq!(a.problem.a().as_slice(), b.problem.a().as_slice());
+        assert_ne!(a.problem.a().as_slice(), c.problem.a().as_slice());
+    }
+
+    #[test]
+    fn planted_instance_recovers_shape() {
+        let cfg = InstanceConfig {
+            m: 50,
+            n: 100,
+            kind: DictKind::Toeplitz,
+            lam_ratio: 0.3,
+            pulse_width: 2.0,
+        };
+        let (inst, x0) = generate_planted(&cfg, 5, 0.01, 3);
+        assert_eq!(x0.len(), 100);
+        assert_eq!(linalg::support_size(&x0, 0.0), 5);
+        // y should correlate with the planted support atoms.
+        let p = &inst.problem;
+        let support: Vec<usize> =
+            (0..100).filter(|&j| x0[j] != 0.0).collect();
+        let max_on = support
+            .iter()
+            .map(|&j| p.aty()[j].abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_on > 0.5, "planted atoms barely correlated: {max_on}");
+    }
+
+    #[test]
+    fn parse_kind() {
+        assert_eq!(DictKind::parse("gaussian"), Some(DictKind::Gaussian));
+        assert_eq!(DictKind::parse("Toeplitz"), Some(DictKind::Toeplitz));
+        assert_eq!(DictKind::parse("conv"), Some(DictKind::Toeplitz));
+        assert_eq!(DictKind::parse("bogus"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lam_ratio_out_of_range_panics() {
+        let cfg = InstanceConfig {
+            m: 10, n: 20, kind: DictKind::Gaussian,
+            lam_ratio: 1.5, pulse_width: 2.0,
+        };
+        generate(&cfg, 0);
+    }
+}

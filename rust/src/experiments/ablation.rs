@@ -1,0 +1,218 @@
+//! Extra-2: ablations of the design choices DESIGN.md calls out.
+//!
+//! * `screen_period`: how often should the test run?  (paper: every
+//!   iteration; the test is O(n+m) so rarely worth skipping)
+//! * `solver_kind`: does the Hölder dome help ISTA and CD too?
+//! * `extra_regions`: the classical static/dynamic spheres vs the GAP
+//!   family (why dynamic gap-based regions took over).
+
+use crate::dict::{generate, DictKind, InstanceConfig};
+use crate::par::par_map;
+use crate::regions::RegionKind;
+use crate::solver::{solve, Budget, SolverConfig, SolverKind};
+
+/// Mean flops-to-gap over trials for one configuration.
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub label: String,
+    pub mean_flops: f64,
+    pub mean_iters: f64,
+    pub mean_screen_rate: f64,
+    pub converged: usize,
+    pub trials: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct AblationConfig {
+    pub m: usize,
+    pub n: usize,
+    pub trials: usize,
+    pub lam_ratio: f64,
+    pub dict: DictKind,
+    pub target_gap: f64,
+    pub base_seed: u64,
+    pub threads: usize,
+}
+
+impl Default for AblationConfig {
+    fn default() -> Self {
+        AblationConfig {
+            m: 100,
+            n: 500,
+            trials: 20,
+            lam_ratio: 0.5,
+            dict: DictKind::Gaussian,
+            target_gap: 1e-8,
+            base_seed: 0x0F16_0004,
+            threads: crate::par::default_threads(),
+        }
+    }
+}
+
+fn measure(
+    cfg: &AblationConfig,
+    label: &str,
+    scfg: &SolverConfig,
+) -> AblationRow {
+    let icfg = InstanceConfig {
+        m: cfg.m,
+        n: cfg.n,
+        kind: cfg.dict,
+        lam_ratio: cfg.lam_ratio,
+        pulse_width: 4.0,
+    };
+    let outs = par_map(cfg.trials, cfg.threads, |i| {
+        let p = generate(&icfg, cfg.base_seed + i as u64).problem;
+        let rep = solve(&p, scfg);
+        (
+            rep.flops as f64,
+            rep.iters as f64,
+            rep.screened as f64 / p.n() as f64,
+            rep.gap <= cfg.target_gap,
+        )
+    });
+    let n = outs.len() as f64;
+    AblationRow {
+        label: label.to_string(),
+        mean_flops: outs.iter().map(|o| o.0).sum::<f64>() / n,
+        mean_iters: outs.iter().map(|o| o.1).sum::<f64>() / n,
+        mean_screen_rate: outs.iter().map(|o| o.2).sum::<f64>() / n,
+        converged: outs.iter().filter(|o| o.3).count(),
+        trials: outs.len(),
+    }
+}
+
+/// Ablation A: screening period sweep (Hölder dome).
+pub fn screen_period(cfg: &AblationConfig) -> Vec<AblationRow> {
+    [1usize, 2, 5, 10, 50]
+        .iter()
+        .map(|&every| {
+            let scfg = SolverConfig {
+                budget: Budget::gap(cfg.target_gap),
+                region: Some(RegionKind::HolderDome),
+                screen_every: every,
+                ..Default::default()
+            };
+            measure(cfg, &format!("every={every}"), &scfg)
+        })
+        .collect()
+}
+
+/// Ablation B: solver kind × screening.
+pub fn solver_kind(cfg: &AblationConfig) -> Vec<AblationRow> {
+    let mut rows = Vec::new();
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        for region in [None, Some(RegionKind::HolderDome)] {
+            let scfg = SolverConfig {
+                kind,
+                budget: Budget::gap(cfg.target_gap),
+                region,
+                screen_every: 1,
+                record_trace: false,
+            };
+            let label = format!(
+                "{}{}",
+                kind.name(),
+                region.map(|_| "+holder").unwrap_or("")
+            );
+            rows.push(measure(cfg, &label, &scfg));
+        }
+    }
+    rows
+}
+
+/// Ablation C: all five regions head-to-head (FISTA).
+pub fn regions(cfg: &AblationConfig) -> Vec<AblationRow> {
+    let mut rows = Vec::new();
+    for region in RegionKind::ALL {
+        let scfg = SolverConfig {
+            budget: Budget::gap(cfg.target_gap),
+            region: Some(region),
+            ..Default::default()
+        };
+        rows.push(measure(cfg, region.name(), &scfg));
+    }
+    rows.push(measure(
+        cfg,
+        "no_screen",
+        &SolverConfig {
+            budget: Budget::gap(cfg.target_gap),
+            region: None,
+            ..Default::default()
+        },
+    ));
+    rows
+}
+
+/// Render rows.
+pub fn table(rows: &[AblationRow]) -> crate::benchkit::Table {
+    let mut t = crate::benchkit::Table::new(&[
+        "config",
+        "mean flops",
+        "mean iters",
+        "screen rate",
+        "converged",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.3e}", r.mean_flops),
+            format!("{:.1}", r.mean_iters),
+            format!("{:.3}", r.mean_screen_rate),
+            format!("{}/{}", r.converged, r.trials),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> AblationConfig {
+        AblationConfig {
+            m: 25,
+            n: 80,
+            trials: 6,
+            target_gap: 1e-7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn screening_every_iteration_is_not_worse() {
+        let rows = screen_period(&quick());
+        // screening every iteration should beat screening every 50
+        let every1 = &rows[0];
+        let every50 = rows.last().unwrap();
+        assert!(every1.mean_flops <= every50.mean_flops * 1.1,
+                "{} vs {}", every1.mean_flops, every50.mean_flops);
+        assert_eq!(every1.converged, every1.trials);
+    }
+
+    #[test]
+    fn holder_helps_every_solver() {
+        let rows = solver_kind(&quick());
+        // rows alternate: kind, kind+holder
+        for pair in rows.chunks(2) {
+            assert!(
+                pair[1].mean_flops <= pair[0].mean_flops,
+                "{}: {} vs {}",
+                pair[1].label,
+                pair[1].mean_flops,
+                pair[0].mean_flops
+            );
+        }
+    }
+
+    #[test]
+    fn gap_family_beats_classical_spheres() {
+        let rows = regions(&quick());
+        let get = |name: &str| {
+            rows.iter().find(|r| r.label == name).unwrap().mean_flops
+        };
+        assert!(get("holder_dome") <= get("static_sphere"));
+        assert!(get("holder_dome") <= get("no_screen"));
+        assert!(!table(&rows).is_empty());
+    }
+}

@@ -1,0 +1,310 @@
+//! Fig. 1: expected ratio `Rad(D_new)/Rad(D_gap)` as a function of the
+//! duality gap achieved by `(x, u)`.
+//!
+//! Protocol (paper §V-a): for each trial, generate `(A, y)`; run FISTA
+//! from zero; at every iterate form the couple `(x^{(t)}, u^{(t)})` by
+//! dual scaling and evaluate the two dome radii.  Samples are binned by
+//! `log₁₀(gap)` and averaged over trials.  One curve per `λ/λ_max`
+//! ratio, one panel per dictionary.
+
+use crate::dict::{generate, DictKind, InstanceConfig};
+use crate::par::par_map;
+use crate::problem::LassoProblem;
+use crate::regions::{RegionKind, SafeRegion};
+
+/// One averaged curve: ratio vs gap for a (dict, λ-ratio) cell.
+#[derive(Clone, Debug)]
+pub struct RadiusCurve {
+    pub dict: DictKind,
+    pub lam_ratio: f64,
+    /// Bin centres (gap values, decreasing).
+    pub gaps: Vec<f64>,
+    /// Mean ratio per bin (NaN bins removed).
+    pub ratios: Vec<f64>,
+    /// Samples per bin.
+    pub counts: Vec<usize>,
+}
+
+/// Experiment configuration (paper defaults).
+#[derive(Clone, Debug)]
+pub struct Fig1Config {
+    pub m: usize,
+    pub n: usize,
+    pub trials: usize,
+    pub lam_ratios: Vec<f64>,
+    pub dicts: Vec<DictKind>,
+    /// log10 bin edges: gap from 10^hi down to 10^lo.
+    pub log_hi: f64,
+    pub log_lo: f64,
+    pub bins: usize,
+    pub base_seed: u64,
+    pub threads: usize,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Fig1Config {
+            m: 100,
+            n: 500,
+            trials: 50,
+            lam_ratios: vec![0.3, 0.5, 0.8],
+            dicts: vec![DictKind::Gaussian, DictKind::Toeplitz],
+            log_hi: 0.0,
+            log_lo: -9.0,
+            bins: 28,
+            base_seed: 0x0F16_0001,
+            threads: crate::par::default_threads(),
+        }
+    }
+}
+
+impl Fig1Config {
+    /// Shrunk preset for tests/CI.
+    pub fn quick() -> Self {
+        Fig1Config {
+            m: 40,
+            n: 150,
+            trials: 8,
+            bins: 14,
+            log_lo: -8.0,
+            ..Default::default()
+        }
+    }
+}
+
+/// Ratio samples (gap, ratio) along one FISTA trajectory.
+pub fn trajectory_ratios(p: &LassoProblem) -> Vec<(f64, f64)> {
+    // Run FISTA with trace recording; rebuild iterates via a second pass
+    // is wasteful — instead re-run the iteration loop here, sampling the
+    // two dome radii at every iterate.
+    let step = p.default_step();
+    let n = p.n();
+    let mut x = vec![0.0; n];
+    let mut x_prev = x.clone();
+    let mut t = 1.0f64;
+    let mut out = Vec::new();
+    for _ in 0..4000 {
+        // z and gradient
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let beta = (t - 1.0) / t_next;
+        let mut z = vec![0.0; n];
+        for i in 0..n {
+            z[i] = x[i] + beta * (x[i] - x_prev[i]);
+        }
+        let evz = p.eval(&z);
+        let mut x_next = vec![0.0; n];
+        for i in 0..n {
+            x_next[i] = crate::linalg::soft_threshold_scalar(
+                z[i] + step * evz.atr[i],
+                step * p.lam(),
+            );
+        }
+        x_prev = x;
+        x = x_next;
+        t = t_next;
+
+        let ev = p.eval(&x);
+        let holder = SafeRegion::build(RegionKind::HolderDome, p, &x, &ev);
+        let gap_dome = SafeRegion::build(RegionKind::GapDome, p, &x, &ev);
+        let rg = gap_dome.rad();
+        if rg > 1e-300 && ev.gap > 0.0 {
+            out.push((ev.gap, holder.rad() / rg));
+        }
+        if ev.gap < 1e-10 {
+            break;
+        }
+    }
+    out
+}
+
+/// Run the full Fig. 1 sweep.
+pub fn run(cfg: &Fig1Config) -> Vec<RadiusCurve> {
+    let mut curves = Vec::new();
+    for &dict in &cfg.dicts {
+        for &ratio in &cfg.lam_ratios {
+            let icfg = InstanceConfig {
+                m: cfg.m,
+                n: cfg.n,
+                kind: dict,
+                lam_ratio: ratio,
+                pulse_width: 4.0,
+            };
+            // Parallel over trials; each yields (gap, ratio) samples.
+            let samples: Vec<Vec<(f64, f64)>> =
+                par_map(cfg.trials, cfg.threads, |i| {
+                    let p =
+                        generate(&icfg, cfg.base_seed + i as u64).problem;
+                    trajectory_ratios(&p)
+                });
+            // Bin by log10(gap).
+            let mut sums = vec![0.0; cfg.bins];
+            let mut counts = vec![0usize; cfg.bins];
+            let width = (cfg.log_hi - cfg.log_lo) / cfg.bins as f64;
+            for traj in samples {
+                for (gap, ratio) in traj {
+                    let lg = gap.log10();
+                    if lg < cfg.log_lo || lg >= cfg.log_hi {
+                        continue;
+                    }
+                    let b = ((lg - cfg.log_lo) / width) as usize;
+                    let b = b.min(cfg.bins - 1);
+                    sums[b] += ratio;
+                    counts[b] += 1;
+                }
+            }
+            let mut gaps = Vec::new();
+            let mut ratios = Vec::new();
+            let mut kept_counts = Vec::new();
+            for b in (0..cfg.bins).rev() {
+                if counts[b] == 0 {
+                    continue;
+                }
+                let centre =
+                    10f64.powf(cfg.log_lo + (b as f64 + 0.5) * width);
+                gaps.push(centre);
+                ratios.push(sums[b] / counts[b] as f64);
+                kept_counts.push(counts[b]);
+            }
+            curves.push(RadiusCurve {
+                dict,
+                lam_ratio: ratio,
+                gaps,
+                ratios,
+                counts: kept_counts,
+            });
+        }
+    }
+    curves
+}
+
+/// Render curves as a markdown table (one row per bin).
+pub fn table(curves: &[RadiusCurve]) -> crate::benchkit::Table {
+    let mut t = crate::benchkit::Table::new(&[
+        "dict", "lam/lam_max", "gap", "E[Rad_new/Rad_gap]", "samples",
+    ]);
+    for c in curves {
+        for ((g, r), n) in
+            c.gaps.iter().zip(&c.ratios).zip(&c.counts)
+        {
+            t.row(&[
+                c.dict.name().to_string(),
+                format!("{:.1}", c.lam_ratio),
+                format!("{g:.2e}"),
+                format!("{r:.4}"),
+                n.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// JSON export for plotting.
+pub fn to_json(curves: &[RadiusCurve]) -> crate::configfmt::Value {
+    let mut arr = Vec::new();
+    for c in curves {
+        let mut o = crate::configfmt::Value::obj();
+        o.set("dict", c.dict.name());
+        o.set("lam_ratio", c.lam_ratio);
+        o.set("gaps", c.gaps.clone());
+        o.set("ratios", c.ratios.clone());
+        o.set(
+            "counts",
+            c.counts.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        arr.push(o);
+    }
+    crate::configfmt::Value::Arr(arr)
+}
+
+/// Check the paper's qualitative claims on a curve set; returns a list
+/// of violations (empty = all shape claims hold).
+pub fn check_shape(curves: &[RadiusCurve]) -> Vec<String> {
+    let mut bad = Vec::new();
+    for c in curves {
+        // Theorem 2: ratio <= 1 everywhere.
+        for (g, r) in c.gaps.iter().zip(&c.ratios) {
+            if *r > 1.0 + 1e-9 {
+                bad.push(format!(
+                    "{} ratio {:.1}: ratio {} > 1 at gap {:.1e}",
+                    c.dict.name(),
+                    c.lam_ratio,
+                    r,
+                    g
+                ));
+            }
+        }
+        // Paper: meaningful shrinkage somewhere along the path.
+        if let Some(min) = c
+            .ratios
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+        {
+            if min > 0.95 {
+                bad.push(format!(
+                    "{} ratio {:.1}: min ratio {min:.3} — no shrinkage",
+                    c.dict.name(),
+                    c.lam_ratio
+                ));
+            }
+        }
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig1_has_paper_shape() {
+        let mut cfg = Fig1Config::quick();
+        cfg.trials = 4;
+        cfg.lam_ratios = vec![0.5];
+        let curves = run(&cfg);
+        assert_eq!(curves.len(), 2); // two dictionaries × one ratio
+        for c in &curves {
+            assert!(!c.gaps.is_empty(), "empty curve");
+            // gaps sorted decreasing
+            for w in c.gaps.windows(2) {
+                assert!(w[1] < w[0]);
+            }
+        }
+        let violations = check_shape(&curves);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn trajectory_ratios_bounded() {
+        let icfg = InstanceConfig {
+            m: 30,
+            n: 90,
+            kind: DictKind::Gaussian,
+            lam_ratio: 0.5,
+            pulse_width: 4.0,
+        };
+        let p = generate(&icfg, 0).problem;
+        let samples = trajectory_ratios(&p);
+        assert!(samples.len() > 5);
+        for (gap, ratio) in samples {
+            assert!(gap > 0.0);
+            assert!(
+                (0.0..=1.0 + 1e-9).contains(&ratio),
+                "ratio {ratio} out of [0,1]"
+            );
+        }
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        let mut cfg = Fig1Config::quick();
+        cfg.trials = 2;
+        cfg.lam_ratios = vec![0.5];
+        cfg.dicts = vec![DictKind::Gaussian];
+        let curves = run(&cfg);
+        assert!(!table(&curves).is_empty());
+        let j = to_json(&curves);
+        let s = crate::configfmt::json::to_string(&j);
+        assert!(s.contains("gaussian"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Experiment drivers: one module per paper figure/table plus the
+//! extension studies.  Each driver is a pure library function returning
+//! structured results; the CLI (`holder-screening fig1 ...`) and the
+//! bench binaries (`cargo bench`) are thin wrappers around these.
+//!
+//! | id | paper artifact | driver |
+//! |----|----------------|--------|
+//! | Fig. 1 | E[Rad(D_new)/Rad(D_gap)] vs duality gap | [`fig1`] |
+//! | Fig. 2 | Dolan-Moré profiles under flop budget | [`fig2`] |
+//! | Extra-1 | screening rate vs iteration | [`screenrate`] |
+//! | Extra-2 | ablations (solver kind, screen period, extra regions) | [`ablation`] |
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig2;
+pub mod screenrate;

@@ -1,0 +1,199 @@
+//! Extra-1: screening rate vs iteration (the standard diagnostic in the
+//! safe-screening literature, e.g. Fercoq et al. Fig. 1).
+//!
+//! For each region, run FISTA+screening and record the fraction of atoms
+//! eliminated after every iteration, averaged over trials.
+
+use crate::dict::{generate, DictKind, InstanceConfig};
+use crate::par::par_map;
+use crate::regions::RegionKind;
+use crate::solver::{solve, Budget, SolverConfig, SolverKind};
+
+/// Screen-rate curves for one (dict, λ-ratio) cell.
+#[derive(Clone, Debug)]
+pub struct ScreenRateCurves {
+    pub dict: DictKind,
+    pub lam_ratio: f64,
+    pub labels: Vec<String>,
+    /// `rate[v][t]`: mean fraction screened after iteration `t`.
+    pub rate: Vec<Vec<f64>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ScreenRateConfig {
+    pub m: usize,
+    pub n: usize,
+    pub trials: usize,
+    pub iters: usize,
+    pub lam_ratio: f64,
+    pub dict: DictKind,
+    pub regions: Vec<RegionKind>,
+    pub base_seed: u64,
+    pub threads: usize,
+}
+
+impl Default for ScreenRateConfig {
+    fn default() -> Self {
+        ScreenRateConfig {
+            m: 100,
+            n: 500,
+            trials: 20,
+            iters: 150,
+            lam_ratio: 0.5,
+            dict: DictKind::Gaussian,
+            regions: RegionKind::PAPER.to_vec(),
+            base_seed: 0x0F16_0003,
+            threads: crate::par::default_threads(),
+        }
+    }
+}
+
+/// Run the sweep.
+pub fn run(cfg: &ScreenRateConfig) -> ScreenRateCurves {
+    let icfg = InstanceConfig {
+        m: cfg.m,
+        n: cfg.n,
+        kind: cfg.dict,
+        lam_ratio: cfg.lam_ratio,
+        pulse_width: 4.0,
+    };
+    let mut labels = Vec::new();
+    let mut rate = Vec::new();
+    for &region in &cfg.regions {
+        labels.push(region.name().to_string());
+        // rate_t averaged over trials; trace gives active count per iter.
+        let per_trial: Vec<Vec<f64>> =
+            par_map(cfg.trials, cfg.threads, |i| {
+                let p = generate(&icfg, cfg.base_seed + i as u64).problem;
+                let scfg = SolverConfig {
+                    kind: SolverKind::Fista,
+                    budget: Budget {
+                        max_iters: cfg.iters,
+                        max_flops: None,
+                        target_gap: 0.0,
+                    },
+                    region: Some(region),
+                    screen_every: 1,
+                    record_trace: true,
+                };
+                let rep = solve(&p, &scfg);
+                let n = p.n() as f64;
+                let mut curve = vec![0.0; cfg.iters + 1];
+                let mut last = 0.0;
+                for tp in &rep.trace {
+                    let r = 1.0 - tp.active as f64 / n;
+                    if tp.iter <= cfg.iters {
+                        curve[tp.iter] = r;
+                    }
+                    last = r;
+                }
+                // pad beyond convergence with the final rate
+                let converged_at = rep.trace.last().map(|t| t.iter).unwrap_or(0);
+                for t in converged_at + 1..=cfg.iters {
+                    curve[t] = last;
+                }
+                curve
+            });
+        let mut mean = vec![0.0; cfg.iters + 1];
+        for c in &per_trial {
+            for (m_t, v) in mean.iter_mut().zip(c) {
+                *m_t += v;
+            }
+        }
+        for v in mean.iter_mut() {
+            *v /= cfg.trials as f64;
+        }
+        rate.push(mean);
+    }
+    ScreenRateCurves {
+        dict: cfg.dict,
+        lam_ratio: cfg.lam_ratio,
+        labels,
+        rate,
+    }
+}
+
+/// Markdown table sampled at a few iterations.
+pub fn table(c: &ScreenRateCurves) -> crate::benchkit::Table {
+    let iters = c.rate[0].len() - 1;
+    let samples: Vec<usize> = [1, 2, 5, 10, 20, 50, 100, 150, 300]
+        .iter()
+        .cloned()
+        .filter(|&t| t <= iters)
+        .collect();
+    let mut header = vec!["iter".to_string()];
+    header.extend(c.labels.clone());
+    let refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = crate::benchkit::Table::new(&refs);
+    for &it in &samples {
+        let mut row = vec![it.to_string()];
+        for v in 0..c.labels.len() {
+            row.push(format!("{:.3}", c.rate[v][it]));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+/// Shape check: Hölder curve pointwise ≥ GAP dome ≥ GAP sphere (within
+/// statistical slack) and all curves monotone non-decreasing.
+pub fn check_shape(c: &ScreenRateCurves) -> Vec<String> {
+    let mut bad = Vec::new();
+    for (v, curve) in c.rate.iter().enumerate() {
+        for w in curve.windows(2) {
+            if w[1] + 1e-9 < w[0] {
+                bad.push(format!(
+                    "{}: screen rate decreased {} -> {}",
+                    c.labels[v], w[0], w[1]
+                ));
+                break;
+            }
+        }
+    }
+    let idx = |name: &str| c.labels.iter().position(|l| l == name);
+    if let (Some(s), Some(g), Some(h)) = (
+        idx("gap_sphere"),
+        idx("gap_dome"),
+        idx("holder_dome"),
+    ) {
+        let t_end = c.rate[0].len() - 1;
+        for t in [t_end / 4, t_end / 2, t_end] {
+            if c.rate[h][t] + 0.02 < c.rate[g][t] {
+                bad.push(format!(
+                    "iter {t}: holder {:.3} < gap dome {:.3}",
+                    c.rate[h][t], c.rate[g][t]
+                ));
+            }
+            if c.rate[g][t] + 0.02 < c.rate[s][t] {
+                bad.push(format!(
+                    "iter {t}: gap dome {:.3} < sphere {:.3}",
+                    c.rate[g][t], c.rate[s][t]
+                ));
+            }
+        }
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn screen_rate_shape_holds() {
+        let cfg = ScreenRateConfig {
+            m: 30,
+            n: 100,
+            trials: 6,
+            iters: 60,
+            ..Default::default()
+        };
+        let curves = run(&cfg);
+        let bad = check_shape(&curves);
+        assert!(bad.is_empty(), "{bad:?}");
+        // screening eventually fires
+        let final_h = curves.rate.last().unwrap().last().unwrap();
+        assert!(*final_h > 0.1, "holder never screened: {final_h}");
+        assert!(!table(&curves).is_empty());
+    }
+}

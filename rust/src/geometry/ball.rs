@@ -1,0 +1,126 @@
+//! Closed balls `B(c, R)` (eq. 10) and the sphere screening test (eq. 11).
+
+use crate::linalg::{self};
+
+/// A closed ball `B(c, R)`.
+#[derive(Clone, Debug)]
+pub struct Ball {
+    pub center: Vec<f64>,
+    pub radius: f64,
+}
+
+impl Ball {
+    pub fn new(center: Vec<f64>, radius: f64) -> Self {
+        assert!(radius >= 0.0, "radius must be nonnegative");
+        Ball { center, radius }
+    }
+
+    /// Membership test (with tolerance for fp noise).
+    pub fn contains(&self, u: &[f64], tol: f64) -> bool {
+        self.dist_from_center(u) <= self.radius + tol
+    }
+
+    fn dist_from_center(&self, u: &[f64]) -> f64 {
+        debug_assert_eq!(u.len(), self.center.len());
+        let mut d = 0.0;
+        for (a, b) in u.iter().zip(&self.center) {
+            d += (a - b) * (a - b);
+        }
+        d.sqrt()
+    }
+
+    /// `max_{u∈B} ⟨a, u⟩ = ⟨a,c⟩ + R‖a‖` (one-sided).
+    pub fn max_inner(&self, a: &[f64]) -> f64 {
+        linalg::dot(a, &self.center) + self.radius * linalg::norm2(a)
+    }
+
+    /// `max_{u∈B} |⟨a, u⟩| = |⟨a,c⟩| + R‖a‖` (eq. 11).
+    pub fn max_abs_inner(&self, a: &[f64]) -> f64 {
+        linalg::dot(a, &self.center).abs()
+            + self.radius * linalg::norm2(a)
+    }
+
+    /// Same from precomputed statistics (hot path): `atc = ⟨a,c⟩`,
+    /// `anrm = ‖a‖`.
+    #[inline]
+    pub fn max_abs_inner_stat(&self, atc: f64, anrm: f64) -> f64 {
+        atc.abs() + self.radius * anrm
+    }
+
+    /// `Rad(B) = R` (eq. 32 for a ball).
+    pub fn rad(&self) -> f64 {
+        self.radius
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{Gen, Runner};
+
+    #[test]
+    fn max_abs_inner_matches_definition() {
+        let b = Ball::new(vec![1.0, 0.0], 2.0);
+        // a = (0,1): |<a,c>| = 0, + 2*1 = 2
+        assert!((b.max_abs_inner(&[0.0, 1.0]) - 2.0).abs() < 1e-15);
+        // a = (1,0): 1 + 2 = 3
+        assert!((b.max_abs_inner(&[1.0, 0.0]) - 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn max_inner_dominates_samples() {
+        Runner::new(77).cases(50).run("ball max_inner is an upper bound", |g| {
+            let m = g.usize_in(2, 12);
+            let c = g.vec_normal(m);
+            let radius = g.f64_in(0.0, 2.0);
+            let b = Ball::new(c.clone(), radius);
+            let a = g.vec_normal(m);
+            let bound = b.max_inner(&a);
+            for _ in 0..100 {
+                let mut u = g.rng().unit_ball(m);
+                for (ui, ci) in u.iter_mut().zip(&c) {
+                    *ui = ci + radius * *ui;
+                }
+                if crate::linalg::dot(&a, &u) > bound + 1e-9 {
+                    return Err("sample exceeded closed form".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn max_inner_is_attained() {
+        // maximizer u* = c + R a/||a||
+        let mut g = Gen::for_case(5, 0);
+        let c = g.vec_normal(6);
+        let a = g.vec_normal(6);
+        let b = Ball::new(c.clone(), 1.5);
+        let na = crate::linalg::norm2(&a);
+        let u_star: Vec<f64> =
+            c.iter().zip(&a).map(|(ci, ai)| ci + 1.5 * ai / na).collect();
+        let val = crate::linalg::dot(&a, &u_star);
+        assert!((val - b.max_inner(&a)).abs() < 1e-10);
+        assert!(b.contains(&u_star, 1e-12));
+    }
+
+    #[test]
+    fn stat_variant_matches() {
+        let mut g = Gen::for_case(6, 0);
+        let c = g.vec_normal(8);
+        let a = g.vec_normal(8);
+        let b = Ball::new(c.clone(), 0.7);
+        let atc = crate::linalg::dot(&a, &c);
+        let anrm = crate::linalg::norm2(&a);
+        assert!(
+            (b.max_abs_inner(&a) - b.max_abs_inner_stat(atc, anrm)).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_radius_panics() {
+        Ball::new(vec![0.0], -1.0);
+    }
+}

@@ -1,0 +1,297 @@
+//! Domes `D(c, R, g, δ) = B(c,R) ∩ H(g,δ)` (eq. 12) with the closed-form
+//! maximum of eq. (14)-(15) and the `Rad(·)` of eq. (32).
+
+use super::{Ball, HalfSpace, EPS};
+use crate::linalg::{self};
+
+/// A dome: ball ∩ half-space.
+#[derive(Clone, Debug)]
+pub struct Dome {
+    pub ball: Ball,
+    pub half: HalfSpace,
+    /// Cached `ψ₂ = min((δ − ⟨g,c⟩)/(R‖g‖), 1)`, clamped to [−1, 1];
+    /// `1.0` when the cut is degenerate (no effective half-space).
+    psi2: f64,
+    /// Cached `‖g‖` — the per-atom test is O(1) only because this is
+    /// NOT recomputed per atom (perf log entry 1 in EXPERIMENTS.md).
+    g_norm: f64,
+    /// Cached `√(1−ψ₂²)` — constant across atoms, hoisted out of
+    /// `f(·, ψ₂)` (perf log entry 2).
+    sin2: f64,
+}
+
+impl Dome {
+    pub fn new(ball: Ball, half: HalfSpace) -> Self {
+        let psi2 = Self::compute_psi2(&ball, &half);
+        let g_norm = half.g_norm();
+        let sin2 = (1.0 - psi2 * psi2).max(0.0).sqrt();
+        Dome { ball, half, psi2, g_norm, sin2 }
+    }
+
+    /// `f(ψ₁, ψ₂)` with the ψ₂ trigonometry precomputed.
+    #[inline(always)]
+    fn f_cached(&self, psi1: f64) -> f64 {
+        if psi1 <= self.psi2 {
+            1.0
+        } else {
+            let s1 = (1.0 - psi1 * psi1).max(0.0).sqrt();
+            psi1 * self.psi2 + s1 * self.sin2
+        }
+    }
+
+    /// ψ₂ per eq. (15).  Degenerate cases (`g = 0` or `R = 0`) give
+    /// ψ₂ = 1, turning the dome test into the sphere test.
+    fn compute_psi2(ball: &Ball, half: &HalfSpace) -> f64 {
+        let gn = half.g_norm();
+        if gn < EPS || ball.radius < EPS {
+            return 1.0;
+        }
+        let margin = half.delta - linalg::dot(&half.g, &ball.center);
+        (margin / (ball.radius * gn)).clamp(-1.0, 1.0)
+    }
+
+    /// Cached ψ₂.
+    pub fn psi2(&self) -> f64 {
+        self.psi2
+    }
+
+    /// The signed cut distance `d = (δ − ⟨g,c⟩)/‖g‖` (= ψ₂·R when the
+    /// raw value is within [−R, R]).
+    pub fn cut_distance(&self) -> f64 {
+        self.half.signed_distance(&self.ball.center)
+    }
+
+    /// Is the dome (numerically) empty?  `ψ₂ ≤ −1` means the half-space
+    /// excludes the whole ball.
+    pub fn is_empty(&self) -> bool {
+        if self.half.is_degenerate() {
+            return self.half.delta < 0.0;
+        }
+        self.cut_distance() <= -self.ball.radius
+    }
+
+    /// Membership.
+    pub fn contains(&self, u: &[f64], tol: f64) -> bool {
+        self.ball.contains(u, tol) && self.half.contains(u, tol)
+    }
+
+    /// `max_{u∈D} ⟨a, u⟩` (eq. 15): `⟨a,c⟩ + R‖a‖·f(ψ₁, ψ₂)`.
+    pub fn max_inner(&self, a: &[f64]) -> f64 {
+        let atc = linalg::dot(a, &self.ball.center);
+        let anrm = linalg::norm2(a);
+        let atg = linalg::dot(a, &self.half.g);
+        self.max_inner_stat(atc, atg, anrm)
+    }
+
+    /// `max_{u∈D} |⟨a, u⟩|` (eq. 14).
+    pub fn max_abs_inner(&self, a: &[f64]) -> f64 {
+        let atc = linalg::dot(a, &self.ball.center);
+        let anrm = linalg::norm2(a);
+        let atg = linalg::dot(a, &self.half.g);
+        self.max_abs_inner_stat(atc, atg, anrm)
+    }
+
+    /// eq. (15) from precomputed statistics (hot path).
+    #[inline]
+    pub fn max_inner_stat(&self, atc: f64, atg: f64, anrm: f64) -> f64 {
+        let gn = self.g_norm;
+        let psi1 = if anrm * gn < EPS {
+            0.0
+        } else {
+            (atg / (anrm * gn)).clamp(-1.0, 1.0)
+        };
+        atc + self.ball.radius * anrm * self.f_cached(psi1)
+    }
+
+    /// eq. (14) from precomputed statistics (hot path).
+    #[inline]
+    pub fn max_abs_inner_stat(&self, atc: f64, atg: f64, anrm: f64) -> f64 {
+        let gn = self.g_norm;
+        let psi1 = if anrm * gn < EPS {
+            0.0
+        } else {
+            (atg / (anrm * gn)).clamp(-1.0, 1.0)
+        };
+        let r_an = self.ball.radius * anrm;
+        let up = atc + r_an * self.f_cached(psi1);
+        let dn = -atc + r_an * self.f_cached(-psi1);
+        up.max(dn)
+    }
+
+    /// `Rad(D)` (eq. 32): half the diameter of the dome.
+    ///
+    /// With cut distance `d` from the ball centre:
+    /// * `d ≥ 0`  — the cap is at least a hemisphere; an antipodal pair
+    ///   perpendicular to `g` survives, so `Rad = R`;
+    /// * `−R < d < 0` — the widest chord is the cut disc: `√(R² − d²)`;
+    /// * `d ≤ −R` — empty: `Rad = 0`.
+    pub fn rad(&self) -> f64 {
+        let radius = self.ball.radius;
+        if self.half.is_degenerate() {
+            return if self.half.delta >= 0.0 { radius } else { 0.0 };
+        }
+        let d = self.cut_distance();
+        if d >= 0.0 {
+            radius
+        } else if d <= -radius {
+            0.0
+        } else {
+            (radius * radius - d * d).max(0.0).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{Gen, Runner};
+
+    fn random_dome(g: &mut Gen, m: usize) -> Dome {
+        let c = g.vec_normal(m);
+        let radius = g.f64_in(0.1, 2.0);
+        let normal = g.vec_normal(m);
+        // delta chosen so the cut passes within the ball most of the time
+        let d = g.f64_in(-0.9, 0.9) * radius;
+        let delta = linalg::dot(&normal, &c) + d * linalg::norm2(&normal);
+        Dome::new(Ball::new(c, radius), HalfSpace::new(normal, delta))
+    }
+
+    #[test]
+    fn max_inner_upper_bounds_samples() {
+        Runner::new(31).cases(40).run("dome max bound", |g| {
+            let m = g.usize_in(2, 10);
+            let dome = random_dome(g, m);
+            if dome.is_empty() {
+                return Ok(());
+            }
+            let a = g.vec_normal(m);
+            let bound = dome.max_inner(&a);
+            let bound_abs = dome.max_abs_inner(&a);
+            // rejection-sample the dome
+            let mut found = 0;
+            for _ in 0..400 {
+                let mut u = g.rng().unit_ball(m);
+                for (ui, ci) in u.iter_mut().zip(&dome.ball.center) {
+                    *ui = ci + dome.ball.radius * *ui;
+                }
+                if dome.half.contains(&u, 0.0) {
+                    found += 1;
+                    let v = linalg::dot(&a, &u);
+                    if v > bound + 1e-9 {
+                        return Err(format!("sample {v} > bound {bound}"));
+                    }
+                    if v.abs() > bound_abs + 1e-9 {
+                        return Err("abs bound violated".into());
+                    }
+                }
+            }
+            let _ = found;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn max_inner_tight_for_hemisphere() {
+        // When the cut passes exactly through the centre (psi2 = 0) and
+        // a = g, the maximum is <a,c> (the maximizer is on the cut).
+        let c = vec![0.0, 0.0];
+        let g = vec![1.0, 0.0];
+        let dome = Dome::new(
+            Ball::new(c, 1.0),
+            HalfSpace::new(g.clone(), 0.0),
+        );
+        assert!((dome.psi2() - 0.0).abs() < 1e-15);
+        // max <g, u> over the half-disc {u: ||u||<=1, u_x <= 0} is 0.
+        assert!(dome.max_inner(&g).abs() < 1e-12);
+        // perpendicular direction is unrestricted: max = R
+        assert!((dome.max_inner(&[0.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_cut_reduces_to_ball() {
+        let mut g = Gen::for_case(3, 0);
+        let c = g.vec_normal(5);
+        let ball = Ball::new(c.clone(), 0.8);
+        // delta far beyond the ball: psi2 = 1
+        let normal = g.vec_normal(5);
+        let delta = linalg::dot(&normal, &c)
+            + 10.0 * linalg::norm2(&normal);
+        let dome = Dome::new(ball, HalfSpace::new(normal, delta));
+        assert_eq!(dome.psi2(), 1.0);
+        let a = g.vec_normal(5);
+        let ball2 = Ball::new(c, 0.8);
+        assert!((dome.max_abs_inner(&a) - ball2.max_abs_inner(&a)).abs() < 1e-12);
+        assert!((dome.rad() - 0.8).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rad_formula_cases() {
+        let ball = Ball::new(vec![0.0, 0.0], 1.0);
+        // d >= 0: Rad = R
+        let d1 = Dome::new(ball.clone(), HalfSpace::new(vec![1.0, 0.0], 0.5));
+        assert!((d1.rad() - 1.0).abs() < 1e-15);
+        // d = -0.6: Rad = sqrt(1 - 0.36) = 0.8
+        let d2 = Dome::new(ball.clone(), HalfSpace::new(vec![1.0, 0.0], -0.6));
+        assert!((d2.rad() - 0.8).abs() < 1e-12);
+        // d <= -R: empty
+        let d3 = Dome::new(ball.clone(), HalfSpace::new(vec![1.0, 0.0], -1.5));
+        assert!(d3.is_empty());
+        assert_eq!(d3.rad(), 0.0);
+    }
+
+    #[test]
+    fn rad_matches_sampled_diameter() {
+        Runner::new(37).cases(25).run("rad vs sampled diameter", |g| {
+            let m = g.usize_in(2, 6);
+            let dome = random_dome(g, m);
+            if dome.is_empty() {
+                return Ok(());
+            }
+            let rad = dome.rad();
+            // sample points, find max pairwise distance/2
+            let mut pts: Vec<Vec<f64>> = Vec::new();
+            for _ in 0..1500 {
+                let mut u = g.rng().unit_ball(m);
+                for (ui, ci) in u.iter_mut().zip(&dome.ball.center) {
+                    *ui = ci + dome.ball.radius * *ui;
+                }
+                if dome.half.contains(&u, 0.0) {
+                    pts.push(u);
+                }
+            }
+            if pts.len() < 10 {
+                return Ok(()); // sliver dome, sampling too sparse
+            }
+            let mut best: f64 = 0.0;
+            for i in 0..pts.len() {
+                for j in i + 1..pts.len() {
+                    let mut d2 = 0.0;
+                    for k in 0..m {
+                        let dd = pts[i][k] - pts[j][k];
+                        d2 += dd * dd;
+                    }
+                    best = best.max(d2.sqrt() / 2.0);
+                }
+            }
+            // Sampled diameter is an inner approximation.
+            if best > rad + 1e-9 {
+                return Err(format!("sampled {best} > rad {rad}"));
+            }
+            if best < 0.5 * rad {
+                return Err(format!("rad {rad} looks too large vs {best}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn contains_respects_both_constraints() {
+        let dome = Dome::new(
+            Ball::new(vec![0.0, 0.0], 1.0),
+            HalfSpace::new(vec![0.0, 1.0], 0.0),
+        );
+        assert!(dome.contains(&[0.5, -0.5], 1e-12));
+        assert!(!dome.contains(&[0.5, 0.5], 1e-12)); // violates cut
+        assert!(!dome.contains(&[0.0, -1.5], 1e-12)); // outside ball
+    }
+}

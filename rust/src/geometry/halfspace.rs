@@ -1,0 +1,118 @@
+//! Half-spaces `H(g, δ) = {u : ⟨g, u⟩ ≤ δ}` (eq. 13) — the "dual cutting
+//! half-spaces" of the paper when `(g, δ) ∈ G` (Lemma 1).
+
+use crate::linalg::{self};
+
+/// A half-space `{u : ⟨g,u⟩ ≤ δ}`.
+///
+/// Degenerate case `g = 0` (paper footnote 1): the half-space is all of
+/// `R^m` when `δ ≥ 0` and empty when `δ < 0`.
+#[derive(Clone, Debug)]
+pub struct HalfSpace {
+    pub g: Vec<f64>,
+    pub delta: f64,
+}
+
+impl HalfSpace {
+    pub fn new(g: Vec<f64>, delta: f64) -> Self {
+        HalfSpace { g, delta }
+    }
+
+    /// ‖g‖₂.
+    pub fn g_norm(&self) -> f64 {
+        linalg::norm2(&self.g)
+    }
+
+    /// Is the normal (numerically) zero?
+    pub fn is_degenerate(&self) -> bool {
+        self.g_norm() < super::EPS
+    }
+
+    /// Membership.
+    pub fn contains(&self, u: &[f64], tol: f64) -> bool {
+        if self.is_degenerate() {
+            return self.delta >= -tol;
+        }
+        linalg::dot(&self.g, u) <= self.delta + tol
+    }
+
+    /// Signed distance from `point` to the boundary hyperplane, positive
+    /// when the point is strictly inside (`⟨g,p⟩ < δ`).
+    ///
+    /// Returns `+inf` for a degenerate half-space covering `R^m`.
+    pub fn signed_distance(&self, point: &[f64]) -> f64 {
+        let gn = self.g_norm();
+        if gn < super::EPS {
+            return if self.delta >= 0.0 { f64::INFINITY } else { f64::NEG_INFINITY };
+        }
+        (self.delta - linalg::dot(&self.g, point)) / gn
+    }
+
+    /// The Hölder cut of Theorem 1: `H(Ax, λ‖x‖₁)` — safe for *any*
+    /// primal point `x` by Lemma 1 / Hölder's inequality.
+    pub fn holder_cut(
+        a: &crate::linalg::Mat,
+        x: &[f64],
+        lam: f64,
+    ) -> HalfSpace {
+        let mut g = vec![0.0; a.rows()];
+        crate::linalg::gemv(a, x, &mut g);
+        HalfSpace { g, delta: lam * linalg::norm1(x) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::Runner;
+
+    #[test]
+    fn membership_and_distance() {
+        let h = HalfSpace::new(vec![1.0, 0.0], 2.0);
+        assert!(h.contains(&[1.0, 5.0], 0.0));
+        assert!(h.contains(&[2.0, 0.0], 0.0));
+        assert!(!h.contains(&[2.1, 0.0], 0.0));
+        assert!((h.signed_distance(&[0.0, 0.0]) - 2.0).abs() < 1e-15);
+        assert!((h.signed_distance(&[3.0, 0.0]) + 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let all = HalfSpace::new(vec![0.0, 0.0], 0.5);
+        assert!(all.is_degenerate());
+        assert!(all.contains(&[100.0, -100.0], 0.0));
+        assert_eq!(all.signed_distance(&[1.0, 1.0]), f64::INFINITY);
+        let empty = HalfSpace::new(vec![0.0, 0.0], -0.5);
+        assert!(!empty.contains(&[0.0, 0.0], 0.0));
+    }
+
+    #[test]
+    fn holder_cut_is_safe_for_dual_points() {
+        // Lemma 1: any dual-feasible u satisfies <Ax, u> <= lam ||x||_1.
+        Runner::new(55).cases(40).run("holder cut safety", |g| {
+            let m = g.usize_in(3, 20);
+            let n = g.usize_in(2, 40);
+            let a = g.dictionary(m, n);
+            let y = g.observation(m);
+            let mut aty = vec![0.0; n];
+            crate::linalg::gemv_t(&a, &y, &mut aty);
+            let lam_max = crate::linalg::norm_inf(&aty);
+            if lam_max < 1e-9 {
+                return Ok(());
+            }
+            let lam = g.f64_in(0.2, 0.9) * lam_max;
+            let p = crate::problem::LassoProblem::new(a, y, lam);
+            // u: dual-scaled residual at a random sparse x' (feasible by
+            // construction).
+            let xp = g.vec_sparse(n, 4);
+            let ev = p.eval(&xp);
+            // Cut built from a DIFFERENT x — must still contain u.
+            let x = g.vec_sparse(n, 6);
+            let h = HalfSpace::holder_cut(p.a(), &x, lam);
+            if !h.contains(&ev.u, 1e-9) {
+                return Err("dual point escaped the Hölder cut".into());
+            }
+            Ok(())
+        });
+    }
+}

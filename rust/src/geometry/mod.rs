@@ -1,0 +1,73 @@
+//! Safe-region geometry: balls, half-spaces and domes (§III-B), with the
+//! closed-form screening maxima of eq. (11) and eq. (14)-(15) and the
+//! region radius `Rad(·)` of eq. (32) used by Fig. 1.
+
+pub mod ball;
+pub mod dome;
+pub mod halfspace;
+
+pub use ball::Ball;
+pub use dome::Dome;
+pub use halfspace::HalfSpace;
+
+/// Shared numerical guard (same value as the Python layer).
+pub const EPS: f64 = 1e-12;
+
+/// `f(ψ₁, ψ₂)` from eq. (15), clamped for numerical safety.
+///
+/// `f = 1` when ψ₁ ≤ ψ₂ (the ball maximizer already satisfies the cut),
+/// else `ψ₁ψ₂ + √(1−ψ₁²)√(1−ψ₂²)` (the maximizer slides along the cut
+/// circle).
+#[inline]
+pub fn f_dome(psi1: f64, psi2: f64) -> f64 {
+    if psi1 <= psi2 {
+        1.0
+    } else {
+        let s1 = (1.0 - psi1 * psi1).max(0.0).sqrt();
+        let s2 = (1.0 - psi2 * psi2).max(0.0).sqrt();
+        psi1 * psi2 + s1 * s2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f_dome_limits() {
+        // psi1 <= psi2 → 1
+        assert_eq!(f_dome(-0.5, 0.0), 1.0);
+        assert_eq!(f_dome(1.0, 1.0), 1.0);
+        // psi2 = 1 → always 1 (no effective cut)
+        assert_eq!(f_dome(0.3, 1.0), 1.0);
+        // psi1 = 1 > psi2 → f = psi2
+        assert!((f_dome(1.0, 0.25) - 0.25).abs() < 1e-15);
+        // antisymmetric pair at psi2 = -1: f = -psi1
+        assert!((f_dome(0.6, -1.0) + 0.6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn f_dome_is_cosine_of_angle_difference() {
+        // For psi1 > psi2: f = cos(acos(psi1) - acos(psi2))... actually
+        // f = cos(theta1 - theta2) with cos(theta_i) = psi_i; check
+        // against the trig identity on a grid.
+        for &p1 in &[-0.9, -0.3, 0.2, 0.7, 0.95] {
+            for &p2 in &[-0.95, -0.5, 0.0, 0.5, 0.9] {
+                if p1 > p2 {
+                    let want = ((p1 as f64).acos() - (p2 as f64).acos()).cos();
+                    assert!((f_dome(p1, p2) - want).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f_dome_bounded_by_one() {
+        for &p1 in &[-1.0, -0.5, 0.0, 0.5, 1.0] {
+            for &p2 in &[-1.0, -0.5, 0.0, 0.5, 1.0] {
+                let f = f_dome(p1, p2);
+                assert!(f <= 1.0 + 1e-15 && f >= -1.0 - 1e-15);
+            }
+        }
+    }
+}

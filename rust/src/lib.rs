@@ -1,0 +1,71 @@
+//! # holder-screening
+//!
+//! A batch sparse-coding engine reproducing **"Beyond GAP screening for
+//! Lasso by exploiting new dual cutting half-spaces"** (Tran, Elvira,
+//! Dang, Herzet — 2022).
+//!
+//! The paper introduces the *Hölder dome*: a safe region for the Lasso
+//! dual built from the canonical characterization of the dual cutting
+//! half-spaces `H(Ax, λ‖x‖₁)` (Lemma 1 / Theorem 1), provably contained
+//! in the GAP dome and GAP sphere of Fercoq et al. (Theorem 2).  Smaller
+//! region ⇒ stronger dynamic screening ⇒ faster Lasso solves under a
+//! fixed compute budget.
+//!
+//! ## Architecture (three layers, Python never on the request path)
+//!
+//! * **L3 (this crate)** — coordination: solve-job scheduling over a
+//!   worker pool ([`coordinator`]), FISTA/ISTA/CD solvers with screening
+//!   interleave ([`solver`], [`screening`]), safe-region geometry
+//!   ([`geometry`], [`regions`]), flop accounting ([`flops`]),
+//!   Dolan-Moré profiles ([`perfprof`]), experiment drivers
+//!   ([`experiments`]).
+//! * **L2/L1 (build time)** — JAX graphs + Pallas kernels in
+//!   `python/compile/`, AOT-lowered to HLO text artifacts.
+//! * **Runtime bridge** — [`runtime`] loads the artifacts through the
+//!   PJRT CPU client (`xla` crate) and exposes them as a solver
+//!   [`solver::Backend`].
+//!
+//! ## Substrates
+//!
+//! The build is fully offline, so the usual ecosystem crates are
+//! re-implemented in-tree: [`util::rng`] (PCG-64), [`linalg`] (dense
+//! BLAS-1/2), [`par`] (thread pool), [`cli`] (argument parsing),
+//! [`configfmt`] (TOML-subset + JSON), [`proptest`] (property testing),
+//! [`benchkit`] (benchmark statistics), [`metrics`] (counters/timers).
+
+pub mod benchkit;
+pub mod cli;
+pub mod configfmt;
+pub mod coordinator;
+pub mod dict;
+pub mod experiments;
+pub mod flops;
+pub mod geometry;
+pub mod linalg;
+pub mod metrics;
+pub mod par;
+pub mod path;
+pub mod perfprof;
+pub mod problem;
+pub mod proptest;
+pub mod regions;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+pub mod util;
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::flops::FlopCounter;
+    pub use crate::linalg::Mat;
+    pub use crate::util::rng::Pcg64;
+    pub use crate::dict::{DictKind, Instance, InstanceConfig};
+    pub use crate::geometry::{Ball, Dome, HalfSpace};
+    pub use crate::problem::{LassoProblem, PrimalDualEval};
+    pub use crate::regions::{RegionKind, SafeRegion};
+    pub use crate::screening::{ScreeningEngine, ScreeningState};
+    pub use crate::solver::{
+        solve, solve_warm, Budget, SolveReport, SolverConfig, SolverKind,
+        StopReason,
+    };
+}

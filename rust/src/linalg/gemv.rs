@@ -1,0 +1,182 @@
+//! BLAS-2 matvec kernels over the column-major [`Mat`].
+//!
+//! Two orientations, each with a full-matrix and an active-set variant:
+//!
+//! * [`gemv`]   — `out = A x`   (column-major ⇒ accumulate `x_j · a_j`;
+//!   skipping `x_j = 0` makes the cost proportional to the support, which
+//!   is exactly what screening buys).
+//! * [`gemv_t`] — `out = Aᵀ r`  (one contiguous dot per column).
+//!
+//! The active-set variants (`*_cols`) touch only the listed columns —
+//! the native backend's physical counterpart of the masked PJRT graphs.
+
+use super::vec_ops::dot;
+use super::Mat;
+
+/// out = A x (dense x).  Zero entries of `x` are skipped, so the cost is
+/// `2 m · nnz(x)` flops.
+pub fn gemv(a: &Mat, x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), a.cols(), "gemv: x length");
+    assert_eq!(out.len(), a.rows(), "gemv: out length");
+    out.fill(0.0);
+    for (j, &xj) in x.iter().enumerate() {
+        if xj != 0.0 {
+            let col = a.col(j);
+            for (o, &c) in out.iter_mut().zip(col) {
+                *o += xj * c;
+            }
+        }
+    }
+}
+
+/// out = Aᵀ r: one dot product per column.
+pub fn gemv_t(a: &Mat, r: &[f64], out: &mut [f64]) {
+    assert_eq!(r.len(), a.rows(), "gemv_t: r length");
+    assert_eq!(out.len(), a.cols(), "gemv_t: out length");
+    for j in 0..a.cols() {
+        out[j] = dot(a.col(j), r);
+    }
+}
+
+/// out = A x restricted to `active` columns; `x` is indexed by *position
+/// in `active`* (compact representation).
+pub fn gemv_cols(a: &Mat, active: &[usize], x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), active.len(), "gemv_cols: x length");
+    assert_eq!(out.len(), a.rows(), "gemv_cols: out length");
+    out.fill(0.0);
+    for (k, &j) in active.iter().enumerate() {
+        let xk = x[k];
+        if xk != 0.0 {
+            let col = a.col(j);
+            for (o, &c) in out.iter_mut().zip(col) {
+                *o += xk * c;
+            }
+        }
+    }
+}
+
+/// out[k] = ⟨a_{active[k]}, r⟩ (compact Aᵀ r over the active set).
+pub fn gemv_t_cols(a: &Mat, active: &[usize], r: &[f64], out: &mut [f64]) {
+    assert_eq!(out.len(), active.len(), "gemv_t_cols: out length");
+    assert_eq!(r.len(), a.rows(), "gemv_t_cols: r length");
+    for (k, &j) in active.iter().enumerate() {
+        out[k] = dot(a.col(j), r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, m: usize, n: usize) -> Mat {
+        let mut mat = Mat::zeros(m, n);
+        for j in 0..n {
+            for i in 0..m {
+                mat.set(i, j, rng.normal());
+            }
+        }
+        mat
+    }
+
+    fn naive_gemv(a: &Mat, x: &[f64]) -> Vec<f64> {
+        (0..a.rows())
+            .map(|i| (0..a.cols()).map(|j| a.get(i, j) * x[j]).sum())
+            .collect()
+    }
+
+    fn naive_gemv_t(a: &Mat, r: &[f64]) -> Vec<f64> {
+        (0..a.cols())
+            .map(|j| (0..a.rows()).map(|i| a.get(i, j) * r[i]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let mut rng = Pcg64::new(0);
+        for (m, n) in [(1, 1), (3, 7), (17, 33), (100, 50)] {
+            let a = rand_mat(&mut rng, m, n);
+            let mut x = vec![0.0; n];
+            rng.fill_normal(&mut x);
+            let mut out = vec![0.0; m];
+            gemv(&a, &x, &mut out);
+            let want = naive_gemv(&a, &x);
+            for (g, w) in out.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_t_matches_naive() {
+        let mut rng = Pcg64::new(1);
+        for (m, n) in [(1, 1), (5, 2), (31, 64), (100, 500)] {
+            let a = rand_mat(&mut rng, m, n);
+            let mut r = vec![0.0; m];
+            rng.fill_normal(&mut r);
+            let mut out = vec![0.0; n];
+            gemv_t(&a, &r, &mut out);
+            let want = naive_gemv_t(&a, &r);
+            for (g, w) in out.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_skips_zeros_consistently() {
+        let mut rng = Pcg64::new(2);
+        let a = rand_mat(&mut rng, 20, 40);
+        let mut x = vec![0.0; 40];
+        // sparse x
+        for k in [3usize, 17, 39] {
+            x[k] = rng.normal();
+        }
+        let mut out = vec![0.0; 20];
+        gemv(&a, &x, &mut out);
+        let want = naive_gemv(&a, &x);
+        for (g, w) in out.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn active_set_variants_match_full() {
+        let mut rng = Pcg64::new(3);
+        let a = rand_mat(&mut rng, 15, 30);
+        let active = vec![2usize, 5, 11, 29];
+        let xc: Vec<f64> = (0..active.len()).map(|_| rng.normal()).collect();
+
+        // gemv_cols == gemv with scattered x
+        let mut x_full = vec![0.0; 30];
+        for (k, &j) in active.iter().enumerate() {
+            x_full[j] = xc[k];
+        }
+        let mut out_c = vec![0.0; 15];
+        let mut out_f = vec![0.0; 15];
+        gemv_cols(&a, &active, &xc, &mut out_c);
+        gemv(&a, &x_full, &mut out_f);
+        for (c, f) in out_c.iter().zip(&out_f) {
+            assert!((c - f).abs() < 1e-12);
+        }
+
+        // gemv_t_cols == gather(gemv_t)
+        let mut r = vec![0.0; 15];
+        rng.fill_normal(&mut r);
+        let mut full = vec![0.0; 30];
+        gemv_t(&a, &r, &mut full);
+        let mut compact = vec![0.0; active.len()];
+        gemv_t_cols(&a, &active, &r, &mut compact);
+        for (k, &j) in active.iter().enumerate() {
+            assert!((compact[k] - full[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn gemv_shape_mismatch_panics() {
+        let a = Mat::zeros(3, 4);
+        let mut out = vec![0.0; 3];
+        gemv(&a, &[1.0; 5], &mut out);
+    }
+}

@@ -1,0 +1,229 @@
+//! Dense linear algebra substrate (no BLAS, no ndarray).
+//!
+//! The native solver hot path is BLAS-1/2 over an `m × n` dictionary with
+//! `m ≈ 100`, `n ≈ 500..50k`.  Storage is **column-major** ([`Mat`])
+//! because everything the Lasso solver and the screening tests do is
+//! per-atom (per-column): correlations `⟨a_i, r⟩`, column norms, active-set
+//! compaction.  Column-major makes each of those a contiguous streaming
+//! read.
+//!
+//! `f64` throughout: the paper's experiments resolve duality gaps down to
+//! 1e-12 (Fig. 2's τ axis), below f32 resolution.  The f32 path exists via
+//! the PJRT artifacts ([`crate::runtime`]).
+
+pub mod gemv;
+pub mod vec_ops;
+
+pub use gemv::{gemv, gemv_cols, gemv_t, gemv_t_cols};
+pub use vec_ops::*;
+
+/// Column-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Mat {
+    /// Zero-filled `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Build from a column-major slice (length must be `rows * cols`).
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "col-major size mismatch");
+        Mat { data, rows, cols }
+    }
+
+    /// Build from a row-major slice (transposes into column-major).
+    pub fn from_row_major(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "row-major size mismatch");
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[c * rows + r] = data[r * cols + c];
+            }
+        }
+        m
+    }
+
+    /// Build column-by-column via a generator.
+    pub fn from_columns(rows: usize, cols: Vec<Vec<f64>>) -> Self {
+        let ncols = cols.len();
+        let mut data = Vec::with_capacity(rows * ncols);
+        for col in &cols {
+            assert_eq!(col.len(), rows, "column length mismatch");
+            data.extend_from_slice(col);
+        }
+        Mat { data, rows, cols: ncols }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Contiguous column view (the atom `a_j`).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable column view.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[c * self.rows + r]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[c * self.rows + r] = v;
+    }
+
+    /// Raw column-major buffer.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Per-column l2 norms.
+    pub fn col_norms(&self) -> Vec<f64> {
+        (0..self.cols).map(|j| vec_ops::norm2(self.col(j))).collect()
+    }
+
+    /// Normalize every column to unit l2 norm (paper §V setup).
+    /// Columns with near-zero norm are left untouched.
+    pub fn normalize_columns(&mut self) {
+        for j in 0..self.cols {
+            let n = vec_ops::norm2(self.col(j));
+            if n > 1e-300 {
+                for v in self.col_mut(j) {
+                    *v /= n;
+                }
+            }
+        }
+    }
+
+    /// Gather a sub-matrix of the given columns (active-set compaction).
+    pub fn select_columns(&self, idx: &[usize]) -> Mat {
+        let mut data = Vec::with_capacity(self.rows * idx.len());
+        for &j in idx {
+            data.extend_from_slice(self.col(j));
+        }
+        Mat { data, rows: self.rows, cols: idx.len() }
+    }
+
+    /// Squared spectral norm ‖A‖₂² via power iteration on AᵀA —
+    /// the FISTA step size is `1 / ‖A‖₂²`.
+    pub fn spectral_norm_sq(&self, iters: usize, seed: u64) -> f64 {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let mut v = vec![0.0; self.cols];
+        rng.fill_normal(&mut v);
+        let nv = vec_ops::norm2(&v).max(1e-300);
+        vec_ops::scale(&mut v, 1.0 / nv);
+        let mut tmp_m = vec![0.0; self.rows];
+        let mut lam = 0.0;
+        for _ in 0..iters.max(1) {
+            gemv(self, &v, &mut tmp_m); // tmp = A v
+            gemv_t(self, &tmp_m, &mut v); // v = A^T tmp = A^T A v
+            lam = vec_ops::norm2(&v);
+            if lam <= 1e-300 {
+                return 0.0;
+            }
+            vec_ops::scale(&mut v, 1.0 / lam);
+        }
+        lam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Mat {
+        // [[1, 2, 3], [4, 5, 6]] row-major
+        Mat::from_row_major(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn layout_round_trip() {
+        let m = sample();
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.col(1), &[2.0, 5.0]);
+    }
+
+    #[test]
+    fn col_major_ctor_matches() {
+        let m = Mat::from_col_major(2, 3, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(m, sample());
+    }
+
+    #[test]
+    fn from_columns_matches() {
+        let m = Mat::from_columns(
+            2,
+            vec![vec![1.0, 4.0], vec![2.0, 5.0], vec![3.0, 6.0]],
+        );
+        assert_eq!(m, sample());
+    }
+
+    #[test]
+    fn col_norms_and_normalize() {
+        let mut m = sample();
+        let n = m.col_norms();
+        assert!((n[0] - (17.0f64).sqrt()).abs() < 1e-12);
+        m.normalize_columns();
+        for j in 0..3 {
+            assert!((vec_ops::norm2(m.col(j)) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn select_columns_gathers() {
+        let m = sample();
+        let s = m.select_columns(&[2, 0]);
+        assert_eq!(s.cols(), 2);
+        assert_eq!(s.col(0), &[3.0, 6.0]);
+        assert_eq!(s.col(1), &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn spectral_norm_sq_identity() {
+        let mut m = Mat::zeros(4, 4);
+        for i in 0..4 {
+            m.set(i, i, 1.0);
+        }
+        let s = m.spectral_norm_sq(50, 0);
+        assert!((s - 1.0).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn spectral_norm_sq_scaled() {
+        let mut m = Mat::zeros(3, 3);
+        m.set(0, 0, 2.0);
+        m.set(1, 1, 1.0);
+        m.set(2, 2, 0.5);
+        let s = m.spectral_norm_sq(100, 1);
+        assert!((s - 4.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_ctor_panics() {
+        Mat::from_col_major(2, 2, vec![0.0; 3]);
+    }
+}

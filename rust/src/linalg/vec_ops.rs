@@ -1,0 +1,215 @@
+//! BLAS-1 vector kernels with manual 4-way unrolling.
+//!
+//! These are the innermost loops of the whole engine; everything is
+//! written so LLVM auto-vectorizes (independent accumulators, no
+//! iterator-chain overhead on the hot variants).
+
+/// ⟨x, y⟩ with four independent accumulators (enables SIMD + hides FMA
+/// latency).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let b = i * 4;
+        s0 += x[b] * y[b];
+        s1 += x[b + 1] * y[b + 1];
+        s2 += x[b + 2] * y[b + 2];
+        s3 += x[b + 3] * y[b + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// x *= alpha.
+#[inline]
+pub fn scale(x: &mut [f64], alpha: f64) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// out = x - y.
+#[inline]
+pub fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// out = x + y.
+#[inline]
+pub fn add(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] + y[i];
+    }
+}
+
+/// ‖x‖₂.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ‖x‖₂².
+#[inline]
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// ‖x‖₁.
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// ‖x‖_∞.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0, |acc, v| acc.max(v.abs()))
+}
+
+/// Index and value of max |x_i| (the λ_max computation).
+pub fn argmax_abs(x: &[f64]) -> (usize, f64) {
+    let mut best = (0usize, 0.0f64);
+    for (i, v) in x.iter().enumerate() {
+        if v.abs() > best.1 {
+            best = (i, v.abs());
+        }
+    }
+    best
+}
+
+/// Soft threshold: sign(v) · max(|v| − tau, 0), elementwise into `out`.
+#[inline]
+pub fn soft_threshold(v: &[f64], tau: f64, out: &mut [f64]) {
+    debug_assert_eq!(v.len(), out.len());
+    for i in 0..v.len() {
+        let a = v[i].abs() - tau;
+        out[i] = if a > 0.0 { a * v[i].signum() } else { 0.0 };
+    }
+}
+
+/// Scalar soft threshold.
+#[inline]
+pub fn soft_threshold_scalar(v: f64, tau: f64) -> f64 {
+    let a = v.abs() - tau;
+    if a > 0.0 {
+        a * v.signum()
+    } else {
+        0.0
+    }
+}
+
+/// Number of entries with |x_i| > tol.
+pub fn support_size(x: &[f64], tol: f64) -> usize {
+    x.iter().filter(|v| v.abs() > tol).count()
+}
+
+/// Maximum absolute difference between two vectors.
+pub fn max_abs_diff(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y.iter())
+        .fold(0.0f64, |acc, (a, b)| acc.max((a - b).abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..103).map(|i| i as f64 * 0.1).collect();
+        let y: Vec<f64> = (0..103).map(|i| (i as f64 - 50.0) * 0.2).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot_empty_and_small() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn axpy_scale_add_sub() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, [6.0, 12.0, 18.0]);
+        let mut out = [0.0; 3];
+        sub(&y, &x, &mut out);
+        assert_eq!(out, [5.0, 10.0, 15.0]);
+        add(&out, &x, &mut out.clone()); // no alias in real use
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-15);
+        assert_eq!(norm1(&x), 7.0);
+        assert_eq!(norm_inf(&x), 4.0);
+        assert_eq!(norm2_sq(&x), 25.0);
+    }
+
+    #[test]
+    fn argmax_abs_finds_peak() {
+        let x = [0.1, -5.0, 2.0, 4.9];
+        let (i, v) = argmax_abs(&x);
+        assert_eq!(i, 1);
+        assert_eq!(v, 5.0);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        let v = [2.0, -2.0, 0.5, -0.5, 0.0];
+        let mut out = [0.0; 5];
+        soft_threshold(&v, 1.0, &mut out);
+        assert_eq!(out, [1.0, -1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(soft_threshold_scalar(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold_scalar(0.2, 1.0), 0.0);
+    }
+
+    #[test]
+    fn soft_threshold_shrinkage_property() {
+        // |st(v)| <= |v| and st is a contraction.
+        let mut rng = crate::util::rng::Pcg64::new(4);
+        for _ in 0..200 {
+            let v = rng.normal() * 3.0;
+            let t = rng.uniform() * 2.0;
+            let s = soft_threshold_scalar(v, t);
+            assert!(s.abs() <= v.abs() + 1e-15);
+            assert!((s - v).abs() <= t + 1e-15);
+        }
+    }
+
+    #[test]
+    fn support_and_diff() {
+        let x = [0.0, 1e-12, 0.5, -2.0];
+        assert_eq!(support_size(&x, 1e-9), 2);
+        let y = [0.0, 0.0, 0.75, -2.0];
+        assert!((max_abs_diff(&x, &y) - 0.25).abs() < 1e-15);
+    }
+}

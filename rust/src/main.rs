@@ -1,0 +1,567 @@
+//! `holder-screening` — CLI entrypoint for the batch sparse-coding
+//! engine reproducing "Beyond GAP screening for Lasso" (Tran et al.,
+//! 2022).
+//!
+//! Commands:
+//!   solve            solve one random instance, print the report
+//!   path             λ-path with warm starts on one instance
+//!   campaign         Fig. 2-style budgeted campaign from flags or TOML
+//!   fig1             reproduce Fig. 1 (radius-ratio curves)
+//!   fig2             reproduce Fig. 2 (performance profiles)
+//!   screenrate       screening-rate-vs-iteration curves (Extra-1)
+//!   ablation         design-choice ablations (Extra-2)
+//!   serve            PJRT batch engine over the AOT artifacts
+//!   artifacts-check  validate artifacts/manifest against the runtime
+
+use holder_screening::cli::{spec, Args, Command, Flag};
+use holder_screening::configfmt::json;
+use holder_screening::coordinator::campaign::Campaign;
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::experiments::{ablation, fig1, fig2, screenrate};
+use holder_screening::path::{solve_path, PathConfig};
+use holder_screening::perfprof::log_tau_grid;
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{solve, Budget, SolverConfig, SolverKind};
+
+const PROGRAM: &str = "holder-screening";
+
+const COMMON_INSTANCE_FLAGS: [Flag; 6] = [
+    Flag::int("m", Some("100"), "observation dimension"),
+    Flag::int("n", Some("500"), "number of atoms"),
+    Flag::str("dict", Some("gaussian"), "dictionary: gaussian | toeplitz"),
+    Flag::num("lam-ratio", Some("0.5"), "lambda / lambda_max"),
+    Flag::int("seed", Some("0"), "RNG seed"),
+    Flag::int("threads", Some("0"), "worker threads (0 = auto)"),
+];
+
+const SOLVE_FLAGS: &[Flag] = &[
+    COMMON_INSTANCE_FLAGS[0],
+    COMMON_INSTANCE_FLAGS[1],
+    COMMON_INSTANCE_FLAGS[2],
+    COMMON_INSTANCE_FLAGS[3],
+    COMMON_INSTANCE_FLAGS[4],
+    Flag::str("region", Some("holder_dome"),
+              "screening region: holder_dome | gap_dome | gap_sphere | \
+               static_sphere | dynamic_sphere | none"),
+    Flag::str("solver", Some("fista"), "fista | ista | cd"),
+    Flag::num("target-gap", Some("1e-9"), "stop at this duality gap"),
+    Flag::int("max-iters", Some("100000"), "iteration cap"),
+    Flag::switch("trace", "print the convergence trace"),
+];
+
+const PATH_FLAGS: &[Flag] = &[
+    COMMON_INSTANCE_FLAGS[0],
+    COMMON_INSTANCE_FLAGS[1],
+    COMMON_INSTANCE_FLAGS[2],
+    COMMON_INSTANCE_FLAGS[3],
+    COMMON_INSTANCE_FLAGS[4],
+    Flag::str("region", Some("holder_dome"), "screening region or none"),
+    Flag::int("points", Some("20"), "lambda grid points"),
+    Flag::num("lam-min", Some("0.1"), "smallest lambda / lambda_max"),
+];
+
+const CAMPAIGN_FLAGS: &[Flag] = &[
+    COMMON_INSTANCE_FLAGS[0],
+    COMMON_INSTANCE_FLAGS[1],
+    COMMON_INSTANCE_FLAGS[2],
+    COMMON_INSTANCE_FLAGS[3],
+    COMMON_INSTANCE_FLAGS[4],
+    COMMON_INSTANCE_FLAGS[5],
+    Flag::int("trials", Some("50"), "instances"),
+    Flag::num("budget", Some("0"),
+              "flop budget (0 = calibrate at tau so holder hits 50%)"),
+    Flag::num("tau", Some("1e-7"), "calibration / headline tau"),
+    Flag::str("config", None, "TOML config file (overrides flags)"),
+    Flag::str("out", None, "write JSON results to this path"),
+];
+
+const FIG_FLAGS: &[Flag] = &[
+    Flag::int("trials", Some("0"), "trials (0 = paper default)"),
+    Flag::switch("quick", "small shapes for smoke runs"),
+    Flag::str("out", None, "write JSON results to this path"),
+    COMMON_INSTANCE_FLAGS[5],
+];
+
+const SCREENRATE_FLAGS: &[Flag] = &[
+    COMMON_INSTANCE_FLAGS[0],
+    COMMON_INSTANCE_FLAGS[1],
+    COMMON_INSTANCE_FLAGS[2],
+    COMMON_INSTANCE_FLAGS[3],
+    Flag::int("trials", Some("20"), "instances to average"),
+    Flag::int("iters", Some("150"), "iterations to record"),
+    COMMON_INSTANCE_FLAGS[5],
+];
+
+const ABLATION_FLAGS: &[Flag] = &[
+    COMMON_INSTANCE_FLAGS[0],
+    COMMON_INSTANCE_FLAGS[1],
+    COMMON_INSTANCE_FLAGS[2],
+    COMMON_INSTANCE_FLAGS[3],
+    Flag::int("trials", Some("20"), "instances to average"),
+    Flag::str("which", Some("all"), "all | period | solver | regions"),
+    COMMON_INSTANCE_FLAGS[5],
+];
+
+const SERVE_FLAGS: &[Flag] = &[
+    Flag::str("artifacts", Some("artifacts"), "artifact directory"),
+    Flag::int("requests", Some("32"), "number of solve requests"),
+    Flag::str("region", Some("holder_dome"), "screening region or none"),
+    Flag::num("lam-ratio", Some("0.5"), "lambda / lambda_max"),
+    Flag::str("dict", Some("gaussian"), "dictionary kind"),
+    Flag::int("seed", Some("0"), "base seed"),
+    Flag::int("max-iters", Some("300"), "iterations per request"),
+    Flag::num("target-gap", Some("1e-5"), "per-request gap target (f32)"),
+];
+
+const ARTIFACTS_FLAGS: &[Flag] =
+    &[Flag::str("artifacts", Some("artifacts"), "artifact directory")];
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command { name: "solve", summary: "solve one random instance", flags: SOLVE_FLAGS },
+        Command { name: "path", summary: "lambda-path with warm starts", flags: PATH_FLAGS },
+        Command { name: "campaign", summary: "budgeted benchmark campaign", flags: CAMPAIGN_FLAGS },
+        Command { name: "fig1", summary: "paper Fig. 1: radius-ratio curves", flags: FIG_FLAGS },
+        Command { name: "fig2", summary: "paper Fig. 2: performance profiles", flags: FIG_FLAGS },
+        Command { name: "screenrate", summary: "screen rate vs iteration", flags: SCREENRATE_FLAGS },
+        Command { name: "ablation", summary: "design-choice ablations", flags: ABLATION_FLAGS },
+        Command { name: "serve", summary: "PJRT batch engine over AOT artifacts", flags: SERVE_FLAGS },
+        Command { name: "artifacts-check", summary: "validate the artifact manifest", flags: ARTIFACTS_FLAGS },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmds = commands();
+    if argv.is_empty()
+        || argv[0] == "--help"
+        || argv[0] == "-h"
+        || argv[0] == "help"
+    {
+        print!("{}", spec::top_help(PROGRAM,
+            "batch Lasso engine with Hölder-dome safe screening \
+             (Tran et al., 2022)", &cmds));
+        return;
+    }
+    let Some(cmd) = cmds.iter().find(|c| c.name == argv[0]) else {
+        eprintln!("unknown command '{}'; try --help", argv[0]);
+        std::process::exit(2);
+    };
+    let args = match Args::parse(cmd, &argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.help_requested {
+        print!("{}", cmd.help(PROGRAM));
+        return;
+    }
+    let code = match cmd.name {
+        "solve" => cmd_solve(&args),
+        "path" => cmd_path(&args),
+        "campaign" => cmd_campaign(&args),
+        "fig1" => cmd_fig1(&args),
+        "fig2" => cmd_fig2(&args),
+        "screenrate" => cmd_screenrate(&args),
+        "ablation" => cmd_ablation(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts-check" => cmd_artifacts_check(&args),
+        _ => unreachable!(),
+    };
+    std::process::exit(code);
+}
+
+fn instance_from_args(args: &Args) -> InstanceConfig {
+    let kind = DictKind::parse(args.str_or("dict", "gaussian"))
+        .unwrap_or_else(|| {
+            eprintln!("unknown dictionary; using gaussian");
+            DictKind::Gaussian
+        });
+    InstanceConfig {
+        m: args.int_or("m", 100),
+        n: args.int_or("n", 500),
+        kind,
+        lam_ratio: args.num_or("lam-ratio", 0.5),
+        pulse_width: 4.0,
+    }
+}
+
+fn region_from_args(args: &Args) -> Option<RegionKind> {
+    match args.str_or("region", "holder_dome") {
+        "none" | "off" => None,
+        s => match RegionKind::parse(s) {
+            Some(r) => Some(r),
+            None => {
+                eprintln!("unknown region '{s}'; using holder_dome");
+                Some(RegionKind::HolderDome)
+            }
+        },
+    }
+}
+
+fn threads_from_args(args: &Args) -> usize {
+    match args.int_or("threads", 0) {
+        0 => holder_screening::par::default_threads(),
+        t => t,
+    }
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let icfg = instance_from_args(args);
+    let inst = generate(&icfg, args.int_or("seed", 0) as u64);
+    let p = &inst.problem;
+    let cfg = SolverConfig {
+        kind: SolverKind::parse(args.str_or("solver", "fista"))
+            .unwrap_or(SolverKind::Fista),
+        budget: Budget {
+            max_iters: args.int_or("max-iters", 100_000),
+            max_flops: None,
+            target_gap: args.num_or("target-gap", 1e-9),
+        },
+        region: region_from_args(args),
+        screen_every: 1,
+        record_trace: args.switch("trace"),
+    };
+    println!(
+        "instance: {}x{} dict={} lam={:.6} (ratio {:.2}, lam_max {:.6})",
+        p.m(), p.n(), icfg.kind.name(), p.lam(),
+        icfg.lam_ratio, p.lam_max()
+    );
+    let rep = solve(p, &cfg);
+    if args.switch("trace") {
+        for tp in &rep.trace {
+            println!(
+                "  it {:>5}  gap {:>12.4e}  active {:>5}  flops {:>12}",
+                tp.iter, tp.gap, tp.active, tp.flops
+            );
+        }
+    }
+    println!(
+        "stop={:?} iters={} gap={:.3e} flops={} screened={}/{} wall={:.1}ms",
+        rep.stop, rep.iters, rep.gap, rep.flops, rep.screened, p.n(),
+        rep.wall_secs * 1e3
+    );
+    println!("support ({} atoms): {:?}", rep.support(1e-9).len(),
+             rep.support(1e-9));
+    0
+}
+
+fn cmd_path(args: &Args) -> i32 {
+    let icfg = instance_from_args(args);
+    let inst = generate(&icfg, args.int_or("seed", 0) as u64);
+    let cfg = PathConfig {
+        num_lambdas: args.int_or("points", 20),
+        lam_min_ratio: args.num_or("lam-min", 0.1),
+        solver: SolverConfig {
+            region: region_from_args(args),
+            budget: Budget::gap(1e-9),
+            ..Default::default()
+        },
+    };
+    let res = solve_path(&inst.problem, &cfg);
+    println!("lam/lam_max   support  iters   flops        gap");
+    for pt in &res.points {
+        println!(
+            "{:>10.4}  {:>7}  {:>5}  {:>11}  {:.2e}",
+            pt.lam_ratio,
+            pt.report.support(1e-9).len(),
+            pt.report.iters,
+            pt.report.flops,
+            pt.report.gap
+        );
+    }
+    println!(
+        "total: {} flops, {:.2}s",
+        res.total_flops, res.total_secs
+    );
+    0
+}
+
+fn cmd_campaign(args: &Args) -> i32 {
+    let mut icfg = instance_from_args(args);
+    let mut trials = args.int_or("trials", 50);
+    let mut tau = args.num_or("tau", 1e-7);
+    let mut budget = args.num_or("budget", 0.0) as u64;
+    // Optional TOML override.
+    if let Some(path) = args.str("config") {
+        match std::fs::read_to_string(path)
+            .map_err(|e| e.to_string())
+            .and_then(|t| {
+                holder_screening::configfmt::toml::parse(&t)
+                    .map_err(|e| e.to_string())
+            }) {
+            Ok(v) => {
+                icfg.m = v.usize_or("problem.m", icfg.m);
+                icfg.n = v.usize_or("problem.n", icfg.n);
+                icfg.lam_ratio =
+                    v.f64_or("problem.lam_ratio", icfg.lam_ratio);
+                if let Some(k) =
+                    DictKind::parse(v.str_or("problem.dict", ""))
+                {
+                    icfg.kind = k;
+                }
+                trials = v.usize_or("campaign.trials", trials);
+                tau = v.f64_or("campaign.tau", tau);
+                budget = v.f64_or("campaign.budget", budget as f64) as u64;
+            }
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    }
+    let threads = threads_from_args(args);
+    let seed = args.int_or("seed", 0) as u64;
+    let calib = SolverConfig {
+        region: Some(RegionKind::HolderDome),
+        ..Default::default()
+    };
+    if budget == 0 {
+        budget = Campaign::calibrate_budget(
+            &icfg, trials, seed, &calib, tau, threads,
+        );
+        println!("calibrated budget: {budget} flops (rho({tau:.0e}) ~ 50%)");
+    }
+    let camp = Campaign {
+        instance: icfg,
+        trials,
+        base_seed: seed,
+        variants: fig2::variants(true),
+        budget_flops: budget,
+        threads,
+    };
+    let res = camp.run();
+    let taus = log_tau_grid(1e-1, 1e-12, 23);
+    let prof = Campaign::profile(&res, &taus);
+    println!("{}", prof.table().render());
+    if let Some(out) = args.str("out") {
+        let mut o = holder_screening::configfmt::Value::obj();
+        o.set("budget", budget);
+        o.set("taus", taus.clone());
+        for (l, g) in res.labels.iter().zip(&res.gaps) {
+            o.set(&format!("gaps_{l}"), g.clone());
+        }
+        if std::fs::write(out, json::to_string_pretty(&o)).is_err() {
+            eprintln!("could not write {out}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
+    0
+}
+
+fn cmd_fig1(args: &Args) -> i32 {
+    let mut cfg = if args.switch("quick") {
+        fig1::Fig1Config::quick()
+    } else {
+        fig1::Fig1Config::default()
+    };
+    if args.int_or("trials", 0) > 0 {
+        cfg.trials = args.int_or("trials", cfg.trials);
+    }
+    cfg.threads = threads_from_args(args);
+    let curves = fig1::run(&cfg);
+    println!("{}", fig1::table(&curves).render());
+    let bad = fig1::check_shape(&curves);
+    if bad.is_empty() {
+        println!("shape check: OK (ratios <= 1, real shrinkage observed)");
+    } else {
+        for b in &bad {
+            println!("shape check FAILED: {b}");
+        }
+    }
+    if let Some(out) = args.str("out") {
+        let _ = std::fs::write(
+            out,
+            json::to_string_pretty(&fig1::to_json(&curves)),
+        );
+        println!("wrote {out}");
+    }
+    if bad.is_empty() { 0 } else { 1 }
+}
+
+fn cmd_fig2(args: &Args) -> i32 {
+    let mut cfg = if args.switch("quick") {
+        fig2::Fig2Config::quick()
+    } else {
+        fig2::Fig2Config::default()
+    };
+    if args.int_or("trials", 0) > 0 {
+        cfg.trials = args.int_or("trials", cfg.trials);
+    }
+    cfg.threads = threads_from_args(args);
+    let panels = fig2::run(&cfg);
+    for p in &panels {
+        println!("{}", fig2::panel_table(p));
+    }
+    let bad = fig2::check_shape(&panels, cfg.calib_tau);
+    if bad.is_empty() {
+        println!("shape check: OK (Hölder dome leads the profiles)");
+    } else {
+        for b in &bad {
+            println!("shape check FAILED: {b}");
+        }
+    }
+    if let Some(out) = args.str("out") {
+        let _ = std::fs::write(
+            out,
+            json::to_string_pretty(&fig2::to_json(&panels)),
+        );
+        println!("wrote {out}");
+    }
+    if bad.is_empty() { 0 } else { 1 }
+}
+
+fn cmd_screenrate(args: &Args) -> i32 {
+    let icfg = instance_from_args(args);
+    let cfg = screenrate::ScreenRateConfig {
+        m: icfg.m,
+        n: icfg.n,
+        dict: icfg.kind,
+        lam_ratio: icfg.lam_ratio,
+        trials: args.int_or("trials", 20),
+        iters: args.int_or("iters", 150),
+        threads: threads_from_args(args),
+        ..Default::default()
+    };
+    let curves = screenrate::run(&cfg);
+    println!("{}", screenrate::table(&curves).render());
+    let bad = screenrate::check_shape(&curves);
+    for b in &bad {
+        println!("shape check FAILED: {b}");
+    }
+    if bad.is_empty() { 0 } else { 1 }
+}
+
+fn cmd_ablation(args: &Args) -> i32 {
+    let icfg = instance_from_args(args);
+    let cfg = ablation::AblationConfig {
+        m: icfg.m,
+        n: icfg.n,
+        dict: icfg.kind,
+        lam_ratio: icfg.lam_ratio,
+        trials: args.int_or("trials", 20),
+        threads: threads_from_args(args),
+        ..Default::default()
+    };
+    let which = args.str_or("which", "all");
+    if which == "all" || which == "period" {
+        println!("## screening period (Hölder dome)\n{}",
+                 ablation::table(&ablation::screen_period(&cfg)).render());
+    }
+    if which == "all" || which == "solver" {
+        println!("## solver kind x screening\n{}",
+                 ablation::table(&ablation::solver_kind(&cfg)).render());
+    }
+    if which == "all" || which == "regions" {
+        println!("## all regions head-to-head\n{}",
+                 ablation::table(&ablation::regions(&cfg)).render());
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use holder_screening::runtime::{ArtifactRegistry, PjrtSolver};
+    let dir = args.str_or("artifacts", "artifacts");
+    let reg = match ArtifactRegistry::load(
+        dir,
+        Some(holder_screening::runtime::Manifest::required_for_solver()),
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifact load failed: {e:#}");
+            eprintln!("hint: run `make artifacts` first");
+            return 1;
+        }
+    };
+    println!(
+        "platform {} | artifacts {:?} | shape {}x{}",
+        reg.platform(),
+        reg.loaded_names(),
+        reg.manifest.m,
+        reg.manifest.n
+    );
+    let pjrt = match PjrtSolver::new(&reg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    let icfg = InstanceConfig {
+        m: reg.manifest.m,
+        n: reg.manifest.n,
+        kind: DictKind::parse(args.str_or("dict", "gaussian"))
+            .unwrap_or(DictKind::Gaussian),
+        lam_ratio: args.num_or("lam-ratio", 0.5),
+        pulse_width: 4.0,
+    };
+    let region = region_from_args(args);
+    let requests = args.int_or("requests", 32);
+    let max_iters = args.int_or("max-iters", 300);
+    let target = args.num_or("target-gap", 1e-5);
+    let seed = args.int_or("seed", 0) as u64;
+
+    let reg_metrics = holder_screening::metrics::Registry::new();
+    let sw = holder_screening::util::timer::Stopwatch::start();
+    let mut converged = 0usize;
+    for i in 0..requests {
+        let p = generate(&icfg, seed + i as u64).problem;
+        let t0 = holder_screening::util::timer::Stopwatch::start();
+        match pjrt.solve(&p, region, max_iters, target) {
+            Ok(out) => {
+                reg_metrics.observe_secs("request_secs", t0.elapsed_secs());
+                reg_metrics.counter("iters_total").add(out.iters as u64);
+                if out.gap <= target {
+                    converged += 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("request {i} failed: {e:#}");
+                return 1;
+            }
+        }
+    }
+    let total = sw.elapsed_secs();
+    let snap = reg_metrics.snapshot();
+    println!(
+        "served {requests} requests in {total:.2}s \
+         ({:.1} req/s), {converged} converged to {target:.0e}",
+        requests as f64 / total
+    );
+    println!("latency: {}", json::to_string(
+        snap.get_path("histograms.request_secs").unwrap()));
+    0
+}
+
+fn cmd_artifacts_check(args: &Args) -> i32 {
+    use holder_screening::runtime::ArtifactRegistry;
+    let dir = args.str_or("artifacts", "artifacts");
+    match ArtifactRegistry::load(dir, None) {
+        Ok(reg) => {
+            println!(
+                "OK: {} artifacts compiled on {} (shape {}x{})",
+                reg.loaded_names().len(),
+                reg.platform(),
+                reg.manifest.m,
+                reg.manifest.n
+            );
+            for name in reg.loaded_names() {
+                let a = reg.get(name).unwrap();
+                println!(
+                    "  {:<20} {} inputs -> {} outputs",
+                    name,
+                    a.meta.inputs.len(),
+                    a.meta.outputs.len()
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("FAILED: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Log-scale histogram for latencies / flop counts.
+//!
+//! Buckets are powers of `2^(1/4)` spanning ~1ns..~1000s when observing
+//! seconds; accurate to ±9% which is plenty for serving percentiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::configfmt::Value;
+
+const BUCKETS: usize = 192;
+/// Smallest representable observation.
+const MIN_VALUE: f64 = 1e-9;
+/// log2 spacing of buckets (quarter-octave).
+const INV_LOG_STEP: f64 = 4.0;
+
+/// Lock-free log-bucketed histogram.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum stored as f64 bits updated via CAS.
+    sum_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_index(v: f64) -> usize {
+        let v = v.max(MIN_VALUE);
+        let idx = ((v / MIN_VALUE).log2() * INV_LOG_STEP) as usize;
+        idx.min(BUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `i`.
+    fn bucket_value(i: usize) -> f64 {
+        MIN_VALUE * (2f64).powf(i as f64 / INV_LOG_STEP)
+    }
+
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { MIN_VALUE };
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        // CAS-add into the f64 sum.
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() / c as f64
+        }
+    }
+
+    /// Approximate quantile (`q` in [0,1]) from the bucket CDF.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target.max(1) {
+                return Self::bucket_value(i);
+            }
+        }
+        Self::bucket_value(BUCKETS - 1)
+    }
+
+    /// JSON-able snapshot: count, mean, p50/p90/p99.
+    pub fn snapshot(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("count", self.count());
+        v.set("mean", self.mean());
+        v.set("p50", self.quantile(0.50));
+        v.set("p90", self.quantile(0.90));
+        v.set("p99", self.quantile(0.99));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_sum_mean() {
+        let h = Histogram::new();
+        for v in [1.0, 2.0, 3.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 6.0).abs() < 1e-12);
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_are_order_of_magnitude_right() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-3); // 1ms .. 1s uniform
+        }
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.3 && p50 < 0.7, "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 > 0.8, "p99 {p99}");
+        assert!(h.quantile(0.0) <= h.quantile(1.0));
+    }
+
+    #[test]
+    fn handles_degenerate_observations() {
+        let h = Histogram::new();
+        h.observe(0.0);
+        h.observe(-5.0);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 4);
+        assert!(h.quantile(0.5) >= 0.0);
+    }
+
+    #[test]
+    fn bucket_monotonicity() {
+        let mut last = 0.0;
+        for i in 0..BUCKETS {
+            let v = Histogram::bucket_value(i);
+            assert!(v > last);
+            last = v;
+        }
+    }
+}

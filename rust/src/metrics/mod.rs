@@ -1,0 +1,160 @@
+//! Lightweight metrics substrate: counters, gauges, timers and
+//! log-scale histograms, all thread-safe, exported as a [`Value`] tree.
+//!
+//! The coordinator registers one [`Registry`] per run; examples and the
+//! `serve`/`campaign` CLI print or persist the snapshot.
+
+pub mod histogram;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::configfmt::Value;
+pub use histogram::Histogram;
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An f64 gauge (stored as bits in an AtomicU64).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A named-metric registry.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Observe a duration in seconds under `name`.
+    pub fn observe_secs(&self, name: &str, secs: f64) {
+        self.histogram(name).observe(secs);
+    }
+
+    /// Snapshot everything as a JSON-able [`Value`].
+    pub fn snapshot(&self) -> Value {
+        let mut root = Value::obj();
+        let mut counters = Value::obj();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            counters.set(k, c.get());
+        }
+        let mut gauges = Value::obj();
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            gauges.set(k, g.get());
+        }
+        let mut hists = Value::obj();
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            hists.set(k, h.snapshot());
+        }
+        root.set("counters", counters);
+        root.set("gauges", gauges);
+        root.set("histograms", hists);
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let reg = Registry::new();
+        reg.counter("jobs").add(3);
+        reg.counter("jobs").inc();
+        reg.gauge("gap").set(1e-7);
+        assert_eq!(reg.counter("jobs").get(), 4);
+        assert_eq!(reg.gauge("gap").get(), 1e-7);
+    }
+
+    #[test]
+    fn snapshot_round_trips_json() {
+        let reg = Registry::new();
+        reg.counter("a").inc();
+        reg.gauge("b").set(2.5);
+        reg.observe_secs("lat", 0.001);
+        reg.observe_secs("lat", 0.002);
+        let snap = reg.snapshot();
+        let text = crate::configfmt::json::to_string(&snap);
+        let back = crate::configfmt::json::parse(&text).unwrap();
+        assert_eq!(back.usize_or("counters.a", 0), 1);
+        assert_eq!(back.f64_or("gauges.b", 0.0), 2.5);
+        assert_eq!(back.usize_or("histograms.lat.count", 0), 2);
+    }
+
+    #[test]
+    fn concurrent_counting() {
+        let reg = std::sync::Arc::new(Registry::new());
+        let c = reg.counter("n");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+    }
+}

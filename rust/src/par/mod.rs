@@ -1,0 +1,18 @@
+//! Thread-parallel substrate (no rayon/tokio): a persistent worker pool
+//! for the coordinator's job engine, plus scoped data-parallel helpers
+//! for the experiment drivers.
+
+pub mod pool;
+pub mod scope;
+
+pub use pool::ThreadPool;
+pub use scope::{par_chunks, par_map};
+
+/// Default worker count: physical parallelism with a small cap (the
+/// benchmark campaigns are memory-bandwidth bound well before 32 threads).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}

@@ -1,0 +1,205 @@
+//! A persistent FIFO thread pool.
+//!
+//! The coordinator submits boxed jobs; workers pull from a shared queue
+//! guarded by a `Mutex` + `Condvar`.  `join()` blocks until the queue is
+//! drained *and* all in-flight jobs have finished — the pool stays usable
+//! afterwards (campaigns submit waves of jobs).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Queue>,
+    /// Signals workers that a job (or shutdown) is available.
+    work_cv: Condvar,
+    /// Signals `join()` that everything finished.
+    done_cv: Condvar,
+    in_flight: AtomicUsize,
+}
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Persistent FIFO thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` workers (at least 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            in_flight: AtomicUsize::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("holder-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Number of workers.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.queue.lock().unwrap();
+        assert!(!q.shutdown, "pool already shut down");
+        q.jobs.push_back(Box::new(job));
+        drop(q);
+        self.shared.work_cv.notify_one();
+    }
+
+    /// Block until the queue is empty and no job is running.
+    pub fn join(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !q.jobs.is_empty()
+            || self.shared.in_flight.load(Ordering::Acquire) != 0
+        {
+            q = self.shared.done_cv.wait(q).unwrap();
+        }
+    }
+
+    /// Jobs currently queued (diagnostic).
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    // Mark in-flight while still holding the lock so
+                    // `join()` can never observe "empty queue, zero
+                    // in-flight" between pop and increment.
+                    shared.in_flight.fetch_add(1, Ordering::AcqRel);
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        job();
+        if shared.in_flight.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Possibly the last one: wake joiners.
+            let _guard = shared.queue.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn join_waits_for_slow_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..6 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn pool_reusable_after_join() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for wave in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+            assert_eq!(counter.load(Ordering::Relaxed), (wave + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_is_serial() {
+        let pool = ThreadPool::new(1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..20 {
+            let l = Arc::clone(&log);
+            pool.execute(move || l.lock().unwrap().push(i));
+        }
+        pool.join();
+        let got = log.lock().unwrap().clone();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+        } // drop
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+}

@@ -1,0 +1,95 @@
+//! Scoped data-parallel helpers built on `std::thread::scope`.
+//!
+//! `par_map` runs an indexed closure over `0..n` across `threads` OS
+//! threads and collects results in order; `par_chunks` hands each thread a
+//! contiguous index range (for cache-friendly sweeps over trials).
+
+/// Apply `f(i)` for `i in 0..n` using up to `threads` threads; results
+/// returned in index order.  `f` must be `Sync` (shared by reference).
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            let base = t * chunk;
+            s.spawn(move || {
+                for (k, slot) in slice.iter_mut().enumerate() {
+                    *slot = Some(f(base + k));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map slot")).collect()
+}
+
+/// Partition `0..n` into contiguous ranges, one per thread, and run
+/// `f(range)` on each; returns the per-thread results in range order.
+pub fn par_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return vec![f(0..n)];
+    }
+    let chunk = n.div_ceil(threads);
+    let ranges: Vec<_> = (0..threads)
+        .map(|t| (t * chunk).min(n)..((t + 1) * chunk).min(n))
+        .filter(|r| !r.is_empty())
+        .collect();
+    let mut out: Vec<Option<T>> = (0..ranges.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (slot, range) in out.iter_mut().zip(ranges) {
+            let f = &f;
+            s.spawn(move || *slot = Some(f(range)));
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_chunks slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_ordered() {
+        let got = par_map(100, 7, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_single_thread() {
+        assert_eq!(par_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let got: Vec<usize> = par_map(0, 4, |i| i);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn par_chunks_cover_everything() {
+        let sums = par_chunks(1000, 7, |r| r.sum::<usize>());
+        let total: usize = sums.iter().sum();
+        assert_eq!(total, (0..1000).sum::<usize>());
+    }
+
+    #[test]
+    fn par_chunks_more_threads_than_items() {
+        let parts = par_chunks(3, 16, |r| r.collect::<Vec<_>>());
+        let flat: Vec<usize> = parts.into_iter().flatten().collect();
+        assert_eq!(flat, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,176 @@
+//! λ-path solving with warm starts and screening carry-over — the
+//! workload downstream users actually run (model selection sweeps).
+//!
+//! Solves the Lasso at a decreasing grid `λ_1 > λ_2 > … > λ_T` (log-
+//! spaced from `λ_max`), warm-starting each solve at the previous
+//! solution.  Sequential screening composes naturally: each solve
+//! re-screens from scratch (regions depend on λ), but warm starts make
+//! the first duality gap small, so the very first Hölder/GAP test
+//! already eliminates most atoms — the dynamic analogue of the
+//! "sequential safe rules" literature.
+
+use crate::problem::LassoProblem;
+use crate::solver::{solve_warm, SolveReport, SolverConfig};
+
+/// Configuration of a λ-path run.
+#[derive(Clone, Debug)]
+pub struct PathConfig {
+    /// Number of grid points.
+    pub num_lambdas: usize,
+    /// Smallest λ as a fraction of λ_max.
+    pub lam_min_ratio: f64,
+    /// Per-point solver configuration.
+    pub solver: SolverConfig,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        PathConfig {
+            num_lambdas: 20,
+            lam_min_ratio: 0.1,
+            solver: SolverConfig::default(),
+        }
+    }
+}
+
+/// One point of the path.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    pub lam: f64,
+    pub lam_ratio: f64,
+    pub report: SolveReport,
+}
+
+/// The full path result.
+#[derive(Clone, Debug)]
+pub struct PathResult {
+    pub points: Vec<PathPoint>,
+    pub total_flops: u64,
+    pub total_secs: f64,
+}
+
+/// Log-spaced λ grid from `λ_max` down to `ratio·λ_max` (exclusive of
+/// `λ_max` itself, where the solution is trivially 0).
+pub fn lambda_grid(lam_max: f64, num: usize, min_ratio: f64) -> Vec<f64> {
+    assert!(num >= 1);
+    assert!(min_ratio > 0.0 && min_ratio < 1.0);
+    let log_hi = lam_max.ln();
+    let log_lo = (min_ratio * lam_max).ln();
+    (1..=num)
+        .map(|i| {
+            let f = i as f64 / num as f64;
+            (log_hi + f * (log_lo - log_hi)).exp()
+        })
+        .collect()
+}
+
+/// Solve the path with warm starts.
+pub fn solve_path(base: &LassoProblem, cfg: &PathConfig) -> PathResult {
+    let sw = crate::util::timer::Stopwatch::start();
+    let grid = lambda_grid(base.lam_max(), cfg.num_lambdas, cfg.lam_min_ratio);
+    let mut points = Vec::with_capacity(grid.len());
+    let mut warm: Option<Vec<f64>> = None;
+    let mut total_flops = 0;
+    for lam in grid {
+        let p = base.with_lambda(lam);
+        let report = solve_warm(&p, &cfg.solver, warm.as_deref());
+        total_flops += report.flops;
+        warm = Some(report.x.clone());
+        points.push(PathPoint {
+            lam,
+            lam_ratio: lam / base.lam_max(),
+            report,
+        });
+    }
+    PathResult { points, total_flops, total_secs: sw.elapsed_secs() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dict::{generate, DictKind, InstanceConfig};
+    use crate::regions::RegionKind;
+    use crate::solver::{Budget, SolverConfig, StopReason};
+
+    fn base() -> LassoProblem {
+        let mut cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+        cfg.m = 30;
+        cfg.n = 90;
+        generate(&cfg, 0).problem
+    }
+
+    #[test]
+    fn grid_is_decreasing_log_spaced() {
+        let g = lambda_grid(2.0, 10, 0.01);
+        assert_eq!(g.len(), 10);
+        for w in g.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert!(g[0] < 2.0);
+        assert!((g[9] - 0.02).abs() < 1e-12);
+        // log-spacing: constant ratio
+        let r0 = g[1] / g[0];
+        let r5 = g[6] / g[5];
+        assert!((r0 - r5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn path_converges_everywhere_and_support_grows() {
+        let p = base();
+        let cfg = PathConfig {
+            num_lambdas: 8,
+            lam_min_ratio: 0.2,
+            solver: SolverConfig {
+                budget: Budget::gap(1e-9),
+                region: Some(RegionKind::HolderDome),
+                ..Default::default()
+            },
+        };
+        let res = solve_path(&p, &cfg);
+        assert_eq!(res.points.len(), 8);
+        let mut last_support = 0;
+        let mut grew = 0;
+        for pt in &res.points {
+            assert_eq!(pt.report.stop, StopReason::Converged);
+            let s = pt.report.support(1e-9).len();
+            if s >= last_support {
+                grew += 1;
+            }
+            last_support = s;
+        }
+        // Support generally grows as λ decreases (not strictly, but
+        // mostly).
+        assert!(grew >= 6, "support shrank too often: {grew}/8");
+    }
+
+    #[test]
+    fn warm_path_cheaper_than_cold() {
+        let p = base();
+        let mk = |region| PathConfig {
+            num_lambdas: 6,
+            lam_min_ratio: 0.25,
+            solver: SolverConfig {
+                budget: Budget::gap(1e-8),
+                region,
+                ..Default::default()
+            },
+        };
+        let warm = solve_path(&p, &mk(Some(RegionKind::HolderDome)));
+        // Cold = solve each point from scratch.
+        let grid = lambda_grid(p.lam_max(), 6, 0.25);
+        let mut cold_flops = 0;
+        for lam in grid {
+            let pp = p.with_lambda(lam);
+            let rep = crate::solver::solve(
+                &pp,
+                &mk(Some(RegionKind::HolderDome)).solver,
+            );
+            cold_flops += rep.flops;
+        }
+        assert!(
+            warm.total_flops < cold_flops,
+            "warm {} >= cold {cold_flops}",
+            warm.total_flops
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Dolan-Moré performance profiles — the evaluation device of Fig. 2.
+//!
+//! The paper's variant: run every solver with the *same* flop budget on
+//! `N` instances; for each threshold `τ`, report the empirical
+//! probability `ρ_s(τ)` that solver `s` finished with a duality gap
+//! `≤ τ`.  (This is the "accuracy-under-budget" profile; the classical
+//! cost-ratio profile of Dolan & Moré 2002 is also provided for the
+//! ablation benches.)
+
+/// Accuracy-under-budget profile: `ρ(τ) = #{instances: gap ≤ τ} / N`.
+#[derive(Clone, Debug)]
+pub struct AccuracyProfile {
+    /// Threshold grid (decreasing or increasing — preserved as given).
+    pub taus: Vec<f64>,
+    /// `rho[s][t]` for solver `s`, threshold `t`.
+    pub rho: Vec<Vec<f64>>,
+    /// Solver labels.
+    pub labels: Vec<String>,
+}
+
+impl AccuracyProfile {
+    /// `gaps[s][i]` = final gap of solver `s` on instance `i`.
+    pub fn from_gaps(
+        labels: &[String],
+        gaps: &[Vec<f64>],
+        taus: &[f64],
+    ) -> AccuracyProfile {
+        assert_eq!(labels.len(), gaps.len());
+        let n = gaps.first().map(|g| g.len()).unwrap_or(0);
+        assert!(gaps.iter().all(|g| g.len() == n), "ragged gap matrix");
+        let rho = gaps
+            .iter()
+            .map(|g| {
+                taus.iter()
+                    .map(|&tau| {
+                        g.iter().filter(|&&x| x <= tau).count() as f64
+                            / n.max(1) as f64
+                    })
+                    .collect()
+            })
+            .collect();
+        AccuracyProfile {
+            taus: taus.to_vec(),
+            rho,
+            labels: labels.to_vec(),
+        }
+    }
+
+    /// ρ for a single (solver, τ) pair.
+    pub fn rho_at(&self, solver: usize, tau: f64) -> f64 {
+        // nearest tau in the grid
+        let mut best = (f64::INFINITY, 0usize);
+        for (t, &g) in self.taus.iter().enumerate() {
+            let d = (g.ln() - tau.ln()).abs();
+            if d < best.0 {
+                best = (d, t);
+            }
+        }
+        self.rho[solver][best.1]
+    }
+
+    /// Render as a markdown table (rows = τ, columns = solvers).
+    pub fn table(&self) -> crate::benchkit::Table {
+        let mut header = vec!["tau".to_string()];
+        header.extend(self.labels.iter().cloned());
+        let header_refs: Vec<&str> =
+            header.iter().map(String::as_str).collect();
+        let mut t = crate::benchkit::Table::new(&header_refs);
+        for (ti, &tau) in self.taus.iter().enumerate() {
+            let mut row = vec![format!("{tau:.0e}")];
+            for s in 0..self.labels.len() {
+                row.push(format!("{:.3}", self.rho[s][ti]));
+            }
+            t.row(&row);
+        }
+        t
+    }
+}
+
+/// Classical Dolan-Moré cost-ratio profile: for instance `i` and solver
+/// `s` with cost `c[s][i]`, the ratio `r = c[s][i] / min_s' c[s'][i]`;
+/// `ρ_s(θ) = #{i : r ≤ θ}/N`.
+#[derive(Clone, Debug)]
+pub struct CostProfile {
+    pub thetas: Vec<f64>,
+    pub rho: Vec<Vec<f64>>,
+    pub labels: Vec<String>,
+}
+
+impl CostProfile {
+    /// `costs[s][i]`; instances where a solver failed should carry
+    /// `f64::INFINITY`.
+    pub fn from_costs(
+        labels: &[String],
+        costs: &[Vec<f64>],
+        thetas: &[f64],
+    ) -> CostProfile {
+        let s_count = costs.len();
+        let n = costs.first().map(|c| c.len()).unwrap_or(0);
+        assert!(costs.iter().all(|c| c.len() == n));
+        // per-instance best cost
+        let best: Vec<f64> = (0..n)
+            .map(|i| {
+                (0..s_count)
+                    .map(|s| costs[s][i])
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let rho = (0..s_count)
+            .map(|s| {
+                thetas
+                    .iter()
+                    .map(|&theta| {
+                        (0..n)
+                            .filter(|&i| {
+                                best[i].is_finite()
+                                    && costs[s][i] <= theta * best[i]
+                            })
+                            .count() as f64
+                            / n.max(1) as f64
+                    })
+                    .collect()
+            })
+            .collect();
+        CostProfile {
+            thetas: thetas.to_vec(),
+            rho,
+            labels: labels.to_vec(),
+        }
+    }
+}
+
+/// Log-spaced τ grid, `hi` down to `lo` inclusive (Fig. 2's x-axis).
+pub fn log_tau_grid(hi: f64, lo: f64, points: usize) -> Vec<f64> {
+    assert!(hi > lo && lo > 0.0 && points >= 2);
+    let lh = hi.ln();
+    let ll = lo.ln();
+    (0..points)
+        .map(|i| (lh + (ll - lh) * i as f64 / (points - 1) as f64).exp())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_profile_counts_correctly() {
+        let labels = vec!["a".to_string(), "b".to_string()];
+        let gaps = vec![
+            vec![1e-9, 1e-7, 1e-5, 1e-3], // solver a
+            vec![1e-8, 1e-8, 1e-8, 1e-8], // solver b
+        ];
+        let taus = vec![1e-4, 1e-6, 1e-8];
+        let prof = AccuracyProfile::from_gaps(&labels, &gaps, &taus);
+        // tau = 1e-4: a has 3/4, b has 4/4
+        assert!((prof.rho[0][0] - 0.75).abs() < 1e-12);
+        assert!((prof.rho[1][0] - 1.0).abs() < 1e-12);
+        // tau = 1e-8: a has 1/4, b has 4/4
+        assert!((prof.rho[0][2] - 0.25).abs() < 1e-12);
+        assert!((prof.rho[1][2] - 1.0).abs() < 1e-12);
+        // rho_at picks nearest
+        assert!((prof.rho_at(0, 1.2e-6) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profiles_are_monotone_in_tau() {
+        let labels = vec!["s".to_string()];
+        let gaps =
+            vec![vec![1e-9, 1e-3, 1e-6, 1e-12, 1e-7, 2e-7, 3e-5, 1e-4]];
+        let taus = log_tau_grid(1e-2, 1e-12, 21);
+        let prof = AccuracyProfile::from_gaps(&labels, &gaps, &taus);
+        // taus decreasing => rho non-increasing
+        for w in prof.rho[0].windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn cost_profile_ratios() {
+        let labels = vec!["fast".to_string(), "slow".to_string()];
+        let costs = vec![vec![1.0, 2.0, 1.0], vec![2.0, 2.0, 4.0]];
+        let thetas = vec![1.0, 2.0, 4.0];
+        let prof = CostProfile::from_costs(&labels, &costs, &thetas);
+        // theta=1: fast wins all 3, slow ties 1
+        assert!((prof.rho[0][0] - 1.0).abs() < 1e-12);
+        assert!((prof.rho[1][0] - 1.0 / 3.0).abs() < 1e-12);
+        // theta=4: everyone within 4x
+        assert!((prof.rho[1][2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tau_grid_spans() {
+        let g = log_tau_grid(1e-1, 1e-12, 12);
+        assert_eq!(g.len(), 12);
+        assert!((g[0] - 1e-1).abs() < 1e-15);
+        assert!((g[11] - 1e-12).abs() < 1e-24);
+        for w in g.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let labels = vec!["x".to_string()];
+        let prof = AccuracyProfile::from_gaps(
+            &labels,
+            &[vec![1e-7]],
+            &[1e-6, 1e-8],
+        );
+        let s = prof.table().render();
+        assert!(s.contains("1e-6") || s.contains("1e-06"));
+    }
+}

@@ -1,0 +1,295 @@
+//! The Lasso problem, its dual, and the primal-dual machinery of §III.
+//!
+//! Primal (eq. 1):  `min_x P(x) = ½‖y − Ax‖² + λ‖x‖₁`
+//! Dual   (eq. 2):  `max_{u∈U} D(u) = ½‖y‖² − ½‖y − u‖²`,
+//!                  `U = {u : ‖Aᵀu‖_∞ ≤ λ}`
+//!
+//! [`LassoProblem`] owns the instance data plus the per-problem
+//! precomputations every solver/screening pass reuses: column norms,
+//! `Aᵀy`, `λ_max = ‖Aᵀy‖_∞` (eq. 6) and the FISTA step size `1/‖A‖₂²`.
+
+use crate::linalg::{self, gemv, gemv_t, Mat};
+
+/// Guard value shared with the Python layer (`kernels/ref.py::EPS`).
+pub const EPS: f64 = 1e-12;
+
+/// A Lasso instance with cached precomputations.
+#[derive(Clone, Debug)]
+pub struct LassoProblem {
+    a: Mat,
+    y: Vec<f64>,
+    lam: f64,
+    // --- cached ---
+    col_norms: Vec<f64>,
+    aty: Vec<f64>,
+    lam_max: f64,
+    lipschitz: f64,
+}
+
+impl LassoProblem {
+    /// Build a problem; `A` is the dictionary (columns = atoms).
+    ///
+    /// Panics if shapes disagree or `lam <= 0`.
+    pub fn new(a: Mat, y: Vec<f64>, lam: f64) -> Self {
+        assert_eq!(a.rows(), y.len(), "A rows must match y length");
+        assert!(lam > 0.0, "lambda must be positive");
+        let col_norms = a.col_norms();
+        let mut aty = vec![0.0; a.cols()];
+        gemv_t(&a, &y, &mut aty);
+        let lam_max = linalg::norm_inf(&aty);
+        let lipschitz = a.spectral_norm_sq(60, 0x5eed).max(EPS);
+        LassoProblem { a, y, lam, col_norms, aty, lam_max, lipschitz }
+    }
+
+    /// Same instance at a different λ (path solving; caches are reused).
+    pub fn with_lambda(&self, lam: f64) -> Self {
+        assert!(lam > 0.0);
+        let mut p = self.clone();
+        p.lam = lam;
+        p
+    }
+
+    // --- accessors ---
+
+    pub fn a(&self) -> &Mat {
+        &self.a
+    }
+    pub fn y(&self) -> &[f64] {
+        &self.y
+    }
+    pub fn lam(&self) -> f64 {
+        self.lam
+    }
+    /// `m`: observation dimension.
+    pub fn m(&self) -> usize {
+        self.a.rows()
+    }
+    /// `n`: number of atoms.
+    pub fn n(&self) -> usize {
+        self.a.cols()
+    }
+    /// Cached per-atom norms ‖a_i‖₂.
+    pub fn col_norms(&self) -> &[f64] {
+        &self.col_norms
+    }
+    /// Cached `Aᵀ y`.
+    pub fn aty(&self) -> &[f64] {
+        &self.aty
+    }
+    /// `λ_max = ‖Aᵀy‖_∞` (eq. 6): smallest λ with 0 as unique solution.
+    pub fn lam_max(&self) -> f64 {
+        self.lam_max
+    }
+    /// ‖A‖₂² — gradient Lipschitz constant.
+    pub fn lipschitz(&self) -> f64 {
+        self.lipschitz
+    }
+    /// The standard FISTA step `1/‖A‖₂²`, with a 1% safety margin since
+    /// the power iteration estimates the spectral norm from below.
+    pub fn default_step(&self) -> f64 {
+        1.0 / (self.lipschitz * 1.01)
+    }
+
+    // --- primal/dual machinery ---
+
+    /// Residual `r = y − Ax`.
+    pub fn residual(&self, x: &[f64], out: &mut [f64]) {
+        gemv(&self.a, x, out);
+        for (o, yi) in out.iter_mut().zip(&self.y) {
+            *o = yi - *o;
+        }
+    }
+
+    /// Primal objective `P(x)` (eq. 1).
+    pub fn primal(&self, x: &[f64]) -> f64 {
+        let mut r = vec![0.0; self.m()];
+        self.residual(x, &mut r);
+        0.5 * linalg::norm2_sq(&r) + self.lam * linalg::norm1(x)
+    }
+
+    /// Primal objective from a precomputed residual (hot path).
+    pub fn primal_from_residual(&self, x: &[f64], r: &[f64]) -> f64 {
+        0.5 * linalg::norm2_sq(r) + self.lam * linalg::norm1(x)
+    }
+
+    /// Dual objective `D(u)` (eq. 2).
+    pub fn dual(&self, u: &[f64]) -> f64 {
+        let mut diff = vec![0.0; self.m()];
+        linalg::sub(&self.y, u, &mut diff);
+        0.5 * linalg::norm2_sq(&self.y) - 0.5 * linalg::norm2_sq(&diff)
+    }
+
+    /// Is `u` dual feasible (`‖Aᵀu‖_∞ ≤ λ(1+tol)`)?
+    pub fn is_dual_feasible(&self, u: &[f64], tol: f64) -> bool {
+        let mut atu = vec![0.0; self.n()];
+        gemv_t(&self.a, u, &mut atu);
+        linalg::norm_inf(&atu) <= self.lam * (1.0 + tol)
+    }
+
+    /// Dual scaling of a residual (El Ghaoui §3.3): `u = s·r` with
+    /// `s = min(1, λ/‖Aᵀr‖_∞)`.  Returns (u, s).  `atr` is `Aᵀr`.
+    pub fn dual_scale(&self, r: &[f64], atr: &[f64]) -> (Vec<f64>, f64) {
+        let corr = linalg::norm_inf(atr);
+        let s = (self.lam / corr.max(EPS)).min(1.0);
+        let mut u = r.to_vec();
+        linalg::scale(&mut u, s);
+        (u, s)
+    }
+
+    /// Duality gap `P(x) − D(u)` (eq. 3); clamped at 0 to absorb
+    /// floating-point noise near optimality.
+    pub fn gap(&self, x: &[f64], u: &[f64]) -> f64 {
+        (self.primal(x) - self.dual(u)).max(0.0)
+    }
+
+    /// Full primal-dual evaluation at `x`: residual → dual scaling →
+    /// gap.  Returns [`PrimalDualEval`].  This is the reference
+    /// (unmetered) implementation; the solver has a fused, flop-charged
+    /// version.
+    pub fn eval(&self, x: &[f64]) -> PrimalDualEval {
+        let mut r = vec![0.0; self.m()];
+        self.residual(x, &mut r);
+        let mut atr = vec![0.0; self.n()];
+        gemv_t(&self.a, &r, &mut atr);
+        let (u, scale) = self.dual_scale(&r, &atr);
+        let p = self.primal_from_residual(x, &r);
+        let d = self.dual(&u);
+        PrimalDualEval { p, d, gap: (p - d).max(0.0), u, r, atr, scale }
+    }
+}
+
+/// The result of a primal-dual evaluation at some `x`.
+#[derive(Clone, Debug)]
+pub struct PrimalDualEval {
+    pub p: f64,
+    pub d: f64,
+    pub gap: f64,
+    /// Feasible dual point (rescaled residual).
+    pub u: Vec<f64>,
+    /// Residual `y − Ax`.
+    pub r: Vec<f64>,
+    /// `Aᵀ r` (reused by screening).
+    pub atr: Vec<f64>,
+    /// The dual-scaling factor `s`.
+    pub scale: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{Gen, Runner};
+
+    fn small_problem(seed: u64) -> LassoProblem {
+        let mut g = Gen::for_case(seed, 0);
+        let a = g.dictionary(20, 50);
+        let y = g.observation(20);
+        let mut aty = vec![0.0; 50];
+        gemv_t(&a, &y, &mut aty);
+        let lam = 0.5 * linalg::norm_inf(&aty);
+        LassoProblem::new(a, y, lam)
+    }
+
+    #[test]
+    fn primal_at_zero_is_half_y_norm() {
+        let p = small_problem(1);
+        let x = vec![0.0; p.n()];
+        // y on unit sphere => P(0) = 1/2
+        assert!((p.primal(&x) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lam_max_gives_zero_solution_certificate() {
+        let p = small_problem(2);
+        // At lam >= lam_max, u = y is dual feasible and gap(0, y) = 0.
+        let p2 = p.with_lambda(p.lam_max() * 1.0000001);
+        assert!(p2.is_dual_feasible(p2.y(), 1e-9));
+        let x0 = vec![0.0; p2.n()];
+        assert!(p2.gap(&x0, p2.y()) < 1e-9);
+    }
+
+    #[test]
+    fn dual_scale_feasible_property() {
+        Runner::new(42).cases(50).run("dual scaling feasible", |g| {
+            let m = g.usize_in(3, 30);
+            let n = g.usize_in(2, 60);
+            let a = g.dictionary(m, n);
+            let y = g.observation(m);
+            let mut aty = vec![0.0; n];
+            gemv_t(&a, &y, &mut aty);
+            let lam_max = linalg::norm_inf(&aty);
+            if lam_max < 1e-9 {
+                return Ok(());
+            }
+            let lam = g.f64_in(0.1, 1.0) * lam_max;
+            let p = LassoProblem::new(a, y, lam);
+            let x = g.vec_sparse(n, n / 3 + 1);
+            let ev = p.eval(&x);
+            if !p.is_dual_feasible(&ev.u, 1e-9) {
+                return Err("scaled dual point infeasible".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weak_duality_property() {
+        Runner::new(43).cases(50).run("gap nonnegative", |g| {
+            let m = g.usize_in(3, 25);
+            let n = g.usize_in(2, 50);
+            let a = g.dictionary(m, n);
+            let y = g.observation(m);
+            let mut aty = vec![0.0; n];
+            gemv_t(&a, &y, &mut aty);
+            let lam_max = linalg::norm_inf(&aty);
+            if lam_max < 1e-9 {
+                return Ok(());
+            }
+            let p = LassoProblem::new(a, y, 0.4 * lam_max);
+            let x = g.vec_sparse(n, 3);
+            let ev = p.eval(&x);
+            // raw (unclamped) gap must be >= -eps
+            if ev.p - ev.d < -1e-9 {
+                return Err(format!("negative gap {}", ev.p - ev.d));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn eval_consistency() {
+        let p = small_problem(3);
+        let mut g = Gen::for_case(99, 0);
+        let x = g.vec_sparse(p.n(), 5);
+        let ev = p.eval(&x);
+        assert!((ev.p - p.primal(&x)).abs() < 1e-10);
+        assert!((ev.d - p.dual(&ev.u)).abs() < 1e-10);
+        assert!((ev.gap - p.gap(&x, &ev.u)).abs() < 1e-10);
+        // residual identity
+        let mut r = vec![0.0; p.m()];
+        p.residual(&x, &mut r);
+        assert!(linalg::max_abs_diff(&r, &ev.r) < 1e-12);
+    }
+
+    #[test]
+    fn lipschitz_bounds_gradient() {
+        // ‖AᵀA x‖ <= L ‖x‖ for the computed L (power-iteration result).
+        let p = small_problem(4);
+        let mut g = Gen::for_case(7, 0);
+        let x = g.vec_normal(p.n());
+        let mut ax = vec![0.0; p.m()];
+        gemv(p.a(), &x, &mut ax);
+        let mut atax = vec![0.0; p.n()];
+        gemv_t(p.a(), &ax, &mut atax);
+        let ratio = linalg::norm2(&atax) / linalg::norm2(&x);
+        assert!(ratio <= p.lipschitz() * 1.001, "{ratio} vs {}", p.lipschitz());
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_lambda_panics() {
+        let mut g = Gen::for_case(0, 0);
+        let a = g.dictionary(4, 6);
+        let y = g.observation(4);
+        LassoProblem::new(a, y, -1.0);
+    }
+}

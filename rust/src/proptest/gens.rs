@@ -1,0 +1,129 @@
+//! Seeded random-input generators for property tests.
+
+use crate::util::rng::Pcg64;
+
+/// A per-case generator wrapping the PCG stream.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    /// Deterministic generator for (seed, case).
+    pub fn for_case(seed: u64, case: u64) -> Self {
+        Gen { rng: Pcg64::with_stream(seed.wrapping_add(case), case * 2 + 1) }
+    }
+
+    /// Direct access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Standard normal scalar.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Vector of i.i.d. normals.
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v);
+        v
+    }
+
+    /// Vector of uniforms in [lo, hi).
+    pub fn vec_uniform(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform_in(lo, hi)).collect()
+    }
+
+    /// Sparse vector: `k` random support entries, normal values.
+    pub fn vec_sparse(&mut self, n: usize, k: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        for idx in self.rng.sample_indices(n, k.min(n)) {
+            v[idx] = self.rng.normal();
+        }
+        v
+    }
+
+    /// Column-normalized random dictionary (the paper's setup).
+    pub fn dictionary(&mut self, m: usize, n: usize) -> crate::linalg::Mat {
+        let mut mat = crate::linalg::Mat::zeros(m, n);
+        for j in 0..n {
+            let col = mat.col_mut(j);
+            for ci in col.iter_mut() {
+                *ci = self.rng.normal();
+            }
+        }
+        mat.normalize_columns();
+        mat
+    }
+
+    /// Observation on the unit sphere.
+    pub fn observation(&mut self, m: usize) -> Vec<f64> {
+        self.rng.unit_sphere(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_case() {
+        let mut a = Gen::for_case(5, 3);
+        let mut b = Gen::for_case(5, 3);
+        assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+    }
+
+    #[test]
+    fn cases_differ() {
+        let mut a = Gen::for_case(5, 1);
+        let mut b = Gen::for_case(5, 2);
+        let same = (0..32)
+            .filter(|_| a.rng().next_u64() == b.rng().next_u64())
+            .count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut g = Gen::for_case(9, 0);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn sparse_has_requested_support() {
+        let mut g = Gen::for_case(11, 0);
+        let v = g.vec_sparse(50, 5);
+        let nnz = v.iter().filter(|x| **x != 0.0).count();
+        assert!(nnz <= 5 && nnz >= 1);
+    }
+
+    #[test]
+    fn dictionary_is_normalized() {
+        let mut g = Gen::for_case(13, 0);
+        let d = g.dictionary(10, 20);
+        for j in 0..20 {
+            let n = crate::linalg::norm2(d.col(j));
+            assert!((n - 1.0).abs() < 1e-12);
+        }
+    }
+}

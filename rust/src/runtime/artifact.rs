@@ -1,0 +1,191 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::configfmt::{json, Value};
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact: HLO file + ordered I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// The parsed manifest: problem shape + artifact table.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub m: usize,
+    pub n: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let m = v
+            .get_path("m")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing 'm'"))?;
+        let n = v
+            .get_path("n")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing 'n'"))?;
+        let arts = match v.get_path("artifacts") {
+            Some(Value::Obj(map)) => map,
+            _ => return Err(anyhow!("manifest missing 'artifacts' object")),
+        };
+        let mut artifacts = Vec::new();
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+            let parse_tensors = |key: &str| -> Result<Vec<TensorMeta>> {
+                let arr = meta
+                    .get(key)
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name}: missing {key}"))?;
+                arr.iter()
+                    .map(|t| {
+                        let tname = t
+                            .get("name")
+                            .and_then(Value::as_str)
+                            .unwrap_or("?")
+                            .to_string();
+                        let shape = t
+                            .get("shape")
+                            .and_then(Value::as_arr)
+                            .ok_or_else(|| {
+                                anyhow!("artifact {name}/{tname}: no shape")
+                            })?
+                            .iter()
+                            .map(|s| {
+                                s.as_usize().ok_or_else(|| {
+                                    anyhow!("bad dim in {name}/{tname}")
+                                })
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok(TensorMeta { name: tname, shape })
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactMeta {
+                name: name.clone(),
+                file: dir.join(file),
+                inputs: parse_tensors("inputs")?,
+                outputs: parse_tensors("outputs")?,
+            });
+        }
+        Ok(Manifest { m, n, artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The artifact names the PJRT solver backend requires.
+    pub fn required_for_solver() -> &'static [&'static str] {
+        &[
+            "precompute",
+            "fused_holder",
+            "fused_gap_dome",
+            "fused_gap_sphere",
+            "fused_no_screen",
+        ]
+    }
+
+    /// Check all solver artifacts are present and consistent.
+    pub fn validate_for_solver(&self) -> Result<()> {
+        for name in Self::required_for_solver() {
+            let a = self
+                .get(name)
+                .ok_or_else(|| anyhow!("manifest missing artifact {name}"))?;
+            if !a.file.exists() {
+                return Err(anyhow!("artifact file missing: {}",
+                                   a.file.display()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "m": 10, "n": 20, "dtype": "f32",
+      "artifacts": {
+        "at_r": {
+          "file": "at_r.hlo.txt",
+          "inputs": [
+            {"name": "a_mat", "shape": [10, 20]},
+            {"name": "r", "shape": [10]}
+          ],
+          "outputs": [{"name": "atr", "shape": [20]}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let man = Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(man.m, 10);
+        assert_eq!(man.n, 20);
+        let a = man.get("at_r").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![10, 20]);
+        assert_eq!(a.inputs[0].elements(), 200);
+        assert_eq!(a.outputs[0].name, "atr");
+        assert!(a.file.ends_with("at_r.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("{\"m\": 1}", PathBuf::new()).is_err());
+        assert!(
+            Manifest::parse("{\"m\":1,\"n\":2,\"artifacts\":[]}",
+                            PathBuf::new())
+            .is_err()
+        );
+        let no_shape = r#"{"m":1,"n":2,"artifacts":{
+            "x":{"file":"f","inputs":[{"name":"a"}],"outputs":[]}}}"#;
+        assert!(Manifest::parse(no_shape, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_lookup() {
+        let man = Manifest::parse(SAMPLE, PathBuf::new()).unwrap();
+        assert!(man.get("nope").is_none());
+        assert!(man.validate_for_solver().is_err());
+    }
+}

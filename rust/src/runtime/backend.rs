@@ -1,0 +1,196 @@
+//! The PJRT solver backend: masked FISTA + screening driven entirely by
+//! the `fused_*` artifacts — **one `execute()` per solver iteration**.
+//!
+//! This is the "serving" counterpart of the native
+//! [`crate::solver::fista`]: same algorithm, but the compute graph was
+//! authored in JAX (calling the Pallas kernels), AOT-lowered at build
+//! time, and runs here through the PJRT CPU client.  Screening is
+//! expressed as a {0,1} mask over a static full-shape problem (HLO
+//! shapes are fixed), whereas the native backend physically compacts
+//! the active set; `rust/tests/backend_parity.rs` checks the two agree.
+
+use anyhow::{anyhow, Result};
+
+use super::executor::ArtifactRegistry;
+use crate::linalg::Mat;
+use crate::problem::LassoProblem;
+use crate::regions::RegionKind;
+
+/// Result of a PJRT-backend solve.
+#[derive(Clone, Debug)]
+pub struct PjrtSolveOutcome {
+    /// Solution, full length (f64-widened from the f32 artifacts).
+    pub x: Vec<f64>,
+    pub gap: f64,
+    pub p: f64,
+    pub d: f64,
+    pub iters: usize,
+    /// Atoms still active (mask = 1).
+    pub active: usize,
+    /// Gap after each iteration.
+    pub gap_history: Vec<f64>,
+    /// Active count after each iteration.
+    pub active_history: Vec<usize>,
+}
+
+/// Masked FISTA over the fused artifacts.
+pub struct PjrtSolver<'r> {
+    registry: &'r ArtifactRegistry,
+}
+
+impl<'r> PjrtSolver<'r> {
+    pub fn new(registry: &'r ArtifactRegistry) -> Result<Self> {
+        registry.manifest.validate_for_solver()?;
+        Ok(PjrtSolver { registry })
+    }
+
+    /// Which fused artifact implements a region choice.
+    pub fn artifact_for(region: Option<RegionKind>) -> Result<&'static str> {
+        match region {
+            None => Ok("fused_no_screen"),
+            Some(RegionKind::HolderDome) => Ok("fused_holder"),
+            Some(RegionKind::GapDome) => Ok("fused_gap_dome"),
+            Some(RegionKind::GapSphere) => Ok("fused_gap_sphere"),
+            Some(other) => Err(anyhow!(
+                "no fused artifact for region {}", other.name()
+            )),
+        }
+    }
+
+    /// Flatten a column-major [`Mat`] into the row-major f32 layout the
+    /// jax-lowered HLO expects.
+    pub fn mat_to_row_major_f32(a: &Mat) -> Vec<f32> {
+        let (m, n) = (a.rows(), a.cols());
+        let mut out = vec![0f32; m * n];
+        for j in 0..n {
+            let col = a.col(j);
+            for i in 0..m {
+                out[i * n + j] = col[i] as f32;
+            }
+        }
+        out
+    }
+
+    /// Solve `problem` with the given screening region.
+    ///
+    /// The problem shape must match the manifest (`m`, `n`) — artifacts
+    /// are AOT-compiled for a fixed shape.
+    pub fn solve(
+        &self,
+        problem: &LassoProblem,
+        region: Option<RegionKind>,
+        max_iters: usize,
+        target_gap: f64,
+    ) -> Result<PjrtSolveOutcome> {
+        let man = &self.registry.manifest;
+        if problem.m() != man.m || problem.n() != man.n {
+            return Err(anyhow!(
+                "problem is {}×{}, artifacts compiled for {}×{}",
+                problem.m(),
+                problem.n(),
+                man.m,
+                man.n
+            ));
+        }
+        let (_m, n) = (man.m, man.n);
+        let a32 = Self::mat_to_row_major_f32(problem.a());
+        let y32: Vec<f32> = problem.y().iter().map(|v| *v as f32).collect();
+
+        // Per-problem precomputation (one artifact call).
+        let pre = self.registry.get("precompute")?;
+        let pre_out = pre.run(&[&a32, &y32])?;
+        let colnorms = pre_out[0].clone();
+        let aty = pre_out[1].clone();
+
+        let fused = self.registry.get(Self::artifact_for(region)?)?;
+
+        let mut z = vec![0f32; n];
+        let mut x = vec![0f32; n];
+        let mut t = vec![1f32];
+        let mut mask = vec![1f32; n];
+        let lam = vec![problem.lam() as f32];
+        let step = vec![problem.default_step() as f32];
+
+        // Constants are uploaded ONCE per solve (A alone is m*n*4 bytes
+        // — re-uploading it per iteration dominated the request latency;
+        // see EXPERIMENTS.md §Perf entry 3).  Only the small iteration
+        // state (z, x, t, mask — O(n) floats) moves per call.
+        let client = self.registry.client();
+        let b_a = fused.upload(client, 0, &a32)?;
+        let b_y = fused.upload(client, 1, &y32)?;
+        let b_lam = fused.upload(client, 6, &lam)?;
+        let b_step = fused.upload(client, 7, &step)?;
+        let b_colnorms = fused.upload(client, 8, &colnorms)?;
+        let b_aty = fused.upload(client, 9, &aty)?;
+
+        let mut gap_history = Vec::new();
+        let mut active_history = Vec::new();
+        let mut last = (f64::INFINITY, 0.0, 0.0); // (gap, p, d)
+        let mut iters = 0;
+        for it in 1..=max_iters {
+            iters = it;
+            let b_z = fused.upload(client, 2, &z)?;
+            let b_x = fused.upload(client, 3, &x)?;
+            let b_t = fused.upload(client, 4, &t)?;
+            let b_mask = fused.upload(client, 5, &mask)?;
+            let out = fused.run_buffers(&[
+                &b_a, &b_y, &b_z, &b_x, &b_t, &b_mask, &b_lam, &b_step,
+                &b_colnorms, &b_aty,
+            ])?;
+            // outputs: x_new, z_new, t_new, u, gap, p, d, new_mask
+            x = out[0].clone();
+            z = out[1].clone();
+            t = out[2].clone();
+            let gap = out[4][0] as f64;
+            let p = out[5][0] as f64;
+            let d = out[6][0] as f64;
+            mask = out[7].clone();
+            let active =
+                mask.iter().filter(|v| **v != 0.0).count();
+            gap_history.push(gap);
+            active_history.push(active);
+            last = (gap, p, d);
+            if gap <= target_gap {
+                break;
+            }
+        }
+
+        Ok(PjrtSolveOutcome {
+            x: x.iter().map(|v| *v as f64).collect(),
+            gap: last.0,
+            p: last.1,
+            d: last.2,
+            iters,
+            active: mask.iter().filter(|v| **v != 0.0).count(),
+            gap_history,
+            active_history,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_selection() {
+        assert_eq!(
+            PjrtSolver::artifact_for(Some(RegionKind::HolderDome)).unwrap(),
+            "fused_holder"
+        );
+        assert_eq!(
+            PjrtSolver::artifact_for(None).unwrap(),
+            "fused_no_screen"
+        );
+        assert!(PjrtSolver::artifact_for(Some(RegionKind::StaticSphere))
+            .is_err());
+    }
+
+    #[test]
+    fn row_major_flatten() {
+        // [[1, 2, 3], [4, 5, 6]]
+        let a = Mat::from_row_major(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let flat = PjrtSolver::mat_to_row_major_f32(&a);
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+}

@@ -1,0 +1,223 @@
+//! PJRT execution: compile HLO-text artifacts once, execute many times.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactMeta, Manifest};
+
+/// One compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with f32 slices in manifest input order; returns one
+    /// `Vec<f32>` per manifest output.
+    ///
+    /// Inputs are validated against the manifest shapes — a mismatch is
+    /// a caller bug and fails fast with a descriptive error.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "{}: got {} inputs, manifest says {}",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (slice, tm) in inputs.iter().zip(&self.meta.inputs) {
+            if slice.len() != tm.elements() {
+                return Err(anyhow!(
+                    "{}/{}: got {} elements, want {:?}",
+                    self.meta.name,
+                    tm.name,
+                    slice.len(),
+                    tm.shape
+                ));
+            }
+            let lit = xla::Literal::vec1(slice);
+            let dims: Vec<i64> =
+                tm.shape.iter().map(|&d| d as i64).collect();
+            literals.push(if tm.shape.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims)?
+            });
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always an N-tuple.
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(anyhow!(
+                "{}: executable returned {} outputs, manifest says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, tm)| {
+                let v = lit.to_vec::<f32>().with_context(|| {
+                    format!("{}/{}: f32 conversion", self.meta.name, tm.name)
+                })?;
+                if v.len() != tm.elements() {
+                    return Err(anyhow!(
+                        "{}/{}: output has {} elements, want {:?}",
+                        self.meta.name,
+                        tm.name,
+                        v.len(),
+                        tm.shape
+                    ));
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Buffer-mode execution: inputs are device-resident `PjRtBuffer`s
+    /// (constants uploaded once per solve — perf log entry 3), outputs
+    /// are downloaded as one tuple literal and split.
+    pub fn run_buffers(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "{}: got {} buffers, manifest says {}",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            ));
+        }
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(anyhow!(
+                "{}: {} outputs, manifest says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}")))
+            .collect()
+    }
+
+    /// Upload one manifest-shaped input as a device buffer.
+    pub fn upload(
+        &self,
+        client: &xla::PjRtClient,
+        index: usize,
+        data: &[f32],
+    ) -> Result<xla::PjRtBuffer> {
+        let tm = &self.meta.inputs[index];
+        if data.len() != tm.elements() {
+            return Err(anyhow!(
+                "{}/{}: got {} elements, want {:?}",
+                self.meta.name,
+                tm.name,
+                data.len(),
+                tm.shape
+            ));
+        }
+        client
+            .buffer_from_host_buffer(data, &tm.shape, None)
+            .map_err(|e| anyhow!("upload {}: {e:?}", tm.name))
+    }
+}
+
+/// A PJRT CPU client plus compiled executables for a manifest's
+/// artifacts.
+pub struct ArtifactRegistry {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    loaded: BTreeMap<String, LoadedArtifact>,
+}
+
+impl ArtifactRegistry {
+    /// Create the CPU client and load + compile the named artifacts
+    /// (`None` = everything in the manifest).
+    pub fn load(
+        dir: impl AsRef<Path>,
+        names: Option<&[&str]>,
+    ) -> Result<ArtifactRegistry> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let mut reg = ArtifactRegistry {
+            manifest,
+            client,
+            loaded: BTreeMap::new(),
+        };
+        let to_load: Vec<String> = match names {
+            Some(ns) => ns.iter().map(|s| s.to_string()).collect(),
+            None => reg
+                .manifest
+                .artifacts
+                .iter()
+                .map(|a| a.name.clone())
+                .collect(),
+        };
+        for name in to_load {
+            reg.ensure_loaded(&name)?;
+        }
+        Ok(reg)
+    }
+
+    /// Compile an artifact if not yet resident.
+    pub fn ensure_loaded(&mut self, name: &str) -> Result<()> {
+        if self.loaded.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .map_err(|e| {
+                anyhow!("parsing {}: {e:?}", meta.file.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.loaded
+            .insert(name.to_string(), LoadedArtifact { meta, exe });
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&LoadedArtifact> {
+        self.loaded
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        self.loaded.keys().map(String::as_str).collect()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The underlying PJRT client (buffer uploads).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+// NOTE: integration tests that actually execute artifacts live in
+// `rust/tests/runtime_roundtrip.rs` — they need `make artifacts` to have
+// run and are skipped gracefully when the directory is absent.

@@ -1,0 +1,25 @@
+//! PJRT runtime bridge: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust request path.
+//!
+//! * [`artifact`] — parses `artifacts/manifest.json` (with the in-repo
+//!   JSON reader) into typed artifact descriptors.
+//! * [`executor`] — wraps the `xla` crate: one `PjRtClient`, one
+//!   compiled executable per artifact, f32 buffer plumbing.
+//! * [`backend`]  — a full masked-FISTA solver driven exclusively by the
+//!   `fused_*` artifacts: one `execute()` per solver iteration, Python
+//!   nowhere in sight.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
+//! serialized protos emitted by jax ≥ 0.5 carry 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod artifact;
+pub mod backend;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use backend::{PjrtSolveOutcome, PjrtSolver};
+pub use executor::{ArtifactRegistry, LoadedArtifact};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

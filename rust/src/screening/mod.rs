@@ -1,0 +1,160 @@
+//! The dynamic screening engine: applies a safe-region test to the
+//! active atoms and compacts the solver state.
+//!
+//! ## Why screening the reduced problem stays safe
+//!
+//! After atoms are screened, the solver works on the *reduced* Lasso over
+//! the active columns.  Its dual optimum coincides with the full dual
+//! optimum: screening is safe, so the full solution `x*` is supported on
+//! the active set, hence `u*_red = y − A x*_red = y − A x* = u*`.  Safe
+//! regions built from reduced-problem primal-dual couples therefore still
+//! contain `u*`, and tests against *any* atom (active or not) remain
+//! valid.  This is what lets every per-iteration quantity — residual,
+//! `Aᵀr`, dual scaling, gap — be computed over the active set only, at
+//! `O(m·k)` instead of `O(m·n)`.
+
+pub mod engine;
+
+pub use engine::ScreeningEngine;
+
+/// Tracks which atoms survive; indices are into the original dictionary.
+#[derive(Clone, Debug)]
+pub struct ScreeningState {
+    /// Active (not-yet-screened) atom indices, ascending.
+    active: Vec<usize>,
+    /// Original atom count.
+    n: usize,
+    /// Total screened so far.
+    screened: usize,
+    /// Screened count per round (diagnostics / screen-rate curves).
+    pub history: Vec<usize>,
+}
+
+impl ScreeningState {
+    pub fn new(n: usize) -> Self {
+        ScreeningState {
+            active: (0..n).collect(),
+            n,
+            screened: 0,
+            history: Vec::new(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn screened_count(&self) -> usize {
+        self.screened
+    }
+
+    /// Fraction of atoms eliminated so far.
+    pub fn screen_rate(&self) -> f64 {
+        self.screened as f64 / self.n.max(1) as f64
+    }
+
+    /// Retain only the atoms where `keep[k]` is true (`keep` is indexed
+    /// by *position* in the current active list).  Returns the number
+    /// removed.  Callers compact their coefficient vectors with the same
+    /// mask to stay aligned.
+    pub fn retain(&mut self, keep: &[bool]) -> usize {
+        assert_eq!(keep.len(), self.active.len());
+        let before = self.active.len();
+        let mut k = 0;
+        self.active.retain(|_| {
+            let v = keep[k];
+            k += 1;
+            v
+        });
+        let removed = before - self.active.len();
+        self.screened += removed;
+        self.history.push(removed);
+        removed
+    }
+
+    /// Scatter a compact coefficient vector back to full length `n`.
+    pub fn scatter(&self, compact: &[f64]) -> Vec<f64> {
+        assert_eq!(compact.len(), self.active.len());
+        let mut full = vec![0.0; self.n];
+        for (k, &j) in self.active.iter().enumerate() {
+            full[j] = compact[k];
+        }
+        full
+    }
+
+    /// Gather a full-length vector into the compact active layout.
+    pub fn gather(&self, full: &[f64]) -> Vec<f64> {
+        assert_eq!(full.len(), self.n);
+        self.active.iter().map(|&j| full[j]).collect()
+    }
+}
+
+/// Compact a set of aligned coefficient vectors in place with `keep`.
+pub fn compact_vectors(keep: &[bool], vectors: &mut [&mut Vec<f64>]) {
+    for v in vectors.iter_mut() {
+        assert_eq!(v.len(), keep.len());
+        let mut k = 0;
+        v.retain(|_| {
+            let b = keep[k];
+            k += 1;
+            b
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retain_and_scatter() {
+        let mut st = ScreeningState::new(6);
+        // drop atoms at positions 1, 3 (indices 1 and 3)
+        let removed =
+            st.retain(&[true, false, true, false, true, true]);
+        assert_eq!(removed, 2);
+        assert_eq!(st.active(), &[0, 2, 4, 5]);
+        assert_eq!(st.screened_count(), 2);
+        assert!((st.screen_rate() - 2.0 / 6.0).abs() < 1e-15);
+
+        let full = st.scatter(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(full, vec![1.0, 0.0, 2.0, 0.0, 3.0, 4.0]);
+        let compact = st.gather(&full);
+        assert_eq!(compact, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn repeated_retain_accumulates() {
+        let mut st = ScreeningState::new(4);
+        st.retain(&[true, true, false, true]); // drop idx 2
+        st.retain(&[false, true, true]); // drop idx 0
+        assert_eq!(st.active(), &[1, 3]);
+        assert_eq!(st.screened_count(), 2);
+        assert_eq!(st.history, vec![1, 1]);
+    }
+
+    #[test]
+    fn compact_vectors_aligns() {
+        let keep = [true, false, true];
+        let mut a = vec![1.0, 2.0, 3.0];
+        let mut b = vec![4.0, 5.0, 6.0];
+        compact_vectors(&keep, &mut [&mut a, &mut b]);
+        assert_eq!(a, vec![1.0, 3.0]);
+        assert_eq!(b, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn retain_wrong_len_panics() {
+        let mut st = ScreeningState::new(3);
+        st.retain(&[true]);
+    }
+}

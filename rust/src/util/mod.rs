@@ -1,0 +1,4 @@
+//! Small shared utilities: deterministic RNG and timing helpers.
+
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,252 @@
+//! Deterministic pseudo-random generation (substrate — no `rand` crate).
+//!
+//! [`Pcg64`] is the PCG-XSL-RR 128/64 generator (O'Neill 2014): a 128-bit
+//! LCG with an xor-shift/rotate output permutation.  It is fast, has a
+//! 2^128 period, and — crucially for the experiment harness — is fully
+//! reproducible from a `u64` seed, so every figure in EXPERIMENTS.md can
+//! be regenerated bit-for-bit.
+//!
+//! Gaussian variates use the Marsaglia polar method (no trig), matching
+//! the distributional setup of the paper's §V: i.i.d. normal dictionary
+//! entries, Gaussian-pulse Toeplitz columns, and `y` uniform on the unit
+//! sphere (normalized Gaussian vector).
+
+/// PCG-XSL-RR 128/64: 128-bit state LCG, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed the generator. Two seeds give statistically independent
+    /// streams (distinct odd increments derived from `stream`).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Independent stream selection (for per-worker generators).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection, unbiased).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via the Marsaglia polar method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Fill with i.i.d. standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// A point drawn uniformly from the unit sphere S^{d-1}.
+    pub fn unit_sphere(&mut self, d: usize) -> Vec<f64> {
+        loop {
+            let mut v = vec![0.0; d];
+            self.fill_normal(&mut v);
+            let n = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if n > 1e-12 {
+                for x in v.iter_mut() {
+                    *x /= n;
+                }
+                return v;
+            }
+        }
+    }
+
+    /// A point drawn uniformly from the solid unit ball B^d.
+    pub fn unit_ball(&mut self, d: usize) -> Vec<f64> {
+        let mut v = self.unit_sphere(d);
+        let r = self.uniform().powf(1.0 / d as f64);
+        for x in v.iter_mut() {
+            *x *= r;
+        }
+        v
+    }
+
+    /// Random subset of `k` distinct indices from `0..n` (partial
+    /// Fisher-Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Derive a child generator (e.g. one per trial / worker).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::with_stream(self.next_u64() ^ tag, tag.wrapping_mul(2) + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut rng = Pcg64::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(3);
+        let n = 50_000;
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn below_is_unbiased_smoke() {
+        let mut rng = Pcg64::new(11);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn unit_sphere_has_unit_norm() {
+        let mut rng = Pcg64::new(5);
+        for d in [1, 2, 10, 100] {
+            let v = rng.unit_sphere(d);
+            let n: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn unit_ball_inside() {
+        let mut rng = Pcg64::new(6);
+        for _ in 0..100 {
+            let v = rng.unit_ball(8);
+            let n: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(n <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::new(9);
+        let idx = rng.sample_indices(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn streams_independent() {
+        let mut a = Pcg64::with_stream(1, 10);
+        let mut b = Pcg64::with_stream(1, 20);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,80 @@
+//! Monotonic timing helpers used by benches, metrics and the coordinator.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.elapsed_secs())
+}
+
+/// Human-readable duration (e.g. "1.23ms", "4.5s").
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2}s", secs)
+    } else {
+        format!("{:.1}min", secs / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+        assert!(fmt_duration(500.0).ends_with("min"));
+    }
+}

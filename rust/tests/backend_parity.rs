@@ -1,0 +1,165 @@
+//! Integration: the PJRT fused-artifact solver (masked, f32, Pallas
+//! kernels) against the native Rust solver (compacted, f64) — same
+//! algorithm, two implementations, one truth.
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::linalg;
+use holder_screening::regions::RegionKind;
+use holder_screening::runtime::{ArtifactRegistry, Manifest, PjrtSolver};
+use holder_screening::solver::{solve, Budget, SolverConfig};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn setup(
+    seed: u64,
+    kind: DictKind,
+    ratio: f64,
+) -> (holder_screening::problem::LassoProblem, ArtifactRegistry) {
+    let dir = artifacts_dir().unwrap();
+    let man = Manifest::load(&dir).unwrap();
+    let cfg = InstanceConfig {
+        m: man.m,
+        n: man.n,
+        kind,
+        lam_ratio: ratio,
+        pulse_width: 4.0,
+    };
+    let p = generate(&cfg, seed).problem;
+    let reg = ArtifactRegistry::load(
+        &dir,
+        Some(&[
+            "precompute",
+            "fused_holder",
+            "fused_gap_dome",
+            "fused_gap_sphere",
+            "fused_no_screen",
+        ]),
+    )
+    .unwrap();
+    (p, reg)
+}
+
+#[test]
+fn pjrt_backend_converges_and_matches_native() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    let (p, reg) = setup(0, DictKind::Gaussian, 0.5);
+    let pjrt = PjrtSolver::new(&reg).unwrap();
+    // f32 gap floor: ~1e-6 relative
+    let out = pjrt
+        .solve(&p, Some(RegionKind::HolderDome), 500, 1e-5)
+        .unwrap();
+    assert!(out.gap <= 1e-5, "pjrt gap {}", out.gap);
+
+    let native = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-10),
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        },
+    );
+    let d = linalg::max_abs_diff(&out.x, &native.x);
+    assert!(d < 1e-2, "solutions differ by {d} (f32 vs f64)");
+    // supports agree above the f32 noise floor
+    let sup_pjrt: Vec<usize> = (0..p.n())
+        .filter(|&i| out.x[i].abs() > 1e-3)
+        .collect();
+    let sup_native: Vec<usize> = (0..p.n())
+        .filter(|&i| native.x[i].abs() > 1e-3)
+        .collect();
+    assert_eq!(sup_pjrt, sup_native);
+}
+
+#[test]
+fn pjrt_screening_is_safe_and_fires() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    let (p, reg) = setup(1, DictKind::Toeplitz, 0.5);
+    let pjrt = PjrtSolver::new(&reg).unwrap();
+    let out = pjrt
+        .solve(&p, Some(RegionKind::HolderDome), 400, 1e-5)
+        .unwrap();
+    assert!(out.active < p.n(), "screening never fired");
+
+    // safety: screened atoms are zero in a high-accuracy native solve
+    let native = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-12),
+            region: None,
+            ..Default::default()
+        },
+    );
+    let sup = native.support(1e-7);
+    // Reconstruct the mask from active_history? Simpler: screened atoms
+    // have x = 0 in the pjrt output *and* must not be in the support.
+    for &i in &sup {
+        assert!(
+            out.x[i].abs() > 0.0 || native.x[i].abs() < 1e-5,
+            "support atom {i} was zeroed by pjrt screening"
+        );
+    }
+}
+
+#[test]
+fn pjrt_region_dominance_in_masks() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    let (p, reg) = setup(2, DictKind::Gaussian, 0.7);
+    let pjrt = PjrtSolver::new(&reg).unwrap();
+    let iters = 120;
+    let sph = pjrt
+        .solve(&p, Some(RegionKind::GapSphere), iters, 0.0)
+        .unwrap();
+    let dom = pjrt
+        .solve(&p, Some(RegionKind::GapDome), iters, 0.0)
+        .unwrap();
+    let hld = pjrt
+        .solve(&p, Some(RegionKind::HolderDome), iters, 0.0)
+        .unwrap();
+    assert!(
+        hld.active <= dom.active && dom.active <= sph.active,
+        "dominance violated: {} {} {}",
+        sph.active,
+        dom.active,
+        hld.active
+    );
+}
+
+#[test]
+fn pjrt_gap_history_decreases() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    let (p, reg) = setup(3, DictKind::Gaussian, 0.3);
+    let pjrt = PjrtSolver::new(&reg).unwrap();
+    let out = pjrt.solve(&p, None, 150, 0.0).unwrap();
+    let first = out.gap_history.first().copied().unwrap();
+    let last = out.gap_history.last().copied().unwrap();
+    assert!(last < 1e-3 * first, "gap barely moved: {first} -> {last}");
+    // shape mismatch is rejected
+    let small = InstanceConfig {
+        m: 10,
+        n: 20,
+        kind: DictKind::Gaussian,
+        lam_ratio: 0.5,
+        pulse_width: 4.0,
+    };
+    let p_small = generate(&small, 0).problem;
+    assert!(pjrt.solve(&p_small, None, 10, 0.0).is_err());
+}

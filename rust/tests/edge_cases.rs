@@ -1,0 +1,342 @@
+//! Edge-case and failure-injection tests across the native stack:
+//! degenerate shapes, extreme λ, duplicate/zero atoms, budget corner
+//! cases, and full-screening scenarios.
+
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::linalg::{self, Mat};
+use holder_screening::problem::LassoProblem;
+use holder_screening::regions::{RegionKind, SafeRegion};
+use holder_screening::solver::{
+    solve, solve_warm, Budget, SolverConfig, SolverKind, StopReason,
+};
+
+fn tiny(m: usize, n: usize, seed: u64, ratio: f64) -> LassoProblem {
+    let cfg = InstanceConfig {
+        m,
+        n,
+        kind: DictKind::Gaussian,
+        lam_ratio: ratio,
+        pulse_width: 2.0,
+    };
+    generate(&cfg, seed).problem
+}
+
+#[test]
+fn single_atom_problem() {
+    let p = tiny(10, 1, 0, 0.5);
+    for region in RegionKind::ALL {
+        let rep = solve(
+            &p,
+            &SolverConfig {
+                region: Some(region),
+                // |x − x*| ≈ √(2·gap): target deep so the closed-form
+                // comparison below is meaningful.
+                budget: Budget::gap(1e-14),
+                ..Default::default()
+            },
+        );
+        assert_eq!(rep.stop, StopReason::Converged, "{}", region.name());
+        // closed form: x = ST(<a,y>, lam) / ||a||^2
+        let a = p.a().col(0);
+        let want = linalg::soft_threshold_scalar(
+            linalg::dot(a, p.y()),
+            p.lam(),
+        ) / linalg::norm2_sq(a);
+        assert!((rep.x[0] - want).abs() < 1e-6,
+                "{}: {} vs {want}", region.name(), rep.x[0]);
+    }
+}
+
+#[test]
+fn single_row_problem() {
+    // m = 1: every atom is a scalar; the Lasso picks (ties aside) atoms
+    // with maximal |a_i| and the solvers must not blow up.
+    let p = tiny(1, 20, 1, 0.5);
+    let rep = solve(
+        &p,
+        &SolverConfig {
+            region: Some(RegionKind::HolderDome),
+            budget: Budget::gap(1e-12),
+            ..Default::default()
+        },
+    );
+    assert_eq!(rep.stop, StopReason::Converged);
+    assert!(p.gap(&rep.x, &p.eval(&rep.x).u) < 1e-9);
+}
+
+#[test]
+fn duplicate_atoms_are_handled() {
+    // A with exactly duplicated columns: the solution is non-unique but
+    // the gap must still converge and screening must stay safe (it can
+    // never screen BOTH copies if one is active... actually it can
+    // screen neither, since both sit at the same correlation).
+    let mut g = holder_screening::proptest::Gen::for_case(3, 0);
+    let base = g.dictionary(15, 10);
+    let mut cols: Vec<Vec<f64>> = Vec::new();
+    for j in 0..10 {
+        cols.push(base.col(j).to_vec());
+        cols.push(base.col(j).to_vec()); // duplicate
+    }
+    let a = Mat::from_columns(15, cols);
+    let y = g.observation(15);
+    let mut aty = vec![0.0; 20];
+    linalg::gemv_t(&a, &y, &mut aty);
+    let lam = 0.5 * linalg::norm_inf(&aty);
+    let p = LassoProblem::new(a, y, lam);
+    let rep = solve(
+        &p,
+        &SolverConfig {
+            region: Some(RegionKind::HolderDome),
+            budget: Budget::gap(1e-10),
+            ..Default::default()
+        },
+    );
+    assert_eq!(rep.stop, StopReason::Converged);
+    let ev = p.eval(&rep.x);
+    assert!(ev.gap < 1e-8);
+}
+
+#[test]
+fn zero_column_is_screened_immediately() {
+    let mut g = holder_screening::proptest::Gen::for_case(5, 0);
+    let mut a = g.dictionary(10, 8);
+    for v in a.col_mut(3) {
+        *v = 0.0;
+    }
+    let y = g.observation(10);
+    let mut aty = vec![0.0; 8];
+    linalg::gemv_t(&a, &y, &mut aty);
+    let lam = 0.5 * linalg::norm_inf(&aty);
+    let p = LassoProblem::new(a, y, lam);
+    let rep = solve(
+        &p,
+        &SolverConfig {
+            region: Some(RegionKind::HolderDome),
+            budget: Budget::gap(1e-10),
+            ..Default::default()
+        },
+    );
+    assert_eq!(rep.stop, StopReason::Converged);
+    assert_eq!(rep.x[3], 0.0);
+    assert!(rep.screened >= 1);
+}
+
+#[test]
+fn lambda_just_below_lam_max() {
+    // Everything (or nearly) screens; the loop must terminate cleanly
+    // even when the active set becomes tiny or empty.
+    let p0 = tiny(20, 50, 7, 0.5);
+    let p = p0.with_lambda(0.999 * p0.lam_max());
+    for region in RegionKind::PAPER {
+        let rep = solve(
+            &p,
+            &SolverConfig {
+                region: Some(region),
+                budget: Budget::gap(1e-12),
+                ..Default::default()
+            },
+        );
+        assert_eq!(rep.stop, StopReason::Converged, "{}", region.name());
+        let ev = p.eval(&rep.x);
+        assert!(ev.gap < 1e-9, "{}: true gap {}", region.name(), ev.gap);
+    }
+}
+
+#[test]
+fn zero_flop_budget_stops_immediately() {
+    let p = tiny(20, 50, 9, 0.5);
+    let rep = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget {
+                max_iters: 1000,
+                max_flops: Some(1),
+                target_gap: 0.0,
+            },
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        },
+    );
+    assert_eq!(rep.stop, StopReason::FlopBudget);
+    assert!(rep.iters <= 1);
+}
+
+#[test]
+fn max_iters_zero_reports_initial_state() {
+    let p = tiny(20, 50, 10, 0.5);
+    let rep = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget {
+                max_iters: 0,
+                max_flops: None,
+                target_gap: 0.0,
+            },
+            region: None,
+            ..Default::default()
+        },
+    );
+    assert_eq!(rep.stop, StopReason::MaxIters);
+    assert_eq!(rep.iters, 0);
+    assert!(rep.x.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn warm_start_at_exact_solution_converges_in_one_eval() {
+    let p = tiny(25, 60, 11, 0.5);
+    let exact = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-13),
+            region: None,
+            ..Default::default()
+        },
+    );
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        let rep = solve_warm(
+            &p,
+            &SolverConfig {
+                kind,
+                budget: Budget::gap(1e-10),
+                region: Some(RegionKind::HolderDome),
+                ..Default::default()
+            },
+            Some(&exact.x),
+        );
+        assert_eq!(rep.stop, StopReason::Converged);
+        assert!(rep.iters <= 1, "{}: {} iters", kind.name(), rep.iters);
+    }
+}
+
+#[test]
+fn adversarial_warm_starts_stay_safe() {
+    // Fuzz: random (even terrible) warm starts must never make any
+    // region screen a support atom.
+    let p = tiny(25, 80, 13, 0.7);
+    let reference = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-12),
+            region: None,
+            ..Default::default()
+        },
+    );
+    let support = reference.support(1e-6);
+    let mut g = holder_screening::proptest::Gen::for_case(17, 0);
+    for trial in 0..10 {
+        let scale = 10f64.powi(trial % 5 - 2); // 1e-2 .. 1e2
+        let x0: Vec<f64> =
+            g.vec_sparse(80, 40).iter().map(|v| v * scale).collect();
+        for region in RegionKind::PAPER {
+            let rep = solve_warm(
+                &p,
+                &SolverConfig {
+                    region: Some(region),
+                    budget: Budget::gap(1e-9),
+                    ..Default::default()
+                },
+                Some(&x0),
+            );
+            for &i in &support {
+                assert!(
+                    rep.x[i].abs() > 0.0,
+                    "{} screened support atom {i} from warm start {trial}",
+                    region.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn region_built_from_terrible_couple_is_still_safe() {
+    // Theorem 1 holds for ANY x and feasible u — even adversarial ones.
+    let p = tiny(15, 40, 19, 0.5);
+    let exact = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-13),
+            region: None,
+            ..Default::default()
+        },
+    );
+    let u_star = p.eval(&exact.x).u;
+    let mut g = holder_screening::proptest::Gen::for_case(23, 0);
+    for _ in 0..25 {
+        let x: Vec<f64> =
+            g.vec_normal(40).iter().map(|v| v * 100.0).collect();
+        let ev = p.eval(&x);
+        for kind in RegionKind::ALL {
+            let region = SafeRegion::build(kind, &p, &x, &ev);
+            assert!(
+                region.contains(&u_star, 1e-7),
+                "{} lost u* from an adversarial couple",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn screen_every_large_still_converges() {
+    let p = tiny(30, 90, 29, 0.5);
+    let rep = solve(
+        &p,
+        &SolverConfig {
+            region: Some(RegionKind::HolderDome),
+            screen_every: 1000, // effectively never fires before cvg
+            budget: Budget::gap(1e-9),
+            ..Default::default()
+        },
+    );
+    assert_eq!(rep.stop, StopReason::Converged);
+}
+
+#[test]
+fn unnormalized_dictionary_screening_safe() {
+    // The paper normalizes columns, but eq. (11)/(15) hold for general
+    // ||a_i||; scale columns by wildly different factors and verify both
+    // correctness and screening safety.
+    let mut g = holder_screening::proptest::Gen::for_case(31, 0);
+    let base = g.dictionary(20, 60);
+    let mut cols: Vec<Vec<f64>> = Vec::new();
+    for j in 0..60 {
+        let scale = 10f64.powi((j % 7) as i32 - 3); // 1e-3 .. 1e3
+        cols.push(base.col(j).iter().map(|v| v * scale).collect());
+    }
+    let a = Mat::from_columns(20, cols);
+    let y = g.observation(20);
+    let mut aty = vec![0.0; 60];
+    linalg::gemv_t(&a, &y, &mut aty);
+    let lam = 0.5 * linalg::norm_inf(&aty);
+    let p = LassoProblem::new(a, y, lam);
+
+    let reference = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-12),
+            region: None,
+            ..Default::default()
+        },
+    );
+    assert_eq!(reference.stop, StopReason::Converged);
+    let support = reference.support(1e-9);
+    for region in RegionKind::ALL {
+        let rep = solve(
+            &p,
+            &SolverConfig {
+                region: Some(region),
+                budget: Budget::gap(1e-10),
+                ..Default::default()
+            },
+        );
+        assert_eq!(rep.stop, StopReason::Converged, "{}", region.name());
+        for &i in &support {
+            assert!(
+                rep.x[i].abs() > 0.0,
+                "{} screened support atom {i} (unnormalized dict)",
+                region.name()
+            );
+        }
+    }
+}

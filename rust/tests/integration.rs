@@ -1,0 +1,222 @@
+//! Cross-module integration tests over the native stack (no artifacts
+//! needed): end-to-end solves, screening safety at paper scale,
+//! campaign + profile plumbing, and the λ-path workload.
+
+use holder_screening::coordinator::{JobEngine, SolveJob};
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::linalg;
+use holder_screening::path::{solve_path, PathConfig};
+use holder_screening::perfprof::log_tau_grid;
+use holder_screening::problem::LassoProblem;
+use holder_screening::regions::{RegionKind, SafeRegion};
+use holder_screening::solver::{
+    solve, Budget, SolverConfig, SolverKind, StopReason,
+};
+
+fn paper_problem(seed: u64, kind: DictKind, ratio: f64) -> LassoProblem {
+    let cfg = InstanceConfig::paper(kind, ratio);
+    generate(&cfg, seed).problem
+}
+
+#[test]
+fn paper_scale_screening_safety_all_regions() {
+    // (m, n) = (100, 500): exact reference support vs screened atoms.
+    // Per-dictionary gap targets: the Toeplitz dictionary (adjacent-atom
+    // correlation > 0.99) makes FISTA converge very slowly, so its
+    // reference gap is looser; the support threshold (1e-3) stays robust
+    // at that accuracy.
+    for (seed, kind, ratio, ref_gap) in [
+        (0u64, DictKind::Gaussian, 0.5, 1e-11),
+        (1, DictKind::Toeplitz, 0.5, 5e-8),
+        (2, DictKind::Gaussian, 0.8, 1e-11),
+    ] {
+        let p = paper_problem(seed, kind, ratio);
+        let reference = solve(
+            &p,
+            &SolverConfig {
+                budget: Budget::gap(ref_gap),
+                region: None,
+                ..Default::default()
+            },
+        );
+        assert_eq!(reference.stop, StopReason::Converged, "{kind:?}");
+        let support = reference.support(1e-3);
+        assert!(!support.is_empty());
+        for region in RegionKind::ALL {
+            let rep = solve(
+                &p,
+                &SolverConfig {
+                    budget: Budget::gap(ref_gap),
+                    region: Some(region),
+                    ..Default::default()
+                },
+            );
+            assert_eq!(rep.stop, StopReason::Converged, "{}", region.name());
+            for &i in &support {
+                assert!(
+                    rep.x[i].abs() > 0.0,
+                    "{} screened support atom {i} (seed {seed})",
+                    region.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_scale_flop_reduction_is_substantial() {
+    let p = paper_problem(3, DictKind::Gaussian, 0.5);
+    let no = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-9),
+            region: None,
+            ..Default::default()
+        },
+    );
+    let hd = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-9),
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        },
+    );
+    // At (100, 500) with lam = 0.5 lam_max screening should save a lot.
+    let saving = 1.0 - hd.flops as f64 / no.flops as f64;
+    assert!(saving > 0.3, "only {:.0}% flops saved", saving * 100.0);
+}
+
+#[test]
+fn theorem2_chain_along_a_real_trajectory() {
+    // Build regions at several gap levels along a FISTA run and check
+    // Rad(holder) <= Rad(gap_dome) <= Rad(gap_sphere) each time.
+    let p = paper_problem(4, DictKind::Toeplitz, 0.3);
+    let mut x = vec![0.0; p.n()];
+    let step = p.default_step();
+    for it in 0..200 {
+        let ev = p.eval(&x);
+        if it % 10 == 0 && ev.gap > 1e-12 {
+            let rs = SafeRegion::build(RegionKind::GapSphere, &p, &x, &ev);
+            let rg = SafeRegion::build(RegionKind::GapDome, &p, &x, &ev);
+            let rh = SafeRegion::build(RegionKind::HolderDome, &p, &x, &ev);
+            assert!(rg.rad() <= rs.rad() + 1e-9);
+            assert!(rh.rad() <= rg.rad() + 1e-9);
+        }
+        for i in 0..p.n() {
+            x[i] = linalg::soft_threshold_scalar(
+                x[i] + step * ev.atr[i],
+                step * p.lam(),
+            );
+        }
+    }
+}
+
+#[test]
+fn job_engine_campaign_profile_pipeline() {
+    // Mini end-to-end: engine -> gaps -> profile, checking plumbing.
+    let mut icfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    icfg.m = 30;
+    icfg.n = 100;
+    let engine = JobEngine::new(4);
+    let jobs: Vec<SolveJob> = (0..8)
+        .map(|i| SolveJob {
+            id: i,
+            instance: icfg.clone(),
+            seed: i,
+            solver: SolverConfig {
+                budget: Budget::flops(400_000),
+                region: Some(RegionKind::HolderDome),
+                ..Default::default()
+            },
+        })
+        .collect();
+    let results = engine.run_all(jobs);
+    let gaps: Vec<f64> = results.iter().map(|r| r.report.gap).collect();
+    let taus = log_tau_grid(1e-1, 1e-12, 12);
+    let prof = holder_screening::perfprof::AccuracyProfile::from_gaps(
+        &["holder".to_string()],
+        &[gaps],
+        &taus,
+    );
+    // monotone
+    for w in prof.rho[0].windows(2) {
+        assert!(w[1] <= w[0] + 1e-12);
+    }
+    assert!(engine.metrics().counter("jobs_done").get() == 8);
+}
+
+#[test]
+fn lambda_path_on_planted_deconvolution() {
+    // The sparse-deconvolution workload: Toeplitz dictionary, planted
+    // spikes, λ-path with screening.
+    let cfg = InstanceConfig {
+        m: 80,
+        n: 200,
+        kind: DictKind::Toeplitz,
+        lam_ratio: 0.3,
+        pulse_width: 3.0,
+    };
+    let (inst, x0) = holder_screening::dict::generate_planted(
+        &cfg, 6, 0.02, 42,
+    );
+    let path_cfg = PathConfig {
+        num_lambdas: 10,
+        lam_min_ratio: 0.05,
+        solver: SolverConfig {
+            budget: Budget::gap(1e-9),
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        },
+    };
+    let res = solve_path(&inst.problem, &path_cfg);
+    assert_eq!(res.points.len(), 10);
+    // Some path point should localize the planted spikes.  Adjacent
+    // Toeplitz atoms are near-duplicates (pulse width 3 rows, atom pitch
+    // 0.4 rows), so match with a ±4-atom position tolerance.
+    let planted: Vec<usize> =
+        (0..200).filter(|&i| x0[i] != 0.0).collect();
+    let near = |i: usize, set: &[usize]| {
+        set.iter().any(|&j| (i as i64 - j as i64).abs() <= 4)
+    };
+    let mut best_f1: f64 = 0.0;
+    for pt in &res.points {
+        let sup = pt.report.support(1e-6);
+        if sup.is_empty() {
+            continue;
+        }
+        let tp_p = sup.iter().filter(|&&i| near(i, &planted)).count() as f64;
+        let tp_r =
+            planted.iter().filter(|&&i| near(i, &sup)).count() as f64;
+        let prec = tp_p / sup.len() as f64;
+        let rec = tp_r / planted.len() as f64;
+        if prec + rec > 0.0 {
+            best_f1 = best_f1.max(2.0 * prec * rec / (prec + rec));
+        }
+    }
+    assert!(best_f1 > 0.6, "path never localized spikes: F1 {best_f1}");
+}
+
+#[test]
+fn solvers_cross_validate_at_paper_scale() {
+    let p = paper_problem(5, DictKind::Gaussian, 0.5);
+    let fista = solve(
+        &p,
+        &SolverConfig {
+            kind: SolverKind::Fista,
+            budget: Budget::gap(1e-11),
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        },
+    );
+    let cd = solve(
+        &p,
+        &SolverConfig {
+            kind: SolverKind::Cd,
+            budget: Budget::gap(1e-11),
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        },
+    );
+    assert!(linalg::max_abs_diff(&fista.x, &cd.x) < 1e-4);
+}

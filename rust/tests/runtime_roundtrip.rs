@@ -1,0 +1,115 @@
+//! Integration: the full AOT bridge — load `artifacts/*.hlo.txt` through
+//! the PJRT CPU client and check the numerics against the native Rust
+//! implementations of the same math.
+//!
+//! Requires `make artifacts` (the default paper shape m=100, n=500).
+//! Tests skip gracefully when the artifact directory is missing so
+//! `cargo test` works on a fresh checkout.
+
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::linalg;
+use holder_screening::runtime::{ArtifactRegistry, Manifest, PjrtSolver};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn paper_instance(seed: u64) -> holder_screening::problem::LassoProblem {
+    let man_dir = artifacts_dir().unwrap();
+    let man = Manifest::load(man_dir).unwrap();
+    let cfg = InstanceConfig {
+        m: man.m,
+        n: man.n,
+        kind: DictKind::Gaussian,
+        lam_ratio: 0.5,
+        pulse_width: 4.0,
+    };
+    generate(&cfg, seed).problem
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    assert!(man.m > 0 && man.n > 0);
+    man.validate_for_solver().unwrap();
+    // every artifact file exists
+    for a in &man.artifacts {
+        assert!(a.file.exists(), "{} missing", a.file.display());
+        assert!(!a.inputs.is_empty());
+        assert!(!a.outputs.is_empty());
+    }
+}
+
+#[test]
+fn at_r_artifact_matches_native_gemv_t() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir, Some(&["at_r"])).unwrap();
+    let p = paper_instance(0);
+    let at_r = reg.get("at_r").unwrap();
+
+    let a32 = PjrtSolver::mat_to_row_major_f32(p.a());
+    let r: Vec<f64> = p.y().to_vec();
+    let r32: Vec<f32> = r.iter().map(|v| *v as f32).collect();
+    let out = at_r.run(&[&a32, &r32]).unwrap();
+    assert_eq!(out.len(), 1);
+
+    let mut want = vec![0.0; p.n()];
+    linalg::gemv_t(p.a(), &r, &mut want);
+    for (g, w) in out[0].iter().zip(&want) {
+        assert!(
+            (*g as f64 - w).abs() < 1e-4,
+            "pjrt {} vs native {}",
+            g,
+            w
+        );
+    }
+}
+
+#[test]
+fn precompute_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir, Some(&["precompute"])).unwrap();
+    let p = paper_instance(1);
+    let pre = reg.get("precompute").unwrap();
+    let a32 = PjrtSolver::mat_to_row_major_f32(p.a());
+    let y32: Vec<f32> = p.y().iter().map(|v| *v as f32).collect();
+    let out = pre.run(&[&a32, &y32]).unwrap();
+    // colnorms (columns are normalized => all 1)
+    for v in &out[0] {
+        assert!((*v - 1.0).abs() < 1e-4, "colnorm {v}");
+    }
+    // aty
+    for (g, w) in out[1].iter().zip(p.aty()) {
+        assert!((*g as f64 - w).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn wrong_arity_and_shape_are_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir, Some(&["at_r"])).unwrap();
+    let at_r = reg.get("at_r").unwrap();
+    let man = &reg.manifest;
+    let a = vec![0f32; man.m * man.n];
+    // missing input
+    assert!(at_r.run(&[&a]).is_err());
+    // wrong length
+    let bad = vec![0f32; man.m + 1];
+    assert!(at_r.run(&[&a, &bad]).is_err());
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut reg = ArtifactRegistry::load(&dir, Some(&[])).unwrap();
+    assert!(reg.ensure_loaded("definitely_not_there").is_err());
+    assert!(reg.get("at_r").is_err(), "not loaded yet must error");
+}
