@@ -13,6 +13,7 @@
 use holder_screening::benchkit::Bench;
 use holder_screening::dict::{generate, DictKind, InstanceConfig};
 use holder_screening::flops::FlopCounter;
+use holder_screening::par::ParContext;
 use holder_screening::regions::{RegionKind, SafeRegion};
 use holder_screening::screening::{ScreeningEngine, ScreeningState};
 
@@ -49,7 +50,14 @@ fn main() {
             let state = ScreeningState::new(p.n());
             let mut flops = FlopCounter::new();
             engine
-                .compute_keep(&region, &p, &state, &ev.atr, &mut flops)
+                .compute_keep(
+                    &region,
+                    &p,
+                    &state,
+                    &ev.atr,
+                    &mut flops,
+                    &ParContext::sequential(),
+                )
                 .len()
         });
         println!(

@@ -1,0 +1,128 @@
+//! Bench: shard scaling of the per-iteration hot path — `Aᵀr` over the
+//! active set plus one full screening round — versus thread count.
+//!
+//! This is the tentpole number for the sharded parallel request path:
+//! the paper fixes the per-iteration *flop* burden (Hölder ≈ GAP), so
+//! the remaining wall-clock lever is making that burden scale with
+//! cores.  Expected: ≥ 2x speedup at 4 threads on the default
+//! 5000 x 20000 problem, with every sharded result **bitwise
+//! identical** to the sequential kernels (checked here, not assumed).
+//!
+//! Also cross-checks a full solve: sharded and sequential `SolveReport`s
+//! must match bit for bit.
+//!
+//! Env: HOLDER_BENCH_QUICK=1 shrinks the shape for smoke runs.
+
+use holder_screening::benchkit::Bench;
+use holder_screening::flops::FlopCounter;
+use holder_screening::linalg::{self, gemv_t_cols_sharded, Mat};
+use holder_screening::par::ParContext;
+use holder_screening::problem::LassoProblem;
+use holder_screening::regions::{RegionKind, SafeRegion};
+use holder_screening::screening::{ScreeningEngine, ScreeningState};
+use holder_screening::solver::{solve, Budget, SolverConfig};
+use holder_screening::util::rng::Pcg64;
+
+fn build_problem(m: usize, n: usize, seed: u64) -> LassoProblem {
+    let mut rng = Pcg64::new(seed);
+    let mut a = Mat::zeros(m, n);
+    for j in 0..n {
+        for v in a.col_mut(j) {
+            *v = rng.normal();
+        }
+    }
+    a.normalize_columns();
+    let y = rng.unit_sphere(m);
+    let mut aty = vec![0.0; n];
+    linalg::gemv_t(&a, &y, &mut aty);
+    let lam = 0.5 * linalg::norm_inf(&aty);
+    LassoProblem::new(a, y, lam)
+}
+
+fn main() {
+    let quick = std::env::var("HOLDER_BENCH_QUICK").is_ok();
+    let (m, n) = if quick { (500, 4000) } else { (5000, 20000) };
+    println!("# shard scaling of A^T r + screening round, (m, n) = ({m}, {n})");
+    println!("# (setup includes the one-off spectral-norm estimate; be patient)");
+    let p = build_problem(m, n, 42);
+
+    // A representative screening couple: the zero iterate (r = y,
+    // A^T r = A^T y) — the bound arithmetic is identical at any iterate.
+    let x0 = vec![0.0; n];
+    let ev = p.eval(&x0);
+    let region = SafeRegion::build(RegionKind::HolderDome, &p, &x0, &ev);
+    let state = ScreeningState::new(n);
+    let active: Vec<usize> = (0..n).collect();
+
+    // Sequential reference for the bitwise checks.
+    let mut atr_ref = vec![0.0; n];
+    linalg::gemv_t_cols(p.a(), &active, &ev.r, &mut atr_ref);
+    let mut engine = ScreeningEngine::new();
+    let mut flops = FlopCounter::new();
+    let keep_ref = engine
+        .compute_keep(
+            &region,
+            &p,
+            &state,
+            &atr_ref,
+            &mut flops,
+            &ParContext::sequential(),
+        )
+        .to_vec();
+
+    let bench = Bench { min_iters: 5, min_secs: 0.5, warmup_secs: 0.1 };
+    let mut base_mean = None;
+    for threads in [1usize, 2, 4, 8] {
+        let ctx = ParContext::new_pool(threads, 1024);
+        let mut atr = vec![0.0; n];
+        let mut engine = ScreeningEngine::new();
+        let mut flops = FlopCounter::new();
+        let s = bench.report(
+            &format!("A^T r + holder screen, {threads} thread(s)"),
+            || {
+                gemv_t_cols_sharded(p.a(), &active, &ev.r, &mut atr, &ctx);
+                engine
+                    .compute_keep(&region, &p, &state, &atr, &mut flops, &ctx)
+                    .len()
+            },
+        );
+        // Bitwise parity of both stages, every thread count.
+        for (a, b) in atr.iter().zip(&atr_ref) {
+            assert_eq!(a.to_bits(), b.to_bits(), "atr diverged");
+        }
+        let keep = engine
+            .compute_keep(&region, &p, &state, &atr, &mut flops, &ctx)
+            .to_vec();
+        assert_eq!(keep, keep_ref, "keep mask diverged at {threads} threads");
+        match base_mean {
+            None => base_mean = Some(s.mean),
+            Some(base) => println!(
+                "    -> speedup vs 1 thread: {:.2}x",
+                base / s.mean.max(1e-12)
+            ),
+        }
+    }
+
+    // End-to-end determinism: sharded and sequential solves must yield
+    // bitwise-identical reports (smaller shape; full convergence).
+    let p2 = build_problem(100, 2000, 7);
+    let mk = |par: ParContext| SolverConfig {
+        budget: Budget::gap(1e-9),
+        region: Some(RegionKind::HolderDome),
+        par,
+        ..Default::default()
+    };
+    let seq = solve(&p2, &mk(ParContext::sequential()));
+    let par = solve(&p2, &mk(ParContext::new_pool(4, 64)));
+    assert_eq!(seq.iters, par.iters);
+    assert_eq!(seq.flops, par.flops);
+    assert_eq!(seq.screened, par.screened);
+    for (a, b) in seq.x.iter().zip(&par.x) {
+        assert_eq!(a.to_bits(), b.to_bits(), "solve diverged under sharding");
+    }
+    println!(
+        "\nsolve parity: sharded == sequential bitwise \
+         ({} iters, {} flops, gap {:.2e})",
+        seq.iters, seq.flops, seq.gap
+    );
+}

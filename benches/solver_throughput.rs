@@ -40,7 +40,15 @@ fn main() {
         println!("    -> {:.1} solves/s", 1.0 / s.mean.max(1e-12));
     }
 
-    // PJRT path (optional).
+    // PJRT path (optional; needs the `xla` feature + `make artifacts`).
+    pjrt_path(&bench, &problems);
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_path(
+    bench: &Bench,
+    problems: &[holder_screening::problem::LassoProblem],
+) {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts");
     if dir.join("manifest.json").exists() {
@@ -72,4 +80,12 @@ fn main() {
     } else {
         println!("(artifacts missing; skipping the PJRT path)");
     }
+}
+
+#[cfg(not(feature = "xla"))]
+fn pjrt_path(
+    _bench: &Bench,
+    _problems: &[holder_screening::problem::LassoProblem],
+) {
+    println!("(xla feature off; skipping the PJRT path)");
 }

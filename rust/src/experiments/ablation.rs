@@ -107,8 +107,7 @@ pub fn solver_kind(cfg: &AblationConfig) -> Vec<AblationRow> {
                 kind,
                 budget: Budget::gap(cfg.target_gap),
                 region,
-                screen_every: 1,
-                record_trace: false,
+                ..Default::default()
             };
             let label = format!(
                 "{}{}",

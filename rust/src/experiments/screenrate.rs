@@ -73,8 +73,8 @@ pub fn run(cfg: &ScreenRateConfig) -> ScreenRateCurves {
                         target_gap: 0.0,
                     },
                     region: Some(region),
-                    screen_every: 1,
                     record_trace: true,
+                    ..Default::default()
                 };
                 let rep = solve(&p, &scfg);
                 let n = p.n() as f64;

@@ -21,17 +21,38 @@
 //!   ([`experiments`]).
 //! * **L2/L1 (build time)** — JAX graphs + Pallas kernels in
 //!   `python/compile/`, AOT-lowered to HLO text artifacts.
-//! * **Runtime bridge** — [`runtime`] loads the artifacts through the
-//!   PJRT CPU client (`xla` crate) and exposes them as a solver
-//!   [`solver::Backend`].
+//! * **Runtime bridge** — `runtime` (behind the off-by-default `xla`
+//!   cargo feature) loads the artifacts through the PJRT CPU client
+//!   (`xla` crate) and exposes them as a solver backend.
+//!
+//! ## The sharded hot path
+//!
+//! One [`par::ThreadPool`] serves *two* levels of parallelism:
+//!
+//! * **across solves** — the [`coordinator`] queues one job per solve
+//!   (batch traffic, campaigns, λ-paths);
+//! * **inside a solve** — a [`par::ParContext`] threaded through
+//!   [`solver::SolverConfig`] shards the per-iteration `Aᵀr` / `Ax`
+//!   matvecs ([`linalg::gemv_t_cols_sharded`],
+//!   [`linalg::gemv_cols_sharded`]) and the per-atom screening test
+//!   ([`screening::ScreeningEngine::compute_keep`]) into contiguous
+//!   chunks on the same pool, with a `shard_min` sequential fallback.
+//!
+//! A sharding solve running *on* a pool worker never blocks the pool:
+//! while waiting for its shards it helps drain the pool's shard queue
+//! ([`par::scope`]), so both levels compose without oversubscription.
+//! Sharding never changes results — every kernel writes disjoint
+//! output slices in the sequential operation order, so solves are
+//! **bitwise identical** for any thread count (`rust/tests/shard_parity.rs`).
 //!
 //! ## Substrates
 //!
 //! The build is fully offline, so the usual ecosystem crates are
 //! re-implemented in-tree: [`util::rng`] (PCG-64), [`linalg`] (dense
-//! BLAS-1/2), [`par`] (thread pool), [`cli`] (argument parsing),
-//! [`configfmt`] (TOML-subset + JSON), [`proptest`] (property testing),
-//! [`benchkit`] (benchmark statistics), [`metrics`] (counters/timers).
+//! BLAS-1/2), [`par`] (thread pool + sharded scoping), [`cli`]
+//! (argument parsing), [`configfmt`] (TOML-subset + JSON), [`proptest`]
+//! (property testing), [`benchkit`] (benchmark statistics), [`metrics`]
+//! (counters/timers).
 
 pub mod benchkit;
 pub mod cli;
@@ -49,6 +70,7 @@ pub mod perfprof;
 pub mod problem;
 pub mod proptest;
 pub mod regions;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod screening;
 pub mod solver;
@@ -61,6 +83,7 @@ pub mod prelude {
     pub use crate::util::rng::Pcg64;
     pub use crate::dict::{DictKind, Instance, InstanceConfig};
     pub use crate::geometry::{Ball, Dome, HalfSpace};
+    pub use crate::par::ParContext;
     pub use crate::problem::{LassoProblem, PrimalDualEval};
     pub use crate::regions::{RegionKind, SafeRegion};
     pub use crate::screening::{ScreeningEngine, ScreeningState};

@@ -9,9 +9,32 @@
 //!
 //! The active-set variants (`*_cols`) touch only the listed columns —
 //! the native backend's physical counterpart of the masked PJRT graphs.
+//!
+//! ## Sharded variants (the parallel hot path)
+//!
+//! [`gemv_t_cols_sharded`] and [`gemv_cols_sharded`] split the work
+//! into contiguous shards executed on the [`ParContext`]'s shared
+//! thread pool, with a sequential fallback below the context's
+//! `shard_min` threshold.  Both are **bitwise identical** to their
+//! sequential counterparts for every shard count, because each output
+//! element is produced by exactly the same sequence of floating-point
+//! operations either way:
+//!
+//! * `gemv_t` shards over *columns*: output element `k` is one
+//!   full-length dot product, and shard boundaries only decide which
+//!   thread computes it — there is no cross-shard reduction at all.
+//! * `gemv` shards over *rows*: output element `i` accumulates
+//!   `x_j · a[i, j]` over the active columns in the same `j` order on
+//!   every shard, so no reduction-order drift is possible (a
+//!   column-sharded `gemv` would instead need a shard-buffer reduction
+//!   whose result differs from sequential in the last ulp).
+//!
+//! This is what lets the coordinator promise bitwise-identical
+//! `SolveReport`s across thread counts (`rust/tests/shard_parity.rs`).
 
 use super::vec_ops::dot;
 use super::Mat;
+use crate::par::ParContext;
 
 /// out = A x (dense x).  Zero entries of `x` are skipped, so the cost is
 /// `2 m · nnz(x)` flops.
@@ -62,6 +85,92 @@ pub fn gemv_t_cols(a: &Mat, active: &[usize], r: &[f64], out: &mut [f64]) {
     for (k, &j) in active.iter().enumerate() {
         out[k] = dot(a.col(j), r);
     }
+}
+
+/// [`gemv_t_cols`], column-sharded over `ctx`'s pool.
+///
+/// The active set is split into contiguous shards; each shard writes
+/// its own disjoint slice of `out` (one dot product per element), so
+/// the result is bitwise identical to the sequential kernel for any
+/// shard count.  Falls back to the sequential kernel when `ctx` awards
+/// a single shard (no pool, or too little work).
+pub fn gemv_t_cols_sharded(
+    a: &Mat,
+    active: &[usize],
+    r: &[f64],
+    out: &mut [f64],
+    ctx: &ParContext,
+) {
+    assert_eq!(out.len(), active.len(), "gemv_t_cols_sharded: out length");
+    assert_eq!(r.len(), a.rows(), "gemv_t_cols_sharded: r length");
+    let k = active.len();
+    let shards = ctx.shards_for(k);
+    if shards <= 1 {
+        gemv_t_cols(a, active, r, out);
+        return;
+    }
+    let chunk = k.div_ceil(shards);
+    let items: Vec<(&[usize], &mut [f64])> =
+        active.chunks(chunk).zip(out.chunks_mut(chunk)).collect();
+    ctx.run_items(items, |(idx, dst)| {
+        for (o, &j) in dst.iter_mut().zip(idx.iter()) {
+            *o = dot(a.col(j), r);
+        }
+    });
+}
+
+/// [`gemv_cols`], row-sharded over `ctx`'s pool.
+///
+/// Shards split the *rows* of the output: every shard scans the active
+/// columns in the same order, accumulating only its own row range, so
+/// each `out[i]` sees exactly the sequential summation order — bitwise
+/// identical for any shard count.  Falls back to the sequential kernel
+/// when `ctx` awards a single shard.
+pub fn gemv_cols_sharded(
+    a: &Mat,
+    active: &[usize],
+    x: &[f64],
+    out: &mut [f64],
+    ctx: &ParContext,
+) {
+    assert_eq!(x.len(), active.len(), "gemv_cols_sharded: x length");
+    assert_eq!(out.len(), a.rows(), "gemv_cols_sharded: out length");
+    let m = a.rows();
+    let shards = ctx.shards_for(m);
+    if shards <= 1 {
+        gemv_cols(a, active, x, out);
+        return;
+    }
+    // Gather the nonzero (column, coefficient) pairs once, up front:
+    // shards then skip the O(k) sparsity scan the sequential kernel
+    // pays once but `shards` copies would pay repeatedly.  Pair order
+    // follows the active order, so each row still accumulates in the
+    // exact sequential sequence (bitwise identical).
+    let nz: Vec<(usize, f64)> = active
+        .iter()
+        .zip(x.iter())
+        .filter(|(_, &xk)| xk != 0.0)
+        .map(|(&j, &xk)| (j, xk))
+        .collect();
+    if nz.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    let chunk = m.div_ceil(shards);
+    let items: Vec<(usize, &mut [f64])> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(t, dst)| (t * chunk, dst))
+        .collect();
+    ctx.run_items(items, |(row0, dst)| {
+        dst.fill(0.0);
+        for &(j, xk) in &nz {
+            let col = &a.col(j)[row0..row0 + dst.len()];
+            for (o, &c) in dst.iter_mut().zip(col) {
+                *o += xk * c;
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -178,5 +287,50 @@ mod tests {
         let a = Mat::zeros(3, 4);
         let mut out = vec![0.0; 3];
         gemv(&a, &[1.0; 5], &mut out);
+    }
+
+    #[test]
+    fn sharded_kernels_bitwise_match_sequential() {
+        let mut rng = Pcg64::new(7);
+        let a = rand_mat(&mut rng, 37, 90);
+        let active: Vec<usize> = (0..90).filter(|j| j % 3 != 1).collect();
+        let xc: Vec<f64> = (0..active.len()).map(|_| rng.normal()).collect();
+        let mut r = vec![0.0; 37];
+        rng.fill_normal(&mut r);
+
+        let mut t_seq = vec![0.0; active.len()];
+        gemv_t_cols(&a, &active, &r, &mut t_seq);
+        let mut g_seq = vec![0.0; 37];
+        gemv_cols(&a, &active, &xc, &mut g_seq);
+
+        // shard_min = 1 forces maximal sharding at every pool width.
+        for threads in [1usize, 2, 4, 8] {
+            let ctx = crate::par::ParContext::new_pool(threads, 1);
+            let mut t_par = vec![f64::NAN; active.len()];
+            gemv_t_cols_sharded(&a, &active, &r, &mut t_par, &ctx);
+            for (s, p) in t_seq.iter().zip(&t_par) {
+                assert_eq!(s.to_bits(), p.to_bits(), "{threads} threads");
+            }
+            let mut g_par = vec![f64::NAN; 37];
+            gemv_cols_sharded(&a, &active, &xc, &mut g_par, &ctx);
+            for (s, p) in g_seq.iter().zip(&g_par) {
+                assert_eq!(s.to_bits(), p.to_bits(), "{threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_kernels_handle_empty_active_set() {
+        let mut rng = Pcg64::new(8);
+        let a = rand_mat(&mut rng, 5, 6);
+        let mut r = vec![0.0; 5];
+        rng.fill_normal(&mut r);
+        let ctx = crate::par::ParContext::new_pool(4, 1);
+        let mut out_t: Vec<f64> = Vec::new();
+        gemv_t_cols_sharded(&a, &[], &r, &mut out_t, &ctx);
+        assert!(out_t.is_empty());
+        let mut out_g = vec![f64::NAN; 5];
+        gemv_cols_sharded(&a, &[], &[], &mut out_g, &ctx);
+        assert!(out_g.iter().all(|v| *v == 0.0));
     }
 }

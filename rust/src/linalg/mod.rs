@@ -14,7 +14,10 @@
 pub mod gemv;
 pub mod vec_ops;
 
-pub use gemv::{gemv, gemv_cols, gemv_t, gemv_t_cols};
+pub use gemv::{
+    gemv, gemv_cols, gemv_cols_sharded, gemv_t, gemv_t_cols,
+    gemv_t_cols_sharded,
+};
 pub use vec_ops::*;
 
 /// Column-major dense matrix.

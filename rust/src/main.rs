@@ -18,6 +18,7 @@ use holder_screening::configfmt::json;
 use holder_screening::coordinator::campaign::Campaign;
 use holder_screening::dict::{generate, DictKind, InstanceConfig};
 use holder_screening::experiments::{ablation, fig1, fig2, screenrate};
+use holder_screening::par::ParContext;
 use holder_screening::path::{solve_path, PathConfig};
 use holder_screening::perfprof::log_tau_grid;
 use holder_screening::regions::RegionKind;
@@ -31,8 +32,20 @@ const COMMON_INSTANCE_FLAGS: [Flag; 6] = [
     Flag::str("dict", Some("gaussian"), "dictionary: gaussian | toeplitz"),
     Flag::num("lam-ratio", Some("0.5"), "lambda / lambda_max"),
     Flag::int("seed", Some("0"), "RNG seed"),
-    Flag::int("threads", Some("0"), "worker threads (0 = auto)"),
+    Flag::int("threads", Some("0"), "worker threads (0 = auto); for solve \
+               and path this pool shards the inner matvec + screening loop"),
 ];
+
+/// Sequential-fallback threshold of the sharded hot path: a shard
+/// covers at least this many columns (`Aᵀr`, screening) or rows (`Ax`);
+/// anything below 2x the threshold runs sequentially.  Results are
+/// bitwise identical for every value.
+const SHARD_MIN_FLAG: Flag = Flag::int(
+    "shard-min",
+    Some("1024"),
+    "min columns (or rows) per shard of the parallel inner loop; \
+     work below 2x this runs sequentially; never changes results",
+);
 
 const SOLVE_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[0],
@@ -40,6 +53,8 @@ const SOLVE_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[2],
     COMMON_INSTANCE_FLAGS[3],
     COMMON_INSTANCE_FLAGS[4],
+    COMMON_INSTANCE_FLAGS[5],
+    SHARD_MIN_FLAG,
     Flag::str("region", Some("holder_dome"),
               "screening region: holder_dome | gap_dome | gap_sphere | \
                static_sphere | dynamic_sphere | none"),
@@ -55,6 +70,8 @@ const PATH_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[2],
     COMMON_INSTANCE_FLAGS[3],
     COMMON_INSTANCE_FLAGS[4],
+    COMMON_INSTANCE_FLAGS[5],
+    SHARD_MIN_FLAG,
     Flag::str("region", Some("holder_dome"), "screening region or none"),
     Flag::int("points", Some("20"), "lambda grid points"),
     Flag::num("lam-min", Some("0.1"), "smallest lambda / lambda_max"),
@@ -208,6 +225,14 @@ fn threads_from_args(args: &Args) -> usize {
     }
 }
 
+/// Shard context for the solver inner loop (`--threads`, `--shard-min`).
+fn par_from_args(args: &Args) -> ParContext {
+    let shard_min = args
+        .int_or("shard-min", holder_screening::par::DEFAULT_SHARD_MIN)
+        .max(1);
+    ParContext::new_pool(threads_from_args(args), shard_min)
+}
+
 fn cmd_solve(args: &Args) -> i32 {
     let icfg = instance_from_args(args);
     let inst = generate(&icfg, args.int_or("seed", 0) as u64);
@@ -221,8 +246,9 @@ fn cmd_solve(args: &Args) -> i32 {
             target_gap: args.num_or("target-gap", 1e-9),
         },
         region: region_from_args(args),
-        screen_every: 1,
         record_trace: args.switch("trace"),
+        par: par_from_args(args),
+        ..Default::default()
     };
     println!(
         "instance: {}x{} dict={} lam={:.6} (ratio {:.2}, lam_max {:.6})",
@@ -257,6 +283,7 @@ fn cmd_path(args: &Args) -> i32 {
         solver: SolverConfig {
             region: region_from_args(args),
             budget: Budget::gap(1e-9),
+            par: par_from_args(args),
             ..Default::default()
         },
     };
@@ -462,6 +489,16 @@ fn cmd_ablation(args: &Args) -> i32 {
     0
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_serve(_args: &Args) -> i32 {
+    eprintln!(
+        "'serve' needs the PJRT runtime bridge; rebuild with \
+         `--features xla` (requires the xla/anyhow dependencies)"
+    );
+    2
+}
+
+#[cfg(feature = "xla")]
 fn cmd_serve(args: &Args) -> i32 {
     use holder_screening::runtime::{ArtifactRegistry, PjrtSolver};
     let dir = args.str_or("artifacts", "artifacts");
@@ -536,6 +573,16 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_artifacts_check(_args: &Args) -> i32 {
+    eprintln!(
+        "'artifacts-check' needs the PJRT runtime bridge; rebuild with \
+         `--features xla` (requires the xla/anyhow dependencies)"
+    );
+    2
+}
+
+#[cfg(feature = "xla")]
 fn cmd_artifacts_check(args: &Args) -> i32 {
     use holder_screening::runtime::ArtifactRegistry;
     let dir = args.str_or("artifacts", "artifacts");

@@ -1,12 +1,16 @@
 //! Thread-parallel substrate (no rayon/tokio): a persistent worker pool
-//! for the coordinator's job engine, plus scoped data-parallel helpers
-//! for the experiment drivers.
+//! for the coordinator's job engine, scoped data-parallel helpers for
+//! the experiment drivers, and the [`ParContext`] that threads a shared
+//! pool into the solver/screening hot path (column-sharded matvecs and
+//! shard-parallel screening tests).
 
 pub mod pool;
 pub mod scope;
 
 pub use pool::ThreadPool;
-pub use scope::{par_chunks, par_map};
+pub use scope::{par_chunks, par_chunks_pool, par_items_pool, par_map};
+
+use std::sync::Arc;
 
 /// Default worker count: physical parallelism with a small cap (the
 /// benchmark campaigns are memory-bandwidth bound well before 32 threads).
@@ -15,4 +19,185 @@ pub fn default_threads() -> usize {
         .map(|n| n.get())
         .unwrap_or(4)
         .min(32)
+}
+
+/// Default sequential-fallback threshold for [`ParContext`]: a shard
+/// must cover at least this many columns (gemv_t / screening) or rows
+/// (gemv) to be worth a pool dispatch.  At the paper's `m = 100` a
+/// 1024-column shard of `Aᵀr` is ~200k flops ≈ tens of microseconds —
+/// comfortably above the ~1 µs submit/notify cost.
+pub const DEFAULT_SHARD_MIN: usize = 1024;
+
+/// Parallel-execution context for the solver/screening hot path.
+///
+/// Carried by value inside `SolverConfig` and threaded down into the
+/// sharded linalg kernels ([`crate::linalg::gemv_t_cols_sharded`],
+/// [`crate::linalg::gemv_cols_sharded`]) and the screening engine.
+/// Cloning is cheap (an `Arc` bump): every solve sharing one context
+/// shares one pool, so coordinator-level job parallelism and
+/// solve-level shard parallelism never oversubscribe the machine.
+///
+/// ## Determinism guarantee
+///
+/// A `ParContext` never changes results: every sharded kernel writes
+/// each output element with exactly the same sequence of floating-point
+/// operations as its sequential counterpart (disjoint output slices, no
+/// cross-shard reductions), so solves are **bitwise identical** for any
+/// pool size, shard count, or scheduling order — including fully
+/// sequential.  See the notes on the sharded kernels in
+/// [`crate::linalg::gemv`].
+#[derive(Clone)]
+pub struct ParContext {
+    pool: Option<Arc<ThreadPool>>,
+    /// Minimum work units (columns or rows) per shard; anything below
+    /// `2 * shard_min` total runs sequentially.
+    pub shard_min: usize,
+}
+
+impl ParContext {
+    /// No pool: every kernel runs sequentially on the calling thread.
+    pub fn sequential() -> Self {
+        ParContext { pool: None, shard_min: DEFAULT_SHARD_MIN }
+    }
+
+    /// Share an existing pool (the coordinator path: solves and shards
+    /// share one pool without oversubscription).
+    pub fn with_pool(pool: Arc<ThreadPool>, shard_min: usize) -> Self {
+        ParContext { pool: Some(pool), shard_min: shard_min.max(1) }
+    }
+
+    /// Spin up a dedicated pool of `threads` workers.  `threads <= 1`
+    /// yields a sequential context (no pool at all).
+    pub fn new_pool(threads: usize, shard_min: usize) -> Self {
+        if threads <= 1 {
+            let mut ctx = Self::sequential();
+            ctx.shard_min = shard_min.max(1);
+            ctx
+        } else {
+            ParContext {
+                pool: Some(Arc::new(ThreadPool::new(threads))),
+                shard_min: shard_min.max(1),
+            }
+        }
+    }
+
+    /// The shared pool, if any.
+    pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
+    }
+
+    /// Usable parallelism (1 when sequential).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.threads()).unwrap_or(1)
+    }
+
+    /// Shard count for `n` units of work: 1 (sequential) below the
+    /// `2 * shard_min` threshold, else capped by both the pool width
+    /// and `n / shard_min` so no shard shrinks below `shard_min`.
+    pub fn shards_for(&self, n: usize) -> usize {
+        match &self.pool {
+            None => 1,
+            Some(p) => {
+                if n < 2 * self.shard_min {
+                    1
+                } else {
+                    p.threads().min(n / self.shard_min).max(1)
+                }
+            }
+        }
+    }
+
+    /// Fan `items` out over the pool (caller participating), or run
+    /// them inline when sequential.  Items are independent shards,
+    /// typically carrying disjoint `&mut` output slices.
+    pub fn run_items<I, F>(&self, items: Vec<I>, f: F)
+    where
+        I: Send,
+        F: Fn(I) + Sync,
+    {
+        match &self.pool {
+            Some(pool) if items.len() > 1 => {
+                scope::par_items_pool(pool, items, f)
+            }
+            _ => {
+                for item in items {
+                    f(item);
+                }
+            }
+        }
+    }
+}
+
+impl Default for ParContext {
+    fn default() -> Self {
+        Self::sequential()
+    }
+}
+
+impl std::fmt::Debug for ParContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParContext")
+            .field("threads", &self.threads())
+            .field("shard_min", &self.shard_min)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_context_never_shards() {
+        let ctx = ParContext::sequential();
+        assert_eq!(ctx.threads(), 1);
+        for n in [0, 1, 100, 1_000_000] {
+            assert_eq!(ctx.shards_for(n), 1);
+        }
+    }
+
+    #[test]
+    fn shard_threshold_respected() {
+        let ctx = ParContext::new_pool(4, 100);
+        assert_eq!(ctx.threads(), 4);
+        assert_eq!(ctx.shards_for(0), 1);
+        assert_eq!(ctx.shards_for(199), 1); // below 2 * shard_min
+        assert_eq!(ctx.shards_for(200), 2); // 200 / 100 = 2
+        assert_eq!(ctx.shards_for(399), 3);
+        assert_eq!(ctx.shards_for(400), 4);
+        assert_eq!(ctx.shards_for(100_000), 4); // capped by pool width
+    }
+
+    #[test]
+    fn single_thread_request_is_sequential() {
+        let ctx = ParContext::new_pool(1, 64);
+        assert!(ctx.pool().is_none());
+        assert_eq!(ctx.shards_for(10_000), 1);
+    }
+
+    #[test]
+    fn run_items_inline_and_pooled_agree() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let run = |ctx: &ParContext| -> u64 {
+            let acc = AtomicU64::new(0);
+            let items: Vec<u64> = (0..50).collect();
+            ctx.run_items(items, |v| {
+                acc.fetch_add(v * v, Ordering::Relaxed);
+            });
+            acc.load(Ordering::Relaxed)
+        };
+        let seq = run(&ParContext::sequential());
+        let par = run(&ParContext::new_pool(4, 1));
+        assert_eq!(seq, par);
+        assert_eq!(seq, (0..50u64).map(|v| v * v).sum::<u64>());
+    }
+
+    #[test]
+    fn contexts_share_one_pool() {
+        let a = ParContext::new_pool(3, 32);
+        let b = a.clone();
+        let (pa, pb) = (a.pool().unwrap(), b.pool().unwrap());
+        assert!(Arc::ptr_eq(pa, pb));
+        assert_eq!(b.threads(), 3);
+    }
 }

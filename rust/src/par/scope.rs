@@ -1,8 +1,39 @@
-//! Scoped data-parallel helpers built on `std::thread::scope`.
+//! Scoped data-parallel helpers.
 //!
-//! `par_map` runs an indexed closure over `0..n` across `threads` OS
-//! threads and collects results in order; `par_chunks` hands each thread a
-//! contiguous index range (for cache-friendly sweeps over trials).
+//! Two families:
+//!
+//! * **Spawning** ([`par_map`], [`par_chunks`]) — built on
+//!   `std::thread::scope`, one OS thread per chunk.  Right for coarse
+//!   work (experiment trials) where thread-spawn cost is noise.
+//! * **Pooled** ([`par_items_pool`], [`par_chunks_pool`]) — scoped
+//!   fan-out onto a persistent [`ThreadPool`].  Right for the solver
+//!   hot path, where a shard job runs for micro- to milliseconds and a
+//!   per-call thread spawn would dominate.
+//!
+//! ## Pooled scoping, without deadlocks
+//!
+//! The pool executes `'static` jobs, but a shard borrows the caller's
+//! matrices and output slices.  [`par_items_pool`] bridges the gap the
+//! way scoped thread pools classically do: it erases the job lifetime
+//! (`unsafe`), and guarantees soundness by **not returning — not even
+//! by unwinding — until every submitted job has finished** (a drop
+//! guard owns the wait), so the borrows outlive every job.  While
+//! waiting, the caller does not block: it first runs one shard inline,
+//! then *helps*, draining queued **shard** jobs on its own thread
+//! ([`ThreadPool::help_run_one`]).  Helping makes nested fan-out safe:
+//! a solve job running *on* a pool worker can shard its matvecs onto
+//! the same pool without any risk of all workers waiting on queued
+//! shards that nobody can run.  Helpers touch only the shard class —
+//! never whole general jobs — so recursion depth stays bounded and a
+//! waiting solve's latency never silently absorbs an unrelated solve.
+//!
+//! Shard jobs must not panic (a panicking job kills its worker and
+//! strands the scope) — the solver shards are pure arithmetic over
+//! pre-validated shapes, which cannot panic.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::ThreadPool;
 
 /// Apply `f(i)` for `i in 0..n` using up to `threads` threads; results
 /// returned in index order.  `f` must be `Sync` (shared by reference).
@@ -57,9 +88,116 @@ where
     out.into_iter().map(|o| o.expect("par_chunks slot")).collect()
 }
 
+/// Run `f` once per item, fanned out over `pool`, with the calling
+/// thread participating (it runs the first item inline, then helps
+/// drain the pool until every submitted item has finished).
+///
+/// Items are independent units of work — typically disjoint
+/// `&mut`-slice shards of one output buffer.  The call returns only
+/// after all items completed, which is what makes the borrow-erasure
+/// sound (see the module docs).
+pub fn par_items_pool<I, F>(pool: &ThreadPool, items: Vec<I>, f: F)
+where
+    I: Send,
+    F: Fn(I) + Sync,
+{
+    let k = items.len();
+    let mut iter = items.into_iter();
+    let Some(first) = iter.next() else { return };
+    if k == 1 {
+        f(first);
+        return;
+    }
+    let done = AtomicUsize::new(0);
+    let submitted = std::cell::Cell::new(0usize);
+    {
+        let f_ref = &f;
+        let done_ref = &done;
+        // Guard FIRST, so any exit from this block — normal return, a
+        // panic inside `pool.execute_shard` mid-loop, or a panic in
+        // the inline shard — waits for every job submitted *so far*
+        // before the borrows die.
+        let _wait = WaitGuard { pool, done: &done, submitted: &submitted };
+        for item in iter {
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                f_ref(item);
+                done_ref.fetch_add(1, Ordering::Release);
+            });
+            // SAFETY: the job borrows `f` and `done`, and may carry
+            // borrowed data inside `item`.  All of these outlive the
+            // job because this function does not return — not even by
+            // unwinding, thanks to `WaitGuard` above — until every
+            // successfully submitted job has run to completion
+            // (`done == submitted`).  The `Release` increment above
+            // pairs with the `Acquire` load in the guard, so all
+            // writes a job makes are visible to the caller once the
+            // wait ends.
+            let job: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(job) };
+            pool.execute_shard(job);
+            // Counted only after a successful submit: if execute_shard
+            // panics, the guard waits for exactly the jobs that exist.
+            submitted.set(submitted.get() + 1);
+        }
+        // The caller is shard 0.
+        f_ref(first);
+    }
+}
+
+struct WaitGuard<'a> {
+    pool: &'a ThreadPool,
+    done: &'a AtomicUsize,
+    submitted: &'a std::cell::Cell<usize>,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        // Help instead of blocking: drain queued *shard* jobs (ours,
+        // or another scope's — both are leaves) until ours are all
+        // accounted for.  General jobs are never run from here, so a
+        // waiting solve can't recurse into an unrelated whole solve.
+        while self.done.load(Ordering::Acquire) != self.submitted.get() {
+            if !self.pool.help_run_one() {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+/// Pooled variant of [`par_chunks`]: partition `0..n` into `shards`
+/// contiguous ranges and evaluate `f(range)` on the shared pool
+/// (caller participating); results returned in range order.
+pub fn par_chunks_pool<T, F>(
+    pool: &ThreadPool,
+    n: usize,
+    shards: usize,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let shards = shards.max(1).min(n.max(1));
+    if shards <= 1 {
+        return vec![f(0..n)];
+    }
+    let chunk = n.div_ceil(shards);
+    let ranges: Vec<_> = (0..shards)
+        .map(|t| (t * chunk).min(n)..((t + 1) * chunk).min(n))
+        .filter(|r| !r.is_empty())
+        .collect();
+    let mut out: Vec<Option<T>> = (0..ranges.len()).map(|_| None).collect();
+    let items: Vec<_> = out.iter_mut().zip(ranges).collect();
+    par_items_pool(pool, items, |(slot, range)| *slot = Some(f(range)));
+    out.into_iter()
+        .map(|o| o.expect("par_chunks_pool slot"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicU64;
 
     #[test]
     fn par_map_ordered() {
@@ -91,5 +229,89 @@ mod tests {
         let parts = par_chunks(3, 16, |r| r.collect::<Vec<_>>());
         let flat: Vec<usize> = parts.into_iter().flatten().collect();
         assert_eq!(flat, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn par_items_pool_writes_disjoint_slices() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0u64; 100];
+        let items: Vec<(usize, &mut [u64])> = out
+            .chunks_mut(17)
+            .enumerate()
+            .map(|(t, s)| (t * 17, s))
+            .collect();
+        par_items_pool(&pool, items, |(base, slice)| {
+            for (k, v) in slice.iter_mut().enumerate() {
+                *v = (base + k) as u64 * 3;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn par_items_pool_empty_and_singleton() {
+        let pool = ThreadPool::new(2);
+        let hits = AtomicU64::new(0);
+        par_items_pool(&pool, Vec::<usize>::new(), |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0);
+        par_items_pool(&pool, vec![7usize], |v| {
+            assert_eq!(v, 7);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn par_chunks_pool_matches_spawning_variant() {
+        let pool = ThreadPool::new(3);
+        for n in [0usize, 1, 2, 5, 97, 1000] {
+            for shards in [1usize, 2, 3, 8] {
+                let got = par_chunks_pool(&pool, n, shards, |r| {
+                    r.map(|i| i * i).sum::<usize>()
+                });
+                let want: usize = (0..n).map(|i| i * i).sum();
+                assert_eq!(got.iter().sum::<usize>(), want, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_pooled_fanout_does_not_deadlock() {
+        // A pooled job that itself fans out on the SAME pool — the
+        // coordinator-runs-sharded-solves scenario.  Must complete even
+        // on a single-worker pool thanks to caller helping.
+        for workers in [1usize, 2, 4] {
+            let pool = ThreadPool::new(workers);
+            let total = AtomicU64::new(0);
+            let outer: Vec<usize> = (0..6).collect();
+            par_items_pool(&pool, outer, |i| {
+                let inner: Vec<usize> = (0..5).collect();
+                par_items_pool(&pool, inner, |j| {
+                    total.fetch_add((i * 10 + j) as u64, Ordering::Relaxed);
+                });
+            });
+            let want: u64 = (0..6u64)
+                .flat_map(|i| (0..5u64).map(move |j| i * 10 + j))
+                .sum();
+            assert_eq!(total.load(Ordering::Relaxed), want);
+            pool.join();
+        }
+    }
+
+    #[test]
+    fn pool_reusable_across_scoped_calls() {
+        let pool = ThreadPool::new(4);
+        for wave in 1..=5usize {
+            let counter = AtomicU64::new(0);
+            let items: Vec<usize> = (0..wave * 10).collect();
+            par_items_pool(&pool, items, |_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), (wave * 10) as u64);
+        }
     }
 }

@@ -13,13 +13,19 @@ use crate::problem::LassoProblem;
 use crate::solver::{solve_warm, SolveReport, SolverConfig};
 
 /// Configuration of a λ-path run.
+///
+/// The embedded [`SolverConfig`] carries the shard-parallel
+/// [`crate::par::ParContext`] end-to-end: set `solver.par` (e.g. from
+/// the CLI's `--threads`/`--shard-min`) and every solve along the grid
+/// shards its matvecs and screening rounds on that pool.  Path results
+/// are bitwise identical for any context.
 #[derive(Clone, Debug)]
 pub struct PathConfig {
     /// Number of grid points.
     pub num_lambdas: usize,
     /// Smallest λ as a fraction of λ_max.
     pub lam_min_ratio: f64,
-    /// Per-point solver configuration.
+    /// Per-point solver configuration (including `solver.par`).
     pub solver: SolverConfig,
 }
 
@@ -172,5 +178,29 @@ mod tests {
             "warm {} >= cold {cold_flops}",
             warm.total_flops
         );
+    }
+
+    #[test]
+    fn sharded_path_is_bitwise_identical() {
+        let p = base();
+        let mk = |par: crate::par::ParContext| PathConfig {
+            num_lambdas: 5,
+            lam_min_ratio: 0.2,
+            solver: SolverConfig {
+                budget: Budget::gap(1e-9),
+                region: Some(RegionKind::HolderDome),
+                par,
+                ..Default::default()
+            },
+        };
+        let seq = solve_path(&p, &mk(crate::par::ParContext::sequential()));
+        let par = solve_path(&p, &mk(crate::par::ParContext::new_pool(4, 1)));
+        assert_eq!(seq.total_flops, par.total_flops);
+        for (a, b) in seq.points.iter().zip(&par.points) {
+            assert_eq!(a.report.iters, b.report.iters);
+            for (va, vb) in a.report.x.iter().zip(&b.report.x) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
     }
 }

@@ -28,6 +28,23 @@
 //! This realizes the paper's "same computational burden" claim: all five
 //! regions cost O(n_active + m) per test on top of the solver's own
 //! matvecs.
+//!
+//! ## Sharded evaluation
+//!
+//! Because each atom's test is a pure O(1) function of its cached
+//! statistics (the table above), the screening engine evaluates the
+//! active set **shard-parallel**: contiguous chunks of at least
+//! `shard_min` atoms (default
+//! [`crate::par::DEFAULT_SHARD_MIN`]) are fanned out on the
+//! [`crate::par::ParContext`]'s pool, each writing its own disjoint
+//! slice of the keep mask.  Region construction itself (O(m) vector
+//! work, once per round) stays on the calling thread.  Determinism:
+//! every per-atom bound is computed by exactly the sequential
+//! instruction sequence regardless of shard count, so the keep mask —
+//! and hence the whole solve — is bitwise independent of threading.
+//! Below `2·shard_min` active atoms the engine falls back to the
+//! sequential loop, so endgame rounds (tiny active sets) pay no
+//! dispatch overhead.
 
 use crate::flops::cost::{self, ScreenSetupKind};
 use crate::geometry::{Ball, Dome, HalfSpace};

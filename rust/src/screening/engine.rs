@@ -1,8 +1,16 @@
 //! Applying a safe-region test to the active set (the screening hot
 //! path), with flop accounting.
+//!
+//! The per-atom test is embarrassingly parallel: each atom's bound is a
+//! pure function of `(Aᵀy)_i`, `(Aᵀr)_k` and `‖a_i‖`, written to its
+//! own slot of the keep mask.  [`ScreeningEngine::compute_keep`]
+//! therefore shards the active set into contiguous chunks on the
+//! [`ParContext`]'s pool — same flop charge, bitwise-identical mask,
+//! wall-clock divided by the shard count.
 
 use super::ScreeningState;
 use crate::flops::FlopCounter;
+use crate::par::ParContext;
 use crate::problem::LassoProblem;
 use crate::regions::SafeRegion;
 
@@ -40,6 +48,7 @@ impl ScreeningEngine {
         state: &ScreeningState,
         atr_compact: &[f64],
         flops: &mut FlopCounter,
+        ctx: &ParContext,
     ) -> &[bool] {
         let active = state.active();
         assert_eq!(atr_compact.len(), active.len());
@@ -53,11 +62,36 @@ impl ScreeningEngine {
         let aty = p.aty();
         let norms = p.col_norms();
         self.keep.clear();
-        self.keep.reserve(active.len());
-        for (k, &j) in active.iter().enumerate() {
-            let bound =
-                region.max_abs_inner_stat(aty[j], atr_compact[k], norms[j]);
-            self.keep.push(bound >= lam);
+        self.keep.resize(active.len(), false);
+        let shards = ctx.shards_for(active.len());
+        if shards <= 1 {
+            for (kp, (&j, &atr_k)) in self
+                .keep
+                .iter_mut()
+                .zip(active.iter().zip(atr_compact))
+            {
+                let bound = region.max_abs_inner_stat(aty[j], atr_k, norms[j]);
+                *kp = bound >= lam;
+            }
+        } else {
+            // Contiguous shards writing disjoint mask slices: each
+            // atom's bound is computed exactly as in the sequential
+            // branch, so the mask is bitwise identical.
+            let chunk = active.len().div_ceil(shards);
+            let items: Vec<((&[usize], &[f64]), &mut [bool])> = active
+                .chunks(chunk)
+                .zip(atr_compact.chunks(chunk))
+                .zip(self.keep.chunks_mut(chunk))
+                .collect();
+            ctx.run_items(items, |((idx, atr_c), dst)| {
+                for (kp, (&j, &atr_k)) in
+                    dst.iter_mut().zip(idx.iter().zip(atr_c))
+                {
+                    let bound =
+                        region.max_abs_inner_stat(aty[j], atr_k, norms[j]);
+                    *kp = bound >= lam;
+                }
+            });
         }
         flops.charge(region.setup_flops(active.len(), p.m()));
         flops.charge(region.test_flops(active.len()));
@@ -73,9 +107,10 @@ impl ScreeningEngine {
         atr_compact: &[f64],
         vectors: &mut [&mut Vec<f64>],
         flops: &mut FlopCounter,
+        ctx: &ParContext,
     ) -> ScreenOutcome {
         let tested = state.active_count();
-        self.compute_keep(region, p, state, atr_compact, flops);
+        self.compute_keep(region, p, state, atr_compact, flops, ctx);
         let keep = std::mem::take(&mut self.keep);
         let removed = state.retain(&keep);
         if removed > 0 {
@@ -146,7 +181,13 @@ mod tests {
                 let mut state = ScreeningState::new(p.n());
                 let atr = ev.atr.clone();
                 engine.apply_and_compact(
-                    &region, &p, &mut state, &atr, &mut [], &mut flops,
+                    &region,
+                    &p,
+                    &mut state,
+                    &atr,
+                    &mut [],
+                    &mut flops,
+                    &ParContext::sequential(),
                 );
                 for &s in &support {
                     if !state.active().contains(&s) {
@@ -188,7 +229,13 @@ mod tests {
                 let mut engine = ScreeningEngine::new();
                 let mut flops = FlopCounter::new();
                 let out = engine.apply_and_compact(
-                    &region, &p, &mut state, &atr, &mut [], &mut flops,
+                    &region,
+                    &p,
+                    &mut state,
+                    &atr,
+                    &mut [],
+                    &mut flops,
+                    &ParContext::sequential(),
                 );
                 counts.push(out.removed);
             }
@@ -211,7 +258,13 @@ mod tests {
         let mut engine = ScreeningEngine::new();
         let mut flops = FlopCounter::new();
         engine.apply_and_compact(
-            &region, &p, &mut state, &atr, &mut [&mut xs], &mut flops,
+            &region,
+            &p,
+            &mut state,
+            &atr,
+            &mut [&mut xs],
+            &mut flops,
+            &ParContext::sequential(),
         );
         assert_eq!(xs.len(), state.active_count());
         for (k, &j) in state.active().iter().enumerate() {
@@ -235,9 +288,68 @@ mod tests {
             let region = SafeRegion::build(kind, &p, &x, &ev);
             let mut state = ScreeningState::new(p.n());
             let atr = ev.atr.clone();
-            engine.apply_and_compact(&region, &p, &mut state, &atr, &mut [], f);
+            engine.apply_and_compact(
+                &region,
+                &p,
+                &mut state,
+                &atr,
+                &mut [],
+                f,
+                &ParContext::sequential(),
+            );
         }
         // dome test must be charged more than sphere test
         assert!(f_dome.total() > f_sphere.total());
+    }
+
+    #[test]
+    fn sharded_keep_mask_matches_sequential() {
+        Runner::new(229).cases(10).run("sharded keep parity", |g| {
+            let (p, _) = make(g);
+            // A few gradient steps for a nontrivial couple.
+            let mut x = vec![0.0; p.n()];
+            let step = p.default_step();
+            for _ in 0..3 {
+                let ev = p.eval(&x);
+                for i in 0..p.n() {
+                    x[i] = linalg::soft_threshold_scalar(
+                        x[i] + step * ev.atr[i],
+                        step * p.lam(),
+                    );
+                }
+            }
+            let ev = p.eval(&x);
+            for kind in RegionKind::ALL {
+                let region = SafeRegion::build(kind, &p, &x, &ev);
+                let state = ScreeningState::new(p.n());
+                let mut engine = ScreeningEngine::new();
+                let mut flops = FlopCounter::new();
+                let seq = engine
+                    .compute_keep(
+                        &region,
+                        &p,
+                        &state,
+                        &ev.atr,
+                        &mut flops,
+                        &ParContext::sequential(),
+                    )
+                    .to_vec();
+                for threads in [2usize, 8] {
+                    let ctx = ParContext::new_pool(threads, 1);
+                    let par = engine
+                        .compute_keep(
+                            &region, &p, &state, &ev.atr, &mut flops, &ctx,
+                        )
+                        .to_vec();
+                    if par != seq {
+                        return Err(format!(
+                            "{}: mask diverged at {threads} threads",
+                            kind.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -11,7 +11,7 @@ use super::{
     StopReason, TracePoint,
 };
 use crate::flops::{cost, FlopCounter};
-use crate::linalg::{self, gemv_cols, gemv_t_cols};
+use crate::linalg::{self, gemv_cols_sharded, gemv_t_cols_sharded};
 use crate::problem::{LassoProblem, EPS};
 use crate::regions::SafeRegion;
 use crate::screening::{ScreeningEngine, ScreeningState};
@@ -40,7 +40,7 @@ pub(crate) fn run(
     let mut r = vec![0.0; m];
     {
         let nnz = x.iter().filter(|v| **v != 0.0).count();
-        gemv_cols(p.a(), state.active(), &x, &mut r);
+        gemv_cols_sharded(p.a(), state.active(), &x, &mut r, &cfg.par);
         for (ri, yi) in r.iter_mut().zip(p.y()) {
             *ri = yi - *ri;
         }
@@ -48,7 +48,10 @@ pub(crate) fn run(
     }
     let mut atr: Vec<f64> = vec![0.0; state.active_count()];
 
-    // Gap evaluation reusing the maintained residual.
+    // Gap evaluation reusing the maintained residual.  The coordinate
+    // sweep itself is a sequential dependency chain (each update feeds
+    // the next through `r`), so only the evaluation's Aᵀr and the
+    // screening test shard across the pool.
     let eval = |x: &[f64],
                 r: &[f64],
                 atr: &mut Vec<f64>,
@@ -58,7 +61,7 @@ pub(crate) fn run(
      -> EvalOut {
         let k = state.active_count();
         atr.resize(k, 0.0);
-        gemv_t_cols(p.a(), state.active(), r, atr);
+        gemv_t_cols_sharded(p.a(), state.active(), r, atr, &cfg.par);
         flops.charge(cost::gemv_t(m, k));
         let corr = linalg::norm_inf(atr);
         let s = (p.lam() / corr.max(EPS)).min(1.0);
@@ -136,7 +139,9 @@ pub(crate) fn run(
                     let pde = to_pde(ev, u, &r, &atr);
                     let region = SafeRegion::build(kind, p, &x, &pde);
                     let keep = engine
-                        .compute_keep(&region, p, &state, &atr, &mut flops)
+                        .compute_keep(
+                            &region, p, &state, &atr, &mut flops, &cfg.par,
+                        )
                         .to_vec();
                     // Incrementally restore residual for dropped nonzeros.
                     for (k_pos, &kp) in keep.iter().enumerate() {
@@ -196,8 +201,8 @@ mod tests {
             kind: SolverKind::Cd,
             budget: Budget::gap(1e-10),
             region: None,
-            screen_every: 1,
             record_trace: true,
+            ..Default::default()
         };
         let rep = run(&p, &cfg, None);
         assert_eq!(rep.stop, StopReason::Converged);
@@ -213,8 +218,7 @@ mod tests {
             kind: SolverKind::Cd,
             budget: Budget::gap(1e-10),
             region: Some(RegionKind::HolderDome),
-            screen_every: 1,
-            record_trace: false,
+            ..Default::default()
         };
         let rep = run(&p, &cfg, None);
         assert_eq!(rep.stop, StopReason::Converged);
@@ -233,8 +237,7 @@ mod tests {
                 kind: SolverKind::Cd,
                 budget: Budget::gap(1e-11),
                 region: None,
-                screen_every: 1,
-                record_trace: false,
+                ..Default::default()
             },
             None,
         );
@@ -244,8 +247,7 @@ mod tests {
                 kind: SolverKind::Fista,
                 budget: Budget::gap(1e-11),
                 region: None,
-                screen_every: 1,
-                record_trace: false,
+                ..Default::default()
             },
         );
         assert!(

@@ -63,7 +63,9 @@ pub(crate) fn run(
     // Cached residuals/correlations at x_cur and x_prev.
     let mut r_cur = vec![0.0; m];
     let mut atr_cur: Vec<f64> = Vec::new();
-    let mut ev = metered_eval(p, &state, &x_cur, &mut r_cur, &mut atr_cur, &mut flops);
+    let mut ev = metered_eval(
+        p, &state, &x_cur, &mut r_cur, &mut atr_cur, &mut flops, &cfg.par,
+    );
     let mut r_prev = r_cur.clone();
     let mut atr_prev = atr_cur.clone();
 
@@ -129,7 +131,10 @@ pub(crate) fn run(
             std::mem::swap(&mut atr_prev, &mut atr_cur);
 
             // Fresh evaluation at the new x (the iteration's two matvecs).
-            ev = metered_eval(p, &state, &x_cur, &mut r_cur, &mut atr_cur, &mut flops);
+            ev = metered_eval(
+                p, &state, &x_cur, &mut r_cur, &mut atr_cur, &mut flops,
+                &cfg.par,
+            );
             record(it, &flops, &ev, &state, &mut trace);
 
             if ev.gap <= target_gap {
@@ -150,7 +155,10 @@ pub(crate) fn run(
                     // Region construction vector work (c, g): charged as
                     // part of setup_flops inside the engine.
                     let keep = engine
-                        .compute_keep(&region, p, &state, &atr_cur, &mut flops)
+                        .compute_keep(
+                            &region, p, &state, &atr_cur, &mut flops,
+                            &cfg.par,
+                        )
                         .to_vec();
                     // Stale-cache detection BEFORE compaction.
                     let mut stale = false;
@@ -176,24 +184,26 @@ pub(crate) fn run(
                             // caches on the reduced dictionary (charged).
                             ev = metered_eval(
                                 p, &state, &x_cur, &mut r_cur, &mut atr_cur,
-                                &mut flops,
+                                &mut flops, &cfg.par,
                             );
                             let nnz_prev =
                                 x_prev.iter().filter(|v| **v != 0.0).count();
-                            crate::linalg::gemv_cols(
+                            crate::linalg::gemv_cols_sharded(
                                 p.a(),
                                 state.active(),
                                 &x_prev,
                                 &mut r_prev,
+                                &cfg.par,
                             );
                             for (ri, yi) in r_prev.iter_mut().zip(p.y()) {
                                 *ri = yi - *ri;
                             }
-                            crate::linalg::gemv_t_cols(
+                            crate::linalg::gemv_t_cols_sharded(
                                 p.a(),
                                 state.active(),
                                 &r_prev,
                                 &mut atr_prev,
+                                &cfg.par,
                             );
                             flops.charge(
                                 cost::gemv(m, nnz_prev)
@@ -276,8 +286,7 @@ mod tests {
                 target_gap: 0.0,
             },
             region: None,
-            screen_every: 1,
-            record_trace: false,
+            ..Default::default()
         };
         let rep = run(&p, &cfg, None);
         assert_eq!(rep.iters, 60);

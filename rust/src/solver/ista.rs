@@ -37,7 +37,8 @@ pub(crate) fn run(
     };
     let mut r = vec![0.0; m];
     let mut atr: Vec<f64> = Vec::new();
-    let mut ev = metered_eval(p, &state, &x, &mut r, &mut atr, &mut flops);
+    let mut ev =
+        metered_eval(p, &state, &x, &mut r, &mut atr, &mut flops, &cfg.par);
 
     let mut trace = Vec::new();
     if cfg.record_trace {
@@ -68,7 +69,9 @@ pub(crate) fn run(
             }
             flops.charge(2 * k as u64 + cost::soft_threshold(k));
 
-            ev = metered_eval(p, &state, &x, &mut r, &mut atr, &mut flops);
+            ev = metered_eval(
+                p, &state, &x, &mut r, &mut atr, &mut flops, &cfg.par,
+            );
             if cfg.record_trace {
                 trace.push(TracePoint {
                     iter: it,
@@ -94,7 +97,9 @@ pub(crate) fn run(
                     let pde = to_pde(ev, u, &r, &atr);
                     let region = SafeRegion::build(kind, p, &x, &pde);
                     let keep = engine
-                        .compute_keep(&region, p, &state, &atr, &mut flops)
+                        .compute_keep(
+                            &region, p, &state, &atr, &mut flops, &cfg.par,
+                        )
                         .to_vec();
                     let stale = keep
                         .iter()
@@ -109,6 +114,7 @@ pub(crate) fn run(
                         if stale {
                             ev = metered_eval(
                                 p, &state, &x, &mut r, &mut atr, &mut flops,
+                                &cfg.par,
                             );
                         }
                     }
@@ -150,8 +156,8 @@ mod tests {
             kind: crate::solver::SolverKind::Ista,
             budget: Budget { max_iters: 100, max_flops: None, target_gap: 0.0 },
             region: None,
-            screen_every: 1,
             record_trace: true,
+            ..Default::default()
         };
         let rep = run(&p, &scfg, None);
         // ISTA is a descent method: P must be non-increasing.
@@ -170,8 +176,7 @@ mod tests {
             kind: crate::solver::SolverKind::Ista,
             budget: Budget::gap(1e-10),
             region: None,
-            screen_every: 1,
-            record_trace: false,
+            ..Default::default()
         };
         let b = run(&p, &base_cfg, None);
         let s_cfg = SolverConfig {

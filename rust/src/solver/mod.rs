@@ -21,7 +21,8 @@ pub mod fista;
 pub mod ista;
 
 use crate::flops::{cost, FlopCounter};
-use crate::linalg::{self, gemv_cols, gemv_t_cols};
+use crate::linalg::{self, gemv_cols_sharded, gemv_t_cols_sharded};
+use crate::par::ParContext;
 use crate::problem::{LassoProblem, EPS};
 use crate::regions::RegionKind;
 use crate::screening::ScreeningState;
@@ -106,6 +107,10 @@ pub struct SolverConfig {
     pub screen_every: usize,
     /// Record a per-iteration trace (gap/flops/active) for figures.
     pub record_trace: bool,
+    /// Shard-parallel execution context for the per-iteration matvecs
+    /// and screening tests.  Defaults to sequential; results are
+    /// bitwise identical for every context (see [`ParContext`]).
+    pub par: ParContext,
 }
 
 impl Default for SolverConfig {
@@ -116,6 +121,7 @@ impl Default for SolverConfig {
             region: Some(RegionKind::HolderDome),
             screen_every: 1,
             record_trace: false,
+            par: ParContext::sequential(),
         }
     }
 }
@@ -126,8 +132,7 @@ impl SolverConfig {
             kind: SolverKind::Fista,
             budget,
             region,
-            screen_every: 1,
-            record_trace: false,
+            ..Default::default()
         }
     }
 }
@@ -206,19 +211,20 @@ pub(crate) fn metered_eval(
     r: &mut Vec<f64>,
     atr: &mut Vec<f64>,
     flops: &mut FlopCounter,
+    ctx: &ParContext,
 ) -> EvalOut {
     let m = p.m();
     let k = state.active_count();
     let nnz = x_c.iter().filter(|v| **v != 0.0).count();
-    // r = y − A x
-    gemv_cols(p.a(), state.active(), x_c, r);
+    // r = y − A x (row-sharded; bitwise identical to sequential)
+    gemv_cols_sharded(p.a(), state.active(), x_c, r, ctx);
     for (ri, yi) in r.iter_mut().zip(p.y()) {
         *ri = yi - *ri;
     }
     flops.charge(cost::gemv(m, nnz) + (m as u64));
-    // atr = Aᵀ r over the active set
+    // atr = Aᵀ r over the active set (column-sharded)
     atr.resize(k, 0.0);
-    gemv_t_cols(p.a(), state.active(), r, atr);
+    gemv_t_cols_sharded(p.a(), state.active(), r, atr, ctx);
     flops.charge(cost::gemv_t(m, k));
     // dual scaling
     let corr = linalg::norm_inf(atr);
@@ -293,7 +299,15 @@ mod tests {
         let mut r = vec![0.0; p.m()];
         let mut atr = Vec::new();
         let mut flops = FlopCounter::new();
-        let out = metered_eval(&p, &state, &x, &mut r, &mut atr, &mut flops);
+        let out = metered_eval(
+            &p,
+            &state,
+            &x,
+            &mut r,
+            &mut atr,
+            &mut flops,
+            &ParContext::sequential(),
+        );
         let want = p.eval(&x);
         assert!((out.p - want.p).abs() < 1e-9);
         assert!((out.d - want.d).abs() < 1e-9);
@@ -310,8 +324,7 @@ mod tests {
                 kind,
                 budget: Budget::gap(1e-9),
                 region: None,
-                screen_every: 1,
-                record_trace: false,
+                ..Default::default()
             };
             let rep = solve(&p, &cfg);
             assert_eq!(rep.stop, StopReason::Converged, "{}", kind.name());
@@ -328,8 +341,7 @@ mod tests {
                     kind,
                     budget: Budget::gap(1e-9),
                     region: Some(region),
-                    screen_every: 1,
-                    record_trace: false,
+                    ..Default::default()
                 };
                 let rep = solve(&p, &cfg);
                 assert_eq!(

@@ -1,0 +1,194 @@
+//! Screening *safety* coverage: a safe region may only discard atoms
+//! that are provably zero at the optimum, so no region — all five
+//! `RegionKind`s — may ever screen an atom of the final support, under
+//! any solver, and along a warm-started λ-path.
+//!
+//! Protocol per instance: solve unscreened to a tight gap (reference),
+//! take its support, then re-solve with every (solver, region)
+//! combination and assert every reference-support atom survives
+//! (screened coordinates are *exactly* zero in the report, so
+//! `x[i] != 0` is the survival witness).
+
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::path::{solve_path, PathConfig};
+use holder_screening::problem::LassoProblem;
+use holder_screening::proptest::{Gen, Runner};
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{
+    solve, Budget, SolverConfig, SolverKind, StopReason,
+};
+
+const SOLVERS: [SolverKind; 3] =
+    [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd];
+
+fn reference_support(p: &LassoProblem, gap: f64, tol: f64) -> Vec<usize> {
+    let rep = solve(
+        p,
+        &SolverConfig {
+            budget: Budget::gap(gap),
+            region: None,
+            ..Default::default()
+        },
+    );
+    assert_eq!(rep.stop, StopReason::Converged, "reference did not converge");
+    rep.support(tol)
+}
+
+#[test]
+fn no_region_screens_the_final_support_any_solver() {
+    for (seed, ratio) in [(0u64, 0.5), (1, 0.8), (2, 0.3)] {
+        let mut cfg = InstanceConfig::paper(DictKind::Gaussian, ratio);
+        cfg.m = 30;
+        cfg.n = 100;
+        let p = generate(&cfg, seed).problem;
+        // Support threshold far above the screened solves' solution
+        // error (~sqrt(2 * gap)), so a surviving support atom can never
+        // round to exactly zero and masquerade as screened.
+        let support = reference_support(&p, 1e-12, 1e-4);
+        assert!(!support.is_empty(), "degenerate instance (empty support)");
+        for kind in SOLVERS {
+            for region in RegionKind::ALL {
+                let rep = solve(
+                    &p,
+                    &SolverConfig {
+                        kind,
+                        budget: Budget::gap(1e-10),
+                        region: Some(region),
+                        ..Default::default()
+                    },
+                );
+                assert_eq!(
+                    rep.stop,
+                    StopReason::Converged,
+                    "{} + {}",
+                    kind.name(),
+                    region.name()
+                );
+                for &i in &support {
+                    assert!(
+                        rep.x[i] != 0.0,
+                        "{} + {} screened support atom {i} (seed {seed})",
+                        kind.name(),
+                        region.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn no_region_screens_the_support_randomized() {
+    // Random shapes and λ via the in-tree property runner.  (Gaussian
+    // only: at tiny shapes the >0.99-correlated Toeplitz atoms make a
+    // 5e-11 reference gap impractically slow; Toeplitz safety is
+    // covered at paper scale in `integration.rs`.)
+    Runner::new(701).cases(8).run("screening safety fuzz", |g| {
+        let mut cfg =
+            InstanceConfig::paper(DictKind::Gaussian, g.f64_in(0.3, 0.85));
+        cfg.m = g.usize_in(15, 35);
+        cfg.n = g.usize_in(40, 110);
+        let p = generate(&cfg, g.usize_in(0, 1 << 30) as u64).problem;
+        let support = reference_support(&p, 5e-11, 1e-4);
+        for region in RegionKind::ALL {
+            let rep = solve(
+                &p,
+                &SolverConfig {
+                    budget: Budget::gap(1e-10),
+                    region: Some(region),
+                    ..Default::default()
+                },
+            );
+            if rep.stop != StopReason::Converged {
+                return Err(format!("{} did not converge", region.name()));
+            }
+            for &i in &support {
+                if rep.x[i] == 0.0 {
+                    return Err(format!(
+                        "{} screened support atom {i}",
+                        region.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lambda_path_screening_stays_safe_at_every_point() {
+    // Warm-started path: each point re-screens from scratch at its own
+    // λ; compare every point's support against an unscreened solve at
+    // the same λ.
+    let mut cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    cfg.m = 30;
+    cfg.n = 90;
+    let p = generate(&cfg, 11).problem;
+    for region in RegionKind::PAPER {
+        let path_cfg = PathConfig {
+            num_lambdas: 6,
+            lam_min_ratio: 0.15,
+            solver: SolverConfig {
+                budget: Budget::gap(1e-10),
+                region: Some(region),
+                ..Default::default()
+            },
+        };
+        let res = solve_path(&p, &path_cfg);
+        assert_eq!(res.points.len(), 6);
+        for pt in &res.points {
+            assert_eq!(
+                pt.report.stop,
+                StopReason::Converged,
+                "{} at lam ratio {:.3}",
+                region.name(),
+                pt.lam_ratio
+            );
+            let p_lam = p.with_lambda(pt.lam);
+            let support = reference_support(&p_lam, 1e-11, 1e-4);
+            for &i in &support {
+                assert!(
+                    pt.report.x[i] != 0.0,
+                    "{} screened support atom {i} at lam ratio {:.3}",
+                    region.name(),
+                    pt.lam_ratio
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn screened_atoms_are_truly_zero_at_the_optimum() {
+    // The converse sanity check: atoms the Hölder dome screens must be
+    // zero in the (tight) reference solution — screening is not just
+    // "safe for the support", it identifies genuine zeros.
+    let mut g = Gen::for_case(733, 0);
+    let mut cfg = InstanceConfig::paper(DictKind::Gaussian, 0.6);
+    cfg.m = 25;
+    cfg.n = 80;
+    let p = generate(&cfg, g.usize_in(0, 1000) as u64).problem;
+    let reference = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-13),
+            region: None,
+            ..Default::default()
+        },
+    );
+    let screened_rep = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-12),
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        },
+    );
+    assert!(screened_rep.screened > 0, "screening never fired");
+    for i in 0..p.n() {
+        if screened_rep.x[i] == 0.0 && reference.x[i].abs() > 1e-4 {
+            panic!("screened atom {i} is nonzero ({}) at the optimum",
+                   reference.x[i]);
+        }
+    }
+}

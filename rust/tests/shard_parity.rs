@@ -1,0 +1,223 @@
+//! Parity tests for the sharded hot-path kernels: every sharded variant
+//! must be **bitwise identical** to its sequential counterpart for any
+//! shard count (1/2/8), any active set (empty, singleton, scattered),
+//! and all the way up to whole `SolveReport`s.
+//!
+//! This is the safety net for the determinism guarantee the sharding
+//! design promises: `gemv_t` shards write disjoint output elements
+//! (one dot each), `gemv` shards disjoint row ranges in sequential
+//! column order, and the screening mask shards disjoint slices — no
+//! floating-point reduction ever crosses a shard boundary.
+
+use holder_screening::flops::FlopCounter;
+use holder_screening::linalg::{
+    self, gemv_cols, gemv_cols_sharded, gemv_t_cols, gemv_t_cols_sharded,
+};
+use holder_screening::par::ParContext;
+use holder_screening::problem::LassoProblem;
+use holder_screening::proptest::{Gen, Runner};
+use holder_screening::regions::{RegionKind, SafeRegion};
+use holder_screening::screening::{ScreeningEngine, ScreeningState};
+use holder_screening::solver::{solve, Budget, SolverConfig};
+
+/// Pool widths that, combined with `shard_min = 1`, force 1 / 2 / 8
+/// shards (capped by the active-set size).
+const SHARD_POOLS: [usize; 3] = [1, 2, 8];
+
+fn random_problem(g: &mut Gen) -> LassoProblem {
+    let m = g.usize_in(5, 40);
+    let n = g.usize_in(8, 120);
+    let a = g.dictionary(m, n);
+    let y = g.observation(m);
+    let mut aty = vec![0.0; n];
+    linalg::gemv_t(&a, &y, &mut aty);
+    let lam = g.f64_in(0.3, 0.9) * linalg::norm_inf(&aty).max(1e-9);
+    LassoProblem::new(a, y, lam)
+}
+
+/// A random ascending active subset of `0..n`, possibly empty or a
+/// singleton.
+fn random_active(g: &mut Gen, n: usize) -> Vec<usize> {
+    match g.usize_in(0, 5) {
+        0 => Vec::new(),
+        1 => vec![g.usize_in(0, n - 1)],
+        _ => {
+            let keep_one_in = g.usize_in(1, 3);
+            (0..n).filter(|j| j % keep_one_in == 0).collect()
+        }
+    }
+}
+
+#[test]
+fn gemv_t_cols_sharded_bitwise_for_1_2_8_shards() {
+    Runner::new(401).cases(25).run("gemv_t shard parity", |g| {
+        let p = random_problem(g);
+        let active = random_active(g, p.n());
+        let r = g.vec_normal(p.m());
+        let mut seq = vec![0.0; active.len()];
+        gemv_t_cols(p.a(), &active, &r, &mut seq);
+        for threads in SHARD_POOLS {
+            let ctx = ParContext::new_pool(threads, 1);
+            let mut par = vec![f64::NAN; active.len()];
+            gemv_t_cols_sharded(p.a(), &active, &r, &mut par, &ctx);
+            for (k, (a, b)) in seq.iter().zip(&par).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "{threads} threads: atr[{k}] {a} != {b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gemv_cols_sharded_bitwise_for_1_2_8_shards() {
+    Runner::new(409).cases(25).run("gemv shard parity", |g| {
+        let p = random_problem(g);
+        let active = random_active(g, p.n());
+        let mut xc = g.vec_normal(active.len());
+        // Sprinkle exact zeros: the kernel's nnz skip must not drift.
+        for v in xc.iter_mut() {
+            if g.bool() {
+                *v = 0.0;
+            }
+        }
+        let mut seq = vec![0.0; p.m()];
+        gemv_cols(p.a(), &active, &xc, &mut seq);
+        for threads in SHARD_POOLS {
+            let ctx = ParContext::new_pool(threads, 1);
+            let mut par = vec![f64::NAN; p.m()];
+            gemv_cols_sharded(p.a(), &active, &xc, &mut par, &ctx);
+            for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "{threads} threads: out[{i}] {a} != {b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn screen_outcome_identical_for_1_2_8_shards() {
+    Runner::new(419).cases(15).run("screen shard parity", |g| {
+        let p = random_problem(g);
+        // A nontrivial iterate so some atoms actually screen.
+        let mut x = vec![0.0; p.n()];
+        let step = p.default_step();
+        for _ in 0..g.usize_in(0, 6) {
+            let ev = p.eval(&x);
+            for i in 0..p.n() {
+                x[i] = linalg::soft_threshold_scalar(
+                    x[i] + step * ev.atr[i],
+                    step * p.lam(),
+                );
+            }
+        }
+        let ev = p.eval(&x);
+        for kind in RegionKind::ALL {
+            let region = SafeRegion::build(kind, &p, &x, &ev);
+            let mut reference: Option<(usize, usize, Vec<usize>)> = None;
+            for threads in SHARD_POOLS {
+                let ctx = ParContext::new_pool(threads, 1);
+                let mut state = ScreeningState::new(p.n());
+                let mut engine = ScreeningEngine::new();
+                let mut flops = FlopCounter::new();
+                let atr = ev.atr.clone();
+                let out = engine.apply_and_compact(
+                    &region,
+                    &p,
+                    &mut state,
+                    &atr,
+                    &mut [],
+                    &mut flops,
+                    &ctx,
+                );
+                let got =
+                    (out.tested, out.removed, state.active().to_vec());
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => {
+                        if *want != got {
+                            return Err(format!(
+                                "{}: ScreenOutcome diverged at {threads} \
+                                 threads: {:?} vs {:?}",
+                                kind.name(),
+                                want,
+                                got
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn solve_reports_bitwise_identical_sharded_vs_sequential() {
+    // The acceptance-level guarantee: the whole solver trajectory —
+    // iterates, flop meter, screening history, final report — is
+    // unchanged by sharding.
+    let mut g = Gen::for_case(431, 0);
+    let p = random_problem(&mut g);
+    for kind in [
+        holder_screening::solver::SolverKind::Fista,
+        holder_screening::solver::SolverKind::Ista,
+        holder_screening::solver::SolverKind::Cd,
+    ] {
+        let mk = |par: ParContext| SolverConfig {
+            kind,
+            budget: Budget::gap(1e-10),
+            region: Some(RegionKind::HolderDome),
+            par,
+            ..Default::default()
+        };
+        let seq = solve(&p, &mk(ParContext::sequential()));
+        for threads in [2usize, 8] {
+            let par = solve(&p, &mk(ParContext::new_pool(threads, 1)));
+            assert_eq!(seq.iters, par.iters, "{kind:?}");
+            assert_eq!(seq.flops, par.flops, "{kind:?}");
+            assert_eq!(seq.screened, par.screened, "{kind:?}");
+            assert_eq!(seq.screen_history, par.screen_history, "{kind:?}");
+            assert_eq!(seq.gap.to_bits(), par.gap.to_bits(), "{kind:?}");
+            assert_eq!(seq.p.to_bits(), par.p.to_bits(), "{kind:?}");
+            assert_eq!(seq.d.to_bits(), par.d.to_bits(), "{kind:?}");
+            for (a, b) in seq.x.iter().zip(&par.x) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{kind:?}: x diverged at {threads} threads"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_min_threshold_does_not_change_results() {
+    // Any shard_min (including degenerate extremes) yields the same
+    // report — the threshold is purely a performance knob.
+    let mut g = Gen::for_case(433, 0);
+    let p = random_problem(&mut g);
+    let mk = |par: ParContext| SolverConfig {
+        budget: Budget::gap(1e-9),
+        region: Some(RegionKind::GapDome),
+        par,
+        ..Default::default()
+    };
+    let base = solve(&p, &mk(ParContext::sequential()));
+    for shard_min in [1usize, 7, 64, 100_000] {
+        let rep = solve(&p, &mk(ParContext::new_pool(4, shard_min)));
+        assert_eq!(base.iters, rep.iters, "shard_min {shard_min}");
+        assert_eq!(base.flops, rep.flops, "shard_min {shard_min}");
+        for (a, b) in base.x.iter().zip(&rep.x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "shard_min {shard_min}");
+        }
+    }
+}
