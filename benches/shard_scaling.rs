@@ -13,7 +13,7 @@
 //!
 //! Env: HOLDER_BENCH_QUICK=1 shrinks the shape for smoke runs.
 
-use holder_screening::benchkit::Bench;
+use holder_screening::benchkit::{Bench, BenchLog};
 use holder_screening::flops::FlopCounter;
 use holder_screening::linalg::{self, gemv_t_cols_sharded, Mat};
 use holder_screening::par::ParContext;
@@ -71,6 +71,10 @@ fn main() {
         .to_vec();
 
     let bench = Bench { min_iters: 5, min_secs: 0.5, warmup_secs: 0.1 };
+    let mut log = BenchLog::new("shard_scaling");
+    log.metric("m", m as u64);
+    log.metric("n", n as u64);
+    log.metric("quick", quick);
     let mut base_mean = None;
     for threads in [1usize, 2, 4, 8] {
         let ctx = ParContext::new_pool(threads, 1024);
@@ -86,6 +90,7 @@ fn main() {
                     .len()
             },
         );
+        log.record(&format!("atr_plus_screen_{threads}t"), &s);
         // Bitwise parity of both stages, every thread count.
         for (a, b) in atr.iter().zip(&atr_ref) {
             assert_eq!(a.to_bits(), b.to_bits(), "atr diverged");
@@ -96,10 +101,11 @@ fn main() {
         assert_eq!(keep, keep_ref, "keep mask diverged at {threads} threads");
         match base_mean {
             None => base_mean = Some(s.mean),
-            Some(base) => println!(
-                "    -> speedup vs 1 thread: {:.2}x",
-                base / s.mean.max(1e-12)
-            ),
+            Some(base) => {
+                let speedup = base / s.mean.max(1e-12);
+                println!("    -> speedup vs 1 thread: {speedup:.2}x");
+                log.metric(&format!("speedup_{threads}t"), speedup);
+            }
         }
     }
 
@@ -125,4 +131,7 @@ fn main() {
          ({} iters, {} flops, gap {:.2e})",
         seq.iters, seq.flops, seq.gap
     );
+    log.metric("solve_parity_iters", seq.iters as u64);
+    log.metric("solve_parity_flops", seq.flops);
+    log.write();
 }

@@ -1,0 +1,196 @@
+//! Bench: per-iteration matvec cost on a heavily screened problem —
+//! gather-mode (indexing the surviving columns out of the full `m × n`
+//! dictionary) versus the physically compacted working set with the
+//! cache-blocked kernels.
+//!
+//! This is the tentpole number for the working-set subsystem: on the
+//! default 500 x 20000 problem with 90% of the atoms screened, the
+//! compacted `Aᵀr` + `Ax` pair is expected to run ≥ 2x faster than the
+//! gather kernels, with **bitwise identical** outputs (asserted here,
+//! not assumed) and bitwise-identical `SolveReport`s for every
+//! (threads, compaction policy) combination.
+//!
+//! Env: HOLDER_BENCH_QUICK=1 shrinks the shape for smoke runs;
+//! HOLDER_BENCH_STRICT=1 turns the ≥ 2x expectation into an assert.
+
+use holder_screening::benchkit::{Bench, BenchLog};
+use holder_screening::linalg::{self, Mat};
+use holder_screening::par::ParContext;
+use holder_screening::problem::LassoProblem;
+use holder_screening::regions::RegionKind;
+use holder_screening::screening::ScreeningState;
+use holder_screening::solver::{solve, Budget, SolverConfig, SolverKind};
+use holder_screening::util::rng::Pcg64;
+use holder_screening::workset::{CompactionPolicy, WorkingSet};
+
+fn build_problem(m: usize, n: usize, seed: u64) -> LassoProblem {
+    let mut rng = Pcg64::new(seed);
+    let mut a = Mat::zeros(m, n);
+    for j in 0..n {
+        for v in a.col_mut(j) {
+            *v = rng.normal();
+        }
+    }
+    a.normalize_columns();
+    let y = rng.unit_sphere(m);
+    let mut aty = vec![0.0; n];
+    linalg::gemv_t(&a, &y, &mut aty);
+    let lam = 0.5 * linalg::norm_inf(&aty);
+    LassoProblem::new(a, y, lam)
+}
+
+/// Retain every 10th atom (exactly 90% screened, survivors scattered
+/// across the whole dictionary — the gather kernels' worst case).
+fn screen_to_10_percent(
+    p: &LassoProblem,
+    ws: &mut WorkingSet,
+) -> ScreeningState {
+    let n = p.n();
+    let mut state = ScreeningState::new(n);
+    let keep: Vec<bool> = (0..n).map(|j| j % 10 == 0).collect();
+    state.retain(&keep);
+    ws.on_retain(p, &state, &keep);
+    state
+}
+
+fn main() {
+    let quick = std::env::var("HOLDER_BENCH_QUICK").is_ok();
+    let strict = std::env::var("HOLDER_BENCH_STRICT").is_ok();
+    let (m, n) = if quick { (100, 4000) } else { (500, 20000) };
+    println!(
+        "# working-set compaction: per-iteration matvecs at 90% screened, \
+         (m, n) = ({m}, {n})"
+    );
+    println!("# (setup includes the one-off spectral-norm estimate; be patient)");
+    let p = build_problem(m, n, 42);
+    let mut log = BenchLog::new("workset_compaction");
+    log.metric("m", m as u64);
+    log.metric("n", n as u64);
+    log.metric("screened_fraction", 0.9);
+    log.metric("quick", quick);
+
+    // Gather-mode working set (policy disabled) and compacted working
+    // set (threshold 0 → the 90% removal triggers an immediate rebuild).
+    let mut ws_gather = WorkingSet::new(CompactionPolicy::Disabled, n);
+    let state = screen_to_10_percent(&p, &mut ws_gather);
+    let mut ws_compact = WorkingSet::new(CompactionPolicy::Threshold(0.0), n);
+    let state_c = screen_to_10_percent(&p, &mut ws_compact);
+    assert_eq!(state.active(), state_c.active());
+    assert!(ws_compact.is_contiguous(), "compaction did not fire");
+    let k = state.active_count();
+
+    let mut rng = Pcg64::new(7);
+    let mut r = vec![0.0; m];
+    rng.fill_normal(&mut r);
+    let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+
+    // Bitwise parity of both kernels in both modes, all thread counts.
+    let seq = ParContext::sequential();
+    let mut atr_ref = vec![0.0; k];
+    ws_gather.gemv_t(&p, state.active(), &r, &mut atr_ref, &seq);
+    let mut ax_ref = vec![0.0; m];
+    ws_gather.gemv(&p, state.active(), &x, &mut ax_ref, &seq);
+
+    let bench = Bench { min_iters: 5, min_secs: 0.5, warmup_secs: 0.1 };
+    let mut speedups = Vec::new();
+    for threads in [1usize, 4] {
+        let ctx = ParContext::new_pool(threads, 1024);
+        let mut atr = vec![0.0; k];
+        let mut ax = vec![0.0; m];
+        let s_gather = bench.report(
+            &format!("gather  A^T r + A x, {threads} thread(s)"),
+            || {
+                ws_gather.gemv_t(&p, state.active(), &r, &mut atr, &ctx);
+                ws_gather.gemv(&p, state.active(), &x, &mut ax, &ctx);
+                atr.len() + ax.len()
+            },
+        );
+        log.record(&format!("gather_{threads}t"), &s_gather);
+        for (a, b) in atr.iter().zip(&atr_ref) {
+            assert_eq!(a.to_bits(), b.to_bits(), "gather atr diverged");
+        }
+        for (a, b) in ax.iter().zip(&ax_ref) {
+            assert_eq!(a.to_bits(), b.to_bits(), "gather ax diverged");
+        }
+
+        let s_compact = bench.report(
+            &format!("compact A^T r + A x, {threads} thread(s)"),
+            || {
+                ws_compact.gemv_t(&p, state.active(), &r, &mut atr, &ctx);
+                ws_compact.gemv(&p, state.active(), &x, &mut ax, &ctx);
+                atr.len() + ax.len()
+            },
+        );
+        log.record(&format!("compact_{threads}t"), &s_compact);
+        for (a, b) in atr.iter().zip(&atr_ref) {
+            assert_eq!(a.to_bits(), b.to_bits(), "compact atr diverged");
+        }
+        for (a, b) in ax.iter().zip(&ax_ref) {
+            assert_eq!(a.to_bits(), b.to_bits(), "compact ax diverged");
+        }
+
+        let speedup = s_gather.mean / s_compact.mean.max(1e-12);
+        println!("    -> compaction speedup: {speedup:.2}x");
+        log.metric(&format!("compaction_speedup_{threads}t"), speedup);
+        speedups.push(speedup);
+    }
+
+    // End-to-end determinism: every (threads, compaction) combination
+    // must produce a bitwise-identical SolveReport.
+    let p2 = build_problem(100, 2000, 9);
+    let mk = |par: ParContext, compaction: CompactionPolicy| SolverConfig {
+        kind: SolverKind::Fista,
+        budget: Budget::gap(1e-9),
+        region: Some(RegionKind::HolderDome),
+        par,
+        compaction,
+        ..Default::default()
+    };
+    let base = solve(
+        &p2,
+        &mk(ParContext::sequential(), CompactionPolicy::Disabled),
+    );
+    let mut combos = 0usize;
+    for threads in [1usize, 4] {
+        for policy in [
+            CompactionPolicy::Disabled,
+            CompactionPolicy::Threshold(0.0),
+            CompactionPolicy::Threshold(0.25),
+            CompactionPolicy::Threshold(1.0),
+        ] {
+            let rep = solve(&p2, &mk(ParContext::new_pool(threads, 64), policy));
+            assert_eq!(base.iters, rep.iters, "{threads}t {policy:?}");
+            assert_eq!(base.flops, rep.flops, "{threads}t {policy:?}");
+            assert_eq!(base.screened, rep.screened, "{threads}t {policy:?}");
+            assert_eq!(
+                base.gap.to_bits(),
+                rep.gap.to_bits(),
+                "{threads}t {policy:?}"
+            );
+            for (a, b) in base.x.iter().zip(&rep.x) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "solve diverged: {threads} threads, {policy:?}"
+                );
+            }
+            combos += 1;
+        }
+    }
+    println!(
+        "\nsolve parity: {combos} (threads x compaction) combinations \
+         bitwise identical ({} iters, {} flops, gap {:.2e}, screened {})",
+        base.iters, base.flops, base.gap, base.screened
+    );
+    log.metric("parity_combos", combos as u64);
+    log.write();
+
+    if strict {
+        for (i, s) in speedups.iter().enumerate() {
+            assert!(
+                *s >= 2.0,
+                "compaction speedup below 2x at combo {i}: {s:.2}x"
+            );
+        }
+    }
+}

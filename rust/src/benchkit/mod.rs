@@ -1,9 +1,13 @@
 //! Benchmark substrate (no criterion): warmup + timed iterations with
-//! robust statistics and markdown table rendering.
+//! robust statistics, markdown table rendering, and machine-readable
+//! result emission.
 //!
 //! `cargo bench` targets use `harness = false` and drive [`Bench`]
 //! directly; each paper table/figure gets one bench binary under
-//! `benches/`.
+//! `benches/`.  Benches that track the perf trajectory across PRs also
+//! record their summaries into a [`BenchLog`] and write
+//! `BENCH_<name>.json` next to the working directory, so CI (and
+//! humans) can diff numbers between revisions without scraping stdout.
 
 pub mod stats;
 pub mod table;
@@ -11,6 +15,7 @@ pub mod table;
 pub use stats::Summary;
 pub use table::Table;
 
+use crate::configfmt::{json, Value};
 use crate::util::timer::{fmt_duration, Stopwatch};
 
 /// Configuration for a timing run.
@@ -77,6 +82,79 @@ impl Bench {
     }
 }
 
+/// Machine-readable bench sink: labeled [`Summary`] records plus free
+/// scalar metrics (speedups, shapes), written to `BENCH_<name>.json`.
+#[derive(Clone, Debug, Default)]
+pub struct BenchLog {
+    name: String,
+    results: Vec<(String, Summary)>,
+    metrics: Vec<(String, Value)>,
+}
+
+impl BenchLog {
+    pub fn new(name: &str) -> Self {
+        BenchLog { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Record one timing summary under `label` (seconds throughout).
+    pub fn record(&mut self, label: &str, s: &Summary) {
+        self.results.push((label.to_string(), *s));
+    }
+
+    /// Record one scalar metric (speedup, problem size, …).
+    pub fn metric(&mut self, key: &str, v: impl Into<Value>) {
+        self.metrics.push((key.to_string(), v.into()));
+    }
+
+    /// The output path: `BENCH_<name>.json` in the working directory.
+    pub fn path(&self) -> String {
+        format!("BENCH_{}.json", self.name)
+    }
+
+    /// The full log as a JSON value tree.
+    pub fn to_json(&self) -> Value {
+        let mut root = Value::obj();
+        root.set("bench", self.name.as_str());
+        let mut results = Value::obj();
+        for (label, s) in &self.results {
+            let mut o = Value::obj();
+            o.set("n", s.n as u64);
+            o.set("mean_secs", s.mean);
+            o.set("std_dev_secs", s.std_dev);
+            o.set("min_secs", s.min);
+            o.set("max_secs", s.max);
+            o.set("p50_secs", s.p50);
+            o.set("p90_secs", s.p90);
+            o.set("p99_secs", s.p99);
+            results.set(label, o);
+        }
+        root.set("results", results);
+        let mut metrics = Value::obj();
+        for (key, v) in &self.metrics {
+            metrics.set(key, v.clone());
+        }
+        root.set("metrics", metrics);
+        root
+    }
+
+    /// Write the log; returns the path written.  IO errors are
+    /// reported, not fatal — a bench must still print its numbers on a
+    /// read-only filesystem.
+    pub fn write(&self) -> Option<String> {
+        let path = self.path();
+        match std::fs::write(&path, json::to_string_pretty(&self.to_json())) {
+            Ok(()) => {
+                println!("wrote {path}");
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("could not write {path}: {e}");
+                None
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +166,27 @@ mod tests {
         assert!(s.n >= 8);
         assert!(s.mean >= 0.0);
         assert!(s.p50 <= s.p99 + 1e-12);
+    }
+
+    #[test]
+    fn bench_log_round_trips_through_json() {
+        let mut log = BenchLog::new("unit");
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0]);
+        log.record("kernel a", &s);
+        log.metric("speedup_2_threads", 1.75);
+        log.metric("shape", "10x20");
+        assert_eq!(log.path(), "BENCH_unit.json");
+        let v = log.to_json();
+        assert_eq!(v.str_or("bench", ""), "unit");
+        let parsed = json::parse(&json::to_string_pretty(&v)).unwrap();
+        assert!(
+            (parsed.f64_or("results.kernel a.mean_secs", 0.0) - 2.0).abs()
+                < 1e-12
+        );
+        assert!(
+            (parsed.f64_or("metrics.speedup_2_threads", 0.0) - 1.75).abs()
+                < 1e-12
+        );
     }
 
     #[test]

@@ -21,6 +21,15 @@
 //! | soft-threshold (k)       | `4 k`        |
 //! | sphere test per atom     | `4`          |
 //! | dome  test per atom      | `14`         |
+//! | working-set compaction   | `0`          |
+//!
+//! Working-set compaction ([`crate::workset`]) charges **zero** flops
+//! by design: the `O(m·k)` rebuild copy is pure data movement with no
+//! floating-point arithmetic, and keeping it off the meter is what
+//! makes `SolveReport.flops` bitwise comparable across compaction
+//! policies (the meter measures the *algorithm*, the policy only moves
+//! bytes).  Its cost is visible where it belongs — wall-clock — in
+//! `benches/workset_compaction.rs`.
 //!
 //! Screening statistics exploit correlation reuse (see
 //! `python/compile/model.py` preamble): with `Aᵀy` precomputed and `Aᵀr`

@@ -45,6 +45,31 @@
 //! output slices in the sequential operation order, so solves are
 //! **bitwise identical** for any thread count (`rust/tests/shard_parity.rs`).
 //!
+//! ## The compacted working set
+//!
+//! Screening makes the active set small; the [`workset::WorkingSet`]
+//! makes it *physically* small.  The lifecycle per solve is
+//! **screen → retain → compact → blocked kernels**:
+//!
+//! 1. a screening round removes atoms
+//!    ([`screening::ScreeningEngine`]);
+//! 2. the working set's column map is compacted alongside the
+//!    coefficient vectors;
+//! 3. once the removed fraction since the last rebuild clears the
+//!    [`workset::CompactionPolicy`] threshold (CLI
+//!    `--compaction-threshold`), the surviving columns plus their
+//!    `‖a_i‖` / `(Aᵀy)_i` caches are copied into contiguous storage —
+//!    `O(m·k)` once, amortized over every following iteration;
+//! 4. the matvecs then run the indirection-free kernels
+//!    ([`linalg::gemv_compact_sharded`], cache-blocked
+//!    [`linalg::gemv_t_blocked_sharded`]) instead of gathering
+//!    scattered columns out of the full `m × n` dictionary.
+//!
+//! Compaction composes with sharding and never changes results: the
+//! compact kernels replay the exact sequential operation sequence per
+//! output element, so `SolveReport`s are bitwise identical for every
+//! (threads, compaction) combination (`rust/tests/workset_parity.rs`).
+//!
 //! ## Substrates
 //!
 //! The build is fully offline, so the usual ecosystem crates are
@@ -75,6 +100,7 @@ pub mod runtime;
 pub mod screening;
 pub mod solver;
 pub mod util;
+pub mod workset;
 
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
@@ -88,7 +114,8 @@ pub mod prelude {
     pub use crate::regions::{RegionKind, SafeRegion};
     pub use crate::screening::{ScreeningEngine, ScreeningState};
     pub use crate::solver::{
-        solve, solve_warm, Budget, SolveReport, SolverConfig, SolverKind,
-        StopReason,
+        solve, solve_warm, solve_warm_ws, Budget, SolveReport, SolverConfig,
+        SolverKind, StopReason,
     };
+    pub use crate::workset::{CompactionPolicy, WorkingSet};
 }

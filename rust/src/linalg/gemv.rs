@@ -31,6 +31,26 @@
 //!
 //! This is what lets the coordinator promise bitwise-identical
 //! `SolveReport`s across thread counts (`rust/tests/shard_parity.rs`).
+//!
+//! ## Compact variants (the working-set fast path)
+//!
+//! Once [`crate::workset::WorkingSet`] has physically materialized the
+//! surviving atoms into a contiguous [`Mat`], the `active[]`
+//! indirection disappears and two further kernels apply:
+//!
+//! * [`gemv_compact`] / [`gemv_compact_sharded`] — `A x` over the
+//!   first `x.len()` columns with no index gather at all;
+//! * [`gemv_t_blocked`] / [`gemv_t_blocked_sharded`] — `Aᵀ r` that
+//!   processes [`T_BLOCK`] columns per sweep of `r`, so the residual is
+//!   streamed once per block (and stays in L1/L2) instead of once per
+//!   column.
+//!
+//! Both keep each output element's floating-point operation sequence
+//! identical to the gather kernels: `gemv_compact` accumulates the
+//! active columns in the same order, and every column of
+//! `gemv_t_blocked` replicates the exact 4-accumulator pattern of
+//! [`dot`].  Compaction on/off is therefore bitwise invisible
+//! (`rust/tests/workset_parity.rs`).
 
 use super::vec_ops::dot;
 use super::Mat;
@@ -133,6 +153,22 @@ pub fn gemv_cols_sharded(
     out: &mut [f64],
     ctx: &ParContext,
 ) {
+    let mut nz = Vec::new();
+    gemv_cols_sharded_scratch(a, active, x, out, ctx, &mut nz);
+}
+
+/// [`gemv_cols_sharded`] with a caller-owned scratch buffer for the
+/// nonzero gather, so per-iteration callers (the solver loop, via
+/// [`crate::workset::WorkingSet`]) pay the allocation once instead of
+/// every matvec.
+pub fn gemv_cols_sharded_scratch(
+    a: &Mat,
+    active: &[usize],
+    x: &[f64],
+    out: &mut [f64],
+    ctx: &ParContext,
+    nz: &mut Vec<(usize, f64)>,
+) {
     assert_eq!(x.len(), active.len(), "gemv_cols_sharded: x length");
     assert_eq!(out.len(), a.rows(), "gemv_cols_sharded: out length");
     let m = a.rows();
@@ -146,16 +182,17 @@ pub fn gemv_cols_sharded(
     // pays once but `shards` copies would pay repeatedly.  Pair order
     // follows the active order, so each row still accumulates in the
     // exact sequential sequence (bitwise identical).
-    let nz: Vec<(usize, f64)> = active
-        .iter()
-        .zip(x.iter())
-        .filter(|(_, &xk)| xk != 0.0)
-        .map(|(&j, &xk)| (j, xk))
-        .collect();
+    nz.clear();
+    for (&j, &xk) in active.iter().zip(x.iter()) {
+        if xk != 0.0 {
+            nz.push((j, xk));
+        }
+    }
     if nz.is_empty() {
         out.fill(0.0);
         return;
     }
+    let nz_ref: &[(usize, f64)] = nz;
     let chunk = m.div_ceil(shards);
     let items: Vec<(usize, &mut [f64])> = out
         .chunks_mut(chunk)
@@ -164,12 +201,172 @@ pub fn gemv_cols_sharded(
         .collect();
     ctx.run_items(items, |(row0, dst)| {
         dst.fill(0.0);
-        for &(j, xk) in &nz {
+        for &(j, xk) in nz_ref {
             let col = &a.col(j)[row0..row0 + dst.len()];
             for (o, &c) in dst.iter_mut().zip(col) {
                 *o += xk * c;
             }
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Compact (working-set) kernels: no active[] indirection.
+// ---------------------------------------------------------------------------
+
+/// Columns processed per sweep of `r` by [`gemv_t_blocked`]: with four
+/// accumulators per column this is 32 live scalars — wide enough to
+/// amortize the residual stream, narrow enough for the register file.
+pub const T_BLOCK: usize = 8;
+
+/// `out = A x` over the **first `x.len()` columns** of `a` (the
+/// physically compacted working set; trailing columns are ignored so a
+/// prefix of a stale compact store can be used).  Zero coefficients are
+/// skipped.  Bitwise identical to [`gemv_cols`] with
+/// `active = [0, 1, …, x.len())`.
+pub fn gemv_compact(a: &Mat, x: &[f64], out: &mut [f64]) {
+    assert!(x.len() <= a.cols(), "gemv_compact: x length");
+    assert_eq!(out.len(), a.rows(), "gemv_compact: out length");
+    out.fill(0.0);
+    for (j, &xj) in x.iter().enumerate() {
+        if xj != 0.0 {
+            let col = a.col(j);
+            for (o, &c) in out.iter_mut().zip(col) {
+                *o += xj * c;
+            }
+        }
+    }
+}
+
+/// [`gemv_compact`], row-sharded over `ctx`'s pool with a caller-owned
+/// nonzero scratch (see [`gemv_cols_sharded_scratch`]).  Bitwise
+/// identical to the sequential kernel for any shard count.
+pub fn gemv_compact_sharded(
+    a: &Mat,
+    x: &[f64],
+    out: &mut [f64],
+    ctx: &ParContext,
+    nz: &mut Vec<(usize, f64)>,
+) {
+    assert!(x.len() <= a.cols(), "gemv_compact_sharded: x length");
+    assert_eq!(out.len(), a.rows(), "gemv_compact_sharded: out length");
+    let m = a.rows();
+    let shards = ctx.shards_for(m);
+    if shards <= 1 {
+        gemv_compact(a, x, out);
+        return;
+    }
+    nz.clear();
+    for (j, &xj) in x.iter().enumerate() {
+        if xj != 0.0 {
+            nz.push((j, xj));
+        }
+    }
+    if nz.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    let nz_ref: &[(usize, f64)] = nz;
+    let chunk = m.div_ceil(shards);
+    let items: Vec<(usize, &mut [f64])> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(t, dst)| (t * chunk, dst))
+        .collect();
+    ctx.run_items(items, |(row0, dst)| {
+        dst.fill(0.0);
+        for &(j, xk) in nz_ref {
+            let col = &a.col(j)[row0..row0 + dst.len()];
+            for (o, &c) in dst.iter_mut().zip(col) {
+                *o += xk * c;
+            }
+        }
+    });
+}
+
+/// One block of up to `B` simultaneous column dots, each replicating
+/// the exact accumulator pattern of [`dot`]: four independent partial
+/// sums over row quads, combined as `(s0 + s1) + (s2 + s3)`, then the
+/// scalar tail.  Interleaving the columns changes only the instruction
+/// schedule, never any column's own operation sequence, so every
+/// output is bitwise equal to `dot(a.col(j), r)`.
+fn block_dots<const B: usize>(a: &Mat, j0: usize, r: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(out.len(), B);
+    let m = a.rows();
+    let quads = m / 4;
+    let cols: [&[f64]; B] = std::array::from_fn(|c| a.col(j0 + c));
+    let mut acc = [[0.0f64; 4]; B];
+    for i in 0..quads {
+        let b = i * 4;
+        for c in 0..B {
+            let col = cols[c];
+            acc[c][0] += col[b] * r[b];
+            acc[c][1] += col[b + 1] * r[b + 1];
+            acc[c][2] += col[b + 2] * r[b + 2];
+            acc[c][3] += col[b + 3] * r[b + 3];
+        }
+    }
+    for c in 0..B {
+        let col = cols[c];
+        let mut s = (acc[c][0] + acc[c][1]) + (acc[c][2] + acc[c][3]);
+        for i in quads * 4..m {
+            s += col[i] * r[i];
+        }
+        out[c] = s;
+    }
+}
+
+/// `out[j] = ⟨a_{j0+j}, r⟩` for `out.len()` consecutive columns
+/// starting at `j0`, in blocks of [`T_BLOCK`] (the sharded variant's
+/// per-shard body; block alignment per shard cannot drift results
+/// because each column's dot is independent).
+fn gemv_t_blocked_range(a: &Mat, j0: usize, r: &[f64], out: &mut [f64]) {
+    assert!(j0 + out.len() <= a.cols(), "gemv_t_blocked: out length");
+    assert_eq!(r.len(), a.rows(), "gemv_t_blocked: r length");
+    let k = out.len();
+    let mut c = 0;
+    while c + T_BLOCK <= k {
+        block_dots::<T_BLOCK>(a, j0 + c, r, &mut out[c..c + T_BLOCK]);
+        c += T_BLOCK;
+    }
+    for cc in c..k {
+        out[cc] = dot(a.col(j0 + cc), r);
+    }
+}
+
+/// `out[j] = ⟨a_j, r⟩` over the **first `out.len()` columns** of `a`
+/// (the physically compacted working set), [`T_BLOCK`] columns per
+/// sweep of `r`.  Bitwise identical to [`gemv_t_cols`] with
+/// `active = [0, 1, …, out.len())` — see `block_dots`.
+pub fn gemv_t_blocked(a: &Mat, r: &[f64], out: &mut [f64]) {
+    gemv_t_blocked_range(a, 0, r, out);
+}
+
+/// [`gemv_t_blocked`], column-sharded over `ctx`'s pool.  Each shard
+/// writes a disjoint contiguous slice of `out`; bitwise identical to
+/// the sequential kernel for any shard count.
+pub fn gemv_t_blocked_sharded(
+    a: &Mat,
+    r: &[f64],
+    out: &mut [f64],
+    ctx: &ParContext,
+) {
+    assert!(out.len() <= a.cols(), "gemv_t_blocked_sharded: out length");
+    assert_eq!(r.len(), a.rows(), "gemv_t_blocked_sharded: r length");
+    let k = out.len();
+    let shards = ctx.shards_for(k);
+    if shards <= 1 {
+        gemv_t_blocked_range(a, 0, r, out);
+        return;
+    }
+    let chunk = k.div_ceil(shards);
+    let items: Vec<(usize, &mut [f64])> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(t, dst)| (t * chunk, dst))
+        .collect();
+    ctx.run_items(items, |(j0, dst)| {
+        gemv_t_blocked_range(a, j0, r, dst);
     });
 }
 
@@ -316,6 +513,92 @@ mod tests {
             for (s, p) in g_seq.iter().zip(&g_par) {
                 assert_eq!(s.to_bits(), p.to_bits(), "{threads} threads");
             }
+        }
+    }
+
+    #[test]
+    fn blocked_gemv_t_bitwise_matches_dot_kernel() {
+        let mut rng = Pcg64::new(11);
+        // Shapes straddling the 4-row quads and the T_BLOCK column
+        // boundary, including k = 0 and k < T_BLOCK.
+        for (m, k, extra) in [
+            (1usize, 1usize, 0usize),
+            (7, 3, 2),
+            (16, 8, 0),
+            (33, 17, 5),
+            (50, 0, 4),
+            (21, 40, 3),
+        ] {
+            let a = rand_mat(&mut rng, m, k + extra);
+            let mut r = vec![0.0; m];
+            rng.fill_normal(&mut r);
+            let active: Vec<usize> = (0..k).collect();
+            let mut want = vec![0.0; k];
+            gemv_t_cols(&a, &active, &r, &mut want);
+            let mut got = vec![f64::NAN; k];
+            gemv_t_blocked(&a, &r, &mut got);
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.to_bits(), g.to_bits(), "({m}, {k})");
+            }
+            for threads in [2usize, 8] {
+                let ctx = crate::par::ParContext::new_pool(threads, 1);
+                let mut par = vec![f64::NAN; k];
+                gemv_t_blocked_sharded(&a, &r, &mut par, &ctx);
+                for (w, g) in want.iter().zip(&par) {
+                    assert_eq!(w.to_bits(), g.to_bits(), "{threads} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compact_gemv_bitwise_matches_gather_kernel() {
+        let mut rng = Pcg64::new(12);
+        for (m, k, extra) in [(1usize, 1usize, 0usize), (13, 9, 4), (40, 25, 7)]
+        {
+            let a = rand_mat(&mut rng, m, k + extra);
+            let active: Vec<usize> = (0..k).collect();
+            let mut x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+            for (i, v) in x.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0; // the nnz skip must not drift
+                }
+            }
+            let mut want = vec![0.0; m];
+            gemv_cols(&a, &active, &x, &mut want);
+            let mut got = vec![f64::NAN; m];
+            gemv_compact(&a, &x, &mut got);
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.to_bits(), g.to_bits(), "({m}, {k})");
+            }
+            let mut nz = Vec::new();
+            for threads in [2usize, 8] {
+                let ctx = crate::par::ParContext::new_pool(threads, 1);
+                let mut par = vec![f64::NAN; m];
+                gemv_compact_sharded(&a, &x, &mut par, &ctx, &mut nz);
+                for (w, g) in want.iter().zip(&par) {
+                    assert_eq!(w.to_bits(), g.to_bits(), "{threads} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_variant_reuses_buffer_across_calls() {
+        let mut rng = Pcg64::new(13);
+        let a = rand_mat(&mut rng, 10, 20);
+        let active: Vec<usize> = (0..20).step_by(2).collect();
+        let x: Vec<f64> = (0..active.len()).map(|_| rng.normal()).collect();
+        let ctx = crate::par::ParContext::new_pool(4, 1);
+        let mut nz = Vec::new();
+        let mut out1 = vec![0.0; 10];
+        gemv_cols_sharded_scratch(&a, &active, &x, &mut out1, &ctx, &mut nz);
+        let cap = nz.capacity();
+        let mut out2 = vec![0.0; 10];
+        gemv_cols_sharded_scratch(&a, &active, &x, &mut out2, &ctx, &mut nz);
+        assert_eq!(nz.capacity(), cap, "scratch reallocated");
+        for (a1, a2) in out1.iter().zip(&out2) {
+            assert_eq!(a1.to_bits(), a2.to_bits());
         }
     }
 

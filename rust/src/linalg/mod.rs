@@ -15,8 +15,9 @@ pub mod gemv;
 pub mod vec_ops;
 
 pub use gemv::{
-    gemv, gemv_cols, gemv_cols_sharded, gemv_t, gemv_t_cols,
-    gemv_t_cols_sharded,
+    gemv, gemv_cols, gemv_cols_sharded, gemv_cols_sharded_scratch,
+    gemv_compact, gemv_compact_sharded, gemv_t, gemv_t_blocked,
+    gemv_t_blocked_sharded, gemv_t_cols, gemv_t_cols_sharded, T_BLOCK,
 };
 pub use vec_ops::*;
 
@@ -26,6 +27,14 @@ pub struct Mat {
     data: Vec<f64>,
     rows: usize,
     cols: usize,
+}
+
+/// An empty `0 × 0` matrix (placeholder for lazily-built storage, e.g.
+/// the working set's compact dictionary).
+impl Default for Mat {
+    fn default() -> Self {
+        Mat::zeros(0, 0)
+    }
 }
 
 impl Mat {
@@ -129,6 +138,20 @@ impl Mat {
         Mat { data, rows: self.rows, cols: idx.len() }
     }
 
+    /// [`select_columns`](Self::select_columns) into an existing matrix,
+    /// reusing its buffer — the working-set rebuild path, where the
+    /// compact dictionary shrinks monotonically and must never
+    /// reallocate after the first build.
+    pub fn select_columns_into(&self, idx: &[usize], dst: &mut Mat) {
+        dst.data.clear();
+        dst.data.reserve(self.rows * idx.len());
+        for &j in idx {
+            dst.data.extend_from_slice(self.col(j));
+        }
+        dst.rows = self.rows;
+        dst.cols = idx.len();
+    }
+
     /// Squared spectral norm ‖A‖₂² via power iteration on AᵀA —
     /// the FISTA step size is `1 / ‖A‖₂²`.
     pub fn spectral_norm_sq(&self, iters: usize, seed: u64) -> f64 {
@@ -202,6 +225,16 @@ mod tests {
         assert_eq!(s.cols(), 2);
         assert_eq!(s.col(0), &[3.0, 6.0]);
         assert_eq!(s.col(1), &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn select_columns_into_reuses_buffer() {
+        let m = sample();
+        let mut dst = m.select_columns(&[0, 1, 2]);
+        let cap = dst.data.capacity();
+        m.select_columns_into(&[2, 0], &mut dst);
+        assert_eq!(dst, m.select_columns(&[2, 0]));
+        assert_eq!(dst.data.capacity(), cap, "rebuild reallocated");
     }
 
     #[test]

@@ -23,6 +23,7 @@ use holder_screening::path::{solve_path, PathConfig};
 use holder_screening::perfprof::log_tau_grid;
 use holder_screening::regions::RegionKind;
 use holder_screening::solver::{solve, Budget, SolverConfig, SolverKind};
+use holder_screening::workset::CompactionPolicy;
 
 const PROGRAM: &str = "holder-screening";
 
@@ -47,6 +48,18 @@ const SHARD_MIN_FLAG: Flag = Flag::int(
      work below 2x this runs sequentially; never changes results",
 );
 
+/// Rebuild threshold of the physically compacted working-set
+/// dictionary (see `workset::CompactionPolicy`).  Results are bitwise
+/// identical for every value.
+const COMPACTION_FLAG: Flag = Flag::num(
+    "compaction-threshold",
+    Some("0.25"),
+    "physically re-compact the working-set dictionary once this \
+     fraction of its columns has been screened since the last rebuild \
+     (0 = after every removal, 1 = never, negative = disable \
+     compaction entirely); never changes results",
+);
+
 const SOLVE_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[0],
     COMMON_INSTANCE_FLAGS[1],
@@ -55,6 +68,7 @@ const SOLVE_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[4],
     COMMON_INSTANCE_FLAGS[5],
     SHARD_MIN_FLAG,
+    COMPACTION_FLAG,
     Flag::str("region", Some("holder_dome"),
               "screening region: holder_dome | gap_dome | gap_sphere | \
                static_sphere | dynamic_sphere | none"),
@@ -72,6 +86,7 @@ const PATH_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[4],
     COMMON_INSTANCE_FLAGS[5],
     SHARD_MIN_FLAG,
+    COMPACTION_FLAG,
     Flag::str("region", Some("holder_dome"), "screening region or none"),
     Flag::int("points", Some("20"), "lambda grid points"),
     Flag::num("lam-min", Some("0.1"), "smallest lambda / lambda_max"),
@@ -233,6 +248,14 @@ fn par_from_args(args: &Args) -> ParContext {
     ParContext::new_pool(threads_from_args(args), shard_min)
 }
 
+/// Working-set compaction policy (`--compaction-threshold`).
+fn compaction_from_args(args: &Args) -> CompactionPolicy {
+    CompactionPolicy::from_threshold(args.num_or(
+        "compaction-threshold",
+        CompactionPolicy::DEFAULT_THRESHOLD,
+    ))
+}
+
 fn cmd_solve(args: &Args) -> i32 {
     let icfg = instance_from_args(args);
     let inst = generate(&icfg, args.int_or("seed", 0) as u64);
@@ -248,6 +271,7 @@ fn cmd_solve(args: &Args) -> i32 {
         region: region_from_args(args),
         record_trace: args.switch("trace"),
         par: par_from_args(args),
+        compaction: compaction_from_args(args),
         ..Default::default()
     };
     println!(
@@ -284,6 +308,7 @@ fn cmd_path(args: &Args) -> i32 {
             region: region_from_args(args),
             budget: Budget::gap(1e-9),
             par: par_from_args(args),
+            compaction: compaction_from_args(args),
             ..Default::default()
         },
     };

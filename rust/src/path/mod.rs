@@ -10,7 +10,8 @@
 //! "sequential safe rules" literature.
 
 use crate::problem::LassoProblem;
-use crate::solver::{solve_warm, SolveReport, SolverConfig};
+use crate::solver::{solve_warm_ws, SolveReport, SolverConfig};
+use crate::workset::WorkingSet;
 
 /// Configuration of a λ-path run.
 ///
@@ -71,15 +72,22 @@ pub fn lambda_grid(lam_max: f64, num: usize, min_ratio: f64) -> Vec<f64> {
 }
 
 /// Solve the path with warm starts.
+///
+/// One [`WorkingSet`] is carried across the whole grid: each solve
+/// recycles the compact dictionary, cache and scratch buffers of the
+/// previous point (`O(m·k)` capacity, reused instead of reallocated),
+/// while the warm start keeps the first duality gap — and hence the
+/// first screening round — tight.
 pub fn solve_path(base: &LassoProblem, cfg: &PathConfig) -> PathResult {
     let sw = crate::util::timer::Stopwatch::start();
     let grid = lambda_grid(base.lam_max(), cfg.num_lambdas, cfg.lam_min_ratio);
     let mut points = Vec::with_capacity(grid.len());
     let mut warm: Option<Vec<f64>> = None;
     let mut total_flops = 0;
+    let mut ws = WorkingSet::new(cfg.solver.compaction, base.n());
     for lam in grid {
         let p = base.with_lambda(lam);
-        let report = solve_warm(&p, &cfg.solver, warm.as_deref());
+        let report = solve_warm_ws(&p, &cfg.solver, warm.as_deref(), &mut ws);
         total_flops += report.flops;
         warm = Some(report.x.clone());
         points.push(PathPoint {

@@ -45,6 +45,33 @@
 //! Below `2·shard_min` active atoms the engine falls back to the
 //! sequential loop, so endgame rounds (tiny active sets) pay no
 //! dispatch overhead.
+//!
+//! ## The working-set lifecycle (screen → retain → compact → blocked kernels)
+//!
+//! Region tests don't just shrink the active *index list* — they feed
+//! the [`crate::workset::WorkingSet`], which physically re-materializes
+//! the surviving atoms once enough of them are gone:
+//!
+//! 1. **screen** — the engine evaluates this module's per-atom bounds
+//!    and produces a keep mask;
+//! 2. **retain** — `ScreeningState::retain` drops the screened indices
+//!    and the solver compacts its coefficient vectors with the same
+//!    mask;
+//! 3. **compact** — when the removed fraction since the last rebuild
+//!    clears the [`crate::workset::CompactionPolicy`] threshold, the
+//!    surviving columns (plus per-atom `‖a_i‖` / `(Aᵀy)_i` caches used
+//!    by the statistics recipes above) are copied into contiguous
+//!    storage;
+//! 4. **blocked kernels** — subsequent iterations stream that storage
+//!    with the indirection-free matvecs
+//!    ([`crate::linalg::gemv_compact_sharded`],
+//!    [`crate::linalg::gemv_t_blocked_sharded`]), and the screening
+//!    test itself reads the compact stat caches contiguously
+//!    (`ScreeningEngine::compute_keep_ws`).
+//!
+//! The per-atom bound arithmetic is identical in every mode, so the
+//! keep mask — and the whole solve — is bitwise independent of the
+//! compaction policy as well as of threading.
 
 use crate::flops::cost::{self, ScreenSetupKind};
 use crate::geometry::{Ball, Dome, HalfSpace};
@@ -131,29 +158,48 @@ impl SafeRegion {
         x: &[f64],
         ev: &PrimalDualEval,
     ) -> SafeRegion {
+        Self::build_parts(kind, p, x, &ev.u, &ev.r, ev.gap, ev.scale)
+    }
+
+    /// [`build`](Self::build) from borrowed couple parts — the solver
+    /// hot path, where `u` lives in the working set's reusable
+    /// scaled-dual scratch and no `PrimalDualEval` is materialized.
+    ///
+    /// `u` must be the dual-scaled residual `s·r` and `gap`/`scale`
+    /// the matching duality gap and scaling factor; `x` is the compact
+    /// iterate (used only through `λ‖x‖₁` for the Hölder half-space).
+    pub fn build_parts(
+        kind: RegionKind,
+        p: &LassoProblem,
+        x: &[f64],
+        u: &[f64],
+        r: &[f64],
+        gap: f64,
+        scale: f64,
+    ) -> SafeRegion {
         let y = p.y();
-        let s = ev.scale;
+        let s = scale;
         match kind {
             RegionKind::GapSphere => {
-                let radius = (2.0 * ev.gap.max(0.0)).sqrt();
+                let radius = (2.0 * gap.max(0.0)).sqrt();
                 SafeRegion {
                     kind,
-                    geom: RegionGeom::Sphere(Ball::new(ev.u.clone(), radius)),
+                    geom: RegionGeom::Sphere(Ball::new(u.to_vec(), radius)),
                     combo_c: (0.0, s),
                     combo_g: None,
                 }
             }
             RegionKind::GapDome => {
-                let (ball, _) = midpoint_ball(y, &ev.u);
+                let (ball, _) = midpoint_ball(y, u);
                 let radius = ball.radius;
                 // g = y − c = (y − u)/2; δ = ⟨g,c⟩ + gap − R².
                 let g: Vec<f64> = y
                     .iter()
-                    .zip(&ev.u)
+                    .zip(u)
                     .map(|(yi, ui)| 0.5 * (yi - ui))
                     .collect();
-                let delta = linalg::dot(&g, &ball.center) + ev.gap
-                    - radius * radius;
+                let delta =
+                    linalg::dot(&g, &ball.center) + gap - radius * radius;
                 SafeRegion {
                     kind,
                     geom: RegionGeom::Dome(Dome::new(
@@ -165,13 +211,10 @@ impl SafeRegion {
                 }
             }
             RegionKind::HolderDome => {
-                let (ball, _) = midpoint_ball(y, &ev.u);
+                let (ball, _) = midpoint_ball(y, u);
                 // g = Ax = y − r (no matvec); δ = λ‖x‖₁.
-                let g: Vec<f64> = y
-                    .iter()
-                    .zip(&ev.r)
-                    .map(|(yi, ri)| yi - ri)
-                    .collect();
+                let g: Vec<f64> =
+                    y.iter().zip(r).map(|(yi, ri)| yi - ri).collect();
                 let delta = p.lam() * linalg::norm1(x);
                 SafeRegion {
                     kind,
@@ -199,7 +242,7 @@ impl SafeRegion {
                 // Projection property again, with the current u:
                 // ‖y − u*‖ ≤ ‖y − u‖.
                 let mut diff = vec![0.0; y.len()];
-                linalg::sub(y, &ev.u, &mut diff);
+                linalg::sub(y, u, &mut diff);
                 let radius = linalg::norm2(&diff);
                 SafeRegion {
                     kind,

@@ -13,6 +13,7 @@ use crate::flops::FlopCounter;
 use crate::par::ParContext;
 use crate::problem::LassoProblem;
 use crate::regions::SafeRegion;
+use crate::workset::WorkingSet;
 
 /// Stateless screening executor; holds scratch to avoid per-round
 /// allocation.
@@ -50,6 +51,33 @@ impl ScreeningEngine {
         flops: &mut FlopCounter,
         ctx: &ParContext,
     ) -> &[bool] {
+        self.compute_keep_ws(
+            region,
+            p,
+            state,
+            &WorkingSet::gather_only(),
+            atr_compact,
+            flops,
+            ctx,
+        )
+    }
+
+    /// [`compute_keep`](Self::compute_keep) with a [`WorkingSet`]: when
+    /// the working set has materialized its position-aligned `Aᵀy` /
+    /// `‖a_i‖` caches, the test loop reads them contiguously instead of
+    /// gathering per-atom out of the full-length arrays.  The bound
+    /// arithmetic is identical either way, so the mask is bitwise
+    /// independent of the working-set state.
+    pub fn compute_keep_ws(
+        &mut self,
+        region: &SafeRegion,
+        p: &LassoProblem,
+        state: &ScreeningState,
+        ws: &WorkingSet,
+        atr_compact: &[f64],
+        flops: &mut FlopCounter,
+        ctx: &ParContext,
+    ) -> &[bool] {
         let active = state.active();
         assert_eq!(atr_compact.len(), active.len());
         // Numerical guard: support atoms satisfy |⟨a_i, u*⟩| = λ exactly
@@ -59,63 +87,97 @@ impl ScreeningEngine {
         // margin — the loss of screening power is immeasurable, the
         // safety is restored.
         let lam = p.lam() * (1.0 - 1e-9);
-        let aty = p.aty();
-        let norms = p.col_norms();
         self.keep.clear();
         self.keep.resize(active.len(), false);
         let shards = ctx.shards_for(active.len());
-        if shards <= 1 {
-            for (kp, (&j, &atr_k)) in self
-                .keep
-                .iter_mut()
-                .zip(active.iter().zip(atr_compact))
-            {
-                let bound = region.max_abs_inner_stat(aty[j], atr_k, norms[j]);
-                *kp = bound >= lam;
+        if let Some((aty_c, norms_c)) = ws.compact_stats() {
+            debug_assert_eq!(aty_c.len(), active.len());
+            // One bound-test body shared by the sequential whole and
+            // every shard — contiguous reads of the compact caches.
+            let test = |dst: &mut [bool],
+                        aty_s: &[f64],
+                        nrm_s: &[f64],
+                        atr_s: &[f64]| {
+                for (kp, ((&aty_k, &nrm_k), &atr_k)) in
+                    dst.iter_mut().zip(aty_s.iter().zip(nrm_s).zip(atr_s))
+                {
+                    let bound =
+                        region.max_abs_inner_stat(aty_k, atr_k, nrm_k);
+                    *kp = bound >= lam;
+                }
+            };
+            if shards <= 1 {
+                test(&mut self.keep, aty_c, norms_c, atr_compact);
+            } else {
+                let chunk = active.len().div_ceil(shards);
+                let items: Vec<(((&[f64], &[f64]), &[f64]), &mut [bool])> =
+                    aty_c
+                        .chunks(chunk)
+                        .zip(norms_c.chunks(chunk))
+                        .zip(atr_compact.chunks(chunk))
+                        .zip(self.keep.chunks_mut(chunk))
+                        .collect();
+                ctx.run_items(items, |(((aty_s, nrm_s), atr_s), dst)| {
+                    test(dst, aty_s, nrm_s, atr_s);
+                });
             }
         } else {
-            // Contiguous shards writing disjoint mask slices: each
-            // atom's bound is computed exactly as in the sequential
-            // branch, so the mask is bitwise identical.
-            let chunk = active.len().div_ceil(shards);
-            let items: Vec<((&[usize], &[f64]), &mut [bool])> = active
-                .chunks(chunk)
-                .zip(atr_compact.chunks(chunk))
-                .zip(self.keep.chunks_mut(chunk))
-                .collect();
-            ctx.run_items(items, |((idx, atr_c), dst)| {
+            let aty = p.aty();
+            let norms = p.col_norms();
+            // Same bound arithmetic, gathered by original atom index.
+            let test = |dst: &mut [bool], idx: &[usize], atr_s: &[f64]| {
                 for (kp, (&j, &atr_k)) in
-                    dst.iter_mut().zip(idx.iter().zip(atr_c))
+                    dst.iter_mut().zip(idx.iter().zip(atr_s))
                 {
                     let bound =
                         region.max_abs_inner_stat(aty[j], atr_k, norms[j]);
                     *kp = bound >= lam;
                 }
-            });
+            };
+            if shards <= 1 {
+                test(&mut self.keep, active, atr_compact);
+            } else {
+                // Contiguous shards writing disjoint mask slices: each
+                // atom's bound is computed exactly as in the sequential
+                // branch, so the mask is bitwise identical.
+                let chunk = active.len().div_ceil(shards);
+                let items: Vec<((&[usize], &[f64]), &mut [bool])> = active
+                    .chunks(chunk)
+                    .zip(atr_compact.chunks(chunk))
+                    .zip(self.keep.chunks_mut(chunk))
+                    .collect();
+                ctx.run_items(items, |((idx, atr_s), dst)| {
+                    test(dst, idx, atr_s);
+                });
+            }
         }
         flops.charge(region.setup_flops(active.len(), p.m()));
         flops.charge(region.test_flops(active.len()));
         &self.keep
     }
 
-    /// Screen and compact `state` plus the aligned coefficient vectors.
+    /// Screen and compact `state`, the aligned coefficient vectors, and
+    /// the [`WorkingSet`]'s physical storage (which may rebuild per its
+    /// [`crate::workset::CompactionPolicy`]).
     pub fn apply_and_compact(
         &mut self,
         region: &SafeRegion,
         p: &LassoProblem,
         state: &mut ScreeningState,
+        ws: &mut WorkingSet,
         atr_compact: &[f64],
         vectors: &mut [&mut Vec<f64>],
         flops: &mut FlopCounter,
         ctx: &ParContext,
     ) -> ScreenOutcome {
         let tested = state.active_count();
-        self.compute_keep(region, p, state, atr_compact, flops, ctx);
+        self.compute_keep_ws(region, p, state, ws, atr_compact, flops, ctx);
         let keep = std::mem::take(&mut self.keep);
         let removed = state.retain(&keep);
         if removed > 0 {
             super::compact_vectors(&keep, vectors);
         }
+        ws.on_retain(p, state, &keep);
         self.keep = keep; // return scratch
         ScreenOutcome { tested, removed }
     }
@@ -184,6 +246,7 @@ mod tests {
                     &region,
                     &p,
                     &mut state,
+                    &mut WorkingSet::gather_only(),
                     &atr,
                     &mut [],
                     &mut flops,
@@ -232,6 +295,7 @@ mod tests {
                     &region,
                     &p,
                     &mut state,
+                    &mut WorkingSet::gather_only(),
                     &atr,
                     &mut [],
                     &mut flops,
@@ -261,6 +325,7 @@ mod tests {
             &region,
             &p,
             &mut state,
+            &mut WorkingSet::gather_only(),
             &atr,
             &mut [&mut xs],
             &mut flops,
@@ -292,6 +357,7 @@ mod tests {
                 &region,
                 &p,
                 &mut state,
+                &mut WorkingSet::gather_only(),
                 &atr,
                 &mut [],
                 f,
@@ -300,6 +366,80 @@ mod tests {
         }
         // dome test must be charged more than sphere test
         assert!(f_dome.total() > f_sphere.total());
+    }
+
+    #[test]
+    fn compact_stat_caches_give_identical_mask() {
+        use crate::workset::CompactionPolicy;
+        Runner::new(239).cases(10).run("compact keep parity", |g| {
+            let (p, _) = make(g);
+            // Take one screening round to shrink the active set, with a
+            // working set that rebuilds immediately (threshold 0).
+            let mut x = vec![0.0; p.n()];
+            let step = p.default_step();
+            for _ in 0..3 {
+                let ev = p.eval(&x);
+                for i in 0..p.n() {
+                    x[i] = linalg::soft_threshold_scalar(
+                        x[i] + step * ev.atr[i],
+                        step * p.lam(),
+                    );
+                }
+            }
+            let ev = p.eval(&x);
+            let region = SafeRegion::build(RegionKind::HolderDome, &p, &x, &ev);
+            let mut state = ScreeningState::new(p.n());
+            let mut ws =
+                crate::workset::WorkingSet::new(
+                    CompactionPolicy::Threshold(0.0),
+                    p.n(),
+                );
+            let mut engine = ScreeningEngine::new();
+            let mut flops = FlopCounter::new();
+            let mut x_c = x.clone();
+            let atr = ev.atr.clone();
+            let out = engine.apply_and_compact(
+                &region,
+                &p,
+                &mut state,
+                &mut ws,
+                &atr,
+                &mut [&mut x_c],
+                &mut flops,
+                &ParContext::sequential(),
+            );
+            if out.removed == 0 {
+                return Ok(()); // nothing screened this case
+            }
+            if !ws.is_live() {
+                return Err("threshold 0 did not materialize".into());
+            }
+            // Second round: compact-stat path vs full-gather path must
+            // produce the same mask, sequential and sharded.
+            let ev2 = p.eval(&state.scatter(&x_c));
+            let atr2 = state.gather(&ev2.atr);
+            let region2 =
+                SafeRegion::build(RegionKind::HolderDome, &p, &x_c, &ev2);
+            for threads in [1usize, 4] {
+                let ctx = ParContext::new_pool(threads, 1);
+                let with_ws = engine
+                    .compute_keep_ws(
+                        &region2, &p, &state, &ws, &atr2, &mut flops, &ctx,
+                    )
+                    .to_vec();
+                let gather = engine
+                    .compute_keep(
+                        &region2, &p, &state, &atr2, &mut flops, &ctx,
+                    )
+                    .to_vec();
+                if with_ws != gather {
+                    return Err(format!(
+                        "mask diverged with compact stats at {threads} threads"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

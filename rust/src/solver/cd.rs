@@ -7,19 +7,20 @@
 //! cache refresh.
 
 use super::{
-    scaled_dual, to_pde, Budget, EvalOut, SolveReport, SolverConfig,
-    StopReason, TracePoint,
+    build_region, Budget, EvalOut, SolveReport, SolverConfig, StopReason,
+    TracePoint,
 };
 use crate::flops::{cost, FlopCounter};
-use crate::linalg::{self, gemv_cols_sharded, gemv_t_cols_sharded};
+use crate::linalg;
 use crate::problem::{LassoProblem, EPS};
-use crate::regions::SafeRegion;
 use crate::screening::{ScreeningEngine, ScreeningState};
+use crate::workset::WorkingSet;
 
 pub(crate) fn run(
     p: &LassoProblem,
     cfg: &SolverConfig,
     x0: Option<&[f64]>,
+    ws: &mut WorkingSet,
 ) -> SolveReport {
     let Budget { max_iters, max_flops, target_gap } = cfg.budget;
     let mut flops = match max_flops {
@@ -40,7 +41,7 @@ pub(crate) fn run(
     let mut r = vec![0.0; m];
     {
         let nnz = x.iter().filter(|v| **v != 0.0).count();
-        gemv_cols_sharded(p.a(), state.active(), &x, &mut r, &cfg.par);
+        ws.gemv(p, state.active(), &x, &mut r, &cfg.par);
         for (ri, yi) in r.iter_mut().zip(p.y()) {
             *ri = yi - *ri;
         }
@@ -56,12 +57,13 @@ pub(crate) fn run(
                 r: &[f64],
                 atr: &mut Vec<f64>,
                 state: &ScreeningState,
+                ws: &WorkingSet,
                 p: &LassoProblem,
                 flops: &mut FlopCounter|
      -> EvalOut {
         let k = state.active_count();
         atr.resize(k, 0.0);
-        gemv_t_cols_sharded(p.a(), state.active(), r, atr, &cfg.par);
+        ws.gemv_t(p, state.active(), r, atr, &cfg.par);
         flops.charge(cost::gemv_t(m, k));
         let corr = linalg::norm_inf(atr);
         let s = (p.lam() / corr.max(EPS)).min(1.0);
@@ -74,7 +76,7 @@ pub(crate) fn run(
         EvalOut { s, p: pv, d: dv, gap: (pv - dv).max(0.0) }
     };
 
-    let mut ev = eval(&x, &r, &mut atr, &state, p, &mut flops);
+    let mut ev = eval(&x, &r, &mut atr, &state, ws, p, &mut flops);
     let mut trace = Vec::new();
     let push_trace = |it: usize,
                           fl: &FlopCounter,
@@ -101,10 +103,13 @@ pub(crate) fn run(
     } else {
         for it in 1..=max_iters {
             iters = it;
-            // One full sweep.
-            for (k_pos, &j) in state.active().iter().enumerate() {
-                let col = p.a().col(j);
-                let nrm2 = p.col_norms()[j] * p.col_norms()[j];
+            // One full sweep (columns come from the working set:
+            // contiguous compact storage once materialized).
+            let active = state.active();
+            for k_pos in 0..active.len() {
+                let col = ws.col(p, active, k_pos);
+                let nrm = ws.col_norm(p, active, k_pos);
+                let nrm2 = nrm * nrm;
                 if nrm2 < EPS {
                     continue;
                 }
@@ -122,7 +127,7 @@ pub(crate) fn run(
                 flops.charge(cost::dot(m) + 6);
             }
 
-            ev = eval(&x, &r, &mut atr, &state, p, &mut flops);
+            ev = eval(&x, &r, &mut atr, &state, ws, p, &mut flops);
             push_trace(it, &flops, &ev, &state, &mut trace);
             if ev.gap <= target_gap {
                 stop = StopReason::Converged;
@@ -135,19 +140,22 @@ pub(crate) fn run(
 
             if let Some(kind) = cfg.region {
                 if it % cfg.screen_every.max(1) == 0 {
-                    let u = scaled_dual(&r, ev.s, &mut flops);
-                    let pde = to_pde(ev, u, &r, &atr);
-                    let region = SafeRegion::build(kind, p, &x, &pde);
+                    let region = build_region(
+                        kind, p, ws, &x, &r, &ev, &mut flops,
+                    );
                     let keep = engine
-                        .compute_keep(
-                            &region, p, &state, &atr, &mut flops, &cfg.par,
+                        .compute_keep_ws(
+                            &region, p, &state, ws, &atr, &mut flops,
+                            &cfg.par,
                         )
                         .to_vec();
-                    // Incrementally restore residual for dropped nonzeros.
+                    // Incrementally restore residual for dropped
+                    // nonzeros (columns still addressed through the
+                    // pre-retain working set).
                     for (k_pos, &kp) in keep.iter().enumerate() {
                         if !kp && x[k_pos] != 0.0 {
-                            let j = state.active()[k_pos];
-                            linalg::axpy(x[k_pos], p.a().col(j), &mut r);
+                            let col = ws.col(p, state.active(), k_pos);
+                            linalg::axpy(x[k_pos], col, &mut r);
                             flops.charge(cost::axpy(m));
                         }
                     }
@@ -158,6 +166,7 @@ pub(crate) fn run(
                             &mut [&mut x, &mut atr],
                         );
                     }
+                    ws.on_retain(p, &state, &keep);
                 }
             }
         }
@@ -204,7 +213,8 @@ mod tests {
             record_trace: true,
             ..Default::default()
         };
-        let rep = run(&p, &cfg, None);
+        let mut ws = WorkingSet::new(cfg.compaction, p.n());
+        let rep = run(&p, &cfg, None, &mut ws);
         assert_eq!(rep.stop, StopReason::Converged);
         for w in rep.trace.windows(2) {
             assert!(w[1].p <= w[0].p + 1e-12);
@@ -220,7 +230,8 @@ mod tests {
             region: Some(RegionKind::HolderDome),
             ..Default::default()
         };
-        let rep = run(&p, &cfg, None);
+        let mut ws = WorkingSet::new(cfg.compaction, p.n());
+        let rep = run(&p, &cfg, None, &mut ws);
         assert_eq!(rep.stop, StopReason::Converged);
         // The reported gap must agree with an exact recomputation.
         let ev = p.eval(&rep.x);
@@ -231,15 +242,17 @@ mod tests {
     #[test]
     fn cd_matches_fista_solution() {
         let p = inst(2);
+        let cd_cfg = SolverConfig {
+            kind: SolverKind::Cd,
+            budget: Budget::gap(1e-11),
+            region: None,
+            ..Default::default()
+        };
         let cd_rep = run(
             &p,
-            &SolverConfig {
-                kind: SolverKind::Cd,
-                budget: Budget::gap(1e-11),
-                region: None,
-                ..Default::default()
-            },
+            &cd_cfg,
             None,
+            &mut WorkingSet::new(cd_cfg.compaction, p.n()),
         );
         let fista_rep = crate::solver::solve(
             &p,

@@ -23,19 +23,20 @@
 //! (charged), which is rare in practice.
 
 use super::{
-    metered_eval, scaled_dual, to_pde, Budget, SolveReport, SolverConfig,
+    build_region, metered_eval, Budget, SolveReport, SolverConfig,
     StopReason, TracePoint,
 };
 use crate::flops::{cost, FlopCounter};
 use crate::linalg::{self};
 use crate::problem::LassoProblem;
-use crate::regions::SafeRegion;
 use crate::screening::{ScreeningEngine, ScreeningState};
+use crate::workset::WorkingSet;
 
 pub(crate) fn run(
     p: &LassoProblem,
     cfg: &SolverConfig,
     x0: Option<&[f64]>,
+    ws: &mut WorkingSet,
 ) -> SolveReport {
     let Budget { max_iters, max_flops, target_gap } = cfg.budget;
     let mut flops = match max_flops {
@@ -64,7 +65,8 @@ pub(crate) fn run(
     let mut r_cur = vec![0.0; m];
     let mut atr_cur: Vec<f64> = Vec::new();
     let mut ev = metered_eval(
-        p, &state, &x_cur, &mut r_cur, &mut atr_cur, &mut flops, &cfg.par,
+        p, &state, ws, &x_cur, &mut r_cur, &mut atr_cur, &mut flops,
+        &cfg.par,
     );
     let mut r_prev = r_cur.clone();
     let mut atr_prev = atr_cur.clone();
@@ -132,7 +134,7 @@ pub(crate) fn run(
 
             // Fresh evaluation at the new x (the iteration's two matvecs).
             ev = metered_eval(
-                p, &state, &x_cur, &mut r_cur, &mut atr_cur, &mut flops,
+                p, &state, ws, &x_cur, &mut r_cur, &mut atr_cur, &mut flops,
                 &cfg.par,
             );
             record(it, &flops, &ev, &state, &mut trace);
@@ -149,14 +151,14 @@ pub(crate) fn run(
             // Screening round.
             if let Some(kind) = cfg.region {
                 if it % cfg.screen_every.max(1) == 0 {
-                    let u = scaled_dual(&r_cur, ev.s, &mut flops);
-                    let pde = to_pde(ev, u, &r_cur, &atr_cur);
-                    let region = SafeRegion::build(kind, p, &x_cur, &pde);
+                    let region = build_region(
+                        kind, p, ws, &x_cur, &r_cur, &ev, &mut flops,
+                    );
                     // Region construction vector work (c, g): charged as
                     // part of setup_flops inside the engine.
                     let keep = engine
-                        .compute_keep(
-                            &region, p, &state, &atr_cur, &mut flops,
+                        .compute_keep_ws(
+                            &region, p, &state, ws, &atr_cur, &mut flops,
                             &cfg.par,
                         )
                         .to_vec();
@@ -179,37 +181,38 @@ pub(crate) fn run(
                                 &mut atr_prev,
                             ],
                         );
-                        if stale {
-                            // Dropped a nonzero coefficient: recompute
-                            // caches on the reduced dictionary (charged).
-                            ev = metered_eval(
-                                p, &state, &x_cur, &mut r_cur, &mut atr_cur,
-                                &mut flops, &cfg.par,
-                            );
-                            let nnz_prev =
-                                x_prev.iter().filter(|v| **v != 0.0).count();
-                            crate::linalg::gemv_cols_sharded(
-                                p.a(),
-                                state.active(),
-                                &x_prev,
-                                &mut r_prev,
-                                &cfg.par,
-                            );
-                            for (ri, yi) in r_prev.iter_mut().zip(p.y()) {
-                                *ri = yi - *ri;
-                            }
-                            crate::linalg::gemv_t_cols_sharded(
-                                p.a(),
-                                state.active(),
-                                &r_prev,
-                                &mut atr_prev,
-                                &cfg.par,
-                            );
-                            flops.charge(
-                                cost::gemv(m, nnz_prev)
-                                    + cost::gemv_t(m, state.active_count()),
-                            );
+                    }
+                    ws.on_retain(p, &state, &keep);
+                    if removed > 0 && stale {
+                        // Dropped a nonzero coefficient: recompute
+                        // caches on the reduced dictionary (charged).
+                        ev = metered_eval(
+                            p, &state, ws, &x_cur, &mut r_cur, &mut atr_cur,
+                            &mut flops, &cfg.par,
+                        );
+                        let nnz_prev =
+                            x_prev.iter().filter(|v| **v != 0.0).count();
+                        ws.gemv(
+                            p,
+                            state.active(),
+                            &x_prev,
+                            &mut r_prev,
+                            &cfg.par,
+                        );
+                        for (ri, yi) in r_prev.iter_mut().zip(p.y()) {
+                            *ri = yi - *ri;
                         }
+                        ws.gemv_t(
+                            p,
+                            state.active(),
+                            &r_prev,
+                            &mut atr_prev,
+                            &cfg.par,
+                        );
+                        flops.charge(
+                            cost::gemv(m, nnz_prev)
+                                + cost::gemv_t(m, state.active_count()),
+                        );
                     }
                 }
             }
@@ -288,7 +291,8 @@ mod tests {
             region: None,
             ..Default::default()
         };
-        let rep = run(&p, &cfg, None);
+        let mut ws = WorkingSet::new(cfg.compaction, p.n());
+        let rep = run(&p, &cfg, None, &mut ws);
         assert_eq!(rep.iters, 60);
         let d = crate::linalg::max_abs_diff(&rep.x, &x);
         assert!(d < 1e-10, "iterates diverged: {d}");
@@ -306,7 +310,8 @@ mod tests {
             region: Some(RegionKind::HolderDome),
             ..Default::default()
         };
-        let rep = run(&p, &cfg, Some(&x0));
+        let mut ws = WorkingSet::new(cfg.compaction, p.n());
+        let rep = run(&p, &cfg, Some(&x0), &mut ws);
         assert_eq!(rep.stop, StopReason::Converged);
         // Verify the final gap against the unmetered evaluator.
         let ev = p.eval(&rep.x);
@@ -321,7 +326,8 @@ mod tests {
             region: Some(RegionKind::GapDome),
             ..Default::default()
         };
-        let rep = run(&p, &cfg, None);
+        let mut ws = WorkingSet::new(cfg.compaction, p.n());
+        let rep = run(&p, &cfg, None, &mut ws);
         let total: usize = rep.screen_history.iter().sum();
         assert_eq!(total, rep.screened);
         assert_eq!(rep.screened + rep.active, p.n());

@@ -5,19 +5,20 @@
 //! gradient: exactly one `A x` + one `Aᵀ r` per iteration.
 
 use super::{
-    metered_eval, scaled_dual, to_pde, Budget, SolveReport, SolverConfig,
+    build_region, metered_eval, Budget, SolveReport, SolverConfig,
     StopReason, TracePoint,
 };
 use crate::flops::{cost, FlopCounter};
 use crate::linalg::{self};
 use crate::problem::LassoProblem;
-use crate::regions::SafeRegion;
 use crate::screening::{ScreeningEngine, ScreeningState};
+use crate::workset::WorkingSet;
 
 pub(crate) fn run(
     p: &LassoProblem,
     cfg: &SolverConfig,
     x0: Option<&[f64]>,
+    ws: &mut WorkingSet,
 ) -> SolveReport {
     let Budget { max_iters, max_flops, target_gap } = cfg.budget;
     let mut flops = match max_flops {
@@ -37,8 +38,9 @@ pub(crate) fn run(
     };
     let mut r = vec![0.0; m];
     let mut atr: Vec<f64> = Vec::new();
-    let mut ev =
-        metered_eval(p, &state, &x, &mut r, &mut atr, &mut flops, &cfg.par);
+    let mut ev = metered_eval(
+        p, &state, ws, &x, &mut r, &mut atr, &mut flops, &cfg.par,
+    );
 
     let mut trace = Vec::new();
     if cfg.record_trace {
@@ -70,7 +72,7 @@ pub(crate) fn run(
             flops.charge(2 * k as u64 + cost::soft_threshold(k));
 
             ev = metered_eval(
-                p, &state, &x, &mut r, &mut atr, &mut flops, &cfg.par,
+                p, &state, ws, &x, &mut r, &mut atr, &mut flops, &cfg.par,
             );
             if cfg.record_trace {
                 trace.push(TracePoint {
@@ -93,12 +95,13 @@ pub(crate) fn run(
 
             if let Some(kind) = cfg.region {
                 if it % cfg.screen_every.max(1) == 0 {
-                    let u = scaled_dual(&r, ev.s, &mut flops);
-                    let pde = to_pde(ev, u, &r, &atr);
-                    let region = SafeRegion::build(kind, p, &x, &pde);
+                    let region = build_region(
+                        kind, p, ws, &x, &r, &ev, &mut flops,
+                    );
                     let keep = engine
-                        .compute_keep(
-                            &region, p, &state, &atr, &mut flops, &cfg.par,
+                        .compute_keep_ws(
+                            &region, p, &state, ws, &atr, &mut flops,
+                            &cfg.par,
                         )
                         .to_vec();
                     let stale = keep
@@ -111,12 +114,13 @@ pub(crate) fn run(
                             &keep,
                             &mut [&mut x, &mut atr],
                         );
-                        if stale {
-                            ev = metered_eval(
-                                p, &state, &x, &mut r, &mut atr, &mut flops,
-                                &cfg.par,
-                            );
-                        }
+                    }
+                    ws.on_retain(p, &state, &keep);
+                    if removed > 0 && stale {
+                        ev = metered_eval(
+                            p, &state, ws, &x, &mut r, &mut atr, &mut flops,
+                            &cfg.par,
+                        );
                     }
                 }
             }
@@ -159,7 +163,8 @@ mod tests {
             record_trace: true,
             ..Default::default()
         };
-        let rep = run(&p, &scfg, None);
+        let mut ws = WorkingSet::new(scfg.compaction, p.n());
+        let rep = run(&p, &scfg, None, &mut ws);
         // ISTA is a descent method: P must be non-increasing.
         for w in rep.trace.windows(2) {
             assert!(w[1].p <= w[0].p + 1e-12, "{} -> {}", w[0].p, w[1].p);
@@ -178,12 +183,22 @@ mod tests {
             region: None,
             ..Default::default()
         };
-        let b = run(&p, &base_cfg, None);
+        let b = run(
+            &p,
+            &base_cfg,
+            None,
+            &mut WorkingSet::new(base_cfg.compaction, p.n()),
+        );
         let s_cfg = SolverConfig {
             region: Some(RegionKind::HolderDome),
             ..base_cfg
         };
-        let s = run(&p, &s_cfg, None);
+        let s = run(
+            &p,
+            &s_cfg,
+            None,
+            &mut WorkingSet::new(s_cfg.compaction, p.n()),
+        );
         assert!(crate::linalg::max_abs_diff(&b.x, &s.x) < 1e-4);
         assert!(s.flops <= b.flops);
     }

@@ -21,11 +21,12 @@ pub mod fista;
 pub mod ista;
 
 use crate::flops::{cost, FlopCounter};
-use crate::linalg::{self, gemv_cols_sharded, gemv_t_cols_sharded};
+use crate::linalg;
 use crate::par::ParContext;
 use crate::problem::{LassoProblem, EPS};
 use crate::regions::RegionKind;
 use crate::screening::ScreeningState;
+use crate::workset::{CompactionPolicy, WorkingSet};
 
 /// Which solver to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -111,6 +112,11 @@ pub struct SolverConfig {
     /// and screening tests.  Defaults to sequential; results are
     /// bitwise identical for every context (see [`ParContext`]).
     pub par: ParContext,
+    /// When to physically compact the surviving dictionary columns
+    /// into contiguous working-set storage (see [`crate::workset`]).
+    /// Purely a performance knob: results are bitwise identical for
+    /// every policy.
+    pub compaction: CompactionPolicy,
 }
 
 impl Default for SolverConfig {
@@ -122,6 +128,7 @@ impl Default for SolverConfig {
             screen_every: 1,
             record_trace: false,
             par: ParContext::sequential(),
+            compaction: CompactionPolicy::default(),
         }
     }
 }
@@ -185,11 +192,27 @@ pub fn solve_warm(
     cfg: &SolverConfig,
     x0: Option<&[f64]>,
 ) -> SolveReport {
+    let mut ws = WorkingSet::new(cfg.compaction, p.n());
+    solve_warm_ws(p, cfg, x0, &mut ws)
+}
+
+/// [`solve_warm`] with a caller-owned [`WorkingSet`], so repeated
+/// solves (a warm-started λ-path, batch traffic) recycle the compact
+/// storage and scratch buffers instead of reallocating per solve.  The
+/// working set is [`reset`](WorkingSet::reset) for this problem; its
+/// policy governs compaction.
+pub fn solve_warm_ws(
+    p: &LassoProblem,
+    cfg: &SolverConfig,
+    x0: Option<&[f64]>,
+    ws: &mut WorkingSet,
+) -> SolveReport {
     let sw = crate::util::timer::Stopwatch::start();
+    ws.reset(p.n());
     let mut report = match cfg.kind {
-        SolverKind::Fista => fista::run(p, cfg, x0),
-        SolverKind::Ista => ista::run(p, cfg, x0),
-        SolverKind::Cd => cd::run(p, cfg, x0),
+        SolverKind::Fista => fista::run(p, cfg, x0, ws),
+        SolverKind::Ista => ista::run(p, cfg, x0, ws),
+        SolverKind::Cd => cd::run(p, cfg, x0, ws),
     };
     report.wall_secs = sw.elapsed_secs();
     report
@@ -203,10 +226,14 @@ pub fn solve_warm(
 /// iterate.  Returns [`EvalOut`]; `r`/`atr` are written in place.
 ///
 /// All quantities are for the *reduced* problem on the active set, which
-/// is safe for screening (see [`crate::screening`] module docs).
+/// is safe for screening (see [`crate::screening`] module docs).  The
+/// matvecs run through `ws` — contiguous compact storage when the
+/// working set has materialized, index gathers otherwise; bitwise
+/// identical either way.
 pub(crate) fn metered_eval(
     p: &LassoProblem,
     state: &ScreeningState,
+    ws: &mut WorkingSet,
     x_c: &[f64],
     r: &mut Vec<f64>,
     atr: &mut Vec<f64>,
@@ -217,14 +244,14 @@ pub(crate) fn metered_eval(
     let k = state.active_count();
     let nnz = x_c.iter().filter(|v| **v != 0.0).count();
     // r = y − A x (row-sharded; bitwise identical to sequential)
-    gemv_cols_sharded(p.a(), state.active(), x_c, r, ctx);
+    ws.gemv(p, state.active(), x_c, r, ctx);
     for (ri, yi) in r.iter_mut().zip(p.y()) {
         *ri = yi - *ri;
     }
     flops.charge(cost::gemv(m, nnz) + (m as u64));
-    // atr = Aᵀ r over the active set (column-sharded)
+    // atr = Aᵀ r over the active set (column-sharded / cache-blocked)
     atr.resize(k, 0.0);
-    gemv_t_cols_sharded(p.a(), state.active(), r, atr, ctx);
+    ws.gemv_t(p, state.active(), r, atr, ctx);
     flops.charge(cost::gemv_t(m, k));
     // dual scaling
     let corr = linalg::norm_inf(atr);
@@ -252,30 +279,22 @@ pub(crate) struct EvalOut {
     pub gap: f64,
 }
 
-/// Build the scaled dual point `u = s·r` (allocates; only on screening
-/// rounds, charged `m`).
-pub(crate) fn scaled_dual(r: &[f64], s: f64, flops: &mut FlopCounter) -> Vec<f64> {
-    flops.charge(r.len() as u64);
-    r.iter().map(|ri| s * ri).collect()
-}
-
-/// Convert an [`EvalOut`] + residual into a [`crate::problem::PrimalDualEval`]
-/// for region construction.  `atr_full_or_compact` is passed through.
-pub(crate) fn to_pde(
-    ev: EvalOut,
-    u: Vec<f64>,
+/// One screening round's region construction: the scaled dual point
+/// `u = s·r` goes through the working set's reusable scratch (charged
+/// `m`, allocation-free after the first round) and the region is built
+/// from borrowed parts — no `PrimalDualEval` is materialized on the
+/// hot path.
+pub(crate) fn build_region(
+    kind: RegionKind,
+    p: &LassoProblem,
+    ws: &mut WorkingSet,
+    x_c: &[f64],
     r: &[f64],
-    atr: &[f64],
-) -> crate::problem::PrimalDualEval {
-    crate::problem::PrimalDualEval {
-        p: ev.p,
-        d: ev.d,
-        gap: ev.gap,
-        u,
-        r: r.to_vec(),
-        atr: atr.to_vec(),
-        scale: ev.s,
-    }
+    ev: &EvalOut,
+    flops: &mut FlopCounter,
+) -> crate::regions::SafeRegion {
+    let u = ws.scaled_dual(r, ev.s, flops);
+    crate::regions::SafeRegion::build_parts(kind, p, x_c, u, r, ev.gap, ev.s)
 }
 
 #[cfg(test)]
@@ -299,9 +318,11 @@ mod tests {
         let mut r = vec![0.0; p.m()];
         let mut atr = Vec::new();
         let mut flops = FlopCounter::new();
+        let mut ws = WorkingSet::new(CompactionPolicy::default(), p.n());
         let out = metered_eval(
             &p,
             &state,
+            &mut ws,
             &x,
             &mut r,
             &mut atr,

@@ -1,0 +1,538 @@
+//! The physically compacted working set — contiguous storage for the
+//! atoms that survive screening, plus the policy deciding *when* the
+//! copy is worth it.
+//!
+//! ## Why
+//!
+//! Screening shrinks the active set fast (the whole point of the
+//! paper's Hölder dome), but a solver that keeps *gathering* the
+//! surviving columns by index out of the full `m × n` dictionary
+//! streams scattered, prefetch-hostile memory on every iteration.
+//! Once 90% of the atoms are gone, the per-iteration matvecs touch
+//! only ~10% of the matrix — spread across all of it.  Materializing
+//! the survivors into a contiguous [`Mat`] costs one `O(m·k)` copy and
+//! turns every subsequent matvec into a pure sequential stream
+//! ([`crate::linalg::gemv_compact_sharded`],
+//! [`crate::linalg::gemv_t_blocked_sharded`]).
+//!
+//! ## Lifecycle (screen → retain → compact → blocked kernels)
+//!
+//! 1. The solver screens and calls `ScreeningState::retain`.
+//! 2. [`WorkingSet::on_retain`] updates its column map; while the
+//!    storage is stale it keeps *gathering* — out of the compact store
+//!    if one exists (already a smaller footprint), else out of the
+//!    full dictionary.
+//! 3. When the fraction of columns removed since the last rebuild
+//!    exceeds the [`CompactionPolicy`] threshold, the survivors are
+//!    physically re-materialized (columns, `‖a_i‖` and `(Aᵀy)_i`
+//!    caches), and the index indirection disappears.
+//! 4. Contiguous storage enables the cache-blocked kernels until the
+//!    next rebuild.
+//!
+//! ## Determinism
+//!
+//! Compaction never changes results: compact columns are bit-exact
+//! copies, the compact kernels accumulate in the exact sequential
+//! operation order of their gather counterparts, and the flop meter is
+//! charged identically (the copy is pure data movement — zero flops,
+//! see [`crate::flops`]).  `SolveReport`s are therefore **bitwise
+//! identical** for every policy (disabled / any threshold) and thread
+//! count (`rust/tests/workset_parity.rs`).
+
+use crate::flops::FlopCounter;
+use crate::linalg::{self, Mat};
+use crate::par::ParContext;
+use crate::problem::LassoProblem;
+use crate::screening::ScreeningState;
+
+/// When to physically rebuild the compact working-set storage.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompactionPolicy {
+    /// Never materialize: always gather out of the full dictionary
+    /// (the pre-working-set behavior; useful as a baseline).
+    Disabled,
+    /// Rebuild once the fraction of columns removed since the last
+    /// (re)build exceeds this value.  `0.0` re-compacts after every
+    /// removing round; `1.0` never re-compacts (equivalent to
+    /// [`Disabled`](Self::Disabled) in all but name).  The copy is
+    /// `O(m·k)` once and is amortized over the many iterations until
+    /// the next screening round.
+    Threshold(f64),
+}
+
+impl CompactionPolicy {
+    /// Default rebuild threshold: a quarter of the working set gone
+    /// since the last build.  Low enough that the blocked kernels see
+    /// mostly-contiguous storage, high enough that rebuild copies stay
+    /// rare.
+    pub const DEFAULT_THRESHOLD: f64 = 0.25;
+
+    /// CLI adapter: negative values disable compaction.
+    pub fn from_threshold(t: f64) -> CompactionPolicy {
+        if t < 0.0 {
+            CompactionPolicy::Disabled
+        } else {
+            CompactionPolicy::Threshold(t)
+        }
+    }
+}
+
+impl Default for CompactionPolicy {
+    fn default() -> Self {
+        CompactionPolicy::Threshold(Self::DEFAULT_THRESHOLD)
+    }
+}
+
+/// Contiguous storage + scratch for one solve's surviving atoms.
+///
+/// Owned by the solver loop (or reused across a λ-path's solves — the
+/// buffers shrink monotonically within a solve and are recycled by
+/// [`reset`](Self::reset)), and threaded through the solvers' metered
+/// evaluation and the [`crate::screening::ScreeningEngine`].
+#[derive(Clone, Debug, Default)]
+pub struct WorkingSet {
+    policy: CompactionPolicy,
+    /// Compact column storage; meaningful only while `live`.
+    a_c: Mat,
+    /// `‖a_i‖` for each *current* active position (compacted on every
+    /// retain while live).
+    norms_c: Vec<f64>,
+    /// `(Aᵀy)_i` for each current active position (ditto).
+    aty_c: Vec<f64>,
+    /// Column of `a_c` holding the atom at each current active
+    /// position; identity right after a rebuild.
+    pos: Vec<usize>,
+    /// Storage has been materialized at least once this solve.
+    live: bool,
+    /// `pos` is the identity — the blocked/compact kernels apply.
+    contiguous: bool,
+    /// Active-column count at the last (re)build (or solve start).
+    cols_at_build: usize,
+    /// Physical rebuilds performed over this value's lifetime.
+    rebuilds: usize,
+    /// Reusable (column, coefficient) scratch for the row-sharded `Ax`.
+    nz: Vec<(usize, f64)>,
+    /// Reusable scaled-dual buffer (`u = s·r`, one per screening round).
+    u: Vec<f64>,
+}
+
+impl WorkingSet {
+    /// A working set for a fresh solve over `n` atoms.
+    pub fn new(policy: CompactionPolicy, n: usize) -> Self {
+        WorkingSet { policy, cols_at_build: n, ..Default::default() }
+    }
+
+    /// A permanently-gathering working set (used where no compaction
+    /// context exists, e.g. standalone screening-engine calls).
+    pub fn gather_only() -> Self {
+        Self::new(CompactionPolicy::Disabled, 0)
+    }
+
+    /// Recycle for another solve over `n` atoms (λ-path carry-over:
+    /// the heap buffers — compact matrix, caches, scratch — keep their
+    /// capacity).
+    pub fn reset(&mut self, n: usize) {
+        self.live = false;
+        self.contiguous = false;
+        self.pos.clear();
+        self.cols_at_build = n;
+    }
+
+    pub fn policy(&self) -> CompactionPolicy {
+        self.policy
+    }
+
+    /// Has the compact storage been materialized this solve?
+    pub fn is_live(&self) -> bool {
+        self.live
+    }
+
+    /// Is the storage physically contiguous (blocked kernels active)?
+    pub fn is_contiguous(&self) -> bool {
+        self.contiguous
+    }
+
+    /// Physical rebuilds performed so far (diagnostics).
+    pub fn rebuilds(&self) -> usize {
+        self.rebuilds
+    }
+
+    /// `out = A x` over the active set (`x` compact, aligned with
+    /// `active`).  Dispatches to the contiguous, compact-gather or
+    /// full-gather kernel; all three are bitwise identical.
+    pub fn gemv(
+        &mut self,
+        p: &LassoProblem,
+        active: &[usize],
+        x: &[f64],
+        out: &mut [f64],
+        ctx: &ParContext,
+    ) {
+        assert_eq!(x.len(), active.len(), "WorkingSet::gemv: x length");
+        if self.live {
+            debug_assert_eq!(self.pos.len(), active.len());
+            if self.contiguous {
+                linalg::gemv_compact_sharded(
+                    &self.a_c, x, out, ctx, &mut self.nz,
+                );
+            } else {
+                linalg::gemv_cols_sharded_scratch(
+                    &self.a_c, &self.pos, x, out, ctx, &mut self.nz,
+                );
+            }
+        } else {
+            linalg::gemv_cols_sharded_scratch(
+                p.a(),
+                active,
+                x,
+                out,
+                ctx,
+                &mut self.nz,
+            );
+        }
+    }
+
+    /// `out[k] = ⟨a_{active[k]}, r⟩` over the active set.  Contiguous
+    /// storage uses the cache-blocked kernel; results are bitwise
+    /// identical either way.
+    pub fn gemv_t(
+        &self,
+        p: &LassoProblem,
+        active: &[usize],
+        r: &[f64],
+        out: &mut [f64],
+        ctx: &ParContext,
+    ) {
+        assert_eq!(out.len(), active.len(), "WorkingSet::gemv_t: out length");
+        if self.live {
+            debug_assert_eq!(self.pos.len(), active.len());
+            if self.contiguous {
+                linalg::gemv_t_blocked_sharded(&self.a_c, r, out, ctx);
+            } else {
+                linalg::gemv_t_cols_sharded(&self.a_c, &self.pos, r, out, ctx);
+            }
+        } else {
+            linalg::gemv_t_cols_sharded(p.a(), active, r, out, ctx);
+        }
+    }
+
+    /// The atom column at active position `k` (CD's inner loop).
+    pub fn col<'a>(
+        &'a self,
+        p: &'a LassoProblem,
+        active: &[usize],
+        k: usize,
+    ) -> &'a [f64] {
+        if self.live {
+            self.a_c.col(self.pos[k])
+        } else {
+            p.a().col(active[k])
+        }
+    }
+
+    /// `‖a_i‖` for the atom at active position `k`.
+    pub fn col_norm(
+        &self,
+        p: &LassoProblem,
+        active: &[usize],
+        k: usize,
+    ) -> f64 {
+        if self.live {
+            self.norms_c[k]
+        } else {
+            p.col_norms()[active[k]]
+        }
+    }
+
+    /// Position-aligned `(Aᵀy, ‖a_i‖)` caches for the screening test,
+    /// when materialized — contiguous reads instead of per-atom gathers
+    /// out of the full-length arrays.
+    pub fn compact_stats(&self) -> Option<(&[f64], &[f64])> {
+        if self.live {
+            Some((&self.aty_c, &self.norms_c))
+        } else {
+            None
+        }
+    }
+
+    /// The scaled dual point `u = s·r` in a reusable buffer (one
+    /// allocation per solve instead of one per screening round);
+    /// charged `m` flops exactly like the vector scale it replaces.
+    pub fn scaled_dual(
+        &mut self,
+        r: &[f64],
+        s: f64,
+        flops: &mut FlopCounter,
+    ) -> &[f64] {
+        flops.charge(r.len() as u64);
+        self.u.clear();
+        self.u.extend(r.iter().map(|ri| s * ri));
+        &self.u
+    }
+
+    /// Post-retain hook: `keep` is the mask just applied to `state`
+    /// (indexed by *previous* active position).  Updates the column
+    /// map and caches, then rebuilds the physical storage if the
+    /// removed-since-build fraction clears the policy threshold.
+    pub fn on_retain(
+        &mut self,
+        p: &LassoProblem,
+        state: &ScreeningState,
+        keep: &[bool],
+    ) {
+        let threshold = match self.policy {
+            CompactionPolicy::Disabled => return,
+            CompactionPolicy::Threshold(t) => t,
+        };
+        if self.live {
+            // Keep pos / norms / aty aligned with the new active
+            // positions (O(k) — negligible next to the matvecs).  The
+            // f64 caches go through the same mask-compaction helper the
+            // solvers use for their coefficient vectors.
+            crate::screening::compact_vectors(
+                keep,
+                &mut [&mut self.norms_c, &mut self.aty_c],
+            );
+            let mut k = 0;
+            self.pos.retain(|_| {
+                let b = keep[k];
+                k += 1;
+                b
+            });
+            self.contiguous =
+                self.pos.iter().enumerate().all(|(i, &c)| i == c);
+        }
+        let k_now = state.active_count();
+        let removed = self.cols_at_build.saturating_sub(k_now);
+        let frac = removed as f64 / self.cols_at_build.max(1) as f64;
+        if removed > 0 && frac > threshold {
+            self.rebuild(p, state);
+        }
+    }
+
+    /// Materialize the current active set: contiguous columns plus the
+    /// `‖a_i‖` / `(Aᵀy)_i` caches.  Pure data movement — no flops.
+    fn rebuild(&mut self, p: &LassoProblem, state: &ScreeningState) {
+        let active = state.active();
+        p.a().select_columns_into(active, &mut self.a_c);
+        self.norms_c.clear();
+        self.aty_c.clear();
+        for &j in active {
+            self.norms_c.push(p.col_norms()[j]);
+            self.aty_c.push(p.aty()[j]);
+        }
+        self.pos.clear();
+        self.pos.extend(0..active.len());
+        self.live = true;
+        self.contiguous = true;
+        self.cols_at_build = active.len();
+        self.rebuilds += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::Gen;
+
+    fn problem(seed: u64, m: usize, n: usize) -> LassoProblem {
+        let mut g = Gen::for_case(seed, 0);
+        let a = g.dictionary(m, n);
+        let y = g.observation(m);
+        let mut aty = vec![0.0; n];
+        linalg::gemv_t(&a, &y, &mut aty);
+        let lam = 0.5 * linalg::norm_inf(&aty).max(1e-9);
+        LassoProblem::new(a, y, lam)
+    }
+
+    /// Drop every `period`-th active atom, returning the applied mask.
+    fn drop_every(
+        state: &mut ScreeningState,
+        ws: &mut WorkingSet,
+        p: &LassoProblem,
+        period: usize,
+    ) -> Vec<bool> {
+        let keep: Vec<bool> = (0..state.active_count())
+            .map(|k| k % period != 0)
+            .collect();
+        state.retain(&keep);
+        ws.on_retain(p, state, &keep);
+        keep
+    }
+
+    /// The working set's matvecs must be bitwise identical to the
+    /// full-dictionary gather kernels at every lifecycle stage.
+    fn assert_matvec_parity(
+        ws: &mut WorkingSet,
+        p: &LassoProblem,
+        state: &ScreeningState,
+        seed: u64,
+    ) {
+        let mut g = Gen::for_case(seed, 1);
+        let k = state.active_count();
+        let x: Vec<f64> = (0..k)
+            .map(|i| if i % 3 == 0 { 0.0 } else { g.f64_in(-1.0, 1.0) })
+            .collect();
+        let r: Vec<f64> = (0..p.m()).map(|_| g.f64_in(-1.0, 1.0)).collect();
+        let ctx = ParContext::new_pool(4, 1);
+
+        let mut want_ax = vec![0.0; p.m()];
+        linalg::gemv_cols(p.a(), state.active(), &x, &mut want_ax);
+        let mut got_ax = vec![f64::NAN; p.m()];
+        ws.gemv(p, state.active(), &x, &mut got_ax, &ctx);
+        for (w, got) in want_ax.iter().zip(&got_ax) {
+            assert_eq!(w.to_bits(), got.to_bits(), "Ax drift");
+        }
+
+        let mut want_atr = vec![0.0; k];
+        linalg::gemv_t_cols(p.a(), state.active(), &r, &mut want_atr);
+        let mut got_atr = vec![f64::NAN; k];
+        ws.gemv_t(p, state.active(), &r, &mut got_atr, &ctx);
+        for (w, got) in want_atr.iter().zip(&got_atr) {
+            assert_eq!(w.to_bits(), got.to_bits(), "Atr drift");
+        }
+
+        for (kp, &j) in state.active().iter().enumerate() {
+            assert_eq!(ws.col(p, state.active(), kp), p.a().col(j));
+            assert_eq!(
+                ws.col_norm(p, state.active(), kp).to_bits(),
+                p.col_norms()[j].to_bits()
+            );
+        }
+        if let Some((aty_c, norms_c)) = ws.compact_stats() {
+            for (kp, &j) in state.active().iter().enumerate() {
+                assert_eq!(aty_c[kp].to_bits(), p.aty()[j].to_bits());
+                assert_eq!(norms_c[kp].to_bits(), p.col_norms()[j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn policy_parsing_and_default() {
+        assert_eq!(
+            CompactionPolicy::from_threshold(-1.0),
+            CompactionPolicy::Disabled
+        );
+        assert_eq!(
+            CompactionPolicy::from_threshold(0.5),
+            CompactionPolicy::Threshold(0.5)
+        );
+        assert_eq!(
+            CompactionPolicy::default(),
+            CompactionPolicy::Threshold(CompactionPolicy::DEFAULT_THRESHOLD)
+        );
+    }
+
+    #[test]
+    fn lifecycle_gather_then_compact_then_stale_then_rebuild() {
+        let p = problem(1, 17, 60);
+        let mut state = ScreeningState::new(p.n());
+        let mut ws =
+            WorkingSet::new(CompactionPolicy::Threshold(0.25), p.n());
+        assert!(!ws.is_live());
+        assert_matvec_parity(&mut ws, &p, &state, 10);
+
+        // Round 1: drop half — 0.5 > 0.25 triggers the first rebuild.
+        drop_every(&mut state, &mut ws, &p, 2);
+        assert!(ws.is_live());
+        assert!(ws.is_contiguous());
+        assert_eq!(ws.rebuilds(), 1);
+        assert_matvec_parity(&mut ws, &p, &state, 11);
+
+        // Round 2: drop 1 atom of 30 — below threshold: stale gather.
+        let keep: Vec<bool> =
+            (0..state.active_count()).map(|k| k != 5).collect();
+        state.retain(&keep);
+        ws.on_retain(&p, &state, &keep);
+        assert!(ws.is_live());
+        assert!(!ws.is_contiguous());
+        assert_eq!(ws.rebuilds(), 1);
+        assert_matvec_parity(&mut ws, &p, &state, 12);
+
+        // Round 3: drop half again — cumulative fraction clears 0.25.
+        drop_every(&mut state, &mut ws, &p, 2);
+        assert_eq!(ws.rebuilds(), 2);
+        assert!(ws.is_contiguous());
+        assert_matvec_parity(&mut ws, &p, &state, 13);
+    }
+
+    #[test]
+    fn tail_only_removal_stays_contiguous() {
+        let p = problem(2, 9, 40);
+        let mut state = ScreeningState::new(p.n());
+        let mut ws = WorkingSet::new(CompactionPolicy::Threshold(0.3), p.n());
+        drop_every(&mut state, &mut ws, &p, 2); // rebuild
+        assert!(ws.is_contiguous());
+        // Drop the last few atoms only: pos stays a prefix identity, so
+        // the blocked kernels keep applying without a rebuild.
+        let k = state.active_count();
+        let keep: Vec<bool> = (0..k).map(|i| i < k - 3).collect();
+        state.retain(&keep);
+        ws.on_retain(&p, &state, &keep);
+        assert_eq!(ws.rebuilds(), 1);
+        assert!(ws.is_contiguous());
+        assert_matvec_parity(&mut ws, &p, &state, 14);
+    }
+
+    #[test]
+    fn threshold_extremes() {
+        let p = problem(3, 11, 50);
+        // 0.0: every removing round rebuilds.
+        let mut state = ScreeningState::new(p.n());
+        let mut ws = WorkingSet::new(CompactionPolicy::Threshold(0.0), p.n());
+        drop_every(&mut state, &mut ws, &p, 5);
+        assert_eq!(ws.rebuilds(), 1);
+        drop_every(&mut state, &mut ws, &p, 5);
+        assert_eq!(ws.rebuilds(), 2);
+        assert!(ws.is_contiguous());
+        assert_matvec_parity(&mut ws, &p, &state, 15);
+        // 1.0: never rebuilds.
+        let mut state = ScreeningState::new(p.n());
+        let mut ws = WorkingSet::new(CompactionPolicy::Threshold(1.0), p.n());
+        drop_every(&mut state, &mut ws, &p, 2);
+        drop_every(&mut state, &mut ws, &p, 2);
+        assert!(!ws.is_live());
+        assert_eq!(ws.rebuilds(), 0);
+        assert_matvec_parity(&mut ws, &p, &state, 16);
+        // Disabled: identical behavior to 1.0.
+        let mut state = ScreeningState::new(p.n());
+        let mut ws = WorkingSet::new(CompactionPolicy::Disabled, p.n());
+        drop_every(&mut state, &mut ws, &p, 2);
+        assert!(!ws.is_live());
+        assert_matvec_parity(&mut ws, &p, &state, 17);
+    }
+
+    #[test]
+    fn scaled_dual_scratch_matches_and_reuses() {
+        let p = problem(4, 8, 20);
+        let mut ws = WorkingSet::new(CompactionPolicy::default(), p.n());
+        let mut g = Gen::for_case(4, 2);
+        let r: Vec<f64> = (0..p.m()).map(|_| g.f64_in(-2.0, 2.0)).collect();
+        let s = 0.73_f64;
+        let mut flops = FlopCounter::new();
+        let u1 = ws.scaled_dual(&r, s, &mut flops).to_vec();
+        for (ui, ri) in u1.iter().zip(&r) {
+            assert_eq!(ui.to_bits(), (s * ri).to_bits());
+        }
+        assert_eq!(flops.total(), p.m() as u64);
+        let cap = ws.u.capacity();
+        let _ = ws.scaled_dual(&r, 0.5, &mut flops);
+        assert_eq!(ws.u.capacity(), cap, "scaled-dual buffer reallocated");
+    }
+
+    #[test]
+    fn reset_recycles_buffers() {
+        let p = problem(5, 10, 30);
+        let mut state = ScreeningState::new(p.n());
+        let mut ws = WorkingSet::new(CompactionPolicy::Threshold(0.1), p.n());
+        drop_every(&mut state, &mut ws, &p, 2);
+        assert!(ws.is_live());
+        let rebuilds = ws.rebuilds();
+        ws.reset(p.n());
+        assert!(!ws.is_live());
+        assert!(!ws.is_contiguous());
+        assert_eq!(ws.rebuilds(), rebuilds, "rebuild count is lifetime-wide");
+        let state2 = ScreeningState::new(p.n());
+        assert_matvec_parity(&mut ws, &p, &state2, 18);
+    }
+}

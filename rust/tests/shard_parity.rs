@@ -19,6 +19,7 @@ use holder_screening::proptest::{Gen, Runner};
 use holder_screening::regions::{RegionKind, SafeRegion};
 use holder_screening::screening::{ScreeningEngine, ScreeningState};
 use holder_screening::solver::{solve, Budget, SolverConfig};
+use holder_screening::workset::WorkingSet;
 
 /// Pool widths that, combined with `shard_min = 1`, force 1 / 2 / 8
 /// shards (capped by the active-set size).
@@ -132,6 +133,7 @@ fn screen_outcome_identical_for_1_2_8_shards() {
                     &region,
                     &p,
                     &mut state,
+                    &mut WorkingSet::gather_only(),
                     &atr,
                     &mut [],
                     &mut flops,

@@ -1,0 +1,192 @@
+//! Parity tests for the physically compacted working set: enabling
+//! compaction — at any threshold, on any thread count, for any solver —
+//! must be **bitwise invisible** in the `SolveReport`.
+//!
+//! This is the safety net for the working-set design promise: compact
+//! columns are bit-exact copies, `gemv_compact` accumulates the active
+//! columns in the sequential order, every column of `gemv_t_blocked`
+//! replays `dot`'s exact 4-accumulator pattern, and the flop meter
+//! never sees the copy (pure data movement).  If any of those drifts
+//! by one ulp, these tests fail.
+
+use holder_screening::linalg;
+use holder_screening::par::ParContext;
+use holder_screening::path::{solve_path, PathConfig};
+use holder_screening::problem::LassoProblem;
+use holder_screening::proptest::Gen;
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{
+    solve, Budget, SolveReport, SolverConfig, SolverKind,
+};
+use holder_screening::workset::CompactionPolicy;
+
+/// The compaction policies under test: disabled, rebuild-always,
+/// default, rebuild-never (the threshold extremes of the policy).
+const POLICIES: [CompactionPolicy; 4] = [
+    CompactionPolicy::Disabled,
+    CompactionPolicy::Threshold(0.0),
+    CompactionPolicy::Threshold(0.25),
+    CompactionPolicy::Threshold(1.0),
+];
+
+/// Pool widths exercised with `shard_min = 1` (maximal sharding).
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn problem(seed: u64, m: usize, n: usize, lam_ratio: f64) -> LassoProblem {
+    let mut g = Gen::for_case(seed, 0);
+    let a = g.dictionary(m, n);
+    let y = g.observation(m);
+    let mut aty = vec![0.0; n];
+    linalg::gemv_t(&a, &y, &mut aty);
+    let lam = lam_ratio * linalg::norm_inf(&aty).max(1e-9);
+    LassoProblem::new(a, y, lam)
+}
+
+fn assert_reports_bitwise(a: &SolveReport, b: &SolveReport, what: &str) {
+    assert_eq!(a.iters, b.iters, "{what}: iters");
+    assert_eq!(a.flops, b.flops, "{what}: flops");
+    assert_eq!(a.screened, b.screened, "{what}: screened");
+    assert_eq!(a.active, b.active, "{what}: active");
+    assert_eq!(a.screen_history, b.screen_history, "{what}: history");
+    assert_eq!(a.stop, b.stop, "{what}: stop reason");
+    assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "{what}: gap");
+    assert_eq!(a.p.to_bits(), b.p.to_bits(), "{what}: primal");
+    assert_eq!(a.d.to_bits(), b.d.to_bits(), "{what}: dual");
+    assert_eq!(a.x.len(), b.x.len(), "{what}: x length");
+    for (i, (va, vb)) in a.x.iter().zip(&b.x).enumerate() {
+        assert_eq!(va.to_bits(), vb.to_bits(), "{what}: x[{i}]");
+    }
+}
+
+/// The acceptance-level guarantee: for each solver, every
+/// (threads, compaction) combination yields the same report, bit for
+/// bit, as the sequential uncompacted baseline.
+#[test]
+fn solve_reports_bitwise_identical_across_compaction_and_threads() {
+    // lam_ratio 0.7: plenty of screening, so compaction genuinely
+    // fires (checked below via screened > 0).
+    let p = problem(101, 40, 300, 0.7);
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        let mk = |par: ParContext, compaction: CompactionPolicy| {
+            SolverConfig {
+                kind,
+                budget: Budget::gap(1e-10),
+                region: Some(RegionKind::HolderDome),
+                par,
+                compaction,
+                ..Default::default()
+            }
+        };
+        let base =
+            solve(&p, &mk(ParContext::sequential(), CompactionPolicy::Disabled));
+        assert!(base.screened > 0, "{kind:?}: screening never fired");
+        for threads in THREADS {
+            for policy in POLICIES {
+                let rep =
+                    solve(&p, &mk(ParContext::new_pool(threads, 1), policy));
+                assert_reports_bitwise(
+                    &base,
+                    &rep,
+                    &format!("{kind:?} {threads}t {policy:?}"),
+                );
+            }
+        }
+    }
+}
+
+/// Warm starts put nonzero coefficients in play before the first
+/// screening round, exercising the stale-cache refresh path through
+/// the working set.
+#[test]
+fn warm_started_solves_bitwise_identical() {
+    let p = problem(103, 30, 200, 0.8);
+    let mut g = Gen::for_case(7, 0);
+    let x0 = g.vec_sparse(p.n(), p.n() / 3);
+    let mk = |compaction: CompactionPolicy| SolverConfig {
+        kind: SolverKind::Fista,
+        budget: Budget::gap(1e-10),
+        region: Some(RegionKind::HolderDome),
+        compaction,
+        ..Default::default()
+    };
+    let base = holder_screening::solver::solve_warm(
+        &p,
+        &mk(CompactionPolicy::Disabled),
+        Some(&x0),
+    );
+    for policy in POLICIES {
+        let rep = holder_screening::solver::solve_warm(
+            &p,
+            &mk(policy),
+            Some(&x0),
+        );
+        assert_reports_bitwise(&base, &rep, &format!("warm {policy:?}"));
+    }
+}
+
+/// A warm-started λ-path with the carried-over working set must match
+/// the uncompacted path point for point, bit for bit.
+#[test]
+fn lambda_path_bitwise_identical_across_compaction() {
+    let p = problem(107, 25, 150, 0.5);
+    let mk = |par: ParContext, compaction: CompactionPolicy| PathConfig {
+        num_lambdas: 6,
+        lam_min_ratio: 0.15,
+        solver: SolverConfig {
+            budget: Budget::gap(1e-9),
+            region: Some(RegionKind::HolderDome),
+            par,
+            compaction,
+            ..Default::default()
+        },
+    };
+    let base =
+        solve_path(&p, &mk(ParContext::sequential(), CompactionPolicy::Disabled));
+    let screened_somewhere =
+        base.points.iter().any(|pt| pt.report.screened > 0);
+    assert!(screened_somewhere, "path never screened");
+    for threads in [1usize, 4] {
+        for policy in POLICIES {
+            let res =
+                solve_path(&p, &mk(ParContext::new_pool(threads, 1), policy));
+            assert_eq!(base.total_flops, res.total_flops, "{policy:?}");
+            assert_eq!(base.points.len(), res.points.len());
+            for (a, b) in base.points.iter().zip(&res.points) {
+                assert_eq!(a.lam.to_bits(), b.lam.to_bits());
+                assert_reports_bitwise(
+                    &a.report,
+                    &b.report,
+                    &format!("path λ={:.4} {threads}t {policy:?}", a.lam),
+                );
+            }
+        }
+    }
+}
+
+/// Each region kind composes with compaction (the engine's compact
+/// stat caches cover all five test recipes).
+#[test]
+fn every_region_kind_bitwise_identical_under_compaction() {
+    let p = problem(109, 20, 120, 0.6);
+    for region in RegionKind::ALL {
+        let mk = |compaction: CompactionPolicy| SolverConfig {
+            kind: SolverKind::Ista,
+            budget: Budget::gap(1e-9),
+            region: Some(region),
+            compaction,
+            ..Default::default()
+        };
+        let base = solve(&p, &mk(CompactionPolicy::Disabled));
+        for policy in [
+            CompactionPolicy::Threshold(0.0),
+            CompactionPolicy::Threshold(0.25),
+        ] {
+            let rep = solve(&p, &mk(policy));
+            assert_reports_bitwise(
+                &base,
+                &rep,
+                &format!("{} {policy:?}", region.name()),
+            );
+        }
+    }
+}
