@@ -10,16 +10,25 @@
 //! not assumed) and bitwise-identical `SolveReport`s for every
 //! (threads, compaction policy) combination.
 //!
+//! The second half is the **dense-vs-CSC dictionary store** comparison
+//! (`BENCH_sparse_dict.json`): the same truncated-pulse Toeplitz
+//! matrix in both storage formats, screened to 90%, compacted, then
+//! the per-iteration matvec pair timed head to head — bitwise-equal
+//! outputs asserted, wall-clock expected ≥ 2x in CSC's favor (the
+//! stored nonzeros are a few percent of the dense entries).
+//!
 //! Env: HOLDER_BENCH_QUICK=1 shrinks the shape for smoke runs;
-//! HOLDER_BENCH_STRICT=1 turns the ≥ 2x expectation into an assert.
+//! HOLDER_BENCH_STRICT=1 turns the ≥ 2x expectations into asserts.
 
 use holder_screening::benchkit::{Bench, BenchLog};
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
 use holder_screening::linalg::{self, Mat};
 use holder_screening::par::ParContext;
 use holder_screening::problem::LassoProblem;
 use holder_screening::regions::RegionKind;
 use holder_screening::screening::ScreeningState;
 use holder_screening::solver::{solve, Budget, SolverConfig, SolverKind};
+use holder_screening::sparse::DictFormat;
 use holder_screening::util::rng::Pcg64;
 use holder_screening::workset::{CompactionPolicy, WorkingSet};
 
@@ -185,11 +194,158 @@ fn main() {
     log.metric("parity_combos", combos as u64);
     log.write();
 
+    // ------------------------------------------------------------------
+    // Dense vs CSC dictionary store: the sparse-deconvolution workload.
+    // ------------------------------------------------------------------
+    let (ms, ns) = if quick { (400, 4000) } else { (2000, 20000) };
+    println!(
+        "\n# sparse dictionary store: dense vs CSC on a truncated-pulse \
+         Toeplitz instance, (m, n) = ({ms}, {ns}), 90% screened"
+    );
+    println!("# (two spectral-norm estimates this time; be patient)");
+    let mk_cfg = |format| InstanceConfig {
+        m: ms,
+        n: ns,
+        kind: DictKind::Toeplitz,
+        lam_ratio: 0.5,
+        pulse_width: 4.0,
+        pulse_cutoff: 8.0,
+        format,
+    };
+    let pd = generate(&mk_cfg(DictFormat::Dense), 42).problem;
+    let pc = generate(&mk_cfg(DictFormat::Csc), 42).problem;
+    assert_eq!(pd.col_nnz(), pc.col_nnz(), "formats drew different matrices");
+    let nnz = pc.store().nnz();
+    let dense_len = ms * ns;
+    let density = nnz as f64 / dense_len as f64;
+    println!(
+        "#   nnz {nnz} of {dense_len} ({:.2}% dense)",
+        100.0 * density
+    );
+
+    let mut slog = BenchLog::new("sparse_dict");
+    slog.metric("m", ms as u64);
+    slog.metric("n", ns as u64);
+    slog.metric("screened_fraction", 0.9);
+    slog.metric("pulse_width", 4.0);
+    slog.metric("pulse_cutoff", 8.0);
+    slog.metric("nnz", nnz as u64);
+    slog.metric("density", density);
+    slog.metric("quick", quick);
+
+    let mut ws_dense = WorkingSet::new(CompactionPolicy::Threshold(0.0), ns);
+    let state_d = screen_to_10_percent(&pd, &mut ws_dense);
+    let mut ws_csc = WorkingSet::new(CompactionPolicy::Threshold(0.0), ns);
+    let state_s = screen_to_10_percent(&pc, &mut ws_csc);
+    assert_eq!(state_d.active(), state_s.active());
+    assert!(ws_dense.is_contiguous() && ws_csc.is_contiguous());
+    let ks = state_d.active_count();
+
+    let mut rng = Pcg64::new(11);
+    let mut rs = vec![0.0; ms];
+    rng.fill_normal(&mut rs);
+    let xs: Vec<f64> = (0..ks).map(|_| rng.normal()).collect();
+
+    let seq = ParContext::sequential();
+    let mut atr_ref = vec![0.0; ks];
+    ws_dense.gemv_t(&pd, state_d.active(), &rs, &mut atr_ref, &seq);
+    let mut ax_ref = vec![0.0; ms];
+    ws_dense.gemv(&pd, state_d.active(), &xs, &mut ax_ref, &seq);
+
+    let mut sparse_speedups = Vec::new();
+    for threads in [1usize, 4] {
+        let ctx = ParContext::new_pool(threads, 1024);
+        let mut atr = vec![0.0; ks];
+        let mut ax = vec![0.0; ms];
+        let s_dense = bench.report(
+            &format!("dense store A^T r + A x, {threads} thread(s)"),
+            || {
+                ws_dense.gemv_t(&pd, state_d.active(), &rs, &mut atr, &ctx);
+                ws_dense.gemv(&pd, state_d.active(), &xs, &mut ax, &ctx);
+                atr.len() + ax.len()
+            },
+        );
+        slog.record(&format!("dense_{threads}t"), &s_dense);
+        for (a, b) in atr.iter().zip(&atr_ref) {
+            assert_eq!(a.to_bits(), b.to_bits(), "dense atr diverged");
+        }
+        for (a, b) in ax.iter().zip(&ax_ref) {
+            assert_eq!(a.to_bits(), b.to_bits(), "dense ax diverged");
+        }
+
+        let s_csc = bench.report(
+            &format!("csc   store A^T r + A x, {threads} thread(s)"),
+            || {
+                ws_csc.gemv_t(&pc, state_s.active(), &rs, &mut atr, &ctx);
+                ws_csc.gemv(&pc, state_s.active(), &xs, &mut ax, &ctx);
+                atr.len() + ax.len()
+            },
+        );
+        slog.record(&format!("csc_{threads}t"), &s_csc);
+        for (a, b) in atr.iter().zip(&atr_ref) {
+            assert_eq!(a.to_bits(), b.to_bits(), "csc atr diverged");
+        }
+        for (a, b) in ax.iter().zip(&ax_ref) {
+            assert_eq!(a.to_bits(), b.to_bits(), "csc ax diverged");
+        }
+
+        let speedup = s_dense.mean / s_csc.mean.max(1e-12);
+        println!("    -> csc-vs-dense speedup: {speedup:.2}x");
+        slog.metric(&format!("csc_speedup_{threads}t"), speedup);
+        sparse_speedups.push(speedup);
+    }
+
+    // End-to-end: the SolveReport must be bitwise independent of the
+    // dictionary storage format (flops included — both formats charge
+    // the stored nnz).
+    let (mp, np) = if quick { (300, 900) } else { (2000, 2400) };
+    let mk_solve_cfg = |format| InstanceConfig {
+        m: mp,
+        n: np,
+        format,
+        ..mk_cfg(DictFormat::Dense)
+    };
+    let spd = generate(&mk_solve_cfg(DictFormat::Dense), 7).problem;
+    let spc = generate(&mk_solve_cfg(DictFormat::Csc), 7).problem;
+    let fixed = Budget { max_iters: 60, max_flops: None, target_gap: 0.0 };
+    let mut fmt_combos = 0usize;
+    for threads in [1usize, 8] {
+        let mk_scfg = || SolverConfig {
+            kind: SolverKind::Fista,
+            budget: fixed,
+            region: Some(RegionKind::HolderDome),
+            par: ParContext::new_pool(threads, 64),
+            ..Default::default()
+        };
+        let rd = solve(&spd, &mk_scfg());
+        let rc = solve(&spc, &mk_scfg());
+        assert_eq!(rd.iters, rc.iters, "{threads}t");
+        assert_eq!(rd.flops, rc.flops, "{threads}t flops");
+        assert_eq!(rd.screened, rc.screened, "{threads}t screened");
+        assert_eq!(rd.gap.to_bits(), rc.gap.to_bits(), "{threads}t gap");
+        for (a, b) in rd.x.iter().zip(&rc.x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "solve diverged at {threads}t");
+        }
+        fmt_combos += 1;
+    }
+    println!(
+        "\nformat parity: {fmt_combos} thread combos bitwise identical \
+         across dense/csc"
+    );
+    slog.metric("format_parity_combos", fmt_combos as u64);
+    slog.write();
+
     if strict {
         for (i, s) in speedups.iter().enumerate() {
             assert!(
                 *s >= 2.0,
                 "compaction speedup below 2x at combo {i}: {s:.2}x"
+            );
+        }
+        for (i, s) in sparse_speedups.iter().enumerate() {
+            assert!(
+                *s >= 2.0,
+                "csc-vs-dense speedup below 2x at combo {i}: {s:.2}x"
             );
         }
     }

@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         n: reg.manifest.n,
         kind: DictKind::Gaussian,
         lam_ratio: 0.5,
-        pulse_width: 4.0,
+        ..Default::default()
     };
 
     // ---- phase 1: serve the batch through the PJRT artifacts -------

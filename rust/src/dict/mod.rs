@@ -7,8 +7,9 @@
 //! * columns normalized to `‖a_i‖₂ = 1`;
 //! * `λ = ratio · λ_max` with `ratio ∈ {0.3, 0.5, 0.8}` in the paper.
 
-use crate::linalg::Mat;
+use crate::linalg::{self, Mat};
 use crate::problem::LassoProblem;
+use crate::sparse::{CscMat, DictFormat, DictStore};
 use crate::util::rng::Pcg64;
 
 /// Which dictionary family to draw (paper §V).
@@ -49,12 +50,34 @@ pub struct InstanceConfig {
     pub lam_ratio: f64,
     /// Width (std dev, in rows) of the Toeplitz Gaussian pulse.
     pub pulse_width: f64,
+    /// Truncate the Toeplitz pulse at this many standard deviations:
+    /// entries with cyclic distance `> pulse_cutoff · pulse_width`
+    /// become **exact zeros** (in both storage formats, so dense and
+    /// CSC draws of one config are the same matrix bit for bit).
+    /// `0.0` disables truncation — the pre-existing dense pulse.
+    pub pulse_cutoff: f64,
+    /// Storage format of the drawn dictionary (CLI `--dict-format`).
+    pub format: DictFormat,
+}
+
+impl Default for InstanceConfig {
+    fn default() -> Self {
+        InstanceConfig {
+            m: 100,
+            n: 500,
+            kind: DictKind::Gaussian,
+            lam_ratio: 0.5,
+            pulse_width: 4.0,
+            pulse_cutoff: 0.0,
+            format: DictFormat::Dense,
+        }
+    }
 }
 
 impl InstanceConfig {
     /// The paper's base setup: (m, n) = (100, 500).
     pub fn paper(kind: DictKind, lam_ratio: f64) -> Self {
-        InstanceConfig { m: 100, n: 500, kind, lam_ratio, pulse_width: 4.0 }
+        InstanceConfig { kind, lam_ratio, ..Default::default() }
     }
 }
 
@@ -67,11 +90,15 @@ pub struct Instance {
 }
 
 /// Draw the dictionary matrix only (unnormalized-then-normalized).
+/// A positive `pulse_cutoff` (in pulse standard deviations) truncates
+/// the Toeplitz pulse to exact zeros — the dense twin of the CSC
+/// draw, entry for entry.
 pub fn draw_dictionary(
     kind: DictKind,
     m: usize,
     n: usize,
     pulse_width: f64,
+    pulse_cutoff: f64,
     rng: &mut Pcg64,
 ) -> Mat {
     let mut a = match kind {
@@ -87,6 +114,7 @@ pub fn draw_dictionary(
         DictKind::Toeplitz => {
             let mut mat = Mat::zeros(m, n);
             let w2 = 2.0 * pulse_width * pulse_width;
+            let lim = toeplitz_limit(pulse_width, pulse_cutoff);
             for j in 0..n {
                 // Pulse centre moves linearly through the rows so the
                 // atoms tile the observation window (cyclic wrap).
@@ -96,7 +124,7 @@ pub fn draw_dictionary(
                     // cyclic distance
                     let mut d = (i as f64 - centre).abs();
                     d = d.min(m as f64 - d);
-                    *v = (-d * d / w2).exp();
+                    *v = if d <= lim { (-d * d / w2).exp() } else { 0.0 };
                 }
             }
             mat
@@ -106,22 +134,165 @@ pub fn draw_dictionary(
     a
 }
 
+/// Truncation radius in rows (`∞` when the cutoff is disabled).
+fn toeplitz_limit(pulse_width: f64, pulse_cutoff: f64) -> f64 {
+    if pulse_cutoff > 0.0 {
+        pulse_cutoff * pulse_width
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Draw the dictionary in the requested storage format.
+///
+/// * `Dense` — the [`draw_dictionary`] matrix, wrapped.
+/// * `Csc` + `Toeplitz` — built **directly** in CSC: only the rows
+///   inside the truncation window are visited/stored, normalized with
+///   the dense-replay sparse norm, so the result is bitwise the
+///   dense draw's nonzero structure without ever materializing `m × n`
+///   storage.
+/// * `Csc` + `Gaussian` — dense draw (same RNG stream) through the
+///   dense→CSC converter.
+pub fn draw_dictionary_store(
+    kind: DictKind,
+    m: usize,
+    n: usize,
+    pulse_width: f64,
+    pulse_cutoff: f64,
+    format: DictFormat,
+    rng: &mut Pcg64,
+) -> DictStore {
+    match (format, kind) {
+        (DictFormat::Dense, _) => DictStore::Dense(draw_dictionary(
+            kind,
+            m,
+            n,
+            pulse_width,
+            pulse_cutoff,
+            rng,
+        )),
+        (DictFormat::Csc, DictKind::Gaussian) => {
+            DictStore::Csc(CscMat::from_dense(&draw_dictionary(
+                kind,
+                m,
+                n,
+                pulse_width,
+                pulse_cutoff,
+                rng,
+            )))
+        }
+        (DictFormat::Csc, DictKind::Toeplitz) => DictStore::Csc(
+            draw_toeplitz_csc(m, n, pulse_width, pulse_cutoff),
+        ),
+    }
+}
+
+/// Direct CSC build of the truncated Toeplitz pulse dictionary.
+///
+/// Every stored value is computed by the exact floating-point
+/// expression of the dense draw, the normalization scale replays the
+/// dense `norm2` accumulator pattern over the stored rows
+/// ([`linalg::sparse_norm2`]), and entries the dense path would hold
+/// as exact zeros (outside the window, pulse tails that underflow
+/// `exp`, values flushed to zero by the normalization divide) are
+/// dropped — so the result equals `CscMat::from_dense` of the dense
+/// draw, bit for bit.
+fn draw_toeplitz_csc(
+    m: usize,
+    n: usize,
+    pulse_width: f64,
+    pulse_cutoff: f64,
+) -> CscMat {
+    let w2 = 2.0 * pulse_width * pulse_width;
+    let lim = toeplitz_limit(pulse_width, pulse_cutoff);
+    let mut col_ptr = Vec::with_capacity(n + 1);
+    let mut row_idx: Vec<u32> = Vec::new();
+    let mut val: Vec<f64> = Vec::new();
+    col_ptr.push(0);
+    let mut rows_j: Vec<u32> = Vec::new();
+    let mut vals_j: Vec<f64> = Vec::new();
+    for j in 0..n {
+        let centre = (j as f64) * (m as f64) / (n as f64);
+        rows_j.clear();
+        vals_j.clear();
+        // Candidate row segments covering the cyclic pulse window,
+        // padded by one row per side so boundary rounding in the
+        // segment arithmetic can never exclude a row the exact
+        // per-row test below keeps.  Segments are ascending and
+        // disjoint (the padded arc is shorter than m in the else
+        // branch), so the CSC rows come out sorted; every candidate
+        // still goes through the same `d ≤ lim` predicate as the
+        // dense draw, keeping the two bit-identical.
+        let segments: [(usize, usize); 2] =
+            if !lim.is_finite() || 2.0 * lim + 6.0 >= m as f64 {
+                [(0, m), (0, 0)]
+            } else {
+                let lo = (centre - lim).floor() as i64 - 1;
+                let hi = (centre + lim).ceil() as i64 + 1;
+                let a = lo.rem_euclid(m as i64) as usize;
+                let b = hi.rem_euclid(m as i64) as usize;
+                if a <= b {
+                    [(a, b + 1), (0, 0)]
+                } else {
+                    [(0, b + 1), (a, m)]
+                }
+            };
+        for (s, e) in segments {
+            for i in s..e {
+                let mut d = (i as f64 - centre).abs();
+                d = d.min(m as f64 - d);
+                if d <= lim {
+                    let v = (-d * d / w2).exp();
+                    if v != 0.0 {
+                        rows_j.push(i as u32);
+                        vals_j.push(v);
+                    }
+                }
+            }
+        }
+        // Bitwise the dense normalize_columns: the zeros outside the
+        // window are no-ops in the norm accumulation, and the same
+        // near-zero guard applies.
+        let nrm = linalg::sparse_norm2(&rows_j, &vals_j, m);
+        if nrm > 1e-300 {
+            for v in vals_j.iter_mut() {
+                *v /= nrm;
+            }
+        }
+        for (&i, &v) in rows_j.iter().zip(&vals_j) {
+            // A normalized tail value can flush to zero; the dense
+            // store would then hold an exact 0.0 the converter drops.
+            if v != 0.0 {
+                row_idx.push(i);
+                val.push(v);
+            }
+        }
+        col_ptr.push(row_idx.len());
+    }
+    CscMat::from_parts(m, n, col_ptr, row_idx, val)
+}
+
 /// Draw `y` uniformly on the unit sphere.
 pub fn draw_observation(m: usize, rng: &mut Pcg64) -> Vec<f64> {
     rng.unit_sphere(m)
 }
 
 /// Generate a full instance.  λ is `lam_ratio · λ_max(A, y)`, recomputed
-/// per draw as in the paper.
+/// per draw as in the paper.  The dictionary is drawn in
+/// `config.format`; dense and CSC draws of one config yield bitwise
+/// identical problems (same RNG stream, same matrix, replayed
+/// precomputations).
 pub fn generate(config: &InstanceConfig, seed: u64) -> Instance {
     assert!(config.lam_ratio > 0.0 && config.lam_ratio < 1.0,
             "lam_ratio must be in (0, 1) for a non-trivial instance");
     let mut rng = Pcg64::new(seed);
-    let a = draw_dictionary(config.kind, config.m, config.n,
-                            config.pulse_width, &mut rng);
+    let store = draw_dictionary_store(
+        config.kind, config.m, config.n, config.pulse_width,
+        config.pulse_cutoff, config.format, &mut rng,
+    );
     let y = draw_observation(config.m, &mut rng);
     // Probe λ_max via a throwaway problem at λ = 1.
-    let probe = LassoProblem::new(a, y, 1.0);
+    let probe = LassoProblem::from_store(store, y, 1.0);
     let lam = config.lam_ratio * probe.lam_max();
     let problem = probe.with_lambda(lam);
     Instance { problem, config: config.clone(), seed }
@@ -137,19 +308,21 @@ pub fn generate_planted(
     seed: u64,
 ) -> (Instance, Vec<f64>) {
     let mut rng = Pcg64::new(seed);
-    let a = draw_dictionary(config.kind, config.m, config.n,
-                            config.pulse_width, &mut rng);
+    let store = draw_dictionary_store(
+        config.kind, config.m, config.n, config.pulse_width,
+        config.pulse_cutoff, config.format, &mut rng,
+    );
     let mut x0 = vec![0.0; config.n];
     for idx in rng.sample_indices(config.n, k) {
         // Amplitudes bounded away from zero so the support is meaningful.
         x0[idx] = (1.0 + rng.uniform()) * if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
     }
     let mut y = vec![0.0; config.m];
-    crate::linalg::gemv(&a, &x0, &mut y);
+    store.gemv(&x0, &mut y);
     for v in y.iter_mut() {
         *v += noise_sigma * rng.normal();
     }
-    let probe = LassoProblem::new(a, y, 1.0);
+    let probe = LassoProblem::from_store(store, y, 1.0);
     let lam = config.lam_ratio * probe.lam_max();
     let problem = probe.with_lambda(lam);
     (Instance { problem, config: config.clone(), seed }, x0)
@@ -185,6 +358,7 @@ mod tests {
             kind: DictKind::Toeplitz,
             lam_ratio: 0.5,
             pulse_width: 3.0,
+            ..Default::default()
         };
         let inst = generate(&cfg, 1);
         let a = inst.problem.a();
@@ -221,6 +395,7 @@ mod tests {
             kind: DictKind::Toeplitz,
             lam_ratio: 0.3,
             pulse_width: 2.0,
+            ..Default::default()
         };
         let (inst, x0) = generate_planted(&cfg, 5, 0.01, 3);
         assert_eq!(x0.len(), 100);
@@ -234,6 +409,83 @@ mod tests {
             .map(|&j| p.aty()[j].abs())
             .fold(0.0f64, f64::max);
         assert!(max_on > 0.5, "planted atoms barely correlated: {max_on}");
+    }
+
+    /// The CSC draw of a config must be the dense draw's matrix,
+    /// bit for bit — direct Toeplitz build and Gaussian converter
+    /// alike — and the generated problems must share every cache.
+    #[test]
+    fn csc_draw_is_bitwise_the_dense_matrix() {
+        for (kind, cutoff) in [
+            (DictKind::Toeplitz, 4.0),
+            (DictKind::Toeplitz, 0.0),
+            (DictKind::Gaussian, 0.0),
+        ] {
+            let mk = |format| InstanceConfig {
+                m: 57,
+                n: 140,
+                kind,
+                lam_ratio: 0.5,
+                pulse_width: 3.0,
+                pulse_cutoff: cutoff,
+                format,
+            };
+            let d = generate(&mk(DictFormat::Dense), 11);
+            let c = generate(&mk(DictFormat::Csc), 11);
+            let csc = c.problem.store().as_csc().unwrap();
+            assert_eq!(
+                csc.to_dense().as_slice(),
+                d.problem.a().as_slice(),
+                "{kind:?} cutoff {cutoff}: matrices differ"
+            );
+            assert_eq!(d.problem.col_nnz(), c.problem.col_nnz());
+            assert_eq!(
+                d.problem.lam().to_bits(),
+                c.problem.lam().to_bits()
+            );
+            assert_eq!(
+                d.problem.lipschitz().to_bits(),
+                c.problem.lipschitz().to_bits()
+            );
+            for (a, b) in d.problem.aty().iter().zip(c.problem.aty()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in
+                d.problem.col_norms().iter().zip(c.problem.col_norms())
+            {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    /// A positive cutoff plants genuine zeros, and the CSC store's nnz
+    /// shrinks accordingly (the sparse-deconvolution win).
+    #[test]
+    fn pulse_cutoff_truncates_to_exact_zeros() {
+        let cfg = InstanceConfig {
+            m: 200,
+            n: 300,
+            kind: DictKind::Toeplitz,
+            lam_ratio: 0.5,
+            pulse_width: 4.0,
+            pulse_cutoff: 5.0,
+            format: DictFormat::Csc,
+        };
+        let inst = generate(&cfg, 3);
+        let store = inst.problem.store();
+        let nnz = store.nnz();
+        let dense_len = cfg.m * cfg.n;
+        assert!(nnz < dense_len / 4, "nnz {nnz} of {dense_len}");
+        // Window radius 5σ = 20 rows ⇒ ≤ 41 rows per column.
+        for j in 0..cfg.n {
+            let c = inst.problem.col_nnz()[j];
+            assert!(c <= 41, "col {j}: {c} nnz");
+            assert!(c >= 1, "col {j} empty");
+        }
+        // Columns still unit-norm.
+        for n in inst.problem.col_norms() {
+            assert!((n - 1.0).abs() < 1e-12);
+        }
     }
 
     #[test]
@@ -250,6 +502,7 @@ mod tests {
         let cfg = InstanceConfig {
             m: 10, n: 20, kind: DictKind::Gaussian,
             lam_ratio: 1.5, pulse_width: 2.0,
+            ..Default::default()
         };
         generate(&cfg, 0);
     }

@@ -59,7 +59,7 @@ fn measure(
         n: cfg.n,
         kind: cfg.dict,
         lam_ratio: cfg.lam_ratio,
-        pulse_width: 4.0,
+        ..Default::default()
     };
     let outs = par_map(cfg.trials, cfg.threads, |i| {
         let p = generate(&icfg, cfg.base_seed + i as u64).problem;

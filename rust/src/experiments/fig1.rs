@@ -127,7 +127,7 @@ pub fn run(cfg: &Fig1Config) -> Vec<RadiusCurve> {
                 n: cfg.n,
                 kind: dict,
                 lam_ratio: ratio,
-                pulse_width: 4.0,
+                ..Default::default()
             };
             // Parallel over trials; each yields (gap, ratio) samples.
             let samples: Vec<Vec<(f64, f64)>> =
@@ -281,7 +281,7 @@ mod tests {
             n: 90,
             kind: DictKind::Gaussian,
             lam_ratio: 0.5,
-            pulse_width: 4.0,
+            ..Default::default()
         };
         let p = generate(&icfg, 0).problem;
         let samples = trajectory_ratios(&p);

@@ -101,7 +101,7 @@ pub fn run(cfg: &Fig2Config) -> Vec<Panel> {
                 n: cfg.n,
                 kind: dict,
                 lam_ratio: ratio,
-                pulse_width: 4.0,
+                ..Default::default()
             };
             let calib = SolverConfig {
                 region: Some(RegionKind::HolderDome),

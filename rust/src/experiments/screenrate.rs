@@ -55,7 +55,7 @@ pub fn run(cfg: &ScreenRateConfig) -> ScreenRateCurves {
         n: cfg.n,
         kind: cfg.dict,
         lam_ratio: cfg.lam_ratio,
-        pulse_width: 4.0,
+        ..Default::default()
     };
     let mut labels = Vec::new();
     let mut rate = Vec::new();

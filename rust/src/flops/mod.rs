@@ -15,6 +15,7 @@
 //! |--------------------------|--------------|
 //! | `gemv` (A x, support k)  | `2 m k`      |
 //! | `gemv_t` (Aᵀ r, k atoms) | `2 m k`      |
+//! | `spmv`/`spmv_t` (stored) | `2 nnz`      |
 //! | dot / norm2 (length m)   | `2 m`        |
 //! | axpy / sub (length m)    | `2 m`        |
 //! | norm1 (length k)         | `k`          |
@@ -22,6 +23,21 @@
 //! | sphere test per atom     | `4`          |
 //! | dome  test per atom      | `14`         |
 //! | working-set compaction   | `0`          |
+//!
+//! ## Dictionary matvecs charge actual nnz
+//!
+//! Since the sparse (CSC) dictionary store landed, the solvers charge
+//! dictionary matvecs and per-column kernels by **stored-structure
+//! nonzeros** ([`cost::spmv`], weights from `LassoProblem::col_nnz`),
+//! not by the dense `m`-per-column formula.  For a dense store with no
+//! explicit zeros (the Gaussian dictionaries, untruncated Toeplitz)
+//! every column has `nnz = m`, so the charges reduce exactly to the
+//! legacy `gemv`/`gemv_t`/`dot` formulas above.  For a truncated
+//! Toeplitz dictionary both storage formats of the same matrix carry
+//! the same nnz structure, so `SolveReport.flops` is **bitwise
+//! identical across `--dict-format`** — the meter measures the
+//! algorithm's intrinsic sparse work, and storage (like compaction and
+//! sharding) only moves bytes.
 //!
 //! Working-set compaction ([`crate::workset`]) charges **zero** flops
 //! by design: the `O(m·k)` rebuild copy is pure data movement with no
@@ -51,6 +67,16 @@ pub mod cost {
     #[inline]
     pub const fn gemv_t(m: usize, k: usize) -> u64 {
         2 * (m as u64) * (k as u64)
+    }
+
+    /// Dictionary matvec / per-column kernel over `nnz` stored
+    /// nonzeros (one multiply-add each): the storage-format-agnostic
+    /// charge for `A x`, `Aᵀ r`, per-column dots and axpys.  Equals
+    /// [`gemv`]`(m, k)` when the touched columns are dense
+    /// (`nnz = m·k`).
+    #[inline]
+    pub const fn spmv(nnz: u64) -> u64 {
+        2 * nnz
     }
 
     /// Inner product / squared norm of length `n`.
@@ -189,6 +215,7 @@ mod tests {
     fn primitive_formulas() {
         assert_eq!(cost::gemv(100, 500), 100_000);
         assert_eq!(cost::gemv_t(100, 500), 100_000);
+        assert_eq!(cost::spmv(50_000), 100_000); // dense-equivalent nnz
         assert_eq!(cost::dot(10), 20);
         assert_eq!(cost::soft_threshold(5), 20);
         assert_eq!(cost::sphere_test(100), 400);

@@ -70,6 +70,36 @@
 //! output element, so `SolveReport`s are bitwise identical for every
 //! (threads, compaction) combination (`rust/tests/workset_parity.rs`).
 //!
+//! ## The sparse dictionary store (`DictStore` seam)
+//!
+//! The convolutional Toeplitz dictionary (paper §V) has naturally
+//! sparse atoms once the Gaussian pulse is truncated
+//! (`InstanceConfig::pulse_cutoff`).  [`sparse::DictStore`] is the
+//! storage seam every layer dispatches through: the dense [`linalg::Mat`]
+//! backend, or [`sparse::CscMat`] — column pointers / row indices /
+//! values, built directly by [`dict::draw_dictionary_store`] for
+//! Toeplitz pulses and by a dense→CSC converter for Gaussian.  On top
+//! of it:
+//!
+//! * [`linalg::spmv`] hosts `spmv`/`spmv_t` and their active-set /
+//!   compact / sharded variants, each replaying the dense kernels'
+//!   per-element floating-point order over the stored nonzeros;
+//! * [`workset::WorkingSet`] mirrors the format — its sparse compact
+//!   store gathers surviving columns' `(row_idx, val)` runs under the
+//!   same `CompactionPolicy` contract;
+//! * [`flops`] charges matvecs by stored-structure nonzeros, identical
+//!   across formats (and equal to the legacy dense model for dense
+//!   columns);
+//! * the CLI exposes `--dict-format dense|csc` and `--pulse-cutoff` on
+//!   `solve`/`path`.
+//!
+//! The punchline mirrors the other two subsystems: `--dict-format` is
+//! purely a performance knob — `SolveReport`s are **bitwise
+//! identical** across storage formats, threads, and compaction
+//! policies (`rust/tests/workset_parity.rs`), while the CSC store wins
+//! wall-clock in proportion to the dictionary's sparsity
+//! (`benches/workset_compaction.rs`, `BENCH_sparse_dict.json`).
+//!
 //! ## Substrates
 //!
 //! The build is fully offline, so the usual ecosystem crates are
@@ -99,6 +129,7 @@ pub mod regions;
 pub mod runtime;
 pub mod screening;
 pub mod solver;
+pub mod sparse;
 pub mod util;
 pub mod workset;
 
@@ -106,6 +137,7 @@ pub mod workset;
 pub mod prelude {
     pub use crate::flops::FlopCounter;
     pub use crate::linalg::Mat;
+    pub use crate::sparse::{CscMat, DictFormat, DictStore};
     pub use crate::util::rng::Pcg64;
     pub use crate::dict::{DictKind, Instance, InstanceConfig};
     pub use crate::geometry::{Ball, Dome, HalfSpace};

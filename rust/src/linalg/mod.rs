@@ -10,14 +10,28 @@
 //! `f64` throughout: the paper's experiments resolve duality gaps down to
 //! 1e-12 (Fig. 2's τ axis), below f32 resolution.  The f32 path exists via
 //! the PJRT artifacts ([`crate::runtime`]).
+//!
+//! Next to the dense family lives the sparse (CSC) kernel family
+//! ([`spmv`]): `spmv`/`spmv_t` and their active-set/compact/sharded
+//! variants over [`crate::sparse::CscMat`], each bitwise identical to
+//! its dense counterpart on the expanded matrix (see the module docs
+//! for the replay argument).  [`crate::sparse::DictStore`] is the seam
+//! that picks the family.
 
 pub mod gemv;
+pub mod spmv;
 pub mod vec_ops;
 
 pub use gemv::{
     gemv, gemv_cols, gemv_cols_sharded, gemv_cols_sharded_scratch,
     gemv_compact, gemv_compact_sharded, gemv_t, gemv_t_blocked,
     gemv_t_blocked_sharded, gemv_t_cols, gemv_t_cols_sharded, T_BLOCK,
+};
+pub use spmv::{
+    sparse_axpy, sparse_dot, sparse_norm2, spmv, spmv_cols,
+    spmv_cols_sharded_scratch, spmv_compact, spmv_compact_sharded, spmv_t,
+    spmv_t_cols, spmv_t_cols_sharded, spmv_t_compact,
+    spmv_t_compact_sharded, ColView,
 };
 pub use vec_ops::*;
 
@@ -155,24 +169,49 @@ impl Mat {
     /// Squared spectral norm ‖A‖₂² via power iteration on AᵀA —
     /// the FISTA step size is `1 / ‖A‖₂²`.
     pub fn spectral_norm_sq(&self, iters: usize, seed: u64) -> f64 {
-        let mut rng = crate::util::rng::Pcg64::new(seed);
-        let mut v = vec![0.0; self.cols];
-        rng.fill_normal(&mut v);
-        let nv = vec_ops::norm2(&v).max(1e-300);
-        vec_ops::scale(&mut v, 1.0 / nv);
-        let mut tmp_m = vec![0.0; self.rows];
-        let mut lam = 0.0;
-        for _ in 0..iters.max(1) {
-            gemv(self, &v, &mut tmp_m); // tmp = A v
-            gemv_t(self, &tmp_m, &mut v); // v = A^T tmp = A^T A v
-            lam = vec_ops::norm2(&v);
-            if lam <= 1e-300 {
-                return 0.0;
-            }
-            vec_ops::scale(&mut v, 1.0 / lam);
-        }
-        lam
+        spectral_norm_sq_via(
+            self.rows,
+            self.cols,
+            iters,
+            seed,
+            |v, out| gemv(self, v, out),
+            |t, out| gemv_t(self, t, out),
+        )
     }
+}
+
+/// Power iteration on `AᵀA`, parameterized over the `(A v, Aᵀ t)`
+/// matvec pair — the single implementation behind
+/// [`Mat::spectral_norm_sq`] and the sparse
+/// [`crate::sparse::DictStore`] backend, so every storage format runs
+/// the exact same floating-point sequence (the FISTA step size must
+/// not depend on storage; the dense/CSC bitwise contract hangs off
+/// this being one piece of code, not two maintained copies).
+pub fn spectral_norm_sq_via(
+    rows: usize,
+    cols: usize,
+    iters: usize,
+    seed: u64,
+    mut av: impl FnMut(&[f64], &mut [f64]),
+    mut atv: impl FnMut(&[f64], &mut [f64]),
+) -> f64 {
+    let mut rng = crate::util::rng::Pcg64::new(seed);
+    let mut v = vec![0.0; cols];
+    rng.fill_normal(&mut v);
+    let nv = vec_ops::norm2(&v).max(1e-300);
+    vec_ops::scale(&mut v, 1.0 / nv);
+    let mut tmp_m = vec![0.0; rows];
+    let mut lam = 0.0;
+    for _ in 0..iters.max(1) {
+        av(&v, &mut tmp_m); // tmp = A v
+        atv(&tmp_m, &mut v); // v = A^T tmp = A^T A v
+        lam = vec_ops::norm2(&v);
+        if lam <= 1e-300 {
+            return 0.0;
+        }
+        vec_ops::scale(&mut v, 1.0 / lam);
+    }
+    lam
 }
 
 #[cfg(test)]

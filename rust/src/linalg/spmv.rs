@@ -1,0 +1,615 @@
+//! Sparse (CSC) matvec kernels mirroring the dense family in
+//! [`super::gemv`], over the [`CscMat`] column store.
+//!
+//! ## The bitwise contract with the dense kernels
+//!
+//! Every kernel here is **bitwise identical** to its dense counterpart
+//! applied to the expanded matrix (stored entries plus explicit
+//! zeros).  Two facts make that possible:
+//!
+//! 1. **Replayed operation order.**  Each kernel visits the stored
+//!    nonzeros of a column in ascending row order and routes every
+//!    product into exactly the accumulator the dense kernel would use
+//!    for that row: [`sparse_dot`] replays [`super::vec_ops::dot`]'s
+//!    four-lane pattern keyed by `row % 4` (with the `m % 4` tail
+//!    folded in after the `(s0+s1)+(s2+s3)` merge), and the `A x`
+//!    kernels accumulate `out[row] += x_j · v` in the dense column
+//!    order.
+//! 2. **Zero no-ops.**  The entries the sparse kernels *skip* are
+//!    exactly `0.0` on the dense side, contributing `acc += x · 0.0 =
+//!    ±0.0`.  Adding `±0.0` to an accumulator never changes its bits
+//!    unless the accumulator is `-0.0` and the addend `+0.0` — and an
+//!    accumulator that starts at `+0.0` can never become `-0.0` under
+//!    round-to-nearest (`+0.0 + -0.0 = +0.0`, and exact cancellation
+//!    of finite values yields `+0.0`), short of a product underflowing
+//!    below 2⁻¹⁰⁷⁵, which no normalized dictionary column can produce.
+//!
+//! `rust/tests/workset_parity.rs` and the property tests below assert
+//! the contract on random sparsity patterns rather than assuming it.
+//!
+//! ## Sharding
+//!
+//! The sharded variants split work exactly like the dense family —
+//! `Aᵀr` over columns (disjoint outputs, no reduction), `A x` over
+//! rows (every shard scans the nonzero coefficients in the same column
+//! order) — so they are bitwise identical to sequential for every
+//! shard count.  The row shards locate each column's row range with a
+//! binary search on the sorted row indices.
+
+use super::vec_ops::{axpy, dot};
+use crate::par::ParContext;
+use crate::sparse::CscMat;
+
+/// `⟨col, r⟩` for a sparse column given as `(rows, vals)`, replaying
+/// [`dot`] over the expanded column: four accumulators keyed by
+/// `row % 4` over the quad region, merged `(s0+s1)+(s2+s3)`, then the
+/// scalar tail rows in order.
+#[inline]
+pub fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
+    let m = r.len();
+    let quad_end = ((m / 4) * 4) as u32;
+    let mut acc = [0.0f64; 4];
+    let mut p = 0;
+    while p < rows.len() && rows[p] < quad_end {
+        let i = rows[p] as usize;
+        acc[i & 3] += vals[p] * r[i];
+        p += 1;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    while p < rows.len() {
+        let i = rows[p] as usize;
+        s += vals[p] * r[i];
+        p += 1;
+    }
+    s
+}
+
+/// `‖col‖₂` of a sparse column in a height-`m` matrix, replaying
+/// [`super::vec_ops::norm2`] (= `dot(col, col).sqrt()`) — used to
+/// normalize directly-built CSC dictionaries bitwise-identically to
+/// the dense path.
+#[inline]
+pub fn sparse_norm2(rows: &[u32], vals: &[f64], m: usize) -> f64 {
+    let quad_end = ((m / 4) * 4) as u32;
+    let mut acc = [0.0f64; 4];
+    let mut p = 0;
+    while p < rows.len() && rows[p] < quad_end {
+        let v = vals[p];
+        acc[(rows[p] & 3) as usize] += v * v;
+        p += 1;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    while p < rows.len() {
+        let v = vals[p];
+        s += v * v;
+        p += 1;
+    }
+    s.sqrt()
+}
+
+/// `y[row] += alpha · v` over the stored entries (the sparse
+/// counterpart of [`axpy`]; skipped dense zeros are `±0.0` no-ops).
+#[inline]
+pub fn sparse_axpy(alpha: f64, rows: &[u32], vals: &[f64], y: &mut [f64]) {
+    for (&i, &v) in rows.iter().zip(vals) {
+        y[i as usize] += alpha * v;
+    }
+}
+
+/// A borrowed dictionary column in either storage format, with the
+/// per-column primitives coordinate descent needs.  Both variants of
+/// the same column answer bitwise identically.
+#[derive(Clone, Copy, Debug)]
+pub enum ColView<'a> {
+    /// Contiguous dense column.
+    Dense(&'a [f64]),
+    /// Sparse `(row, value)` run, rows ascending.
+    Sparse { rows: &'a [u32], vals: &'a [f64] },
+}
+
+impl ColView<'_> {
+    /// `⟨col, r⟩` (replays [`dot`] in either format).
+    #[inline]
+    pub fn dot(&self, r: &[f64]) -> f64 {
+        match *self {
+            ColView::Dense(c) => dot(c, r),
+            ColView::Sparse { rows, vals } => sparse_dot(rows, vals, r),
+        }
+    }
+
+    /// `y += alpha · col` (replays [`axpy`] in either format).
+    #[inline]
+    pub fn axpy_into(&self, alpha: f64, y: &mut [f64]) {
+        match *self {
+            ColView::Dense(c) => axpy(alpha, c, y),
+            ColView::Sparse { rows, vals } => {
+                sparse_axpy(alpha, rows, vals, y)
+            }
+        }
+    }
+}
+
+/// out = A x (dense x, sparse A).  Zero coefficients are skipped like
+/// [`super::gemv`]; bitwise identical to it on the expanded matrix.
+pub fn spmv(a: &CscMat, x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), a.cols(), "spmv: x length");
+    assert_eq!(out.len(), a.rows(), "spmv: out length");
+    out.fill(0.0);
+    for (j, &xj) in x.iter().enumerate() {
+        if xj != 0.0 {
+            let (rows, vals) = a.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                out[i as usize] += xj * v;
+            }
+        }
+    }
+}
+
+/// out = Aᵀ r: one [`sparse_dot`] per column.  Bitwise identical to
+/// [`super::gemv_t`] on the expanded matrix.
+pub fn spmv_t(a: &CscMat, r: &[f64], out: &mut [f64]) {
+    assert_eq!(r.len(), a.rows(), "spmv_t: r length");
+    assert_eq!(out.len(), a.cols(), "spmv_t: out length");
+    for (j, o) in out.iter_mut().enumerate() {
+        let (rows, vals) = a.col(j);
+        *o = sparse_dot(rows, vals, r);
+    }
+}
+
+/// out = A x restricted to `active` columns (`x` compact, aligned with
+/// `active`).  Bitwise identical to [`super::gemv_cols`].
+pub fn spmv_cols(a: &CscMat, active: &[usize], x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), active.len(), "spmv_cols: x length");
+    assert_eq!(out.len(), a.rows(), "spmv_cols: out length");
+    out.fill(0.0);
+    for (&j, &xk) in active.iter().zip(x.iter()) {
+        if xk != 0.0 {
+            let (rows, vals) = a.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                out[i as usize] += xk * v;
+            }
+        }
+    }
+}
+
+/// out[k] = ⟨a_{active[k]}, r⟩.  Bitwise identical to
+/// [`super::gemv_t_cols`].
+pub fn spmv_t_cols(
+    a: &CscMat,
+    active: &[usize],
+    r: &[f64],
+    out: &mut [f64],
+) {
+    assert_eq!(out.len(), active.len(), "spmv_t_cols: out length");
+    assert_eq!(r.len(), a.rows(), "spmv_t_cols: r length");
+    for (o, &j) in out.iter_mut().zip(active.iter()) {
+        let (rows, vals) = a.col(j);
+        *o = sparse_dot(rows, vals, r);
+    }
+}
+
+/// [`spmv_t_cols`], column-sharded over `ctx`'s pool (disjoint output
+/// slices, one sparse dot per element — bitwise identical to
+/// sequential for any shard count).
+pub fn spmv_t_cols_sharded(
+    a: &CscMat,
+    active: &[usize],
+    r: &[f64],
+    out: &mut [f64],
+    ctx: &ParContext,
+) {
+    assert_eq!(out.len(), active.len(), "spmv_t_cols_sharded: out length");
+    assert_eq!(r.len(), a.rows(), "spmv_t_cols_sharded: r length");
+    let k = active.len();
+    let shards = ctx.shards_for(k);
+    if shards <= 1 {
+        spmv_t_cols(a, active, r, out);
+        return;
+    }
+    let chunk = k.div_ceil(shards);
+    let items: Vec<(&[usize], &mut [f64])> =
+        active.chunks(chunk).zip(out.chunks_mut(chunk)).collect();
+    ctx.run_items(items, |(idx, dst)| {
+        for (o, &j) in dst.iter_mut().zip(idx.iter()) {
+            let (rows, vals) = a.col(j);
+            *o = sparse_dot(rows, vals, r);
+        }
+    });
+}
+
+/// One row shard of a sparse `A x`: accumulate the `[row0, row0+len)`
+/// range of every nonzero-coefficient column, in the shared column
+/// order.  The column's in-range run is located by binary search on
+/// its sorted row indices.
+fn spmv_rows_shard(
+    a: &CscMat,
+    nz: &[(usize, f64)],
+    row0: usize,
+    dst: &mut [f64],
+) {
+    dst.fill(0.0);
+    let lo = row0 as u32;
+    let hi = (row0 + dst.len()) as u32;
+    for &(j, xk) in nz {
+        let (rows, vals) = a.col(j);
+        let s = rows.partition_point(|&r| r < lo);
+        let e = s + rows[s..].partition_point(|&r| r < hi);
+        for p in s..e {
+            dst[(rows[p] - lo) as usize] += xk * vals[p];
+        }
+    }
+}
+
+/// [`spmv_cols`], row-sharded over `ctx`'s pool with a caller-owned
+/// nonzero scratch (see [`super::gemv_cols_sharded_scratch`]).  Every
+/// shard scans the nonzero coefficients in the same order, so each
+/// `out[i]` sees exactly the sequential summation order — bitwise
+/// identical for any shard count.
+pub fn spmv_cols_sharded_scratch(
+    a: &CscMat,
+    active: &[usize],
+    x: &[f64],
+    out: &mut [f64],
+    ctx: &ParContext,
+    nz: &mut Vec<(usize, f64)>,
+) {
+    assert_eq!(x.len(), active.len(), "spmv_cols_sharded: x length");
+    assert_eq!(out.len(), a.rows(), "spmv_cols_sharded: out length");
+    let m = a.rows();
+    let shards = ctx.shards_for(m);
+    if shards <= 1 {
+        spmv_cols(a, active, x, out);
+        return;
+    }
+    nz.clear();
+    for (&j, &xk) in active.iter().zip(x.iter()) {
+        if xk != 0.0 {
+            nz.push((j, xk));
+        }
+    }
+    if nz.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    let nz_ref: &[(usize, f64)] = nz;
+    let chunk = m.div_ceil(shards);
+    let items: Vec<(usize, &mut [f64])> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(t, dst)| (t * chunk, dst))
+        .collect();
+    ctx.run_items(items, |(row0, dst)| {
+        spmv_rows_shard(a, nz_ref, row0, dst);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Compact (working-set) kernels: the active set is the column prefix.
+// ---------------------------------------------------------------------------
+
+/// `out = A x` over the **first `x.len()` columns** (the physically
+/// compacted sparse working set).  Bitwise identical to [`spmv_cols`]
+/// with `active = [0, 1, …, x.len())`.
+pub fn spmv_compact(a: &CscMat, x: &[f64], out: &mut [f64]) {
+    assert!(x.len() <= a.cols(), "spmv_compact: x length");
+    assert_eq!(out.len(), a.rows(), "spmv_compact: out length");
+    out.fill(0.0);
+    for (j, &xj) in x.iter().enumerate() {
+        if xj != 0.0 {
+            let (rows, vals) = a.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                out[i as usize] += xj * v;
+            }
+        }
+    }
+}
+
+/// [`spmv_compact`], row-sharded with a caller-owned nonzero scratch.
+/// Bitwise identical to the sequential kernel for any shard count.
+pub fn spmv_compact_sharded(
+    a: &CscMat,
+    x: &[f64],
+    out: &mut [f64],
+    ctx: &ParContext,
+    nz: &mut Vec<(usize, f64)>,
+) {
+    assert!(x.len() <= a.cols(), "spmv_compact_sharded: x length");
+    assert_eq!(out.len(), a.rows(), "spmv_compact_sharded: out length");
+    let m = a.rows();
+    let shards = ctx.shards_for(m);
+    if shards <= 1 {
+        spmv_compact(a, x, out);
+        return;
+    }
+    nz.clear();
+    for (j, &xj) in x.iter().enumerate() {
+        if xj != 0.0 {
+            nz.push((j, xj));
+        }
+    }
+    if nz.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    let nz_ref: &[(usize, f64)] = nz;
+    let chunk = m.div_ceil(shards);
+    let items: Vec<(usize, &mut [f64])> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(t, dst)| (t * chunk, dst))
+        .collect();
+    ctx.run_items(items, |(row0, dst)| {
+        spmv_rows_shard(a, nz_ref, row0, dst);
+    });
+}
+
+/// `out[j] = ⟨a_j, r⟩` over the **first `out.len()` columns** of the
+/// compacted sparse working set.  Bitwise identical to [`spmv_t_cols`]
+/// with `active = [0, 1, …, out.len())`.
+pub fn spmv_t_compact(a: &CscMat, r: &[f64], out: &mut [f64]) {
+    assert!(out.len() <= a.cols(), "spmv_t_compact: out length");
+    assert_eq!(r.len(), a.rows(), "spmv_t_compact: r length");
+    for (j, o) in out.iter_mut().enumerate() {
+        let (rows, vals) = a.col(j);
+        *o = sparse_dot(rows, vals, r);
+    }
+}
+
+/// [`spmv_t_compact`], column-sharded (disjoint output slices).
+/// Bitwise identical to the sequential kernel for any shard count.
+pub fn spmv_t_compact_sharded(
+    a: &CscMat,
+    r: &[f64],
+    out: &mut [f64],
+    ctx: &ParContext,
+) {
+    assert!(out.len() <= a.cols(), "spmv_t_compact_sharded: out length");
+    assert_eq!(r.len(), a.rows(), "spmv_t_compact_sharded: r length");
+    let k = out.len();
+    let shards = ctx.shards_for(k);
+    if shards <= 1 {
+        spmv_t_compact(a, r, out);
+        return;
+    }
+    let chunk = k.div_ceil(shards);
+    let items: Vec<(usize, &mut [f64])> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(t, dst)| (t * chunk, dst))
+        .collect();
+    ctx.run_items(items, |(j0, dst)| {
+        for (c, o) in dst.iter_mut().enumerate() {
+            let (rows, vals) = a.col(j0 + c);
+            *o = sparse_dot(rows, vals, r);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        gemv, gemv_cols, gemv_t, gemv_t_cols, norm2, Mat,
+    };
+    use super::*;
+    use crate::proptest::{Gen, Runner};
+
+    fn sparse_dense(g: &mut Gen, m: usize, n: usize, keep: f64) -> Mat {
+        g.sparse_matrix(m, n, keep)
+    }
+
+    /// The satellite contract: on random sparsity patterns, `spmv` /
+    /// `spmv_t` are bitwise equal to `gemv` / `gemv_t` on the expanded
+    /// matrix, for sparse and dense coefficient vectors alike.
+    #[test]
+    fn spmv_bitwise_matches_gemv_on_random_patterns() {
+        Runner::new(401).cases(60).run("spmv == gemv", |g| {
+            let m = g.usize_in(1, 50);
+            let n = g.usize_in(1, 40);
+            let keep = g.f64_in(0.0, 1.0);
+            let a = sparse_dense(g, m, n, keep);
+            let c = CscMat::from_dense(&a);
+            let x: Vec<f64> = (0..n)
+                .map(|i| if i % 4 == 0 { 0.0 } else { g.normal() })
+                .collect();
+            let mut want = vec![0.0; m];
+            gemv(&a, &x, &mut want);
+            let mut got = vec![f64::NAN; m];
+            spmv(&c, &x, &mut got);
+            for (w, gt) in want.iter().zip(&got) {
+                if w.to_bits() != gt.to_bits() {
+                    return Err(format!("spmv drift ({m}x{n})"));
+                }
+            }
+            let r: Vec<f64> = (0..m).map(|_| g.normal()).collect();
+            let mut want_t = vec![0.0; n];
+            gemv_t(&a, &r, &mut want_t);
+            let mut got_t = vec![f64::NAN; n];
+            spmv_t(&c, &r, &mut got_t);
+            for (w, gt) in want_t.iter().zip(&got_t) {
+                if w.to_bits() != gt.to_bits() {
+                    return Err(format!("spmv_t drift ({m}x{n})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn active_set_variants_bitwise_match_dense() {
+        Runner::new(403).cases(30).run("spmv_cols == gemv_cols", |g| {
+            let m = g.usize_in(1, 40);
+            let n = g.usize_in(2, 40);
+            let a = sparse_dense(g, m, n, g.f64_in(0.1, 0.9));
+            let c = CscMat::from_dense(&a);
+            let active: Vec<usize> =
+                (0..n).filter(|j| j % 3 != 1).collect();
+            let x: Vec<f64> = (0..active.len())
+                .map(|i| if i % 5 == 0 { 0.0 } else { g.normal() })
+                .collect();
+            let r: Vec<f64> = (0..m).map(|_| g.normal()).collect();
+
+            let mut want = vec![0.0; m];
+            gemv_cols(&a, &active, &x, &mut want);
+            let mut got = vec![f64::NAN; m];
+            spmv_cols(&c, &active, &x, &mut got);
+            for (w, gt) in want.iter().zip(&got) {
+                if w.to_bits() != gt.to_bits() {
+                    return Err("spmv_cols drift".into());
+                }
+            }
+
+            let mut want_t = vec![0.0; active.len()];
+            gemv_t_cols(&a, &active, &r, &mut want_t);
+            let mut got_t = vec![f64::NAN; active.len()];
+            spmv_t_cols(&c, &active, &r, &mut got_t);
+            for (w, gt) in want_t.iter().zip(&got_t) {
+                if w.to_bits() != gt.to_bits() {
+                    return Err("spmv_t_cols drift".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sharded_variants_bitwise_match_sequential() {
+        let mut g = Gen::for_case(405, 0);
+        let (m, n) = (53, 90);
+        let a = sparse_dense(&mut g, m, n, 0.25);
+        let c = CscMat::from_dense(&a);
+        let active: Vec<usize> = (0..n).filter(|j| j % 4 != 2).collect();
+        let x: Vec<f64> = (0..active.len())
+            .map(|i| if i % 3 == 0 { 0.0 } else { g.normal() })
+            .collect();
+        let mut r = vec![0.0; m];
+        for v in r.iter_mut() {
+            *v = g.normal();
+        }
+
+        let mut t_seq = vec![0.0; active.len()];
+        spmv_t_cols(&c, &active, &r, &mut t_seq);
+        let mut g_seq = vec![0.0; m];
+        spmv_cols(&c, &active, &x, &mut g_seq);
+
+        let mut nz = Vec::new();
+        for threads in [1usize, 2, 4, 8] {
+            let ctx = ParContext::new_pool(threads, 1);
+            let mut t_par = vec![f64::NAN; active.len()];
+            spmv_t_cols_sharded(&c, &active, &r, &mut t_par, &ctx);
+            for (s, p) in t_seq.iter().zip(&t_par) {
+                assert_eq!(s.to_bits(), p.to_bits(), "{threads} threads");
+            }
+            let mut g_par = vec![f64::NAN; m];
+            spmv_cols_sharded_scratch(
+                &c, &active, &x, &mut g_par, &ctx, &mut nz,
+            );
+            for (s, p) in g_seq.iter().zip(&g_par) {
+                assert_eq!(s.to_bits(), p.to_bits(), "{threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn compact_variants_bitwise_match_cols_prefix() {
+        let mut g = Gen::for_case(407, 0);
+        for (m, k, extra) in
+            [(1usize, 1usize, 0usize), (17, 9, 4), (41, 26, 7)]
+        {
+            let a = sparse_dense(&mut g, m, k + extra, 0.4);
+            let c = CscMat::from_dense(&a);
+            let active: Vec<usize> = (0..k).collect();
+            let x: Vec<f64> = (0..k)
+                .map(|i| if i % 3 == 0 { 0.0 } else { g.normal() })
+                .collect();
+            let mut r = vec![0.0; m];
+            for v in r.iter_mut() {
+                *v = g.normal();
+            }
+
+            let mut want = vec![0.0; m];
+            spmv_cols(&c, &active, &x, &mut want);
+            let mut got = vec![f64::NAN; m];
+            spmv_compact(&c, &x, &mut got);
+            for (w, gt) in want.iter().zip(&got) {
+                assert_eq!(w.to_bits(), gt.to_bits(), "({m}, {k})");
+            }
+
+            let mut want_t = vec![0.0; k];
+            spmv_t_cols(&c, &active, &r, &mut want_t);
+            let mut got_t = vec![f64::NAN; k];
+            spmv_t_compact(&c, &r, &mut got_t);
+            for (w, gt) in want_t.iter().zip(&got_t) {
+                assert_eq!(w.to_bits(), gt.to_bits(), "({m}, {k})");
+            }
+
+            let mut nz = Vec::new();
+            for threads in [2usize, 8] {
+                let ctx = ParContext::new_pool(threads, 1);
+                let mut par = vec![f64::NAN; m];
+                spmv_compact_sharded(&c, &x, &mut par, &ctx, &mut nz);
+                for (w, gt) in want.iter().zip(&par) {
+                    assert_eq!(w.to_bits(), gt.to_bits(), "{threads}t");
+                }
+                let mut par_t = vec![f64::NAN; k];
+                spmv_t_compact_sharded(&c, &r, &mut par_t, &ctx);
+                for (w, gt) in want_t.iter().zip(&par_t) {
+                    assert_eq!(w.to_bits(), gt.to_bits(), "{threads}t");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_view_primitives_bitwise_match_dense() {
+        Runner::new(409).cases(30).run("ColView parity", |g| {
+            let m = g.usize_in(1, 60);
+            let a = sparse_dense(g, m, 1, g.f64_in(0.0, 1.0));
+            let c = CscMat::from_dense(&a);
+            let (rows, vals) = c.col(0);
+            let r: Vec<f64> = (0..m).map(|_| g.normal()).collect();
+            let dense = ColView::Dense(a.col(0));
+            let sparse = ColView::Sparse { rows, vals };
+            if dense.dot(&r).to_bits() != sparse.dot(&r).to_bits() {
+                return Err("ColView::dot drift".into());
+            }
+            let alpha = g.normal();
+            let mut y_d = r.clone();
+            let mut y_s = r.clone();
+            dense.axpy_into(alpha, &mut y_d);
+            sparse.axpy_into(alpha, &mut y_s);
+            for (d, s) in y_d.iter().zip(&y_s) {
+                if d.to_bits() != s.to_bits() {
+                    return Err("ColView::axpy drift".into());
+                }
+            }
+            if sparse_norm2(rows, vals, m).to_bits()
+                != norm2(a.col(0)).to_bits()
+            {
+                return Err("sparse_norm2 drift".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_active_set_and_all_zero_x() {
+        let mut g = Gen::for_case(411, 0);
+        let a = sparse_dense(&mut g, 7, 5, 0.5);
+        let c = CscMat::from_dense(&a);
+        let ctx = ParContext::new_pool(4, 1);
+        let mut out_t: Vec<f64> = Vec::new();
+        spmv_t_cols_sharded(&c, &[], &[0.0; 7], &mut out_t, &ctx);
+        assert!(out_t.is_empty());
+        let mut out = vec![f64::NAN; 7];
+        let mut nz = Vec::new();
+        spmv_cols_sharded_scratch(
+            &c,
+            &[0, 2],
+            &[0.0, 0.0],
+            &mut out,
+            &ctx,
+            &mut nz,
+        );
+        assert!(out.iter().all(|v| *v == 0.0));
+    }
+}

@@ -23,6 +23,7 @@ use holder_screening::path::{solve_path, PathConfig};
 use holder_screening::perfprof::log_tau_grid;
 use holder_screening::regions::RegionKind;
 use holder_screening::solver::{solve, Budget, SolverConfig, SolverKind};
+use holder_screening::sparse::DictFormat;
 use holder_screening::workset::CompactionPolicy;
 
 const PROGRAM: &str = "holder-screening";
@@ -60,6 +61,26 @@ const COMPACTION_FLAG: Flag = Flag::num(
      compaction entirely); never changes results",
 );
 
+/// Dictionary storage backend (see `sparse::DictStore`).  Results are
+/// bitwise identical for either value; CSC wins wall-clock on sparse
+/// (truncated-pulse Toeplitz) dictionaries.
+const DICT_FORMAT_FLAG: Flag = Flag::str(
+    "dict-format",
+    Some("dense"),
+    "dictionary storage: dense | csc; never changes results — csc \
+     trades nothing but wall-clock on sparse (truncated Toeplitz) \
+     dictionaries",
+);
+
+/// Toeplitz pulse truncation (`InstanceConfig::pulse_cutoff`).
+const PULSE_CUTOFF_FLAG: Flag = Flag::num(
+    "pulse-cutoff",
+    Some("0"),
+    "truncate the Toeplitz pulse to exact zeros beyond this many \
+     standard deviations (0 = no truncation); a positive cutoff is \
+     what makes --dict-format csc genuinely sparse",
+);
+
 const SOLVE_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[0],
     COMMON_INSTANCE_FLAGS[1],
@@ -69,6 +90,8 @@ const SOLVE_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[5],
     SHARD_MIN_FLAG,
     COMPACTION_FLAG,
+    DICT_FORMAT_FLAG,
+    PULSE_CUTOFF_FLAG,
     Flag::str("region", Some("holder_dome"),
               "screening region: holder_dome | gap_dome | gap_sphere | \
                static_sphere | dynamic_sphere | none"),
@@ -87,6 +110,8 @@ const PATH_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[5],
     SHARD_MIN_FLAG,
     COMPACTION_FLAG,
+    DICT_FORMAT_FLAG,
+    PULSE_CUTOFF_FLAG,
     Flag::str("region", Some("holder_dome"), "screening region or none"),
     Flag::int("points", Some("20"), "lambda grid points"),
     Flag::num("lam-min", Some("0.1"), "smallest lambda / lambda_max"),
@@ -211,12 +236,19 @@ fn instance_from_args(args: &Args) -> InstanceConfig {
             eprintln!("unknown dictionary; using gaussian");
             DictKind::Gaussian
         });
+    let format = DictFormat::parse(args.str_or("dict-format", "dense"))
+        .unwrap_or_else(|| {
+            eprintln!("unknown dict-format; using dense");
+            DictFormat::Dense
+        });
     InstanceConfig {
         m: args.int_or("m", 100),
         n: args.int_or("n", 500),
         kind,
         lam_ratio: args.num_or("lam-ratio", 0.5),
         pulse_width: 4.0,
+        pulse_cutoff: args.num_or("pulse-cutoff", 0.0),
+        format,
     }
 }
 
@@ -275,10 +307,20 @@ fn cmd_solve(args: &Args) -> i32 {
         ..Default::default()
     };
     println!(
-        "instance: {}x{} dict={} lam={:.6} (ratio {:.2}, lam_max {:.6})",
-        p.m(), p.n(), icfg.kind.name(), p.lam(),
-        icfg.lam_ratio, p.lam_max()
+        "instance: {}x{} dict={}/{} lam={:.6} (ratio {:.2}, lam_max {:.6})",
+        p.m(), p.n(), icfg.kind.name(), p.store().format().name(),
+        p.lam(), icfg.lam_ratio, p.lam_max()
     );
+    if icfg.format == DictFormat::Csc {
+        let nnz = p.store().nnz();
+        let dense_len = p.m() * p.n();
+        println!(
+            "csc store: {nnz} nnz of {dense_len} dense ({:.2}% — \
+             dense-vs-sparse ratio {:.1}x)",
+            100.0 * nnz as f64 / dense_len as f64,
+            dense_len as f64 / nnz.max(1) as f64
+        );
+    }
     let rep = solve(p, &cfg);
     if args.switch("trace") {
         for tp in &rep.trace {
@@ -558,7 +600,7 @@ fn cmd_serve(args: &Args) -> i32 {
         kind: DictKind::parse(args.str_or("dict", "gaussian"))
             .unwrap_or(DictKind::Gaussian),
         lam_ratio: args.num_or("lam-ratio", 0.5),
-        pulse_width: 4.0,
+        ..Default::default()
     };
     let region = region_from_args(args);
     let requests = args.int_or("requests", 32);

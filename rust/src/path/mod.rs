@@ -75,9 +75,13 @@ pub fn lambda_grid(lam_max: f64, num: usize, min_ratio: f64) -> Vec<f64> {
 ///
 /// One [`WorkingSet`] is carried across the whole grid: each solve
 /// recycles the compact dictionary, cache and scratch buffers of the
-/// previous point (`O(m·k)` capacity, reused instead of reallocated),
-/// while the warm start keeps the first duality gap — and hence the
-/// first screening round — tight.
+/// previous point (`O(m·k)` capacity — or `O(nnz)` for CSC-backed
+/// problems, whose carried working set is the `SparseStore` variant —
+/// reused instead of reallocated), while the warm start keeps the
+/// first duality gap — and hence the first screening round — tight.
+/// Everything dispatches through the problem's
+/// [`crate::sparse::DictStore`], so path results are bitwise identical
+/// across storage formats as well as thread counts.
 pub fn solve_path(base: &LassoProblem, cfg: &PathConfig) -> PathResult {
     let sw = crate::util::timer::Stopwatch::start();
     let grid = lambda_grid(base.lam_max(), cfg.num_lambdas, cfg.lam_min_ratio);

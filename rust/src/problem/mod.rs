@@ -8,15 +8,21 @@
 //! precomputations every solver/screening pass reuses: column norms,
 //! `Aᵀy`, `λ_max = ‖Aᵀy‖_∞` (eq. 6) and the FISTA step size `1/‖A‖₂²`.
 
-use crate::linalg::{self, gemv, gemv_t, Mat};
+use crate::linalg::{self, Mat};
+use crate::sparse::DictStore;
 
 /// Guard value shared with the Python layer (`kernels/ref.py::EPS`).
 pub const EPS: f64 = 1e-12;
 
 /// A Lasso instance with cached precomputations.
+///
+/// The dictionary lives behind the [`DictStore`] seam — dense [`Mat`]
+/// or sparse CSC — and every precomputation and primal-dual routine
+/// dispatches through it, so the two storage formats of the same
+/// matrix yield bitwise-identical problems (caches included).
 #[derive(Clone, Debug)]
 pub struct LassoProblem {
-    a: Mat,
+    store: DictStore,
     y: Vec<f64>,
     lam: f64,
     // --- cached ---
@@ -24,21 +30,39 @@ pub struct LassoProblem {
     aty: Vec<f64>,
     lam_max: f64,
     lipschitz: f64,
+    /// Stored-structure nonzeros per column (what the flop meter
+    /// charges matvecs by — identical across storage formats).
+    col_nnz: Vec<usize>,
 }
 
 impl LassoProblem {
-    /// Build a problem; `A` is the dictionary (columns = atoms).
+    /// Build a problem from a dense dictionary (columns = atoms).
     ///
     /// Panics if shapes disagree or `lam <= 0`.
     pub fn new(a: Mat, y: Vec<f64>, lam: f64) -> Self {
-        assert_eq!(a.rows(), y.len(), "A rows must match y length");
+        Self::from_store(DictStore::Dense(a), y, lam)
+    }
+
+    /// Build a problem from either dictionary backend.
+    pub fn from_store(store: DictStore, y: Vec<f64>, lam: f64) -> Self {
+        assert_eq!(store.rows(), y.len(), "A rows must match y length");
         assert!(lam > 0.0, "lambda must be positive");
-        let col_norms = a.col_norms();
-        let mut aty = vec![0.0; a.cols()];
-        gemv_t(&a, &y, &mut aty);
+        let col_norms = store.col_norms();
+        let mut aty = vec![0.0; store.cols()];
+        store.gemv_t(&y, &mut aty);
         let lam_max = linalg::norm_inf(&aty);
-        let lipschitz = a.spectral_norm_sq(60, 0x5eed).max(EPS);
-        LassoProblem { a, y, lam, col_norms, aty, lam_max, lipschitz }
+        let lipschitz = store.spectral_norm_sq(60, 0x5eed).max(EPS);
+        let col_nnz = store.col_nnz_counts();
+        LassoProblem {
+            store,
+            y,
+            lam,
+            col_norms,
+            aty,
+            lam_max,
+            lipschitz,
+            col_nnz,
+        }
     }
 
     /// Same instance at a different λ (path solving; caches are reused).
@@ -51,8 +75,21 @@ impl LassoProblem {
 
     // --- accessors ---
 
+    /// The dense dictionary backend.  Panics for CSC-backed problems —
+    /// storage-agnostic code goes through [`store`](Self::store).
     pub fn a(&self) -> &Mat {
-        &self.a
+        self.store.as_dense().expect(
+            "LassoProblem::a(): dense dictionary required; \
+             this problem is CSC-backed — dispatch through store()",
+        )
+    }
+    /// The dictionary storage seam (dense or CSC).
+    pub fn store(&self) -> &DictStore {
+        &self.store
+    }
+    /// Stored-structure nonzeros per column (flop-meter weights).
+    pub fn col_nnz(&self) -> &[usize] {
+        &self.col_nnz
     }
     pub fn y(&self) -> &[f64] {
         &self.y
@@ -62,11 +99,11 @@ impl LassoProblem {
     }
     /// `m`: observation dimension.
     pub fn m(&self) -> usize {
-        self.a.rows()
+        self.store.rows()
     }
     /// `n`: number of atoms.
     pub fn n(&self) -> usize {
-        self.a.cols()
+        self.store.cols()
     }
     /// Cached per-atom norms ‖a_i‖₂.
     pub fn col_norms(&self) -> &[f64] {
@@ -94,7 +131,7 @@ impl LassoProblem {
 
     /// Residual `r = y − Ax`.
     pub fn residual(&self, x: &[f64], out: &mut [f64]) {
-        gemv(&self.a, x, out);
+        self.store.gemv(x, out);
         for (o, yi) in out.iter_mut().zip(&self.y) {
             *o = yi - *o;
         }
@@ -122,7 +159,7 @@ impl LassoProblem {
     /// Is `u` dual feasible (`‖Aᵀu‖_∞ ≤ λ(1+tol)`)?
     pub fn is_dual_feasible(&self, u: &[f64], tol: f64) -> bool {
         let mut atu = vec![0.0; self.n()];
-        gemv_t(&self.a, u, &mut atu);
+        self.store.gemv_t(u, &mut atu);
         linalg::norm_inf(&atu) <= self.lam * (1.0 + tol)
     }
 
@@ -150,7 +187,7 @@ impl LassoProblem {
         let mut r = vec![0.0; self.m()];
         self.residual(x, &mut r);
         let mut atr = vec![0.0; self.n()];
-        gemv_t(&self.a, &r, &mut atr);
+        self.store.gemv_t(&r, &mut atr);
         let (u, scale) = self.dual_scale(&r, &atr);
         let p = self.primal_from_residual(x, &r);
         let d = self.dual(&u);
@@ -177,6 +214,7 @@ pub struct PrimalDualEval {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::{gemv, gemv_t};
     use crate::proptest::{Gen, Runner};
 
     fn small_problem(seed: u64) -> LassoProblem {

@@ -57,6 +57,27 @@ impl Gen {
         v
     }
 
+    /// Dense matrix with a planted sparsity pattern: each entry is
+    /// kept (standard normal) with probability `keep`, left as an
+    /// exact `0.0` otherwise — the shared generator behind the
+    /// dense↔CSC conversion and sparse-kernel parity suites.
+    pub fn sparse_matrix(
+        &mut self,
+        m: usize,
+        n: usize,
+        keep: f64,
+    ) -> crate::linalg::Mat {
+        let mut mat = crate::linalg::Mat::zeros(m, n);
+        for j in 0..n {
+            for i in 0..m {
+                if self.f64_in(0.0, 1.0) < keep {
+                    mat.set(i, j, self.normal());
+                }
+            }
+        }
+        mat
+    }
+
     /// Column-normalized random dictionary (the paper's setup).
     pub fn dictionary(&mut self, m: usize, n: usize) -> crate::linalg::Mat {
         let mut mat = crate::linalg::Mat::zeros(m, n);

@@ -59,19 +59,27 @@
 //!    mask;
 //! 3. **compact** — when the removed fraction since the last rebuild
 //!    clears the [`crate::workset::CompactionPolicy`] threshold, the
-//!    surviving columns (plus per-atom `‖a_i‖` / `(Aᵀy)_i` caches used
-//!    by the statistics recipes above) are copied into contiguous
-//!    storage;
+//!    surviving columns (plus per-atom `‖a_i‖` / `(Aᵀy)_i` / nnz
+//!    caches used by the statistics recipes above) are copied into
+//!    contiguous storage **in the dictionary's format** — a dense
+//!    [`crate::linalg::Mat`], or, for CSC-backed problems
+//!    ([`crate::sparse::DictStore`]), a `SparseStore`: the surviving
+//!    columns' nonzero `(row_idx, val)` runs gathered into a compact
+//!    [`crate::sparse::CscMat`];
 //! 4. **blocked kernels** — subsequent iterations stream that storage
 //!    with the indirection-free matvecs
-//!    ([`crate::linalg::gemv_compact_sharded`],
-//!    [`crate::linalg::gemv_t_blocked_sharded`]), and the screening
-//!    test itself reads the compact stat caches contiguously
-//!    (`ScreeningEngine::compute_keep_ws`).
+//!    ([`crate::linalg::gemv_compact_sharded`] /
+//!    [`crate::linalg::gemv_t_blocked_sharded`] dense,
+//!    [`crate::linalg::spmv_compact_sharded`] /
+//!    [`crate::linalg::spmv_t_compact_sharded`] sparse), and the
+//!    screening test itself reads the compact stat caches contiguously
+//!    (`ScreeningEngine::compute_keep_ws`) — the per-atom statistics
+//!    are scalars, so the test body never touches the matrix and is
+//!    storage-format-agnostic by construction.
 //!
 //! The per-atom bound arithmetic is identical in every mode, so the
 //! keep mask — and the whole solve — is bitwise independent of the
-//! compaction policy as well as of threading.
+//! compaction policy, the dictionary storage format, and threading.
 
 use crate::flops::cost::{self, ScreenSetupKind};
 use crate::geometry::{Ball, Dome, HalfSpace};

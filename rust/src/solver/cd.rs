@@ -40,12 +40,12 @@ pub(crate) fn run(
     // Residual r = y − A x, maintained across sweeps.
     let mut r = vec![0.0; m];
     {
-        let nnz = x.iter().filter(|v| **v != 0.0).count();
+        let nnz = ws.support_nnz(p, state.active(), &x);
         ws.gemv(p, state.active(), &x, &mut r, &cfg.par);
         for (ri, yi) in r.iter_mut().zip(p.y()) {
             *ri = yi - *ri;
         }
-        flops.charge(cost::gemv(m, nnz) + m as u64);
+        flops.charge(cost::spmv(nnz) + m as u64);
     }
     let mut atr: Vec<f64> = vec![0.0; state.active_count()];
 
@@ -64,7 +64,7 @@ pub(crate) fn run(
         let k = state.active_count();
         atr.resize(k, 0.0);
         ws.gemv_t(p, state.active(), r, atr, &cfg.par);
-        flops.charge(cost::gemv_t(m, k));
+        flops.charge(cost::spmv(ws.active_nnz(p, state.active())));
         let corr = linalg::norm_inf(atr);
         let s = (p.lam() / corr.max(EPS)).min(1.0);
         let rr = linalg::norm2_sq(r);
@@ -103,28 +103,32 @@ pub(crate) fn run(
     } else {
         for it in 1..=max_iters {
             iters = it;
-            // One full sweep (columns come from the working set:
-            // contiguous compact storage once materialized).
+            // One full sweep (columns come from the working set as
+            // `ColView`s: contiguous compact storage once
+            // materialized, dense or sparse; either format replays the
+            // same per-column arithmetic).  Dots and axpys are charged
+            // by the column's stored nonzeros.
             let active = state.active();
             for k_pos in 0..active.len() {
-                let col = ws.col(p, active, k_pos);
+                let col = ws.col_view(p, active, k_pos);
                 let nrm = ws.col_norm(p, active, k_pos);
+                let nnz_j = ws.col_nnz(p, active, k_pos) as u64;
                 let nrm2 = nrm * nrm;
                 if nrm2 < EPS {
                     continue;
                 }
-                let corr = linalg::dot(col, &r);
+                let corr = col.dot(&r);
                 let old = x[k_pos];
                 let new = linalg::soft_threshold_scalar(
                     old + corr / nrm2,
                     lam / nrm2,
                 );
                 if new != old {
-                    linalg::axpy(old - new, col, &mut r);
+                    col.axpy_into(old - new, &mut r);
                     x[k_pos] = new;
-                    flops.charge(cost::axpy(m));
+                    flops.charge(cost::spmv(nnz_j));
                 }
-                flops.charge(cost::dot(m) + 6);
+                flops.charge(cost::spmv(nnz_j) + 6);
             }
 
             ev = eval(&x, &r, &mut atr, &state, ws, p, &mut flops);
@@ -154,9 +158,11 @@ pub(crate) fn run(
                     // pre-retain working set).
                     for (k_pos, &kp) in keep.iter().enumerate() {
                         if !kp && x[k_pos] != 0.0 {
-                            let col = ws.col(p, state.active(), k_pos);
-                            linalg::axpy(x[k_pos], col, &mut r);
-                            flops.charge(cost::axpy(m));
+                            let nnz_j =
+                                ws.col_nnz(p, state.active(), k_pos) as u64;
+                            let col = ws.col_view(p, state.active(), k_pos);
+                            col.axpy_into(x[k_pos], &mut r);
+                            flops.charge(cost::spmv(nnz_j));
                         }
                     }
                     let removed = state.retain(&keep);

@@ -191,7 +191,7 @@ pub(crate) fn run(
                             &mut flops, &cfg.par,
                         );
                         let nnz_prev =
-                            x_prev.iter().filter(|v| **v != 0.0).count();
+                            ws.support_nnz(p, state.active(), &x_prev);
                         ws.gemv(
                             p,
                             state.active(),
@@ -210,8 +210,10 @@ pub(crate) fn run(
                             &cfg.par,
                         );
                         flops.charge(
-                            cost::gemv(m, nnz_prev)
-                                + cost::gemv_t(m, state.active_count()),
+                            cost::spmv(nnz_prev)
+                                + cost::spmv(
+                                    ws.active_nnz(p, state.active()),
+                                ),
                         );
                     }
                 }

@@ -242,17 +242,21 @@ pub(crate) fn metered_eval(
 ) -> EvalOut {
     let m = p.m();
     let k = state.active_count();
-    let nnz = x_c.iter().filter(|v| **v != 0.0).count();
+    // Matvecs are charged by the stored nonzeros they actually touch
+    // (cost::spmv) — identical across storage formats and compaction
+    // policies, and equal to the legacy dense formulas when every
+    // column is dense.
+    let nnz_ax = ws.support_nnz(p, state.active(), x_c);
     // r = y − A x (row-sharded; bitwise identical to sequential)
     ws.gemv(p, state.active(), x_c, r, ctx);
     for (ri, yi) in r.iter_mut().zip(p.y()) {
         *ri = yi - *ri;
     }
-    flops.charge(cost::gemv(m, nnz) + (m as u64));
+    flops.charge(cost::spmv(nnz_ax) + (m as u64));
     // atr = Aᵀ r over the active set (column-sharded / cache-blocked)
     atr.resize(k, 0.0);
     ws.gemv_t(p, state.active(), r, atr, ctx);
-    flops.charge(cost::gemv_t(m, k));
+    flops.charge(cost::spmv(ws.active_nnz(p, state.active())));
     // dual scaling
     let corr = linalg::norm_inf(atr);
     let s = (p.lam() / corr.max(EPS)).min(1.0);

@@ -1,0 +1,491 @@
+//! Sparse (CSC) dictionary storage and the [`DictStore`] dispatch seam.
+//!
+//! The paper's hard screening case is the convolutional Toeplitz
+//! dictionary (§V, dictionary (ii)): Gaussian-pulse atoms whose mass is
+//! concentrated in a narrow row window.  With a pulse truncation cutoff
+//! (`InstanceConfig::pulse_cutoff`) the atoms are *exactly* sparse, and
+//! a dense `m × n` store pays dense FLOPs and dense memory traffic for
+//! columns that are ~98% structural zeros.
+//!
+//! [`CscMat`] is a classic compressed-sparse-column store — column
+//! pointers, row indices, values — and [`DictStore`] is the seam that
+//! lets every consumer (problem precomputation, the solvers' matvecs,
+//! the working set, the λ-path, the CLI) dispatch between the dense
+//! [`Mat`] backend and the CSC backend without caring which one is
+//! underneath.
+//!
+//! ## The bitwise contract
+//!
+//! Dense and CSC stores of the *same matrix* (same values, zeros stored
+//! explicitly on the dense side) produce **bitwise identical** results
+//! everywhere: the sparse kernels in [`crate::linalg::spmv`] replay the
+//! dense kernels' per-element floating-point operation order over the
+//! stored nonzeros, and a stored zero contributes `acc += x·0.0 = ±0.0`
+//! to the dense accumulation — a no-op on every accumulator that
+//! started from `+0.0` (see the `spmv` module docs for the argument).
+//! `SolveReport`s are therefore bitwise invariant in `--dict-format`
+//! (`rust/tests/workset_parity.rs`), including the flop meter, which
+//! charges by stored-structure nonzeros on both backends
+//! ([`crate::flops`]).
+
+use crate::linalg::{self, Mat};
+
+/// Which physical storage backs a dictionary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DictFormat {
+    /// Column-major dense [`Mat`] (the default).
+    Dense,
+    /// Compressed sparse column [`CscMat`].
+    Csc,
+}
+
+impl DictFormat {
+    pub fn parse(s: &str) -> Option<DictFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" | "mat" => Some(DictFormat::Dense),
+            "csc" | "sparse" => Some(DictFormat::Csc),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DictFormat::Dense => "dense",
+            DictFormat::Csc => "csc",
+        }
+    }
+}
+
+/// Compressed sparse column matrix: `col_ptr[j]..col_ptr[j+1]` indexes
+/// the `(row_idx, val)` pairs of column `j`, rows strictly ascending
+/// within a column.  Stored values are nonzero (`from_dense` drops
+/// exact zeros; note `-0.0` is dropped too and reads back as `+0.0`,
+/// which every kernel treats identically).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMat {
+    rows: usize,
+    cols: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    val: Vec<f64>,
+}
+
+impl Default for CscMat {
+    /// An empty `0 × 0` matrix (placeholder for lazily-built storage,
+    /// mirroring `Mat::default`).
+    fn default() -> Self {
+        CscMat {
+            rows: 0,
+            cols: 0,
+            col_ptr: vec![0],
+            row_idx: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+}
+
+impl CscMat {
+    /// Build from raw CSC parts; validates shape and per-column row
+    /// ordering.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<u32>,
+        val: Vec<f64>,
+    ) -> Self {
+        assert!(rows <= u32::MAX as usize, "CscMat: row index overflow");
+        assert_eq!(col_ptr.len(), cols + 1, "CscMat: col_ptr length");
+        assert_eq!(col_ptr[0], 0, "CscMat: col_ptr must start at 0");
+        assert_eq!(*col_ptr.last().unwrap(), row_idx.len());
+        assert_eq!(row_idx.len(), val.len(), "CscMat: idx/val length");
+        // Real asserts, not debug: the kernels' bitwise-replay contract
+        // silently breaks on unsorted or out-of-range rows (sparse_dot
+        // lanes, partition_point row ranges), and this runs once per
+        // dictionary build — O(nnz) here is noise.
+        for j in 0..cols {
+            let seg = &row_idx[col_ptr[j]..col_ptr[j + 1]];
+            assert!(
+                seg.windows(2).all(|w| w[0] < w[1]),
+                "CscMat: rows not strictly ascending in column {j}"
+            );
+            assert!(
+                seg.iter().all(|&r| (r as usize) < rows),
+                "CscMat: row index out of range in column {j}"
+            );
+        }
+        CscMat { rows, cols, col_ptr, row_idx, val }
+    }
+
+    /// Convert a dense matrix, storing every entry `!= 0.0`.
+    pub fn from_dense(a: &Mat) -> CscMat {
+        let (m, n) = (a.rows(), a.cols());
+        assert!(m <= u32::MAX as usize, "CscMat: row index overflow");
+        let mut col_ptr = Vec::with_capacity(n + 1);
+        let mut row_idx = Vec::new();
+        let mut val = Vec::new();
+        col_ptr.push(0);
+        for j in 0..n {
+            for (i, &v) in a.col(j).iter().enumerate() {
+                if v != 0.0 {
+                    row_idx.push(i as u32);
+                    val.push(v);
+                }
+            }
+            col_ptr.push(row_idx.len());
+        }
+        CscMat { rows: m, cols: n, col_ptr, row_idx, val }
+    }
+
+    /// Expand back to dense (round-trips `from_dense` exactly for
+    /// matrices without `-0.0` entries).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            let (rows, vals) = self.col(j);
+            let col = out.col_mut(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                col[i as usize] = v;
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Stored nonzeros of column `j`.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// The `(row_idx, val)` run of column `j` (rows ascending).
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        debug_assert!(j < self.cols);
+        let s = self.col_ptr[j];
+        let e = self.col_ptr[j + 1];
+        (&self.row_idx[s..e], &self.val[s..e])
+    }
+
+    /// Per-column l2 norms, bitwise equal to the dense
+    /// `Mat::col_norms` of the expanded matrix (the sparse norm replays
+    /// `dot`'s accumulator pattern keyed by original row index).
+    pub fn col_norms(&self) -> Vec<f64> {
+        (0..self.cols)
+            .map(|j| {
+                let (rows, vals) = self.col(j);
+                linalg::sparse_norm2(rows, vals, self.rows)
+            })
+            .collect()
+    }
+
+    /// Gather a sub-matrix of the given columns into `dst`, reusing its
+    /// buffers — the sparse working-set rebuild path: surviving
+    /// columns' nonzero runs are copied into contiguous `(row_idx,
+    /// val)` storage, and the compact matrix shrinks monotonically so
+    /// it never reallocates after the first build.
+    pub fn select_columns_into(&self, idx: &[usize], dst: &mut CscMat) {
+        dst.col_ptr.clear();
+        dst.row_idx.clear();
+        dst.val.clear();
+        dst.col_ptr.push(0);
+        for &j in idx {
+            let (rows, vals) = self.col(j);
+            dst.row_idx.extend_from_slice(rows);
+            dst.val.extend_from_slice(vals);
+            dst.col_ptr.push(dst.row_idx.len());
+        }
+        dst.rows = self.rows;
+        dst.cols = idx.len();
+    }
+
+    /// [`select_columns_into`](Self::select_columns_into) into a fresh
+    /// matrix.
+    pub fn select_columns(&self, idx: &[usize]) -> CscMat {
+        let mut dst = CscMat::default();
+        self.select_columns_into(idx, &mut dst);
+        dst
+    }
+}
+
+/// The dictionary storage seam: dense [`Mat`] or sparse [`CscMat`],
+/// with every shared query dispatching to the matching kernel family.
+/// Both backends of the same matrix answer every method bitwise
+/// identically (module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DictStore {
+    Dense(Mat),
+    Csc(CscMat),
+}
+
+impl DictStore {
+    pub fn format(&self) -> DictFormat {
+        match self {
+            DictStore::Dense(_) => DictFormat::Dense,
+            DictStore::Csc(_) => DictFormat::Csc,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            DictStore::Dense(a) => a.rows(),
+            DictStore::Csc(a) => a.rows(),
+        }
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            DictStore::Dense(a) => a.cols(),
+            DictStore::Csc(a) => a.cols(),
+        }
+    }
+
+    /// The dense backend, if that is what this store is.
+    pub fn as_dense(&self) -> Option<&Mat> {
+        match self {
+            DictStore::Dense(a) => Some(a),
+            DictStore::Csc(_) => None,
+        }
+    }
+
+    /// The CSC backend, if that is what this store is.
+    pub fn as_csc(&self) -> Option<&CscMat> {
+        match self {
+            DictStore::Dense(_) => None,
+            DictStore::Csc(a) => Some(a),
+        }
+    }
+
+    /// Stored-structure nonzeros (a dense store counts entries
+    /// `!= 0.0`, so both formats of the same matrix agree — this is
+    /// what the flop meter charges by).
+    pub fn nnz(&self) -> usize {
+        match self {
+            DictStore::Dense(a) => {
+                a.as_slice().iter().filter(|v| **v != 0.0).count()
+            }
+            DictStore::Csc(a) => a.nnz(),
+        }
+    }
+
+    /// Per-column stored-structure nonzero counts (the
+    /// `LassoProblem::col_nnz` cache).
+    pub fn col_nnz_counts(&self) -> Vec<usize> {
+        match self {
+            DictStore::Dense(a) => (0..a.cols())
+                .map(|j| a.col(j).iter().filter(|v| **v != 0.0).count())
+                .collect(),
+            DictStore::Csc(a) => {
+                (0..a.cols()).map(|j| a.col_nnz(j)).collect()
+            }
+        }
+    }
+
+    /// `out = A x` over the full dictionary.
+    pub fn gemv(&self, x: &[f64], out: &mut [f64]) {
+        match self {
+            DictStore::Dense(a) => linalg::gemv(a, x, out),
+            DictStore::Csc(a) => linalg::spmv(a, x, out),
+        }
+    }
+
+    /// `out = Aᵀ r` over the full dictionary.
+    pub fn gemv_t(&self, r: &[f64], out: &mut [f64]) {
+        match self {
+            DictStore::Dense(a) => linalg::gemv_t(a, r, out),
+            DictStore::Csc(a) => linalg::spmv_t(a, r, out),
+        }
+    }
+
+    /// Per-column l2 norms.
+    pub fn col_norms(&self) -> Vec<f64> {
+        match self {
+            DictStore::Dense(a) => a.col_norms(),
+            DictStore::Csc(a) => a.col_norms(),
+        }
+    }
+
+    /// ‖A‖₂² via power iteration on AᵀA — both backends run
+    /// [`linalg::spectral_norm_sq_via`], the one shared implementation,
+    /// with their own matvec pair (the FISTA step size must not depend
+    /// on storage).
+    pub fn spectral_norm_sq(&self, iters: usize, seed: u64) -> f64 {
+        match self {
+            DictStore::Dense(a) => a.spectral_norm_sq(iters, seed),
+            DictStore::Csc(a) => linalg::spectral_norm_sq_via(
+                a.rows(),
+                a.cols(),
+                iters,
+                seed,
+                |v, out| linalg::spmv(a, v, out),
+                |t, out| linalg::spmv_t(a, t, out),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{Gen, Runner};
+
+    /// A dense matrix with a planted sparsity pattern (each entry kept
+    /// with probability `keep`), so conversions see genuine zeros.
+    fn sparse_dense(g: &mut Gen, m: usize, n: usize, keep: f64) -> Mat {
+        g.sparse_matrix(m, n, keep)
+    }
+
+    #[test]
+    fn dense_csc_dense_round_trips_exactly() {
+        Runner::new(301).cases(40).run("csc round trip", |g| {
+            let m = g.usize_in(1, 40);
+            let n = g.usize_in(1, 30);
+            let keep = g.f64_in(0.0, 1.0);
+            let a = sparse_dense(g, m, n, keep);
+            let csc = CscMat::from_dense(&a);
+            let back = csc.to_dense();
+            if back.as_slice() != a.as_slice() {
+                return Err("round trip drifted".into());
+            }
+            let want: usize =
+                a.as_slice().iter().filter(|v| **v != 0.0).count();
+            if csc.nnz() != want {
+                return Err(format!("nnz {} != {want}", csc.nnz()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn col_access_and_counts() {
+        // [[1, 0], [0, 2], [3, 0]] column-major
+        let a = Mat::from_col_major(3, 2, vec![1.0, 0.0, 3.0, 0.0, 2.0, 0.0]);
+        let c = CscMat::from_dense(&a);
+        assert_eq!(c.rows(), 3);
+        assert_eq!(c.cols(), 2);
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.col_nnz(0), 2);
+        assert_eq!(c.col_nnz(1), 1);
+        let (r0, v0) = c.col(0);
+        assert_eq!(r0, &[0, 2]);
+        assert_eq!(v0, &[1.0, 3.0]);
+        let (r1, v1) = c.col(1);
+        assert_eq!(r1, &[1]);
+        assert_eq!(v1, &[2.0]);
+    }
+
+    #[test]
+    fn col_norms_bitwise_match_dense() {
+        let mut g = Gen::for_case(303, 0);
+        let a = sparse_dense(&mut g, 37, 20, 0.3);
+        let c = CscMat::from_dense(&a);
+        for (s, d) in c.col_norms().iter().zip(a.col_norms()) {
+            assert_eq!(s.to_bits(), d.to_bits());
+        }
+    }
+
+    #[test]
+    fn select_columns_matches_dense_gather() {
+        let mut g = Gen::for_case(305, 0);
+        let a = sparse_dense(&mut g, 20, 30, 0.4);
+        let c = CscMat::from_dense(&a);
+        let idx = [3usize, 0, 17, 17, 29];
+        let got = c.select_columns(&idx);
+        let want = CscMat::from_dense(&a.select_columns(&idx));
+        assert_eq!(got, want);
+        // The _into variant must not reallocate on a shrink.
+        let mut dst = c.select_columns(&(0..30).collect::<Vec<_>>());
+        let cap = (dst.row_idx.capacity(), dst.val.capacity());
+        c.select_columns_into(&idx, &mut dst);
+        assert_eq!(dst, want);
+        assert_eq!(
+            (dst.row_idx.capacity(), dst.val.capacity()),
+            cap,
+            "rebuild reallocated"
+        );
+    }
+
+    #[test]
+    fn dict_store_dispatch_is_bitwise_identical() {
+        Runner::new(307).cases(20).run("store dispatch parity", |g| {
+            let m = g.usize_in(1, 30);
+            let n = g.usize_in(1, 25);
+            let a = sparse_dense(g, m, n, g.f64_in(0.1, 1.0));
+            let dense = DictStore::Dense(a.clone());
+            let csc = DictStore::Csc(CscMat::from_dense(&a));
+            if dense.nnz() != csc.nnz() {
+                return Err("nnz disagreed".into());
+            }
+            if dense.col_nnz_counts() != csc.col_nnz_counts() {
+                return Err("col nnz disagreed".into());
+            }
+            for (s, d) in csc.col_norms().iter().zip(dense.col_norms()) {
+                if s.to_bits() != d.to_bits() {
+                    return Err("col_norms drifted".into());
+                }
+            }
+            let x: Vec<f64> = (0..n)
+                .map(|i| if i % 3 == 0 { 0.0 } else { g.normal() })
+                .collect();
+            let mut out_d = vec![0.0; m];
+            let mut out_c = vec![f64::NAN; m];
+            dense.gemv(&x, &mut out_d);
+            csc.gemv(&x, &mut out_c);
+            for (d, c) in out_d.iter().zip(&out_c) {
+                if d.to_bits() != c.to_bits() {
+                    return Err("gemv drifted".into());
+                }
+            }
+            let r: Vec<f64> = (0..m).map(|_| g.normal()).collect();
+            let mut t_d = vec![0.0; n];
+            let mut t_c = vec![f64::NAN; n];
+            dense.gemv_t(&r, &mut t_d);
+            csc.gemv_t(&r, &mut t_c);
+            for (d, c) in t_d.iter().zip(&t_c) {
+                if d.to_bits() != c.to_bits() {
+                    return Err("gemv_t drifted".into());
+                }
+            }
+            let sd = dense.spectral_norm_sq(15, 42);
+            let sc = csc.spectral_norm_sq(15, 42);
+            if sd.to_bits() != sc.to_bits() {
+                return Err(format!("spectral norm drifted: {sd} vs {sc}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn format_parse_round_trip() {
+        assert_eq!(DictFormat::parse("dense"), Some(DictFormat::Dense));
+        assert_eq!(DictFormat::parse("CSC"), Some(DictFormat::Csc));
+        assert_eq!(DictFormat::parse("sparse"), Some(DictFormat::Csc));
+        assert_eq!(DictFormat::parse("bogus"), None);
+        for f in [DictFormat::Dense, DictFormat::Csc] {
+            assert_eq!(DictFormat::parse(f.name()), Some(f));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_parts_rejects_bad_ptr() {
+        CscMat::from_parts(3, 2, vec![0, 1], vec![0], vec![1.0]);
+    }
+}

@@ -29,6 +29,18 @@
 //! 4. Contiguous storage enables the cache-blocked kernels until the
 //!    next rebuild.
 //!
+//! ## Storage formats: the `SparseStore` variant
+//!
+//! The working set mirrors the problem's [`DictStore`] backend.  For a
+//! dense dictionary the compact storage is a contiguous [`Mat`]; for a
+//! CSC dictionary it is a compact [`CscMat`] whose rebuild gathers the
+//! surviving columns' nonzero runs into contiguous `(row_idx, val)`
+//! storage ([`CscMat::select_columns_into`]) — same
+//! [`CompactionPolicy`] contract, same gather-vs-contiguous dispatch,
+//! sparse kernels ([`crate::linalg::spmv`]) instead of dense ones.
+//! Because those kernels replay the dense per-element operation order,
+//! the storage format is bitwise invisible in the `SolveReport` too.
+//!
 //! ## Determinism
 //!
 //! Compaction never changes results: compact columns are bit-exact
@@ -36,14 +48,16 @@
 //! operation order of their gather counterparts, and the flop meter is
 //! charged identically (the copy is pure data movement — zero flops,
 //! see [`crate::flops`]).  `SolveReport`s are therefore **bitwise
-//! identical** for every policy (disabled / any threshold) and thread
-//! count (`rust/tests/workset_parity.rs`).
+//! identical** for every policy (disabled / any threshold), thread
+//! count, and dictionary storage format
+//! (`rust/tests/workset_parity.rs`).
 
 use crate::flops::FlopCounter;
-use crate::linalg::{self, Mat};
+use crate::linalg::{self, ColView, Mat};
 use crate::par::ParContext;
 use crate::problem::LassoProblem;
 use crate::screening::ScreeningState;
+use crate::sparse::{CscMat, DictStore};
 
 /// When to physically rebuild the compact working-set storage.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -83,6 +97,21 @@ impl Default for CompactionPolicy {
     }
 }
 
+/// Physically compacted storage in the dictionary's format: a
+/// contiguous dense [`Mat`], or the `SparseStore` variant — a compact
+/// [`CscMat`] holding the surviving columns' `(row_idx, val)` runs.
+#[derive(Clone, Debug)]
+enum CompactStore {
+    Dense(Mat),
+    Sparse(CscMat),
+}
+
+impl Default for CompactStore {
+    fn default() -> Self {
+        CompactStore::Dense(Mat::default())
+    }
+}
+
 /// Contiguous storage + scratch for one solve's surviving atoms.
 ///
 /// Owned by the solver loop (or reused across a λ-path's solves — the
@@ -92,13 +121,17 @@ impl Default for CompactionPolicy {
 #[derive(Clone, Debug, Default)]
 pub struct WorkingSet {
     policy: CompactionPolicy,
-    /// Compact column storage; meaningful only while `live`.
-    a_c: Mat,
+    /// Compact column storage (dense or sparse, mirroring the
+    /// problem's [`DictStore`]); meaningful only while `live`.
+    a_c: CompactStore,
     /// `‖a_i‖` for each *current* active position (compacted on every
     /// retain while live).
     norms_c: Vec<f64>,
     /// `(Aᵀy)_i` for each current active position (ditto).
     aty_c: Vec<f64>,
+    /// Stored-structure nonzeros for each current active position
+    /// (ditto) — the flop meter's matvec weights.
+    nnz_c: Vec<usize>,
     /// Column of `a_c` holding the atom at each current active
     /// position; identity right after a rebuild.
     pos: Vec<usize>,
@@ -171,24 +204,37 @@ impl WorkingSet {
         assert_eq!(x.len(), active.len(), "WorkingSet::gemv: x length");
         if self.live {
             debug_assert_eq!(self.pos.len(), active.len());
-            if self.contiguous {
-                linalg::gemv_compact_sharded(
-                    &self.a_c, x, out, ctx, &mut self.nz,
-                );
-            } else {
-                linalg::gemv_cols_sharded_scratch(
-                    &self.a_c, &self.pos, x, out, ctx, &mut self.nz,
-                );
+            match (&self.a_c, self.contiguous) {
+                (CompactStore::Dense(a), true) => {
+                    linalg::gemv_compact_sharded(
+                        a, x, out, ctx, &mut self.nz,
+                    );
+                }
+                (CompactStore::Dense(a), false) => {
+                    linalg::gemv_cols_sharded_scratch(
+                        a, &self.pos, x, out, ctx, &mut self.nz,
+                    );
+                }
+                (CompactStore::Sparse(a), true) => {
+                    linalg::spmv_compact_sharded(
+                        a, x, out, ctx, &mut self.nz,
+                    );
+                }
+                (CompactStore::Sparse(a), false) => {
+                    linalg::spmv_cols_sharded_scratch(
+                        a, &self.pos, x, out, ctx, &mut self.nz,
+                    );
+                }
             }
         } else {
-            linalg::gemv_cols_sharded_scratch(
-                p.a(),
-                active,
-                x,
-                out,
-                ctx,
-                &mut self.nz,
-            );
+            match p.store() {
+                DictStore::Dense(a) => linalg::gemv_cols_sharded_scratch(
+                    a, active, x, out, ctx, &mut self.nz,
+                ),
+                DictStore::Csc(a) => linalg::spmv_cols_sharded_scratch(
+                    a, active, x, out, ctx, &mut self.nz,
+                ),
+            }
         }
     }
 
@@ -206,27 +252,74 @@ impl WorkingSet {
         assert_eq!(out.len(), active.len(), "WorkingSet::gemv_t: out length");
         if self.live {
             debug_assert_eq!(self.pos.len(), active.len());
-            if self.contiguous {
-                linalg::gemv_t_blocked_sharded(&self.a_c, r, out, ctx);
-            } else {
-                linalg::gemv_t_cols_sharded(&self.a_c, &self.pos, r, out, ctx);
+            match (&self.a_c, self.contiguous) {
+                (CompactStore::Dense(a), true) => {
+                    linalg::gemv_t_blocked_sharded(a, r, out, ctx);
+                }
+                (CompactStore::Dense(a), false) => {
+                    linalg::gemv_t_cols_sharded(a, &self.pos, r, out, ctx);
+                }
+                (CompactStore::Sparse(a), true) => {
+                    linalg::spmv_t_compact_sharded(a, r, out, ctx);
+                }
+                (CompactStore::Sparse(a), false) => {
+                    linalg::spmv_t_cols_sharded(a, &self.pos, r, out, ctx);
+                }
             }
         } else {
-            linalg::gemv_t_cols_sharded(p.a(), active, r, out, ctx);
+            match p.store() {
+                DictStore::Dense(a) => {
+                    linalg::gemv_t_cols_sharded(a, active, r, out, ctx);
+                }
+                DictStore::Csc(a) => {
+                    linalg::spmv_t_cols_sharded(a, active, r, out, ctx);
+                }
+            }
         }
     }
 
-    /// The atom column at active position `k` (CD's inner loop).
+    /// The atom column at active position `k` in either storage format
+    /// (CD's inner loop — [`ColView`] replays the dense per-column
+    /// primitives bitwise).
+    pub fn col_view<'a>(
+        &'a self,
+        p: &'a LassoProblem,
+        active: &[usize],
+        k: usize,
+    ) -> ColView<'a> {
+        if self.live {
+            match &self.a_c {
+                CompactStore::Dense(a) => ColView::Dense(a.col(self.pos[k])),
+                CompactStore::Sparse(a) => {
+                    let (rows, vals) = a.col(self.pos[k]);
+                    ColView::Sparse { rows, vals }
+                }
+            }
+        } else {
+            match p.store() {
+                DictStore::Dense(a) => ColView::Dense(a.col(active[k])),
+                DictStore::Csc(a) => {
+                    let (rows, vals) = a.col(active[k]);
+                    ColView::Sparse { rows, vals }
+                }
+            }
+        }
+    }
+
+    /// The atom column at active position `k` as a dense slice.
+    /// Panics for sparse-backed problems — dispatch-agnostic callers
+    /// use [`col_view`](Self::col_view).
     pub fn col<'a>(
         &'a self,
         p: &'a LassoProblem,
         active: &[usize],
         k: usize,
     ) -> &'a [f64] {
-        if self.live {
-            self.a_c.col(self.pos[k])
-        } else {
-            p.a().col(active[k])
+        match self.col_view(p, active, k) {
+            ColView::Dense(c) => c,
+            ColView::Sparse { .. } => panic!(
+                "WorkingSet::col: dense storage required; use col_view"
+            ),
         }
     }
 
@@ -241,6 +334,57 @@ impl WorkingSet {
             self.norms_c[k]
         } else {
             p.col_norms()[active[k]]
+        }
+    }
+
+    /// Stored-structure nonzeros of the atom at active position `k`
+    /// (the flop meter's per-column matvec weight; equal to `m` for a
+    /// dense column with no explicit zeros).
+    pub fn col_nnz(
+        &self,
+        p: &LassoProblem,
+        active: &[usize],
+        k: usize,
+    ) -> usize {
+        if self.live {
+            self.nnz_c[k]
+        } else {
+            p.col_nnz()[active[k]]
+        }
+    }
+
+    /// Total stored nonzeros over the active set — what one `Aᵀr`
+    /// matvec touches ([`crate::flops::cost::spmv`] charges `2·nnz`).
+    /// Independent of compaction state and storage format.
+    pub fn active_nnz(&self, p: &LassoProblem, active: &[usize]) -> u64 {
+        if self.live {
+            self.nnz_c.iter().map(|&c| c as u64).sum()
+        } else {
+            active.iter().map(|&j| p.col_nnz()[j] as u64).sum()
+        }
+    }
+
+    /// Total stored nonzeros over the columns with a nonzero
+    /// coefficient — what one `A x` matvec touches.
+    pub fn support_nnz(
+        &self,
+        p: &LassoProblem,
+        active: &[usize],
+        x: &[f64],
+    ) -> u64 {
+        debug_assert_eq!(x.len(), active.len());
+        if self.live {
+            x.iter()
+                .zip(&self.nnz_c)
+                .filter(|(xi, _)| **xi != 0.0)
+                .map(|(_, &c)| c as u64)
+                .sum()
+        } else {
+            x.iter()
+                .zip(active)
+                .filter(|(xi, _)| **xi != 0.0)
+                .map(|(_, &j)| p.col_nnz()[j] as u64)
+                .sum()
         }
     }
 
@@ -285,7 +429,7 @@ impl WorkingSet {
             CompactionPolicy::Threshold(t) => t,
         };
         if self.live {
-            // Keep pos / norms / aty aligned with the new active
+            // Keep pos / norms / aty / nnz aligned with the new active
             // positions (O(k) — negligible next to the matvecs).  The
             // f64 caches go through the same mask-compaction helper the
             // solvers use for their coefficient vectors.
@@ -295,6 +439,12 @@ impl WorkingSet {
             );
             let mut k = 0;
             self.pos.retain(|_| {
+                let b = keep[k];
+                k += 1;
+                b
+            });
+            let mut k = 0;
+            self.nnz_c.retain(|_| {
                 let b = keep[k];
                 k += 1;
                 b
@@ -310,16 +460,40 @@ impl WorkingSet {
         }
     }
 
-    /// Materialize the current active set: contiguous columns plus the
-    /// `‖a_i‖` / `(Aᵀy)_i` caches.  Pure data movement — no flops.
+    /// Materialize the current active set in the dictionary's storage
+    /// format — contiguous dense columns, or the surviving columns'
+    /// `(row_idx, val)` runs gathered into a compact [`CscMat`] — plus
+    /// the `‖a_i‖` / `(Aᵀy)_i` / nnz caches.  Pure data movement — no
+    /// flops.
     fn rebuild(&mut self, p: &LassoProblem, state: &ScreeningState) {
         let active = state.active();
-        p.a().select_columns_into(active, &mut self.a_c);
+        match p.store() {
+            DictStore::Dense(src) => {
+                if !matches!(self.a_c, CompactStore::Dense(_)) {
+                    self.a_c = CompactStore::Dense(Mat::default());
+                }
+                let CompactStore::Dense(dst) = &mut self.a_c else {
+                    unreachable!()
+                };
+                src.select_columns_into(active, dst);
+            }
+            DictStore::Csc(src) => {
+                if !matches!(self.a_c, CompactStore::Sparse(_)) {
+                    self.a_c = CompactStore::Sparse(CscMat::default());
+                }
+                let CompactStore::Sparse(dst) = &mut self.a_c else {
+                    unreachable!()
+                };
+                src.select_columns_into(active, dst);
+            }
+        }
         self.norms_c.clear();
         self.aty_c.clear();
+        self.nnz_c.clear();
         for &j in active {
             self.norms_c.push(p.col_norms()[j]);
             self.aty_c.push(p.aty()[j]);
+            self.nnz_c.push(p.col_nnz()[j]);
         }
         self.pos.clear();
         self.pos.extend(0..active.len());
@@ -518,6 +692,113 @@ mod tests {
         let cap = ws.u.capacity();
         let _ = ws.scaled_dual(&r, 0.5, &mut flops);
         assert_eq!(ws.u.capacity(), cap, "scaled-dual buffer reallocated");
+    }
+
+    /// The `SparseStore` variant through the whole lifecycle (gather →
+    /// compact → stale → rebuild), checked bitwise against the dense
+    /// twin of the same matrix at every stage.
+    #[test]
+    fn sparse_store_lifecycle_matches_dense_twin_bitwise() {
+        let mut g = Gen::for_case(21, 0);
+        let (m, n) = (19usize, 70usize);
+        let a = g.sparse_matrix(m, n, 0.35);
+        let y: Vec<f64> = (0..m).map(|_| g.f64_in(-1.0, 1.0)).collect();
+        let mut aty = vec![0.0; n];
+        linalg::gemv_t(&a, &y, &mut aty);
+        let lam = 0.5 * linalg::norm_inf(&aty).max(1e-9);
+        let pd = LassoProblem::new(a.clone(), y.clone(), lam);
+        let pc = LassoProblem::from_store(
+            DictStore::Csc(CscMat::from_dense(&a)),
+            y,
+            lam,
+        );
+        assert_eq!(pd.col_nnz(), pc.col_nnz());
+
+        let mut state = ScreeningState::new(n);
+        let mut ws = WorkingSet::new(CompactionPolicy::Threshold(0.25), n);
+
+        fn parity(
+            ws: &mut WorkingSet,
+            pd: &LassoProblem,
+            pc: &LassoProblem,
+            state: &ScreeningState,
+            seed: u64,
+        ) {
+            let mut g = Gen::for_case(seed, 1);
+            let m = pd.m();
+            let k = state.active_count();
+            let x: Vec<f64> = (0..k)
+                .map(|i| if i % 3 == 0 { 0.0 } else { g.f64_in(-1.0, 1.0) })
+                .collect();
+            let r: Vec<f64> =
+                (0..m).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            let ctx = ParContext::new_pool(4, 1);
+
+            let mut want_ax = vec![0.0; m];
+            linalg::gemv_cols(pd.a(), state.active(), &x, &mut want_ax);
+            let mut got_ax = vec![f64::NAN; m];
+            ws.gemv(pc, state.active(), &x, &mut got_ax, &ctx);
+            for (w, got) in want_ax.iter().zip(&got_ax) {
+                assert_eq!(w.to_bits(), got.to_bits(), "sparse Ax drift");
+            }
+
+            let mut want_atr = vec![0.0; k];
+            linalg::gemv_t_cols(pd.a(), state.active(), &r, &mut want_atr);
+            let mut got_atr = vec![f64::NAN; k];
+            ws.gemv_t(pc, state.active(), &r, &mut got_atr, &ctx);
+            for (w, got) in want_atr.iter().zip(&got_atr) {
+                assert_eq!(w.to_bits(), got.to_bits(), "sparse Atr drift");
+            }
+
+            for (kp, &j) in state.active().iter().enumerate() {
+                let view = ws.col_view(pc, state.active(), kp);
+                assert!(matches!(view, ColView::Sparse { .. }));
+                assert_eq!(
+                    view.dot(&r).to_bits(),
+                    linalg::dot(pd.a().col(j), &r).to_bits(),
+                    "col_view dot drift"
+                );
+                assert_eq!(ws.col_nnz(pc, state.active(), kp),
+                           pd.col_nnz()[j]);
+                assert_eq!(
+                    ws.col_norm(pc, state.active(), kp).to_bits(),
+                    pd.col_norms()[j].to_bits()
+                );
+            }
+            assert_eq!(
+                ws.active_nnz(pc, state.active()),
+                state
+                    .active()
+                    .iter()
+                    .map(|&j| pd.col_nnz()[j] as u64)
+                    .sum::<u64>()
+            );
+        }
+
+        parity(&mut ws, &pd, &pc, &state, 30);
+        // Round 1: drop half — triggers the first sparse rebuild.
+        let keep: Vec<bool> =
+            (0..state.active_count()).map(|k| k % 2 != 0).collect();
+        state.retain(&keep);
+        ws.on_retain(&pc, &state, &keep);
+        assert!(ws.is_live());
+        assert!(ws.is_contiguous());
+        parity(&mut ws, &pd, &pc, &state, 31);
+        // Round 2: drop one atom — stale sparse gather.
+        let keep: Vec<bool> =
+            (0..state.active_count()).map(|k| k != 3).collect();
+        state.retain(&keep);
+        ws.on_retain(&pc, &state, &keep);
+        assert!(!ws.is_contiguous());
+        parity(&mut ws, &pd, &pc, &state, 32);
+        // Round 3: drop half again — sparse re-compaction.
+        let keep: Vec<bool> =
+            (0..state.active_count()).map(|k| k % 2 != 0).collect();
+        state.retain(&keep);
+        ws.on_retain(&pc, &state, &keep);
+        assert!(ws.is_contiguous());
+        assert_eq!(ws.rebuilds(), 2);
+        parity(&mut ws, &pd, &pc, &state, 33);
     }
 
     #[test]

@@ -33,7 +33,7 @@ fn setup(
         n: man.n,
         kind,
         lam_ratio: ratio,
-        pulse_width: 4.0,
+        ..Default::default()
     };
     let p = generate(&cfg, seed).problem;
     let reg = ArtifactRegistry::load(
@@ -158,7 +158,7 @@ fn pjrt_gap_history_decreases() {
         n: 20,
         kind: DictKind::Gaussian,
         lam_ratio: 0.5,
-        pulse_width: 4.0,
+        ..Default::default()
     };
     let p_small = generate(&small, 0).problem;
     assert!(pjrt.solve(&p_small, None, 10, 0.0).is_err());

@@ -17,6 +17,7 @@ fn tiny(m: usize, n: usize, seed: u64, ratio: f64) -> LassoProblem {
         kind: DictKind::Gaussian,
         lam_ratio: ratio,
         pulse_width: 2.0,
+        ..Default::default()
     };
     generate(&cfg, seed).problem
 }

@@ -156,6 +156,7 @@ fn lambda_path_on_planted_deconvolution() {
         kind: DictKind::Toeplitz,
         lam_ratio: 0.3,
         pulse_width: 3.0,
+        ..Default::default()
     };
     let (inst, x0) = holder_screening::dict::generate_planted(
         &cfg, 6, 0.02, 42,

@@ -29,7 +29,7 @@ fn paper_instance(seed: u64) -> holder_screening::problem::LassoProblem {
         n: man.n,
         kind: DictKind::Gaussian,
         lam_ratio: 0.5,
-        pulse_width: 4.0,
+        ..Default::default()
     };
     generate(&cfg, seed).problem
 }

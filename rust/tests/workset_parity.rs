@@ -1,6 +1,11 @@
 //! Parity tests for the physically compacted working set: enabling
 //! compaction — at any threshold, on any thread count, for any solver —
-//! must be **bitwise invisible** in the `SolveReport`.
+//! must be **bitwise invisible** in the `SolveReport`.  Since the
+//! sparse dictionary store landed, the same bar covers the storage
+//! format: a CSC-backed solve (with its `SparseStore` compact working
+//! set) must match the dense-backed solve of the same matrix bit for
+//! bit, across the solver × region × threads × `CompactionPolicy`
+//! grid, flops included.
 //!
 //! This is the safety net for the working-set design promise: compact
 //! columns are bit-exact copies, `gemv_compact` accumulates the active
@@ -9,6 +14,7 @@
 //! never sees the copy (pure data movement).  If any of those drifts
 //! by one ulp, these tests fail.
 
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
 use holder_screening::linalg;
 use holder_screening::par::ParContext;
 use holder_screening::path::{solve_path, PathConfig};
@@ -18,6 +24,7 @@ use holder_screening::regions::RegionKind;
 use holder_screening::solver::{
     solve, Budget, SolveReport, SolverConfig, SolverKind,
 };
+use holder_screening::sparse::DictFormat;
 use holder_screening::workset::CompactionPolicy;
 
 /// The compaction policies under test: disabled, rebuild-always,
@@ -160,6 +167,129 @@ fn lambda_path_bitwise_identical_across_compaction() {
                 );
             }
         }
+    }
+}
+
+/// A truncated-pulse Toeplitz twin pair: the same matrix in the dense
+/// and the CSC store (pulse width 4, the paper's deconvolution shape
+/// scaled to m = 2000 per the sparse-dict acceptance bar).
+fn toeplitz_pair(
+    m: usize,
+    n: usize,
+    seed: u64,
+) -> (LassoProblem, LassoProblem) {
+    let mk = |format| InstanceConfig {
+        m,
+        n,
+        kind: DictKind::Toeplitz,
+        lam_ratio: 0.6,
+        pulse_width: 4.0,
+        pulse_cutoff: 8.0,
+        format,
+    };
+    let pd = generate(&mk(DictFormat::Dense), seed).problem;
+    let pc = generate(&mk(DictFormat::Csc), seed).problem;
+    assert_eq!(pd.col_nnz(), pc.col_nnz(), "twin draw diverged");
+    (pd, pc)
+}
+
+/// A fixed iteration budget makes the whole trajectory comparable
+/// without waiting for convergence on the ill-conditioned Toeplitz
+/// dictionary (stop reason is MaxIters on both sides by construction).
+fn fixed_iters(n: usize) -> Budget {
+    Budget { max_iters: n, max_flops: None, target_gap: 0.0 }
+}
+
+/// The sparse-dict acceptance bar: on a Toeplitz instance with pulse
+/// width 4 and m ≥ 2000, the CSC store's `SolveReport` is bitwise
+/// identical to the dense store's — every solver, threads ∈ {1, 8},
+/// and the `SparseStore` × threads × `CompactionPolicy` grid
+/// (flops included: both formats charge the stored nnz).
+#[test]
+fn csc_store_solve_reports_bitwise_match_dense() {
+    let (pd, pc) = toeplitz_pair(2000, 260, 1201);
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        let mk = |par: ParContext, compaction: CompactionPolicy| {
+            SolverConfig {
+                kind,
+                budget: fixed_iters(50),
+                region: Some(RegionKind::HolderDome),
+                par,
+                compaction,
+                ..Default::default()
+            }
+        };
+        let base =
+            solve(&pd, &mk(ParContext::sequential(), CompactionPolicy::Disabled));
+        assert!(base.screened > 0, "{kind:?}: screening never fired");
+        for threads in [1usize, 8] {
+            for policy in [
+                CompactionPolicy::Disabled,
+                CompactionPolicy::Threshold(0.0),
+                CompactionPolicy::Threshold(0.25),
+            ] {
+                let rep = solve(
+                    &pc,
+                    &mk(ParContext::new_pool(threads, 1), policy),
+                );
+                assert_reports_bitwise(
+                    &base,
+                    &rep,
+                    &format!("csc {kind:?} {threads}t {policy:?}"),
+                );
+            }
+        }
+    }
+}
+
+/// Same bar across every region recipe (spheres and domes) at m = 2000.
+#[test]
+fn csc_store_bitwise_matches_dense_for_every_region() {
+    let (pd, pc) = toeplitz_pair(2000, 180, 1301);
+    for region in RegionKind::ALL {
+        for threads in [1usize, 8] {
+            let mk = |p_ctx: ParContext| SolverConfig {
+                kind: SolverKind::Ista,
+                budget: fixed_iters(40),
+                region: Some(region),
+                par: p_ctx,
+                ..Default::default()
+            };
+            let base = solve(&pd, &mk(ParContext::new_pool(threads, 1)));
+            let rep = solve(&pc, &mk(ParContext::new_pool(threads, 1)));
+            assert_reports_bitwise(
+                &base,
+                &rep,
+                &format!("csc {} {threads}t", region.name()),
+            );
+        }
+    }
+}
+
+/// A λ-path over the CSC store (carried working set included) matches
+/// the dense path point for point.
+#[test]
+fn csc_lambda_path_bitwise_matches_dense() {
+    let (pd, pc) = toeplitz_pair(2000, 150, 1401);
+    let mk = || PathConfig {
+        num_lambdas: 4,
+        lam_min_ratio: 0.3,
+        solver: SolverConfig {
+            budget: fixed_iters(30),
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        },
+    };
+    let base = solve_path(&pd, &mk());
+    let res = solve_path(&pc, &mk());
+    assert_eq!(base.total_flops, res.total_flops);
+    for (a, b) in base.points.iter().zip(&res.points) {
+        assert_eq!(a.lam.to_bits(), b.lam.to_bits());
+        assert_reports_bitwise(
+            &a.report,
+            &b.report,
+            &format!("csc path λ={:.4}", a.lam),
+        );
     }
 }
 
