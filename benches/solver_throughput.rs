@@ -1,19 +1,32 @@
 //! Bench: end-to-end solver throughput (native path) per region, plus
-//! the PJRT artifact path when `make artifacts` has run.
+//! the shared-store batch column (`BENCH_batch_solve.json`) and the
+//! PJRT artifact path when `make artifacts` has run.
 //!
-//! This is the serving-facing number: solves/second to gap <= 1e-7 on
-//! the paper's instance family.
+//! This is the serving-facing number: solves/second to the target gap
+//! on the paper's instance family — and, for the batch column, how
+//! much one amortized `SharedDict` beats B independent cold solves
+//! that each rebuild the dictionary-level state (column norms, nnz
+//! counts, spectral-norm power iteration) from scratch.
+//!
+//! Env: HOLDER_BENCH_QUICK=1 shrinks batch size and timing windows for
+//! smoke runs; HOLDER_BENCH_STRICT=1 asserts the batch speedup > 1.
 
-use holder_screening::benchkit::Bench;
-use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::benchkit::{Bench, BenchLog};
+use holder_screening::dict::{generate, generate_batch, DictKind, InstanceConfig};
+use holder_screening::par::{self, ParContext};
+use holder_screening::problem::{LambdaSpec, SharedDict};
 use holder_screening::regions::RegionKind;
-use holder_screening::solver::{solve, Budget, SolverConfig};
+use holder_screening::solver::{
+    solve, solve_many, BatchRhs, Budget, SolverConfig,
+};
 
 fn main() {
+    let quick = std::env::var("HOLDER_BENCH_QUICK").is_ok();
+    let strict = std::env::var("HOLDER_BENCH_STRICT").is_ok();
     let cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
     let problems: Vec<_> =
         (0..8u64).map(|s| generate(&cfg, s).problem).collect();
-    let bench = Bench::default();
+    let bench = if quick { Bench::quick() } else { Bench::default() };
     println!("# solver throughput, gap target 1e-7, (m, n) = (100, 500)");
 
     for region in [
@@ -40,8 +53,117 @@ fn main() {
         println!("    -> {:.1} solves/s", 1.0 / s.mean.max(1e-12));
     }
 
+    batch_column(quick, strict, &cfg);
+
     // PJRT path (optional; needs the `xla` feature + `make artifacts`).
     pjrt_path(&bench, &problems);
+}
+
+/// The shared-store batch column: `solve_many` over one `SharedDict`
+/// versus B independent cold solves, same RHS set, same solver config,
+/// bitwise-identical reports asserted.  Serving tolerance (1e-5): in
+/// this regime the per-solve iteration count is modest, so the
+/// dictionary-level precompute the shared store amortizes is a large
+/// slice of every cold request.
+fn batch_column(quick: bool, strict: bool, cfg: &InstanceConfig) {
+    let b_size = if quick { 8 } else { 16 };
+    let tau = 1e-5;
+    let threads = par::default_threads();
+    println!(
+        "\n# shared-store batch: {b_size} RHS over one dictionary, \
+         gap target {tau:.0e}, {threads} threads"
+    );
+    let (shared, ys) = generate_batch(cfg, 0, b_size);
+    let rhs: Vec<BatchRhs> = ys
+        .iter()
+        .cloned()
+        .map(|y| BatchRhs::ratio(y, cfg.lam_ratio))
+        .collect();
+    let scfg_batch = SolverConfig {
+        budget: Budget::gap(tau),
+        region: Some(RegionKind::HolderDome),
+        par: ParContext::new_pool(threads, 1024),
+        ..Default::default()
+    };
+    // Cold solves run sequentially inside; the fan-out across requests
+    // uses the same thread count as the batch path, so the only
+    // difference measured is the per-request store rebuild.
+    let scfg_cold = SolverConfig {
+        budget: Budget::gap(tau),
+        region: Some(RegionKind::HolderDome),
+        ..Default::default()
+    };
+    let run_cold = || -> Vec<_> {
+        par::par_map(b_size, threads, |i| {
+            let own = SharedDict::new(shared.store().clone());
+            let p = own
+                .problem(ys[i].clone(), LambdaSpec::RatioOfMax(cfg.lam_ratio));
+            solve(&p, &scfg_cold)
+        })
+    };
+
+    // Bitwise parity first: amortization must not change a single bit.
+    let cold_reports = run_cold();
+    let batch_reports = solve_many(&shared, &rhs, &scfg_batch);
+    for (i, (a, b)) in cold_reports.iter().zip(&batch_reports).enumerate() {
+        assert_eq!(a.iters, b.iters, "rhs {i}: iters");
+        assert_eq!(a.flops, b.flops, "rhs {i}: flops");
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "rhs {i}: gap");
+        for (va, vb) in a.x.iter().zip(&b.x) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "rhs {i}: x diverged");
+        }
+    }
+    println!("#   parity: {b_size} per-RHS reports bitwise identical");
+
+    let mut log = BenchLog::new("batch_solve");
+    log.metric("m", cfg.m as u64);
+    log.metric("n", cfg.n as u64);
+    log.metric("batch", b_size as u64);
+    log.metric("threads", threads as u64);
+    log.metric("target_gap", tau);
+    log.metric("quick", quick);
+    log.metric("parity_rhs", b_size as u64);
+
+    let bench = if quick {
+        Bench::quick()
+    } else {
+        Bench { min_iters: 3, min_secs: 0.5, warmup_secs: 0.1 }
+    };
+    let s_cold = bench.report(
+        &format!("cold:  {b_size} independent solves (store rebuilt per RHS)"),
+        || run_cold().len(),
+    );
+    log.record("cold_independent", &s_cold);
+    let s_batch = bench.report(
+        &format!("batch: solve_many over one SharedDict ({b_size} RHS)"),
+        || solve_many(&shared, &rhs, &scfg_batch).len(),
+    );
+    log.record("shared_batch", &s_batch);
+
+    let speedup = s_cold.mean / s_batch.mean.max(1e-12);
+    println!("    -> shared-store speedup: {speedup:.2}x");
+    println!(
+        "    -> {:.1} solves/s batched vs {:.1} solves/s cold",
+        b_size as f64 / s_batch.mean.max(1e-12),
+        b_size as f64 / s_cold.mean.max(1e-12)
+    );
+    log.metric("batch_speedup", speedup);
+    log.metric(
+        "batch_solves_per_sec",
+        b_size as f64 / s_batch.mean.max(1e-12),
+    );
+    log.metric(
+        "cold_solves_per_sec",
+        b_size as f64 / s_cold.mean.max(1e-12),
+    );
+    log.write();
+
+    if strict {
+        assert!(
+            speedup > 1.0,
+            "shared-store batch did not beat cold solves: {speedup:.2}x"
+        );
+    }
 }
 
 #[cfg(feature = "xla")]

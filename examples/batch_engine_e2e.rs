@@ -1,152 +1,130 @@
-//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//! END-TO-END DRIVER: the one-store-many-RHS serving story.
 //!
-//! This example proves all layers compose:
+//! Workload: B solve requests against **one** dictionary — the
+//! millions-of-users regime, where the dictionary is fixed and every
+//! request brings only a fresh observation.  The same batch is served
+//! twice:
 //!
-//!   L1  Pallas kernels (matvec / prox / dome-screen)          [python]
-//!   L2  fused FISTA+screen JAX graphs, AOT-lowered to HLO     [python]
-//!   RT  PJRT CPU client loads + executes the artifacts        [rust]
-//!   L3  coordinator schedules a 200-instance benchmark batch  [rust]
-//!
-//! Workload: the paper's Fig. 2 protocol — batch Lasso solving over
-//! random (Gaussian-dictionary) instances with Hölder-dome screening —
-//! served once through the PJRT artifact path and once through the
-//! native Rust path, reporting throughput, latency percentiles, and the
-//! headline metric ρ(τ) (fraction of instances reaching gap ≤ τ).
+//!   phase 1  COLD — every request rebuilds the dictionary-level state
+//!            (column norms, nnz counts, spectral-norm power iteration)
+//!            before solving, the way B independent `solve` calls
+//!            would;
+//!   phase 2  SHARED — one `SharedDict` is precomputed once and
+//!            `JobEngine::run_batch` routes all B requests through
+//!            `solve_many`, which fans the solves out over the engine
+//!            pool while each solve's inner matvec/screening shards
+//!            land on the same workers (caller-helps scheduling);
+//!   phase 3  cross-validation — the two paths must agree **bitwise**,
+//!            per request, flops included: sharing is an amortization,
+//!            never a semantic.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example batch_engine_e2e
+//! cargo run --release --example batch_engine_e2e
 //! ```
 
-use holder_screening::coordinator::{JobEngine, SolveJob};
-use holder_screening::dict::{generate, DictKind, InstanceConfig};
-use holder_screening::metrics::Registry;
+use holder_screening::coordinator::JobEngine;
+use holder_screening::dict::{generate_batch, DictKind, InstanceConfig};
+use holder_screening::par;
+use holder_screening::problem::{LambdaSpec, SharedDict};
 use holder_screening::regions::RegionKind;
-use holder_screening::runtime::{ArtifactRegistry, Manifest, PjrtSolver};
-use holder_screening::solver::{Budget, SolverConfig};
+use holder_screening::solver::{
+    solve, BatchRhs, Budget, SolverConfig, StopReason,
+};
 use holder_screening::util::timer::Stopwatch;
 
-const REQUESTS: usize = 200;
-const TAU_F32: f64 = 1e-5; // f32 artifact accuracy target
-const TAU_F64: f64 = 1e-7; // native accuracy target (paper's headline τ)
+const REQUESTS: usize = 96;
+const TAU: f64 = 1e-7; // the paper's headline accuracy target
 
-fn main() -> anyhow::Result<()> {
-    // ---- load the AOT artifacts -----------------------------------
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
-    let reg = ArtifactRegistry::load(
-        &dir,
-        Some(Manifest::required_for_solver()),
-    )?;
+fn main() {
+    let icfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    let threads = par::default_threads();
+    let (shared, ys) = generate_batch(&icfg, 0, REQUESTS);
     println!(
-        "PJRT platform: {} | artifact shape {}x{} | fused graphs: {:?}",
-        reg.platform(),
-        reg.manifest.m,
-        reg.manifest.n,
-        reg.loaded_names()
+        "workload: {REQUESTS} requests | dictionary {}x{} ({}) | \
+         lam = {} * lam_max per request | {threads} threads",
+        shared.rows(),
+        shared.cols(),
+        icfg.kind.name(),
+        icfg.lam_ratio
     );
-    let pjrt = PjrtSolver::new(&reg)?;
-
-    let icfg = InstanceConfig {
-        m: reg.manifest.m,
-        n: reg.manifest.n,
-        kind: DictKind::Gaussian,
-        lam_ratio: 0.5,
+    let mk_cfg = || SolverConfig {
+        budget: Budget::gap(TAU),
+        region: Some(RegionKind::HolderDome),
         ..Default::default()
     };
 
-    // ---- phase 1: serve the batch through the PJRT artifacts -------
-    println!("\n== phase 1: PJRT artifact path ({REQUESTS} requests) ==");
-    let metrics = Registry::new();
+    // ---- phase 1: cold path — per-request dictionary precompute ----
+    println!("\n== phase 1: cold path (per-request store rebuild) ==");
     let sw = Stopwatch::start();
-    let mut pjrt_hits = 0usize;
-    let mut pjrt_gaps = Vec::with_capacity(REQUESTS);
-    for i in 0..REQUESTS {
-        let p = generate(&icfg, i as u64).problem;
-        let t0 = Stopwatch::start();
-        let out =
-            pjrt.solve(&p, Some(RegionKind::HolderDome), 400, TAU_F32)?;
-        metrics.observe_secs("request_secs", t0.elapsed_secs());
-        if out.gap <= TAU_F32 {
-            pjrt_hits += 1;
-        }
-        pjrt_gaps.push(out.gap);
-    }
-    let pjrt_secs = sw.elapsed_secs();
-    let snap = metrics.snapshot();
+    let cold: Vec<_> = par::par_map(REQUESTS, threads, |i| {
+        // What B independent solves pay: a fresh store + fresh
+        // column-norm/nnz/spectral-norm caches per request.
+        let own = SharedDict::new(shared.store().clone());
+        let p = own
+            .problem(ys[i].clone(), LambdaSpec::RatioOfMax(icfg.lam_ratio));
+        solve(&p, &mk_cfg())
+    });
+    let cold_secs = sw.elapsed_secs();
+    let cold_hits =
+        cold.iter().filter(|r| r.stop == StopReason::Converged).count();
     println!(
-        "throughput: {:.1} req/s | latency p50 {:.1}ms p99 {:.1}ms | \
-         rho({TAU_F32:.0e}) = {:.2}",
-        REQUESTS as f64 / pjrt_secs,
-        snap.f64_or("histograms.request_secs.p50", 0.0) * 1e3,
-        snap.f64_or("histograms.request_secs.p99", 0.0) * 1e3,
-        pjrt_hits as f64 / REQUESTS as f64
+        "throughput: {:.1} req/s | rho({TAU:.0e}) = {:.2}",
+        REQUESTS as f64 / cold_secs,
+        cold_hits as f64 / REQUESTS as f64
     );
 
-    // ---- phase 2: same batch through the native coordinator --------
-    println!("\n== phase 2: native path via the job engine ==");
-    let engine = JobEngine::new(holder_screening::par::default_threads());
-    let jobs: Vec<SolveJob> = (0..REQUESTS as u64)
-        .map(|i| SolveJob {
-            id: i,
-            instance: icfg.clone(),
-            seed: i,
-            solver: SolverConfig {
-                region: Some(RegionKind::HolderDome),
-                budget: Budget::gap(TAU_F64),
-                ..Default::default()
-            },
-        })
+    // ---- phase 2: shared store through the job engine --------------
+    println!("\n== phase 2: shared-store batch via JobEngine::run_batch ==");
+    let engine = JobEngine::new(threads);
+    let rhs: Vec<BatchRhs> = ys
+        .iter()
+        .cloned()
+        .map(|y| BatchRhs::ratio(y, icfg.lam_ratio))
         .collect();
     let sw = Stopwatch::start();
-    let results = engine.run_all(jobs);
-    let native_secs = sw.elapsed_secs();
-    let native_hits = results
-        .iter()
-        .filter(|r| r.report.gap <= TAU_F64)
-        .count();
+    let batch = engine.run_batch(&shared, &rhs, &mk_cfg());
+    let batch_secs = sw.elapsed_secs();
+    let batch_hits =
+        batch.iter().filter(|r| r.stop == StopReason::Converged).count();
     println!(
-        "throughput: {:.1} req/s on {} threads | rho({TAU_F64:.0e}) = {:.2}",
-        REQUESTS as f64 / native_secs,
+        "throughput: {:.1} req/s on {} threads | rho({TAU:.0e}) = {:.2}",
+        REQUESTS as f64 / batch_secs,
         engine.threads(),
-        native_hits as f64 / REQUESTS as f64
+        batch_hits as f64 / REQUESTS as f64
     );
 
     // ---- phase 3: cross-validate the two paths ---------------------
-    println!("\n== phase 3: cross-validation ==");
-    let mut max_diff = 0.0f64;
-    for i in 0..5 {
-        let p = generate(&icfg, i as u64).problem;
-        let a =
-            pjrt.solve(&p, Some(RegionKind::HolderDome), 400, TAU_F32)?;
-        let b = &results[i].report;
-        let d = holder_screening::linalg::max_abs_diff(&a.x, &b.x);
-        max_diff = max_diff.max(d);
+    println!("\n== phase 3: cross-validation (bitwise) ==");
+    for (i, (a, b)) in cold.iter().zip(&batch).enumerate() {
+        assert_eq!(a.iters, b.iters, "request {i}: iters");
+        assert_eq!(a.flops, b.flops, "request {i}: flops");
+        assert_eq!(a.screened, b.screened, "request {i}: screened");
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "request {i}: gap");
+        for (va, vb) in a.x.iter().zip(&b.x) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "request {i}: x");
+        }
     }
     println!(
-        "max |x_pjrt − x_native| over 5 shared instances: {max_diff:.2e} \
-         (f32 vs f64 tolerance)"
+        "all {REQUESTS} per-request reports bitwise identical across \
+         the two paths (x, gap, flops, screening)"
     );
-    assert!(max_diff < 1e-2, "backends disagree");
 
     // headline summary
     println!("\n== summary ==");
     println!(
-        "all three layers compose: Pallas kernels -> fused HLO -> PJRT \
-         execute -> coordinator batch"
+        "cold   path: {:.1} req/s ({:.2}s total)",
+        REQUESTS as f64 / cold_secs,
+        cold_secs
     );
     println!(
-        "PJRT path:   {:.1} req/s, rho({TAU_F32:.0e}) = {:.2}",
-        REQUESTS as f64 / pjrt_secs,
-        pjrt_hits as f64 / REQUESTS as f64
+        "shared path: {:.1} req/s ({:.2}s total) -> {:.2}x",
+        REQUESTS as f64 / batch_secs,
+        batch_secs,
+        cold_secs / batch_secs.max(1e-12)
     );
     println!(
-        "native path: {:.1} req/s, rho({TAU_F64:.0e}) = {:.2}",
-        REQUESTS as f64 / native_secs,
-        native_hits as f64 / REQUESTS as f64
+        "one immutable DictStore + its caches served {REQUESTS} \
+         observations; only A^T y, lam_max and the working sets were \
+         per-request"
     );
-    Ok(())
 }

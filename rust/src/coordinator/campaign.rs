@@ -11,6 +11,7 @@
 use crate::dict::{generate, InstanceConfig};
 use crate::par::par_map;
 use crate::perfprof::AccuracyProfile;
+use crate::problem::LassoProblem;
 use crate::solver::{solve, Budget, SolverConfig};
 
 /// A named solver variant.
@@ -48,42 +49,60 @@ pub struct CampaignResult {
 }
 
 impl Campaign {
-    /// Run every variant on every instance (instances shared across
-    /// variants via the per-trial seed).
+    /// Run every variant on every instance.  Each trial's instance is
+    /// generated — dictionary draw, column norms, spectral norm, `Aᵀy`
+    /// — exactly **once** and then shared by reference across all
+    /// variants (the problem's dictionary state is `Arc`-backed, so
+    /// this is the same one-store-many-solves amortization the batch
+    /// path uses), instead of being regenerated `variants` times as the
+    /// per-trial seed used to imply.  Trials are processed in chunks
+    /// of `threads`, so at most `threads` dictionaries are resident at
+    /// once — same peak memory as the old generate-inside-the-task
+    /// scheme, `variants`× less generation work.
     pub fn run(&self) -> CampaignResult {
         let v_count = self.variants.len();
-        let total = v_count * self.trials;
-        // Flatten (variant, trial) so the pool stays busy end-to-end.
-        let outcomes = par_map(total, self.threads, |k| {
-            let v = k / self.trials;
-            let i = k % self.trials;
-            let seed = self.base_seed + i as u64;
-            let problem = generate(&self.instance, seed).problem;
-            let mut cfg = self.variants[v].config.clone();
-            cfg.budget = Budget {
-                max_flops: Some(self.budget_flops),
-                target_gap: cfg.budget.target_gap,
-                max_iters: cfg.budget.max_iters,
-            };
-            let rep = solve(&problem, &cfg);
-            (
-                rep.gap,
-                rep.flops,
-                rep.screened as f64 / problem.n() as f64,
-                rep.iters,
-            )
-        });
         let mut gaps = vec![vec![0.0; self.trials]; v_count];
         let mut flops = vec![vec![0u64; self.trials]; v_count];
         let mut rate = vec![vec![0.0; self.trials]; v_count];
         let mut iters = vec![vec![0usize; self.trials]; v_count];
-        for (k, (g, f, s, it)) in outcomes.into_iter().enumerate() {
-            let v = k / self.trials;
-            let i = k % self.trials;
-            gaps[v][i] = g;
-            flops[v][i] = f;
-            rate[v][i] = s;
-            iters[v][i] = it;
+        let chunk = self.threads.max(1);
+        let mut t0 = 0;
+        while t0 < self.trials {
+            let t1 = (t0 + chunk).min(self.trials);
+            let span = t1 - t0;
+            let problems: Vec<LassoProblem> =
+                par_map(span, self.threads, |i| {
+                    generate(&self.instance, self.base_seed + (t0 + i) as u64)
+                        .problem
+                });
+            // Flatten (variant, trial-in-chunk) so the pool stays busy.
+            let outcomes = par_map(v_count * span, self.threads, |k| {
+                let v = k / span;
+                let i = k % span;
+                let problem = &problems[i];
+                let mut cfg = self.variants[v].config.clone();
+                cfg.budget = Budget {
+                    max_flops: Some(self.budget_flops),
+                    target_gap: cfg.budget.target_gap,
+                    max_iters: cfg.budget.max_iters,
+                };
+                let rep = solve(problem, &cfg);
+                (
+                    rep.gap,
+                    rep.flops,
+                    rep.screened as f64 / problem.n() as f64,
+                    rep.iters,
+                )
+            });
+            for (k, (g, f, s, it)) in outcomes.into_iter().enumerate() {
+                let v = k / span;
+                let i = t0 + k % span;
+                gaps[v][i] = g;
+                flops[v][i] = f;
+                rate[v][i] = s;
+                iters[v][i] = it;
+            }
+            t0 = t1;
         }
         CampaignResult {
             labels: self.variants.iter().map(|v| v.label.clone()).collect(),

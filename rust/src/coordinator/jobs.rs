@@ -1,4 +1,13 @@
-//! Job-level API: submit independent Lasso solves, collect results.
+//! Job-level API: submit independent Lasso solves — or batched
+//! multi-RHS solves over one shared dictionary store — and collect
+//! results.
+//!
+//! Two entry points share the engine's pool: [`JobEngine::run_all`]
+//! fans out fully independent jobs (each generating its own instance),
+//! and [`JobEngine::run_batch`] routes B observations through
+//! [`crate::solver::solve_many`] so they borrow one immutable
+//! [`SharedDict`] instead of rebuilding per-solve dictionary state B
+//! times — the serving path for one-dictionary/many-users traffic.
 //!
 //! ## One pool, two levels of parallelism
 //!
@@ -28,7 +37,8 @@ use std::sync::Arc;
 use crate::dict::{generate, Instance, InstanceConfig};
 use crate::metrics::Registry;
 use crate::par::{ParContext, ThreadPool, DEFAULT_SHARD_MIN};
-use crate::solver::{solve, SolveReport, SolverConfig};
+use crate::problem::SharedDict;
+use crate::solver::{solve, solve_many, BatchRhs, SolveReport, SolverConfig};
 
 /// One unit of work: generate (or reuse) an instance and solve it.
 #[derive(Clone, Debug)]
@@ -120,6 +130,68 @@ impl JobEngine {
         results.sort_by_key(|r| r.id);
         results
     }
+
+    /// Run a batched multi-RHS job: B observations over **one** shared
+    /// dictionary store, routed through
+    /// [`solve_many`](crate::solver::solve_many) on the engine's pool.
+    ///
+    /// The solver config's [`ParContext`] is re-pointed at the engine
+    /// pool, so the across-solve fan-out and every solve's inner
+    /// matvec/screening shards share the engine's workers — exactly
+    /// like [`run_all`](Self::run_all), minus the per-job instance
+    /// generation and dictionary-level precomputation that `shared`
+    /// amortizes away.  Reports come back in RHS order, bitwise
+    /// identical to B independent solves.
+    ///
+    /// Metrics note: batch solves travel the pool's shard class (so
+    /// the caller can help; see [`crate::solver::batch`]), which means
+    /// a solve's recorded `solve_secs` — like `run_all`'s — includes
+    /// any cooperative help it performed while waiting on its own
+    /// shards.  `batch_secs` is the end-to-end number to watch for
+    /// throughput.
+    ///
+    /// ```
+    /// use holder_screening::coordinator::JobEngine;
+    /// use holder_screening::dict::{generate_batch, DictKind, InstanceConfig};
+    /// use holder_screening::solver::{BatchRhs, Budget, SolverConfig};
+    ///
+    /// // One 10x30 dictionary, three observations sharing it.
+    /// let mut icfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    /// icfg.m = 10;
+    /// icfg.n = 30;
+    /// let (shared, ys) = generate_batch(&icfg, 7, 3);
+    /// let rhs: Vec<BatchRhs> =
+    ///     ys.into_iter().map(|y| BatchRhs::ratio(y, 0.5)).collect();
+    ///
+    /// let engine = JobEngine::new(2);
+    /// let cfg = SolverConfig {
+    ///     budget: Budget::gap(1e-8),
+    ///     ..Default::default()
+    /// };
+    /// let reports = engine.run_batch(&shared, &rhs, &cfg);
+    /// assert_eq!(reports.len(), 3);
+    /// assert_eq!(engine.metrics().counter("jobs_done").get(), 3);
+    /// ```
+    pub fn run_batch(
+        &self,
+        shared: &SharedDict,
+        rhs: &[BatchRhs],
+        solver: &SolverConfig,
+    ) -> Vec<SolveReport> {
+        let mut cfg = solver.clone();
+        cfg.par =
+            ParContext::with_pool(Arc::clone(&self.pool), self.shard_min);
+        let sw = crate::util::timer::Stopwatch::start();
+        let reports = solve_many(shared, rhs, &cfg);
+        self.metrics.observe_secs("batch_secs", sw.elapsed_secs());
+        for r in &reports {
+            self.metrics.counter("jobs_done").inc();
+            self.metrics.counter("flops_total").add(r.flops);
+            self.metrics.observe_secs("solve_secs", r.wall_secs);
+            self.metrics.gauge("last_gap").set(r.gap);
+        }
+        reports
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +256,53 @@ mod tests {
             assert!(
                 crate::linalg::max_abs_diff(&a.report.x, &b.report.x)
                     < 1e-15
+            );
+        }
+    }
+
+    #[test]
+    fn run_batch_bitwise_matches_independent_solves() {
+        use crate::dict::generate_batch;
+
+        let (shared, ys) = generate_batch(&small_cfg(), 7, 6);
+        let rhs: Vec<BatchRhs> =
+            ys.into_iter().map(|y| BatchRhs::ratio(y, 0.5)).collect();
+        let scfg = SolverConfig {
+            budget: Budget::gap(1e-9),
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        };
+        // Reference: sequential independent solves, no engine at all.
+        let solo: Vec<_> = rhs
+            .iter()
+            .map(|r| {
+                let p = shared.problem(r.y.clone(), r.lam);
+                crate::solver::solve(
+                    &p,
+                    &SolverConfig {
+                        par: ParContext::sequential(),
+                        ..scfg.clone()
+                    },
+                )
+            })
+            .collect();
+        // Engines of different widths (shard_min = 1 forces the nested
+        // fan-out) must all match it bitwise.
+        for threads in [1usize, 4] {
+            let engine = JobEngine::with_shard_min(threads, 1);
+            let reports = engine.run_batch(&shared, &rhs, &scfg);
+            assert_eq!(reports.len(), solo.len());
+            for (a, b) in solo.iter().zip(&reports) {
+                assert_eq!(a.iters, b.iters, "{threads}t");
+                assert_eq!(a.flops, b.flops, "{threads}t");
+                assert_eq!(a.screened, b.screened, "{threads}t");
+                for (va, vb) in a.x.iter().zip(&b.x) {
+                    assert_eq!(va.to_bits(), vb.to_bits(), "{threads}t");
+                }
+            }
+            assert_eq!(
+                engine.metrics().counter("jobs_done").get(),
+                rhs.len() as u64
             );
         }
     }

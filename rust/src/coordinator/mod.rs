@@ -1,10 +1,13 @@
 //! The batch solve engine: schedules many Lasso solves (benchmark
-//! campaigns, λ-paths, ad-hoc job streams) over the in-repo thread pool,
-//! with metrics and deterministic per-job seeding.
+//! campaigns, λ-paths, ad-hoc job streams, batched multi-RHS traffic)
+//! over the in-repo thread pool, with metrics and deterministic
+//! per-job seeding.
 //!
 //! This is the L3 "coordination" layer: examples and the CLI never spawn
-//! threads themselves — they submit [`jobs::SolveJob`]s or run a
-//! [`campaign::Campaign`] and collect structured results.
+//! threads themselves — they submit [`jobs::SolveJob`]s, route a
+//! multi-RHS batch over one shared store through
+//! [`jobs::JobEngine::run_batch`], or run a [`campaign::Campaign`] and
+//! collect structured results.
 
 pub mod campaign;
 pub mod jobs;

@@ -8,7 +8,7 @@
 //! * `λ = ratio · λ_max` with `ratio ∈ {0.3, 0.5, 0.8}` in the paper.
 
 use crate::linalg::{self, Mat};
-use crate::problem::LassoProblem;
+use crate::problem::{LassoProblem, SharedDict};
 use crate::sparse::{CscMat, DictFormat, DictStore};
 use crate::util::rng::Pcg64;
 
@@ -298,6 +298,49 @@ pub fn generate(config: &InstanceConfig, seed: u64) -> Instance {
     Instance { problem, config: config.clone(), seed }
 }
 
+/// PCG stream selector for batch observations: observation `b` of a
+/// batch draw comes from `Pcg64::with_stream(seed, BATCH_RHS_STREAM ^ b)`
+/// — its own independent stream, distinct from the default stream the
+/// dictionary (and [`generate`]) consumes.
+const BATCH_RHS_STREAM: u64 = 0xba7c_0b5e_7fab_1e55;
+
+/// Draw **one** dictionary and `batch` observations over it — the
+/// multi-RHS serving workload ([`crate::solver::solve_many`]).
+///
+/// The dictionary is drawn exactly as [`generate`] draws it (same
+/// leading RNG stream for `seed`, same storage format rules), then
+/// wrapped in a [`SharedDict`] so its column norms, nonzero counts and
+/// spectral norm are computed once for the whole batch.  Observation
+/// `b` is drawn uniformly on the unit sphere from its own PCG stream
+/// keyed by `(seed, b)`, which makes batches **prefix-stable**:
+/// extending a batch from B to B+1 right-hand sides never changes the
+/// first B.
+///
+/// λ is deliberately *not* resolved here — pair each observation with
+/// a [`crate::problem::LambdaSpec`] (usually
+/// `RatioOfMax(config.lam_ratio)`, the paper's per-observation
+/// protocol) when building [`crate::solver::BatchRhs`] requests.
+pub fn generate_batch(
+    config: &InstanceConfig,
+    seed: u64,
+    batch: usize,
+) -> (SharedDict, Vec<Vec<f64>>) {
+    let mut rng = Pcg64::new(seed);
+    let store = draw_dictionary_store(
+        config.kind, config.m, config.n, config.pulse_width,
+        config.pulse_cutoff, config.format, &mut rng,
+    );
+    let shared = SharedDict::new(store);
+    let ys = (0..batch)
+        .map(|b| {
+            let mut r =
+                Pcg64::with_stream(seed, BATCH_RHS_STREAM ^ b as u64);
+            draw_observation(config.m, &mut r)
+        })
+        .collect();
+    (shared, ys)
+}
+
 /// A planted sparse-recovery instance: `y = A x₀ + σ·noise` with `k`
 /// spikes.  Not in the paper's evaluation, but the natural workload for
 /// the deconvolution example.
@@ -485,6 +528,38 @@ mod tests {
         // Columns still unit-norm.
         for n in inst.problem.col_norms() {
             assert!((n - 1.0).abs() < 1e-12);
+        }
+    }
+
+    /// The batch draw shares [`generate`]'s dictionary bit for bit,
+    /// its observations sit on the unit sphere, and batches are
+    /// prefix-stable (growing B never rewrites earlier RHS).
+    #[test]
+    fn batch_draw_shares_generates_dictionary_and_is_prefix_stable() {
+        let cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+        let inst = generate(&cfg, 3);
+        let (shared, ys) = generate_batch(&cfg, 3, 4);
+        assert_eq!(
+            shared.store().as_dense().unwrap().as_slice(),
+            inst.problem.a().as_slice(),
+            "batch dictionary differs from the per-instance draw"
+        );
+        for (s, d) in shared.col_norms().iter().zip(inst.problem.col_norms())
+        {
+            assert_eq!(s.to_bits(), d.to_bits());
+        }
+        assert_eq!(
+            shared.lipschitz().to_bits(),
+            inst.problem.lipschitz().to_bits()
+        );
+        for y in &ys {
+            assert!((linalg::norm2(y) - 1.0).abs() < 1e-12);
+        }
+        // Distinct observations, prefix-stable extension.
+        assert_ne!(ys[0], ys[1]);
+        let (_, longer) = generate_batch(&cfg, 3, 6);
+        for (a, b) in ys.iter().zip(&longer) {
+            assert_eq!(a, b, "extending the batch rewrote an earlier RHS");
         }
     }
 

@@ -100,6 +100,28 @@
 //! wall-clock in proportion to the dictionary's sparsity
 //! (`benches/workset_compaction.rs`, `BENCH_sparse_dict.json`).
 //!
+//! ## The batched serving layer (one store, many right-hand sides)
+//!
+//! Everything expensive about a Lasso instance except `Aᵀy`/`λ_max` is
+//! observation-independent: the dictionary, its column norms, its
+//! stored-nonzero counts, its spectral norm.  [`problem::SharedDict`]
+//! holds that state once behind an `Arc`, and
+//! [`solver::solve_many`] schedules B solves that borrow it
+//! concurrently — each solve owns only its per-RHS problem, working
+//! set and screening state.  One [`par::ParContext`] pool serves both
+//! the across-solve fan-out and every solve's inner matvec/screening
+//! shards (caller-helps scheduling, so the nested fan-out cannot
+//! deadlock).  The coordinator routes batch traffic through this entry
+//! ([`coordinator::JobEngine::run_batch`]), the CLI exposes it as the
+//! `batch` subcommand, and per-RHS `SolveReport`s are **bitwise
+//! identical** to B independent [`solver::solve`] calls across thread
+//! counts, storage formats and compaction policies
+//! (`rust/tests/batch_parity.rs`).
+//!
+//! A map of how these layers stack — and why the bitwise-parity
+//! discipline holds across all of them — lives in `ARCHITECTURE.md`
+//! at the repository root.
+//!
 //! ## Substrates
 //!
 //! The build is fully offline, so the usual ecosystem crates are
@@ -142,12 +164,14 @@ pub mod prelude {
     pub use crate::dict::{DictKind, Instance, InstanceConfig};
     pub use crate::geometry::{Ball, Dome, HalfSpace};
     pub use crate::par::ParContext;
-    pub use crate::problem::{LassoProblem, PrimalDualEval};
+    pub use crate::problem::{
+        LambdaSpec, LassoProblem, PrimalDualEval, SharedDict,
+    };
     pub use crate::regions::{RegionKind, SafeRegion};
     pub use crate::screening::{ScreeningEngine, ScreeningState};
     pub use crate::solver::{
-        solve, solve_warm, solve_warm_ws, Budget, SolveReport, SolverConfig,
-        SolverKind, StopReason,
+        solve, solve_many, solve_warm, solve_warm_ws, BatchRhs, Budget,
+        SolveReport, SolverConfig, SolverKind, StopReason,
     };
     pub use crate::workset::{CompactionPolicy, WorkingSet};
 }

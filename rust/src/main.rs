@@ -4,6 +4,7 @@
 //!
 //! Commands:
 //!   solve            solve one random instance, print the report
+//!   batch            B observations over ONE shared dictionary store
 //!   path             λ-path with warm starts on one instance
 //!   campaign         Fig. 2-style budgeted campaign from flags or TOML
 //!   fig1             reproduce Fig. 1 (radius-ratio curves)
@@ -16,13 +17,18 @@
 use holder_screening::cli::{spec, Args, Command, Flag};
 use holder_screening::configfmt::json;
 use holder_screening::coordinator::campaign::Campaign;
-use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::coordinator::JobEngine;
+use holder_screening::dict::{
+    generate, generate_batch, DictKind, InstanceConfig,
+};
 use holder_screening::experiments::{ablation, fig1, fig2, screenrate};
 use holder_screening::par::ParContext;
 use holder_screening::path::{solve_path, PathConfig};
 use holder_screening::perfprof::log_tau_grid;
 use holder_screening::regions::RegionKind;
-use holder_screening::solver::{solve, Budget, SolverConfig, SolverKind};
+use holder_screening::solver::{
+    solve, BatchRhs, Budget, SolverConfig, SolverKind, StopReason,
+};
 use holder_screening::sparse::DictFormat;
 use holder_screening::workset::CompactionPolicy;
 
@@ -101,6 +107,28 @@ const SOLVE_FLAGS: &[Flag] = &[
     Flag::switch("trace", "print the convergence trace"),
 ];
 
+const BATCH_FLAGS: &[Flag] = &[
+    COMMON_INSTANCE_FLAGS[0],
+    COMMON_INSTANCE_FLAGS[1],
+    COMMON_INSTANCE_FLAGS[2],
+    COMMON_INSTANCE_FLAGS[3],
+    COMMON_INSTANCE_FLAGS[4],
+    COMMON_INSTANCE_FLAGS[5],
+    SHARD_MIN_FLAG,
+    COMPACTION_FLAG,
+    DICT_FORMAT_FLAG,
+    PULSE_CUTOFF_FLAG,
+    Flag::int("batch", Some("32"),
+              "right-hand sides solved over the one shared dictionary \
+               store (each gets its own lambda = lam-ratio * lam_max)"),
+    Flag::str("region", Some("holder_dome"),
+              "screening region: holder_dome | gap_dome | gap_sphere | \
+               static_sphere | dynamic_sphere | none"),
+    Flag::str("solver", Some("fista"), "fista | ista | cd"),
+    Flag::num("target-gap", Some("1e-9"), "per-RHS duality-gap target"),
+    Flag::int("max-iters", Some("100000"), "per-RHS iteration cap"),
+];
+
 const PATH_FLAGS: &[Flag] = &[
     COMMON_INSTANCE_FLAGS[0],
     COMMON_INSTANCE_FLAGS[1],
@@ -176,6 +204,7 @@ const ARTIFACTS_FLAGS: &[Flag] =
 fn commands() -> Vec<Command> {
     vec![
         Command { name: "solve", summary: "solve one random instance", flags: SOLVE_FLAGS },
+        Command { name: "batch", summary: "batched multi-RHS solves over one shared store", flags: BATCH_FLAGS },
         Command { name: "path", summary: "lambda-path with warm starts", flags: PATH_FLAGS },
         Command { name: "campaign", summary: "budgeted benchmark campaign", flags: CAMPAIGN_FLAGS },
         Command { name: "fig1", summary: "paper Fig. 1: radius-ratio curves", flags: FIG_FLAGS },
@@ -217,6 +246,7 @@ fn main() {
     }
     let code = match cmd.name {
         "solve" => cmd_solve(&args),
+        "batch" => cmd_batch(&args),
         "path" => cmd_path(&args),
         "campaign" => cmd_campaign(&args),
         "fig1" => cmd_fig1(&args),
@@ -288,11 +318,13 @@ fn compaction_from_args(args: &Args) -> CompactionPolicy {
     ))
 }
 
-fn cmd_solve(args: &Args) -> i32 {
-    let icfg = instance_from_args(args);
-    let inst = generate(&icfg, args.int_or("seed", 0) as u64);
-    let p = &inst.problem;
-    let cfg = SolverConfig {
+/// Solver configuration shared by `solve` and `batch` (`--solver`,
+/// `--target-gap`, `--max-iters`, `--region`,
+/// `--compaction-threshold`).  `par` is left at its default — each
+/// command wires its own pool (direct for `solve`, the engine's for
+/// `batch`).
+fn solver_from_args(args: &Args) -> SolverConfig {
+    SolverConfig {
         kind: SolverKind::parse(args.str_or("solver", "fista"))
             .unwrap_or(SolverKind::Fista),
         budget: Budget {
@@ -301,10 +333,19 @@ fn cmd_solve(args: &Args) -> i32 {
             target_gap: args.num_or("target-gap", 1e-9),
         },
         region: region_from_args(args),
-        record_trace: args.switch("trace"),
-        par: par_from_args(args),
         compaction: compaction_from_args(args),
         ..Default::default()
+    }
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let icfg = instance_from_args(args);
+    let inst = generate(&icfg, args.int_or("seed", 0) as u64);
+    let p = &inst.problem;
+    let cfg = SolverConfig {
+        record_trace: args.switch("trace"),
+        par: par_from_args(args),
+        ..solver_from_args(args)
     };
     println!(
         "instance: {}x{} dict={}/{} lam={:.6} (ratio {:.2}, lam_max {:.6})",
@@ -338,6 +379,81 @@ fn cmd_solve(args: &Args) -> i32 {
     println!("support ({} atoms): {:?}", rep.support(1e-9).len(),
              rep.support(1e-9));
     0
+}
+
+fn cmd_batch(args: &Args) -> i32 {
+    let icfg = instance_from_args(args);
+    // Same validity window `generate` enforces for solve/path; the
+    // batch path resolves lambda per RHS and would otherwise grind B
+    // near-unregularized solves on a silently bad flag.
+    if !(icfg.lam_ratio > 0.0 && icfg.lam_ratio < 1.0) {
+        eprintln!(
+            "error: --lam-ratio must be in (0, 1), got {}",
+            icfg.lam_ratio
+        );
+        return 2;
+    }
+    let b = args.int_or("batch", 32);
+    let seed = args.int_or("seed", 0) as u64;
+    // One dictionary draw + one set of dictionary-level caches (column
+    // norms, nnz counts, spectral norm) for the whole batch.
+    let (shared, ys) = generate_batch(&icfg, seed, b);
+    println!(
+        "shared store: {}x{} dict={}/{} — {} RHS share one dictionary \
+         and its caches",
+        shared.rows(), shared.cols(), icfg.kind.name(),
+        shared.store().format().name(), b
+    );
+    if icfg.format == DictFormat::Csc {
+        let nnz = shared.store().nnz();
+        let dense_len = shared.rows() * shared.cols();
+        println!(
+            "csc store: {nnz} nnz of {dense_len} dense ({:.2}% — \
+             dense-vs-sparse ratio {:.1}x)",
+            100.0 * nnz as f64 / dense_len.max(1) as f64,
+            dense_len as f64 / nnz.max(1) as f64
+        );
+    }
+    let rhs: Vec<BatchRhs> = ys
+        .into_iter()
+        .map(|y| BatchRhs::ratio(y, icfg.lam_ratio))
+        .collect();
+    // `par` stays default here — run_batch re-points it at the
+    // engine's pool.
+    let scfg = solver_from_args(args);
+    let shard_min = args
+        .int_or("shard-min", holder_screening::par::DEFAULT_SHARD_MIN)
+        .max(1);
+    let engine =
+        JobEngine::with_shard_min(threads_from_args(args), shard_min);
+    let sw = holder_screening::util::timer::Stopwatch::start();
+    let reports = engine.run_batch(&shared, &rhs, &scfg);
+    let secs = sw.elapsed_secs();
+    println!("  rhs   stop        iters   flops         gap        support");
+    for (i, rep) in reports.iter().enumerate() {
+        println!(
+            "  {:>3}   {:<9}  {:>6}  {:>12}  {:.2e}  {:>7}",
+            i,
+            format!("{:?}", rep.stop),
+            rep.iters,
+            rep.flops,
+            rep.gap,
+            rep.support(1e-9).len()
+        );
+    }
+    let converged = reports
+        .iter()
+        .filter(|r| r.stop == StopReason::Converged)
+        .count();
+    let total_flops: u64 = reports.iter().map(|r| r.flops).sum();
+    println!(
+        "batch: {b} solves in {:.2}s ({:.1} solves/s on {} threads) | \
+         {converged}/{b} converged | {total_flops} flops total",
+        secs,
+        b as f64 / secs.max(1e-12),
+        engine.threads()
+    );
+    if converged == b { 0 } else { 1 }
 }
 
 fn cmd_path(args: &Args) -> i32 {

@@ -46,6 +46,26 @@ pub const DEFAULT_SHARD_MIN: usize = 1024;
 /// pool size, shard count, or scheduling order — including fully
 /// sequential.  See the notes on the sharded kernels in
 /// [`crate::linalg::gemv`].
+///
+/// ## Example
+///
+/// One context, two levels of use: [`run_items`](Self::run_items) fans
+/// independent work items onto the pool with the calling thread
+/// participating (this is how [`crate::solver::solve_many`] spreads a
+/// batch of solves), and the same pool absorbs any nested shard
+/// fan-out those items trigger.
+///
+/// ```
+/// use std::sync::atomic::{AtomicU64, Ordering};
+/// use holder_screening::par::ParContext;
+///
+/// let ctx = ParContext::new_pool(2, 1);
+/// let acc = AtomicU64::new(0);
+/// ctx.run_items((0..8u64).collect(), |v| {
+///     acc.fetch_add(v * v, Ordering::Relaxed);
+/// });
+/// assert_eq!(acc.load(Ordering::Relaxed), (0..8u64).map(|v| v * v).sum::<u64>());
+/// ```
 #[derive(Clone)]
 pub struct ParContext {
     pool: Option<Arc<ThreadPool>>,

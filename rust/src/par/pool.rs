@@ -10,13 +10,16 @@
 //!
 //! * **general jobs** ([`ThreadPool::execute`]) — coarse units such as
 //!   whole solves; only workers run them;
-//! * **shard jobs** ([`ThreadPool::execute_shard`]) — small leaf units
-//!   (matvec/screening shards) fanned out by a scoped caller that then
-//!   waits.  Workers *prefer* them (they gate a waiting solve), and
-//!   they are the only class [`ThreadPool::help_run_one`] will run, so
-//!   a caller waiting on its shards never executes an unrelated whole
-//!   job inline — recursion depth stays bounded and per-job latency
-//!   metrics stay truthful.
+//! * **shard jobs** ([`ThreadPool::execute_shard`]) — units fanned out
+//!   by a scoped caller that then waits: matvec/screening shards, or
+//!   coarser scoped items such as the batch entry's per-RHS solves
+//!   ([`crate::solver::solve_many`], which caps how many are in
+//!   flight per wave precisely because helpers may absorb them).
+//!   Workers *prefer* them (they gate a waiting caller), and they are
+//!   the only class [`ThreadPool::help_run_one`] will run, so a
+//!   caller waiting on its shards never executes an unrelated
+//!   *general* job inline — help-recursion depth is bounded by the
+//!   scoped fan-outs in flight, never by the general queue's depth.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -132,10 +135,14 @@ impl ThreadPool {
     /// instead of blocking, so nested fan-out — a solve running *on* a
     /// worker that itself shards its matvecs onto the same pool — can
     /// never deadlock, even on a single-worker pool.  General jobs are
-    /// deliberately out of reach: a waiting solve must not execute an
-    /// unrelated whole solve inline (unbounded recursion, distorted
-    /// per-job latency); its own shards are always in the shard queue,
-    /// which is all the progress it needs.
+    /// deliberately out of reach: a waiting caller must not execute an
+    /// unrelated whole *general* job inline (recursion as deep as the
+    /// job queue, distorted per-job latency); its own shards are
+    /// always in the shard queue, which is all the progress it needs.
+    /// Shard-class items themselves may be coarse (a batched per-RHS
+    /// solve), so scoped fan-outs that submit coarse items bound how
+    /// many are outstanding at once — see
+    /// [`crate::solver::solve_many`]'s wave cap.
     pub fn help_run_one(&self) -> bool {
         let job = {
             let mut q = self.shared.queue.lock().unwrap();

@@ -24,8 +24,11 @@
 //! a solve job running *on* a pool worker can shard its matvecs onto
 //! the same pool without any risk of all workers waiting on queued
 //! shards that nobody can run.  Helpers touch only the shard class —
-//! never whole general jobs — so recursion depth stays bounded and a
-//! waiting solve's latency never silently absorbs an unrelated solve.
+//! never whole general jobs — so help-recursion is bounded by the
+//! scoped fan-outs in flight (coarse shard items, e.g. the batch
+//! entry's per-RHS solves, additionally cap their own wave size for
+//! exactly this reason) and a waiting solve's latency never silently
+//! absorbs an unrelated *general* job.
 //!
 //! Shard jobs must not panic (a panicking job kills its worker and
 //! strands the scope) — the solver shards are pure arithmetic over

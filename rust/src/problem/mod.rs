@@ -7,12 +7,177 @@
 //! [`LassoProblem`] owns the instance data plus the per-problem
 //! precomputations every solver/screening pass reuses: column norms,
 //! `Aᵀy`, `λ_max = ‖Aᵀy‖_∞` (eq. 6) and the FISTA step size `1/‖A‖₂²`.
+//!
+//! ## Observation-independent vs per-RHS state
+//!
+//! Those precomputations split cleanly in two:
+//!
+//! * **dictionary-level** — column norms `‖a_i‖`, stored-structure
+//!   nonzero counts, and the spectral norm `‖A‖₂²` depend only on `A`.
+//!   They live in a [`SharedDict`]: one immutable [`DictStore`] plus
+//!   its caches behind an `Arc`, computed **once** and borrowed by
+//!   every solve that shares the dictionary (the serving regime: many
+//!   observations, one dictionary — see
+//!   [`crate::solver::solve_many`]).
+//! * **per-RHS** — `Aᵀy`, `λ_max` and `λ` itself depend on the
+//!   observation.  [`LassoProblem`] holds exactly these next to its
+//!   `SharedDict` handle, so building the B-th problem over a shared
+//!   dictionary costs one `Aᵀy` matvec, not a spectral-norm power
+//!   iteration.
+//!
+//! [`LassoProblem::from_store`] (and [`LassoProblem::new`]) remain the
+//! one-shot constructors: they build a private `SharedDict` internally
+//! and are bitwise identical to the shared path — sharing is purely an
+//! amortization, never a semantic.
+
+use std::sync::Arc;
 
 use crate::linalg::{self, Mat};
 use crate::sparse::DictStore;
 
 /// Guard value shared with the Python layer (`kernels/ref.py::EPS`).
 pub const EPS: f64 = 1e-12;
+
+/// The λ substituted by [`LambdaSpec::resolve`] when the requested λ
+/// degenerates to `<= 0` (e.g. `RatioOfMax` on a `y = 0` observation,
+/// where `λ_max = 0`).  At this λ the solution is indistinguishable
+/// from the least-squares limit and a zero observation solves to
+/// `x = 0` in one evaluation.
+pub const MIN_LAMBDA: f64 = EPS;
+
+/// How a batched right-hand side picks its regularization level.
+///
+/// The paper's protocol sets `λ = ratio · λ_max(A, y)` per observation
+/// ([`RatioOfMax`](Self::RatioOfMax)); serving traffic with a fixed,
+/// externally chosen level uses [`Value`](Self::Value).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LambdaSpec {
+    /// An absolute λ.  Non-positive values are clamped to
+    /// [`MIN_LAMBDA`] by [`resolve`](Self::resolve).
+    Value(f64),
+    /// λ as a fraction of this observation's own `λ_max = ‖Aᵀy‖_∞`.
+    RatioOfMax(f64),
+}
+
+impl LambdaSpec {
+    /// The concrete λ for an observation with the given `λ_max`.
+    /// Positive results pass through untouched; a degenerate `<= 0`
+    /// result (zero observation, non-positive value) is clamped to
+    /// [`MIN_LAMBDA`] so [`LassoProblem`]'s `λ > 0` invariant holds.
+    pub fn resolve(self, lam_max: f64) -> f64 {
+        let lam = match self {
+            LambdaSpec::Value(v) => v,
+            LambdaSpec::RatioOfMax(r) => r * lam_max,
+        };
+        if lam > 0.0 {
+            lam
+        } else {
+            MIN_LAMBDA
+        }
+    }
+}
+
+/// One immutable dictionary plus every observation-independent
+/// precomputation, shared across many solves.
+///
+/// Cloning is an `Arc` bump: a batch of B problems built from one
+/// `SharedDict` stores the dictionary, its column norms, its
+/// stored-nonzero counts and its spectral-norm estimate **once**,
+/// while each problem carries only its own `y`, `Aᵀy`, `λ_max` and λ.
+/// The caches are computed by exactly the code the one-shot
+/// [`LassoProblem::from_store`] constructor runs, so shared and
+/// independent builds of the same matrix are bitwise identical —
+/// caches, solver trajectories and [`crate::solver::SolveReport`]s
+/// alike (`rust/tests/batch_parity.rs`).
+///
+/// ```
+/// use holder_screening::linalg::Mat;
+/// use holder_screening::problem::{LambdaSpec, SharedDict};
+/// use holder_screening::sparse::DictStore;
+///
+/// let a = Mat::from_col_major(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+/// let shared = SharedDict::new(DictStore::Dense(a));
+/// // Two problems, one dictionary-level cache set:
+/// let p0 = shared.problem(vec![1.0, 0.0], LambdaSpec::RatioOfMax(0.5));
+/// let p1 = shared.problem(vec![0.0, 2.0], LambdaSpec::RatioOfMax(0.5));
+/// assert!(SharedDict::ptr_eq(p0.shared(), p1.shared()));
+/// assert_eq!(p0.lam(), 0.5);
+/// assert_eq!(p1.lam(), 1.0);
+/// ```
+#[derive(Clone, Debug)]
+pub struct SharedDict {
+    inner: Arc<SharedDictInner>,
+}
+
+#[derive(Debug)]
+struct SharedDictInner {
+    store: DictStore,
+    col_norms: Vec<f64>,
+    col_nnz: Vec<usize>,
+    lipschitz: f64,
+}
+
+impl SharedDict {
+    /// Compute the dictionary-level caches once: column norms, per-
+    /// column stored nonzeros, and the power-iteration spectral norm
+    /// (the expensive one — 60 matvec pairs on the full dictionary).
+    pub fn new(store: DictStore) -> Self {
+        let col_norms = store.col_norms();
+        let lipschitz = store.spectral_norm_sq(60, 0x5eed).max(EPS);
+        let col_nnz = store.col_nnz_counts();
+        SharedDict {
+            inner: Arc::new(SharedDictInner {
+                store,
+                col_norms,
+                col_nnz,
+                lipschitz,
+            }),
+        }
+    }
+
+    /// The dictionary storage seam (dense or CSC).
+    pub fn store(&self) -> &DictStore {
+        &self.inner.store
+    }
+
+    /// `m`: observation dimension.
+    pub fn rows(&self) -> usize {
+        self.inner.store.rows()
+    }
+
+    /// `n`: number of atoms.
+    pub fn cols(&self) -> usize {
+        self.inner.store.cols()
+    }
+
+    /// Cached per-atom norms ‖a_i‖₂.
+    pub fn col_norms(&self) -> &[f64] {
+        &self.inner.col_norms
+    }
+
+    /// Stored-structure nonzeros per column (flop-meter weights).
+    pub fn col_nnz(&self) -> &[usize] {
+        &self.inner.col_nnz
+    }
+
+    /// ‖A‖₂² — gradient Lipschitz constant.
+    pub fn lipschitz(&self) -> f64 {
+        self.inner.lipschitz
+    }
+
+    /// Build the per-RHS problem for one observation: computes `Aᵀy`
+    /// and `λ_max`, resolves `lam`, and borrows (Arc-bumps) everything
+    /// dictionary-level.  Equivalent to
+    /// [`LassoProblem::from_shared`]`(self, y, lam)`.
+    pub fn problem(&self, y: Vec<f64>, lam: LambdaSpec) -> LassoProblem {
+        LassoProblem::from_shared(self, y, lam)
+    }
+
+    /// Do two handles share one physical dictionary + cache set?
+    pub fn ptr_eq(a: &SharedDict, b: &SharedDict) -> bool {
+        Arc::ptr_eq(&a.inner, &b.inner)
+    }
+}
 
 /// A Lasso instance with cached precomputations.
 ///
@@ -22,17 +187,14 @@ pub const EPS: f64 = 1e-12;
 /// matrix yield bitwise-identical problems (caches included).
 #[derive(Clone, Debug)]
 pub struct LassoProblem {
-    store: DictStore,
+    /// Dictionary + observation-independent caches (Arc-shared; one
+    /// physical copy per dictionary, however many RHS solve over it).
+    shared: SharedDict,
     y: Vec<f64>,
     lam: f64,
-    // --- cached ---
-    col_norms: Vec<f64>,
+    // --- per-RHS cached ---
     aty: Vec<f64>,
     lam_max: f64,
-    lipschitz: f64,
-    /// Stored-structure nonzeros per column (what the flop meter
-    /// charges matvecs by — identical across storage formats).
-    col_nnz: Vec<usize>,
 }
 
 impl LassoProblem {
@@ -43,26 +205,28 @@ impl LassoProblem {
         Self::from_store(DictStore::Dense(a), y, lam)
     }
 
-    /// Build a problem from either dictionary backend.
+    /// Build a problem from either dictionary backend, computing every
+    /// cache (a private [`SharedDict`] plus the per-RHS `Aᵀy`/`λ_max`).
     pub fn from_store(store: DictStore, y: Vec<f64>, lam: f64) -> Self {
-        assert_eq!(store.rows(), y.len(), "A rows must match y length");
         assert!(lam > 0.0, "lambda must be positive");
-        let col_norms = store.col_norms();
-        let mut aty = vec![0.0; store.cols()];
-        store.gemv_t(&y, &mut aty);
+        Self::from_shared(&SharedDict::new(store), y, LambdaSpec::Value(lam))
+    }
+
+    /// Build the per-RHS problem over an existing [`SharedDict`]: only
+    /// `Aᵀy` and `λ_max` are computed; the dictionary-level caches are
+    /// borrowed.  Bitwise identical to [`from_store`](Self::from_store)
+    /// of the same matrix, observation and resolved λ.
+    pub fn from_shared(
+        shared: &SharedDict,
+        y: Vec<f64>,
+        lam: LambdaSpec,
+    ) -> Self {
+        assert_eq!(shared.rows(), y.len(), "A rows must match y length");
+        let mut aty = vec![0.0; shared.cols()];
+        shared.store().gemv_t(&y, &mut aty);
         let lam_max = linalg::norm_inf(&aty);
-        let lipschitz = store.spectral_norm_sq(60, 0x5eed).max(EPS);
-        let col_nnz = store.col_nnz_counts();
-        LassoProblem {
-            store,
-            y,
-            lam,
-            col_norms,
-            aty,
-            lam_max,
-            lipschitz,
-            col_nnz,
-        }
+        let lam = lam.resolve(lam_max);
+        LassoProblem { shared: shared.clone(), y, lam, aty, lam_max }
     }
 
     /// Same instance at a different λ (path solving; caches are reused).
@@ -78,18 +242,23 @@ impl LassoProblem {
     /// The dense dictionary backend.  Panics for CSC-backed problems —
     /// storage-agnostic code goes through [`store`](Self::store).
     pub fn a(&self) -> &Mat {
-        self.store.as_dense().expect(
+        self.shared.store().as_dense().expect(
             "LassoProblem::a(): dense dictionary required; \
              this problem is CSC-backed — dispatch through store()",
         )
     }
     /// The dictionary storage seam (dense or CSC).
     pub fn store(&self) -> &DictStore {
-        &self.store
+        self.shared.store()
+    }
+    /// The shared dictionary handle (Arc-bump to reuse it for more
+    /// observations — see [`crate::solver::solve_many`]).
+    pub fn shared(&self) -> &SharedDict {
+        &self.shared
     }
     /// Stored-structure nonzeros per column (flop-meter weights).
     pub fn col_nnz(&self) -> &[usize] {
-        &self.col_nnz
+        self.shared.col_nnz()
     }
     pub fn y(&self) -> &[f64] {
         &self.y
@@ -99,15 +268,15 @@ impl LassoProblem {
     }
     /// `m`: observation dimension.
     pub fn m(&self) -> usize {
-        self.store.rows()
+        self.shared.rows()
     }
     /// `n`: number of atoms.
     pub fn n(&self) -> usize {
-        self.store.cols()
+        self.shared.cols()
     }
     /// Cached per-atom norms ‖a_i‖₂.
     pub fn col_norms(&self) -> &[f64] {
-        &self.col_norms
+        self.shared.col_norms()
     }
     /// Cached `Aᵀ y`.
     pub fn aty(&self) -> &[f64] {
@@ -119,19 +288,19 @@ impl LassoProblem {
     }
     /// ‖A‖₂² — gradient Lipschitz constant.
     pub fn lipschitz(&self) -> f64 {
-        self.lipschitz
+        self.shared.lipschitz()
     }
     /// The standard FISTA step `1/‖A‖₂²`, with a 1% safety margin since
     /// the power iteration estimates the spectral norm from below.
     pub fn default_step(&self) -> f64 {
-        1.0 / (self.lipschitz * 1.01)
+        1.0 / (self.lipschitz() * 1.01)
     }
 
     // --- primal/dual machinery ---
 
     /// Residual `r = y − Ax`.
     pub fn residual(&self, x: &[f64], out: &mut [f64]) {
-        self.store.gemv(x, out);
+        self.shared.store().gemv(x, out);
         for (o, yi) in out.iter_mut().zip(&self.y) {
             *o = yi - *o;
         }
@@ -159,7 +328,7 @@ impl LassoProblem {
     /// Is `u` dual feasible (`‖Aᵀu‖_∞ ≤ λ(1+tol)`)?
     pub fn is_dual_feasible(&self, u: &[f64], tol: f64) -> bool {
         let mut atu = vec![0.0; self.n()];
-        self.store.gemv_t(u, &mut atu);
+        self.shared.store().gemv_t(u, &mut atu);
         linalg::norm_inf(&atu) <= self.lam * (1.0 + tol)
     }
 
@@ -187,7 +356,7 @@ impl LassoProblem {
         let mut r = vec![0.0; self.m()];
         self.residual(x, &mut r);
         let mut atr = vec![0.0; self.n()];
-        self.store.gemv_t(&r, &mut atr);
+        self.shared.store().gemv_t(&r, &mut atr);
         let (u, scale) = self.dual_scale(&r, &atr);
         let p = self.primal_from_residual(x, &r);
         let d = self.dual(&u);
@@ -329,5 +498,66 @@ mod tests {
         let a = g.dictionary(4, 6);
         let y = g.observation(4);
         LassoProblem::new(a, y, -1.0);
+    }
+
+    #[test]
+    fn lambda_spec_resolution() {
+        assert_eq!(LambdaSpec::Value(0.7).resolve(123.0), 0.7);
+        assert_eq!(LambdaSpec::RatioOfMax(0.5).resolve(2.0), 1.0);
+        // Degenerate specs clamp to MIN_LAMBDA instead of panicking.
+        assert_eq!(LambdaSpec::RatioOfMax(0.5).resolve(0.0), MIN_LAMBDA);
+        assert_eq!(LambdaSpec::Value(0.0).resolve(1.0), MIN_LAMBDA);
+        assert_eq!(LambdaSpec::Value(-3.0).resolve(1.0), MIN_LAMBDA);
+    }
+
+    /// A shared build must be bitwise the one-shot build: same caches,
+    /// same λ, same primal-dual evaluations.
+    #[test]
+    fn shared_build_bitwise_matches_from_store() {
+        let mut g = Gen::for_case(9, 0);
+        let a = g.dictionary(15, 40);
+        let y = g.observation(15);
+        let solo = LassoProblem::new(a.clone(), y.clone(), 0.3);
+        let shared = SharedDict::new(DictStore::Dense(a));
+        let p = shared.problem(y, LambdaSpec::Value(0.3));
+        assert_eq!(solo.lam().to_bits(), p.lam().to_bits());
+        assert_eq!(solo.lam_max().to_bits(), p.lam_max().to_bits());
+        assert_eq!(solo.lipschitz().to_bits(), p.lipschitz().to_bits());
+        assert_eq!(solo.col_nnz(), p.col_nnz());
+        for (s, v) in solo.col_norms().iter().zip(p.col_norms()) {
+            assert_eq!(s.to_bits(), v.to_bits());
+        }
+        for (s, v) in solo.aty().iter().zip(p.aty()) {
+            assert_eq!(s.to_bits(), v.to_bits());
+        }
+    }
+
+    /// Problems built over one handle share the physical dictionary;
+    /// `with_lambda` and `clone` keep sharing it (Arc bumps, no copy).
+    #[test]
+    fn shared_handle_survives_clone_and_with_lambda() {
+        let p = small_problem(11);
+        let shared = p.shared().clone();
+        assert!(SharedDict::ptr_eq(p.shared(), &shared));
+        let p2 = p.with_lambda(p.lam() * 0.5);
+        assert!(SharedDict::ptr_eq(p2.shared(), &shared));
+        let p3 = shared.problem(p.y().to_vec(), LambdaSpec::RatioOfMax(0.4));
+        assert!(SharedDict::ptr_eq(p3.shared(), &shared));
+        assert!((p3.lam() / p3.lam_max() - 0.4).abs() < 1e-12);
+    }
+
+    /// The y = 0 degenerate batch member: λ_max = 0, λ clamps to
+    /// MIN_LAMBDA, and x = 0 is optimal with gap 0 at the start.
+    #[test]
+    fn zero_observation_is_well_posed() {
+        let mut g = Gen::for_case(12, 0);
+        let a = g.dictionary(8, 20);
+        let shared = SharedDict::new(DictStore::Dense(a));
+        let p = shared.problem(vec![0.0; 8], LambdaSpec::RatioOfMax(0.5));
+        assert_eq!(p.lam(), MIN_LAMBDA);
+        assert_eq!(p.lam_max(), 0.0);
+        let x0 = vec![0.0; p.n()];
+        let ev = p.eval(&x0);
+        assert_eq!(ev.gap, 0.0);
     }
 }

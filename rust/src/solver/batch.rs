@@ -1,0 +1,249 @@
+//! Batched multi-RHS solving over one shared dictionary store.
+//!
+//! The screening test (and every dictionary-level precomputation
+//! feeding it — column norms, stored-nonzero counts, the spectral
+//! norm) is observation-independent, while `Aᵀy`, `λ_max`, the working
+//! set and the screening state are per-RHS.  [`solve_many`] exploits
+//! that split: one immutable [`SharedDict`] is computed (or reused)
+//! once, and B Lasso solves borrow it concurrently, each owning only
+//! its per-RHS state.  This is the serving regime the coordinator's
+//! [`crate::coordinator::JobEngine::run_batch`] routes batch traffic
+//! through.
+//!
+//! ## One pool, two levels of parallelism
+//!
+//! The across-solve fan-out runs on the [`SolverConfig::par`] context:
+//! each solve is one item of [`crate::par::ParContext::run_items`],
+//! i.e. a *shard-class* job on the shared pool, with the calling
+//! thread participating.  Inside each solve, the per-iteration matvecs
+//! and screening tests shard onto the **same** pool.  A solve waiting
+//! for its inner shards *helps* — it drains the pool's shard queue
+//! ([`crate::par::ThreadPool::help_run_one`]) instead of blocking — so
+//! the nested fan-out can never deadlock, even on a single-worker
+//! pool, and at most `threads` threads ever do work (see
+//! [`crate::par::scope`]).
+//!
+//! Because batch solves are themselves shard-class items, a helping
+//! solve can absorb a *whole* other solve inline, not just a matvec
+//! shard.  To keep that recursion shallow and its stack cost bounded,
+//! the fan-out is issued in **waves** of [`BATCH_WAVE_FACTOR`]`·
+//! threads` solves: help-nesting depth is capped by the wave size
+//! instead of the batch size, so multi-thousand-RHS batches cannot
+//! grow worker stacks linearly in B.  A solve's
+//! [`SolveReport::wall_secs`] still includes any cooperative help it
+//! performed while waiting (exactly as in
+//! [`crate::coordinator::JobEngine::run_all`], where a waiting solve
+//! helps with foreign matvec shards) — batch-level wall-clock is the
+//! honest throughput number.
+//!
+//! ## Determinism
+//!
+//! Scheduling never changes results: each solve reads only the
+//! immutable shared store and writes only its own report slot, and
+//! every sharded kernel is bitwise identical to its sequential
+//! counterpart.  Per-RHS [`SolveReport`]s are therefore **bitwise
+//! identical** to B independent [`solve`](crate::solver::solve) calls
+//! — across thread counts, dictionary storage formats and compaction
+//! policies, flops included (`rust/tests/batch_parity.rs`).
+
+use crate::problem::{LambdaSpec, SharedDict};
+use crate::solver::{solve_warm_ws, SolveReport, SolverConfig};
+use crate::workset::WorkingSet;
+
+/// One right-hand side of a batched solve: an observation plus its
+/// regularization spec.
+#[derive(Clone, Debug)]
+pub struct BatchRhs {
+    /// The observation (length = dictionary rows).
+    pub y: Vec<f64>,
+    /// How this RHS picks λ (resolved against its own `λ_max`).
+    pub lam: LambdaSpec,
+}
+
+impl BatchRhs {
+    /// The paper's protocol: `λ = lam_ratio · λ_max(A, y)` per
+    /// observation.
+    pub fn ratio(y: Vec<f64>, lam_ratio: f64) -> Self {
+        BatchRhs { y, lam: LambdaSpec::RatioOfMax(lam_ratio) }
+    }
+
+    /// A fixed absolute λ.
+    pub fn value(y: Vec<f64>, lam: f64) -> Self {
+        BatchRhs { y, lam: LambdaSpec::Value(lam) }
+    }
+}
+
+/// Across-solve fan-out wave size, as a multiple of the pool width.
+/// Caps the depth a helping solve can recurse to (it can only absorb
+/// solves of its own wave) while keeping enough items in flight that
+/// per-solve cost imbalance inside a wave rarely idles a worker.
+pub const BATCH_WAVE_FACTOR: usize = 4;
+
+/// Solve B Lasso instances that share one immutable dictionary store.
+///
+/// Dictionary-level caches live in `shared` and are borrowed by every
+/// solve; each RHS gets its own problem (`Aᵀy`, `λ_max`, λ — one
+/// matvec, built inside the fan-out so it parallelizes too), its own
+/// [`WorkingSet`] and screening state, and the full `cfg.budget`.
+/// Reports come back in input order.
+///
+/// The across-solve fan-out and each solve's inner matvec/screening
+/// shards run on the same [`SolverConfig::par`] pool (module docs);
+/// with a sequential context the batch runs in order on the calling
+/// thread, bitwise identically.
+///
+/// ```
+/// use holder_screening::linalg::Mat;
+/// use holder_screening::problem::SharedDict;
+/// use holder_screening::solver::{solve, solve_many, BatchRhs, SolverConfig};
+/// use holder_screening::sparse::DictStore;
+///
+/// // One tiny dictionary, stored (and power-iterated) exactly once...
+/// let a = Mat::from_col_major(
+///     3,
+///     4,
+///     vec![
+///         1.0, 0.0, 0.0, //
+///         0.0, 1.0, 0.0, //
+///         0.0, 0.0, 1.0, //
+///         0.6, 0.8, 0.0,
+///     ],
+/// );
+/// let shared = SharedDict::new(DictStore::Dense(a));
+/// // ...amortized across two right-hand sides:
+/// let rhs = vec![
+///     BatchRhs::ratio(vec![1.0, 0.5, 0.0], 0.5),
+///     BatchRhs::ratio(vec![0.0, 0.3, 0.9], 0.5),
+/// ];
+/// let cfg = SolverConfig::default();
+/// let reports = solve_many(&shared, &rhs, &cfg);
+/// assert_eq!(reports.len(), 2);
+/// // Bitwise identical to an independent solve of the same RHS:
+/// let solo = solve(&shared.problem(rhs[0].y.clone(), rhs[0].lam), &cfg);
+/// assert_eq!(reports[0].x, solo.x);
+/// assert_eq!(reports[0].flops, solo.flops);
+/// ```
+pub fn solve_many(
+    shared: &SharedDict,
+    rhs: &[BatchRhs],
+    cfg: &SolverConfig,
+) -> Vec<SolveReport> {
+    // Validate every observation BEFORE the fan-out: shard jobs must
+    // not panic (a panicking job kills its worker and strands the
+    // scoped wait — see `par::scope`), so the shape assert inside
+    // `LassoProblem::from_shared` has to be unreachable by the time
+    // requests reach the pool.
+    for (i, req) in rhs.iter().enumerate() {
+        assert_eq!(
+            req.y.len(),
+            shared.rows(),
+            "solve_many: rhs[{i}].y length does not match dictionary rows"
+        );
+    }
+    let mut out: Vec<Option<SolveReport>> = rhs.iter().map(|_| None).collect();
+    let run_one = |(slot, req): (&mut Option<SolveReport>, &BatchRhs)| {
+        let p = shared.problem(req.y.clone(), req.lam);
+        let mut ws = WorkingSet::new(cfg.compaction, p.n());
+        *slot = Some(solve_warm_ws(&p, cfg, None, &mut ws));
+    };
+    let wave = cfg
+        .par
+        .threads()
+        .saturating_mul(BATCH_WAVE_FACTOR)
+        .max(1);
+    let mut items: Vec<(&mut Option<SolveReport>, &BatchRhs)> =
+        out.iter_mut().zip(rhs).collect();
+    while !items.is_empty() {
+        let tail = items.split_off(items.len().min(wave));
+        cfg.par.run_items(items, &run_one);
+        items = tail;
+    }
+    out.into_iter().map(|o| o.expect("solve_many slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dict::{generate_batch, DictKind, InstanceConfig};
+    use crate::par::ParContext;
+    use crate::regions::RegionKind;
+    use crate::solver::{solve, Budget, StopReason};
+
+    fn small_cfg() -> InstanceConfig {
+        let mut c = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+        c.m = 20;
+        c.n = 60;
+        c
+    }
+
+    fn solver_cfg(par: ParContext) -> SolverConfig {
+        SolverConfig {
+            budget: Budget::gap(1e-9),
+            region: Some(RegionKind::HolderDome),
+            par,
+            ..Default::default()
+        }
+    }
+
+    /// A malformed observation must panic on the CALLING thread,
+    /// before any shard job exists (a panic inside a pool job would
+    /// strand the scoped wait instead).
+    #[test]
+    #[should_panic(expected = "rhs[1].y length")]
+    fn mismatched_observation_length_panics_up_front() {
+        let (shared, ys) = generate_batch(&small_cfg(), 3, 1);
+        let rhs = vec![
+            BatchRhs::ratio(ys[0].clone(), 0.5),
+            BatchRhs::ratio(vec![0.0; shared.rows() + 1], 0.5),
+        ];
+        solve_many(&shared, &rhs, &solver_cfg(ParContext::new_pool(4, 1)));
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let (shared, _) = generate_batch(&small_cfg(), 0, 0);
+        let reports =
+            solve_many(&shared, &[], &solver_cfg(ParContext::sequential()));
+        assert!(reports.is_empty());
+    }
+
+    #[test]
+    fn batch_matches_independent_solves() {
+        let (shared, ys) = generate_batch(&small_cfg(), 1, 5);
+        let rhs: Vec<BatchRhs> =
+            ys.into_iter().map(|y| BatchRhs::ratio(y, 0.5)).collect();
+        let cfg = solver_cfg(ParContext::sequential());
+        let batch = solve_many(&shared, &rhs, &cfg);
+        assert_eq!(batch.len(), 5);
+        for (req, rep) in rhs.iter().zip(&batch) {
+            assert_eq!(rep.stop, StopReason::Converged);
+            let solo = solve(&shared.problem(req.y.clone(), req.lam), &cfg);
+            assert_eq!(solo.iters, rep.iters);
+            assert_eq!(solo.flops, rep.flops);
+            for (a, b) in solo.x.iter().zip(&rep.x) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_batch_bitwise_matches_sequential() {
+        let (shared, ys) = generate_batch(&small_cfg(), 2, 6);
+        let rhs: Vec<BatchRhs> =
+            ys.into_iter().map(|y| BatchRhs::ratio(y, 0.5)).collect();
+        let seq =
+            solve_many(&shared, &rhs, &solver_cfg(ParContext::sequential()));
+        // shard_min = 1 forces the nested (across-solve + within-solve)
+        // fan-out even at toy sizes.
+        let par =
+            solve_many(&shared, &rhs, &solver_cfg(ParContext::new_pool(4, 1)));
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.flops, b.flops);
+            assert_eq!(a.screened, b.screened);
+            for (va, vb) in a.x.iter().zip(&b.x) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+}

@@ -15,10 +15,17 @@
 //! * optionally interleaves a safe-region screening test (eq. 8) built
 //!   from the current primal-dual couple `(x^{(t)}, u^{(t)})`, with
 //!   `u^{(t)}` the dual-scaled residual (paper §V-b).
+//!
+//! Entry points: [`solve`] / [`solve_warm`] / [`solve_warm_ws`] for one
+//! right-hand side, and [`batch::solve_many`] for B observations
+//! sharing one immutable dictionary store (the serving path).
 
+pub mod batch;
 pub mod cd;
 pub mod fista;
 pub mod ista;
+
+pub use batch::{solve_many, BatchRhs};
 
 use crate::flops::{cost, FlopCounter};
 use crate::linalg;

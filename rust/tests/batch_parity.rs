@@ -1,0 +1,250 @@
+//! Batch parity: `solve_many` over one shared dictionary store must be
+//! **bitwise identical** to B independent `solve` calls — across
+//! solvers, thread counts, dictionary storage formats and compaction
+//! policies, flops included.
+//!
+//! This extends the established parity discipline (threads:
+//! `shard_parity.rs`; compaction + storage format:
+//! `workset_parity.rs`) to the batched multi-RHS entry: sharing the
+//! immutable `SharedDict` (dictionary, column norms, nnz counts,
+//! spectral norm) across B solves is purely an amortization.  Every
+//! per-RHS trajectory replays the independent solve's floating-point
+//! operation sequence exactly, whatever the pool scheduling did.
+//!
+//! The grid below uses the truncated-pulse Toeplitz family so the CSC
+//! rows are genuinely sparse; dense and CSC draws of one config are
+//! the same matrix bit for bit (see `dict::draw_toeplitz_csc`), which
+//! is what makes a single dense sequential reference meaningful for
+//! every combination.
+
+use holder_screening::dict::{generate_batch, DictKind, InstanceConfig};
+use holder_screening::par::ParContext;
+use holder_screening::problem::{LambdaSpec, SharedDict, MIN_LAMBDA};
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{
+    solve, solve_many, BatchRhs, Budget, SolveReport, SolverConfig,
+    SolverKind, StopReason,
+};
+use holder_screening::sparse::DictFormat;
+use holder_screening::workset::CompactionPolicy;
+
+const POLICIES: [CompactionPolicy; 4] = [
+    CompactionPolicy::Disabled,
+    CompactionPolicy::Threshold(0.0),
+    CompactionPolicy::Threshold(0.25),
+    CompactionPolicy::Threshold(1.0),
+];
+
+const LAM_RATIO: f64 = 0.6;
+const B: usize = 3;
+
+fn toeplitz_cfg(format: DictFormat) -> InstanceConfig {
+    InstanceConfig {
+        m: 50,
+        n: 140,
+        kind: DictKind::Toeplitz,
+        lam_ratio: LAM_RATIO,
+        pulse_width: 3.0,
+        pulse_cutoff: 4.0,
+        format,
+    }
+}
+
+fn assert_reports_bitwise(a: &SolveReport, b: &SolveReport, what: &str) {
+    assert_eq!(a.iters, b.iters, "{what}: iters");
+    assert_eq!(a.flops, b.flops, "{what}: flops");
+    assert_eq!(a.screened, b.screened, "{what}: screened");
+    assert_eq!(a.active, b.active, "{what}: active");
+    assert_eq!(a.screen_history, b.screen_history, "{what}: history");
+    assert_eq!(a.stop, b.stop, "{what}: stop reason");
+    assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "{what}: gap");
+    assert_eq!(a.p.to_bits(), b.p.to_bits(), "{what}: primal");
+    assert_eq!(a.d.to_bits(), b.d.to_bits(), "{what}: dual");
+    assert_eq!(a.x.len(), b.x.len(), "{what}: x length");
+    for (i, (va, vb)) in a.x.iter().zip(&b.x).enumerate() {
+        assert_eq!(va.to_bits(), vb.to_bits(), "{what}: x[{i}]");
+    }
+}
+
+fn mk_cfg(
+    kind: SolverKind,
+    par: ParContext,
+    compaction: CompactionPolicy,
+) -> SolverConfig {
+    SolverConfig {
+        kind,
+        budget: Budget::gap(1e-8),
+        region: Some(RegionKind::HolderDome),
+        par,
+        compaction,
+        ..Default::default()
+    }
+}
+
+/// The acceptance grid: for each solver, `solve_many` under every
+/// (threads × dict format × compaction policy) combination must equal
+/// — bit for bit, flops included — B independent sequential solves on
+/// the dense store with compaction disabled.
+#[test]
+fn solve_many_bitwise_matches_independent_solves_across_grid() {
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        // Reference: independent cold solves, each rebuilding its own
+        // dictionary-level state — nothing shared, nothing pooled.
+        let (shared_d, ys) = generate_batch(&toeplitz_cfg(DictFormat::Dense), 5, B);
+        let refs: Vec<SolveReport> = ys
+            .iter()
+            .map(|y| {
+                let own = SharedDict::new(shared_d.store().clone());
+                let p = own.problem(
+                    y.clone(),
+                    LambdaSpec::RatioOfMax(LAM_RATIO),
+                );
+                solve(
+                    &p,
+                    &mk_cfg(
+                        kind,
+                        ParContext::sequential(),
+                        CompactionPolicy::Disabled,
+                    ),
+                )
+            })
+            .collect();
+        assert!(
+            refs.iter().any(|r| r.screened > 0),
+            "{kind:?}: screening never fired — the grid would be vacuous"
+        );
+        for format in [DictFormat::Dense, DictFormat::Csc] {
+            let (shared, ys_f) = generate_batch(&toeplitz_cfg(format), 5, B);
+            // Observations come from per-RHS streams, independent of
+            // the dictionary draw — identical across formats.
+            assert_eq!(ys, ys_f, "{format:?}: observation drift");
+            let rhs: Vec<BatchRhs> = ys_f
+                .into_iter()
+                .map(|y| BatchRhs::ratio(y, LAM_RATIO))
+                .collect();
+            for threads in [1usize, 8] {
+                for policy in POLICIES {
+                    let par = if threads == 1 {
+                        ParContext::sequential()
+                    } else {
+                        // shard_min = 1: maximal nested fan-out.
+                        ParContext::new_pool(threads, 1)
+                    };
+                    let reports = solve_many(
+                        &shared,
+                        &rhs,
+                        &mk_cfg(kind, par, policy),
+                    );
+                    assert_eq!(reports.len(), B);
+                    for (i, (want, got)) in
+                        refs.iter().zip(&reports).enumerate()
+                    {
+                        assert_reports_bitwise(
+                            want,
+                            got,
+                            &format!(
+                                "{kind:?} {format:?} {threads}t {policy:?} \
+                                 rhs {i}"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// B = 1 is the degenerate batch: `solve_many` must collapse to one
+/// plain solve, pooled or not.
+#[test]
+fn singleton_batch_equals_solo_solve() {
+    let (shared, ys) = generate_batch(&toeplitz_cfg(DictFormat::Dense), 9, 1);
+    let rhs = vec![BatchRhs::ratio(ys[0].clone(), LAM_RATIO)];
+    let solo = solve(
+        &shared.problem(ys[0].clone(), LambdaSpec::RatioOfMax(LAM_RATIO)),
+        &mk_cfg(
+            SolverKind::Fista,
+            ParContext::sequential(),
+            CompactionPolicy::default(),
+        ),
+    );
+    for par in [ParContext::sequential(), ParContext::new_pool(4, 1)] {
+        let reports = solve_many(
+            &shared,
+            &rhs,
+            &mk_cfg(SolverKind::Fista, par, CompactionPolicy::default()),
+        );
+        assert_eq!(reports.len(), 1);
+        assert_reports_bitwise(&solo, &reports[0], "B=1");
+    }
+}
+
+/// Duplicate observations in one batch must produce identical reports
+/// slot for slot — concurrent solves over the shared store cannot
+/// interfere with each other.
+#[test]
+fn duplicate_rhs_produce_identical_reports() {
+    let (shared, ys) = generate_batch(&toeplitz_cfg(DictFormat::Dense), 2, 2);
+    let rhs: Vec<BatchRhs> = vec![
+        BatchRhs::ratio(ys[0].clone(), LAM_RATIO),
+        BatchRhs::ratio(ys[1].clone(), LAM_RATIO),
+        BatchRhs::ratio(ys[0].clone(), LAM_RATIO),
+        BatchRhs::ratio(ys[0].clone(), LAM_RATIO),
+    ];
+    let reports = solve_many(
+        &shared,
+        &rhs,
+        &mk_cfg(
+            SolverKind::Fista,
+            ParContext::new_pool(8, 1),
+            CompactionPolicy::default(),
+        ),
+    );
+    assert_reports_bitwise(&reports[0], &reports[2], "dup 0 vs 2");
+    assert_reports_bitwise(&reports[0], &reports[3], "dup 0 vs 3");
+    // ...and the distinct RHS genuinely differs.
+    assert_ne!(reports[0].x, reports[1].x);
+}
+
+/// The y = 0 member: λ_max = 0 resolves to MIN_LAMBDA, the solve
+/// converges immediately to x = 0, and the batch still matches the
+/// independent path bitwise.
+#[test]
+fn zero_observation_in_batch_is_well_posed() {
+    let (shared, ys) = generate_batch(&toeplitz_cfg(DictFormat::Dense), 3, 1);
+    let m = shared.rows();
+    let rhs = vec![
+        BatchRhs::ratio(vec![0.0; m], LAM_RATIO),
+        BatchRhs::ratio(ys[0].clone(), LAM_RATIO),
+    ];
+    let cfg = mk_cfg(
+        SolverKind::Fista,
+        ParContext::sequential(),
+        CompactionPolicy::default(),
+    );
+    let reports = solve_many(&shared, &rhs, &cfg);
+    assert_eq!(reports[0].stop, StopReason::Converged);
+    assert!(reports[0].x.iter().all(|&v| v == 0.0));
+    let p_zero =
+        shared.problem(vec![0.0; m], LambdaSpec::RatioOfMax(LAM_RATIO));
+    assert_eq!(p_zero.lam(), MIN_LAMBDA);
+    assert_eq!(p_zero.lam_max(), 0.0);
+    let solo = solve(&p_zero, &cfg);
+    assert_reports_bitwise(&solo, &reports[0], "y = 0");
+}
+
+/// Empty batch: no work, no panic, empty result.
+#[test]
+fn empty_batch_returns_empty() {
+    let (shared, _) = generate_batch(&toeplitz_cfg(DictFormat::Dense), 4, 0);
+    let reports = solve_many(
+        &shared,
+        &[],
+        &mk_cfg(
+            SolverKind::Fista,
+            ParContext::new_pool(4, 1),
+            CompactionPolicy::default(),
+        ),
+    );
+    assert!(reports.is_empty());
+}
