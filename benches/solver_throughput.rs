@@ -1,17 +1,24 @@
 //! Bench: end-to-end solver throughput (native path) per region, plus
-//! the shared-store batch column (`BENCH_batch_solve.json`) and the
-//! PJRT artifact path when `make artifacts` has run.
+//! the shared-store batch column (`BENCH_batch_solve.json`), the
+//! streamed session column (`BENCH_stream_solve.json`) and the PJRT
+//! artifact path when `make artifacts` has run.
 //!
 //! This is the serving-facing number: solves/second to the target gap
-//! on the paper's instance family — and, for the batch column, how
-//! much one amortized `SharedDict` beats B independent cold solves
-//! that each rebuild the dictionary-level state (column norms, nnz
-//! counts, spectral-norm power iteration) from scratch.
+//! on the paper's instance family — for the batch column, how much one
+//! amortized `SharedDict` beats B independent cold solves that each
+//! rebuild the dictionary-level state (column norms, nnz counts,
+//! spectral-norm power iteration) from scratch; for the streamed
+//! column, what the long-lived session (requests arriving one by one
+//! through a bounded queue) costs relative to the one-shot batch over
+//! the same RHS set — with bitwise parity asserted across all three.
 //!
 //! Env: HOLDER_BENCH_QUICK=1 shrinks batch size and timing windows for
 //! smoke runs; HOLDER_BENCH_STRICT=1 asserts the batch speedup > 1.
 
 use holder_screening::benchkit::{Bench, BenchLog};
+use holder_screening::coordinator::{
+    JobEngine, SessionConfig, SubmitPolicy,
+};
 use holder_screening::dict::{generate, generate_batch, DictKind, InstanceConfig};
 use holder_screening::par::{self, ParContext};
 use holder_screening::problem::{LambdaSpec, SharedDict};
@@ -164,6 +171,122 @@ fn batch_column(quick: bool, strict: bool, cfg: &InstanceConfig) {
             "shared-store batch did not beat cold solves: {speedup:.2}x"
         );
     }
+
+    stream_column(
+        quick,
+        cfg,
+        &shared,
+        &rhs,
+        &scfg_batch,
+        &batch_reports,
+        s_cold.mean,
+        s_batch.mean,
+        b_size,
+        threads,
+        tau,
+    );
+}
+
+/// The streamed column: the same RHS set arriving one request at a
+/// time through a long-lived bounded-queue session (one `SharedDict` +
+/// one pool pinned for the session's lifetime), versus the one-shot
+/// `solve_many` batch and the cold path above.  Parity first — the
+/// streamed reports must be bitwise the batch reports, whatever the
+/// arrival order — then timing, logged to `BENCH_stream_solve.json`.
+#[allow(clippy::too_many_arguments)]
+fn stream_column(
+    quick: bool,
+    cfg: &InstanceConfig,
+    shared: &SharedDict,
+    rhs: &[BatchRhs],
+    scfg: &SolverConfig,
+    batch_reports: &[holder_screening::solver::SolveReport],
+    cold_mean: f64,
+    batch_mean: f64,
+    b_size: usize,
+    threads: usize,
+    tau: f64,
+) {
+    let queue_depth = (threads * 4).max(1);
+    println!(
+        "\n# streamed session: {b_size} RHS arriving one by one, \
+         queue depth {queue_depth}, gap target {tau:.0e}, {threads} threads"
+    );
+    // One engine + one session for the whole column: the session is
+    // long-lived by design, so pool/dictionary pinning is setup, not
+    // per-trace cost.  Reversed arrivals make order-invariance earn
+    // its keep inside the measured loop.
+    let engine = JobEngine::new(threads);
+    let session = engine.open_session(
+        shared.clone(),
+        SessionConfig {
+            solver: scfg.clone(),
+            queue_depth,
+            policy: SubmitPolicy::Block,
+        },
+    );
+    let order: Vec<usize> = (0..b_size).rev().collect();
+    let run_stream = || session.replay(rhs, &order, 1);
+
+    // Bitwise parity against the batch reports (which the caller
+    // already pinned against the cold path).
+    let streamed = run_stream();
+    for (i, (b, c)) in batch_reports.iter().zip(&streamed).enumerate() {
+        b.assert_bitwise_eq(&c.report, &format!("stream rhs {i}"));
+    }
+    println!(
+        "#   parity: {b_size} streamed reports bitwise identical to the \
+         batch (reversed arrivals)"
+    );
+
+    let mut log = BenchLog::new("stream_solve");
+    log.metric("m", cfg.m as u64);
+    log.metric("n", cfg.n as u64);
+    log.metric("batch", b_size as u64);
+    log.metric("threads", threads as u64);
+    log.metric("queue_depth", queue_depth as u64);
+    log.metric("target_gap", tau);
+    log.metric("quick", quick);
+    log.metric("parity_rhs", b_size as u64);
+
+    let bench = if quick {
+        Bench::quick()
+    } else {
+        Bench { min_iters: 3, min_secs: 0.5, warmup_secs: 0.1 }
+    };
+    let s_stream = bench.report(
+        &format!(
+            "stream: session replay, {b_size} reversed arrivals, chunk 1"
+        ),
+        || run_stream().len(),
+    );
+    log.record("streamed_session", &s_stream);
+
+    let vs_cold = cold_mean / s_stream.mean.max(1e-12);
+    let vs_batch = batch_mean / s_stream.mean.max(1e-12);
+    println!(
+        "    -> stream vs cold: {vs_cold:.2}x | stream vs one-shot \
+         batch: {vs_batch:.2}x"
+    );
+    println!(
+        "    -> {:.1} solves/s streamed",
+        b_size as f64 / s_stream.mean.max(1e-12)
+    );
+    let q = session.metrics().histogram("session_queue_secs");
+    println!(
+        "    -> queue wait p50 {:.3}ms p99 {:.3}ms over {} requests",
+        q.quantile(0.50) * 1e3,
+        q.quantile(0.99) * 1e3,
+        q.count()
+    );
+    log.metric("stream_speedup_vs_cold", vs_cold);
+    log.metric("stream_vs_batch", vs_batch);
+    log.metric(
+        "stream_solves_per_sec",
+        b_size as f64 / s_stream.mean.max(1e-12),
+    );
+    log.metric("queue_wait_p99_secs", q.quantile(0.99));
+    log.write();
 }
 
 #[cfg(feature = "xla")]

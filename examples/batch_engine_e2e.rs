@@ -14,15 +14,22 @@
 //!            `solve_many`, which fans the solves out over the engine
 //!            pool while each solve's inner matvec/screening shards
 //!            land on the same workers (caller-helps scheduling);
-//!   phase 3  cross-validation — the two paths must agree **bitwise**,
-//!            per request, flops included: sharing is an amortization,
-//!            never a semantic.
+//!   phase 3  STREAMED — the same requests arrive one by one (in
+//!            REVERSED order, through a bounded-depth session opened
+//!            on the same engine) instead of existing up front: the
+//!            long-lived serving regime, with queue-wait/solve-time
+//!            latency histograms;
+//!   phase 4  cross-validation — all three paths must agree
+//!            **bitwise**, per request, flops included: sharing and
+//!            streaming are amortizations, never semantics.
 //!
 //! ```bash
 //! cargo run --release --example batch_engine_e2e
 //! ```
 
-use holder_screening::coordinator::JobEngine;
+use holder_screening::coordinator::{
+    JobEngine, SessionConfig, SubmitPolicy,
+};
 use holder_screening::dict::{generate_batch, DictKind, InstanceConfig};
 use holder_screening::par;
 use holder_screening::problem::{LambdaSpec, SharedDict};
@@ -93,38 +100,84 @@ fn main() {
         batch_hits as f64 / REQUESTS as f64
     );
 
-    // ---- phase 3: cross-validate the two paths ---------------------
-    println!("\n== phase 3: cross-validation (bitwise) ==");
+    // ---- phase 3: streamed arrivals through a session --------------
+    println!(
+        "\n== phase 3: streamed arrivals via JobEngine::open_session =="
+    );
+    let session = engine.open_session(
+        shared.clone(),
+        SessionConfig {
+            solver: mk_cfg(),
+            queue_depth: (threads * 4).max(1),
+            policy: SubmitPolicy::Block,
+        },
+    );
+    // The trace arrives REVERSED, one request per burst — the
+    // arrival-order-invariance contract says the reports cannot tell.
+    let order: Vec<usize> = (0..REQUESTS).rev().collect();
+    let sw = Stopwatch::start();
+    let streamed = session.replay(&rhs, &order, 1);
+    let stream_secs = sw.elapsed_secs();
+    let stream_hits = streamed
+        .iter()
+        .filter(|c| c.report.stop == StopReason::Converged)
+        .count();
+    println!(
+        "throughput: {:.1} req/s | rho({TAU:.0e}) = {:.2} | queue depth {}",
+        REQUESTS as f64 / stream_secs,
+        stream_hits as f64 / REQUESTS as f64,
+        session.queue_depth()
+    );
+    let metrics = session.metrics();
+    for (label, name) in [
+        ("queue wait", "session_queue_secs"),
+        ("solve time", "session_solve_secs"),
+    ] {
+        let h = metrics.histogram(name);
+        println!(
+            "{label}: p50 {:.2}ms | p90 {:.2}ms | p99 {:.2}ms",
+            h.quantile(0.50) * 1e3,
+            h.quantile(0.90) * 1e3,
+            h.quantile(0.99) * 1e3
+        );
+    }
+
+    // ---- phase 4: cross-validate the three paths -------------------
+    println!("\n== phase 4: cross-validation (bitwise) ==");
     for (i, (a, b)) in cold.iter().zip(&batch).enumerate() {
-        assert_eq!(a.iters, b.iters, "request {i}: iters");
-        assert_eq!(a.flops, b.flops, "request {i}: flops");
-        assert_eq!(a.screened, b.screened, "request {i}: screened");
-        assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "request {i}: gap");
-        for (va, vb) in a.x.iter().zip(&b.x) {
-            assert_eq!(va.to_bits(), vb.to_bits(), "request {i}: x");
-        }
+        a.assert_bitwise_eq(b, &format!("batch request {i}"));
+    }
+    for (i, (a, c)) in cold.iter().zip(&streamed).enumerate() {
+        a.assert_bitwise_eq(&c.report, &format!("stream request {i}"));
     }
     println!(
         "all {REQUESTS} per-request reports bitwise identical across \
-         the two paths (x, gap, flops, screening)"
+         the three paths (x, gap, flops, screening) — even with the \
+         streamed trace arriving reversed"
     );
 
     // headline summary
     println!("\n== summary ==");
     println!(
-        "cold   path: {:.1} req/s ({:.2}s total)",
+        "cold     path: {:.1} req/s ({:.2}s total)",
         REQUESTS as f64 / cold_secs,
         cold_secs
     );
     println!(
-        "shared path: {:.1} req/s ({:.2}s total) -> {:.2}x",
+        "shared   path: {:.1} req/s ({:.2}s total) -> {:.2}x",
         REQUESTS as f64 / batch_secs,
         batch_secs,
         cold_secs / batch_secs.max(1e-12)
     );
     println!(
+        "streamed path: {:.1} req/s ({:.2}s total) -> {:.2}x",
+        REQUESTS as f64 / stream_secs,
+        stream_secs,
+        cold_secs / stream_secs.max(1e-12)
+    );
+    println!(
         "one immutable DictStore + its caches served {REQUESTS} \
-         observations; only A^T y, lam_max and the working sets were \
-         per-request"
+         observations three ways; only A^T y, lam_max and the working \
+         sets were per-request"
     );
 }

@@ -2,12 +2,15 @@
 //! multi-RHS solves over one shared dictionary store — and collect
 //! results.
 //!
-//! Two entry points share the engine's pool: [`JobEngine::run_all`]
+//! Three entry points share the engine's pool: [`JobEngine::run_all`]
 //! fans out fully independent jobs (each generating its own instance),
-//! and [`JobEngine::run_batch`] routes B observations through
+//! [`JobEngine::run_batch`] routes B observations through
 //! [`crate::solver::solve_many`] so they borrow one immutable
 //! [`SharedDict`] instead of rebuilding per-solve dictionary state B
-//! times — the serving path for one-dictionary/many-users traffic.
+//! times, and [`JobEngine::open_session`] opens a long-lived streaming
+//! [`SessionEngine`](crate::coordinator::SessionEngine) for RHS that
+//! arrive over time — the serving paths for one-dictionary/many-users
+//! traffic.
 //!
 //! ## One pool, two levels of parallelism
 //!
@@ -88,6 +91,13 @@ impl JobEngine {
 
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Pool-utilization snapshot, both job classes: `(queued,
+    /// running)`.  Diagnostic — the `serve` CLI prints it after a
+    /// trace replay to show the pool went quiet.
+    pub fn pool_utilization(&self) -> (usize, usize) {
+        (self.pool.queued(), self.pool.in_flight())
     }
 
     /// Run all jobs; returns results sorted by job id.
@@ -191,6 +201,62 @@ impl JobEngine {
             self.metrics.gauge("last_gap").set(r.gap);
         }
         reports
+    }
+
+    /// Open a streaming session over `shared` on the engine's pool —
+    /// the long-lived counterpart of [`run_batch`](Self::run_batch)
+    /// for RHS that arrive over time.  The session shares the engine's
+    /// workers, `shard_min` and metrics registry
+    /// (`cfg.solver.par` is re-pointed exactly as batch jobs are), so
+    /// session latency histograms land next to the engine's batch
+    /// counters.  Several sessions (and batch jobs) can coexist on one
+    /// engine; results never depend on the interleaving.  The engine
+    /// owns the pool: keep it alive until its sessions' in-flight work
+    /// has drained (an engine-shared session does not quiesce the pool
+    /// on drop, unlike a session with its own dedicated pool from
+    /// [`SessionEngine::new`](crate::coordinator::SessionEngine::new)).
+    ///
+    /// ```
+    /// use holder_screening::coordinator::{JobEngine, SessionConfig};
+    /// use holder_screening::dict::{generate_batch, DictKind, InstanceConfig};
+    /// use holder_screening::problem::LambdaSpec;
+    /// use holder_screening::solver::{solve_many, BatchRhs};
+    ///
+    /// let mut icfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    /// icfg.m = 10;
+    /// icfg.n = 30;
+    /// let (shared, ys) = generate_batch(&icfg, 7, 2);
+    ///
+    /// let engine = JobEngine::new(2);
+    /// let session =
+    ///     engine.open_session(shared.clone(), SessionConfig::default());
+    /// for y in &ys {
+    ///     session.submit(y.clone(), LambdaSpec::RatioOfMax(0.5)).unwrap();
+    /// }
+    /// let done = session.drain();
+    ///
+    /// // Stream ≡ batch, bitwise (arrival-order invariance):
+    /// let rhs: Vec<BatchRhs> =
+    ///     ys.into_iter().map(|y| BatchRhs::ratio(y, 0.5)).collect();
+    /// let batch =
+    ///     solve_many(&shared, &rhs, &SessionConfig::default().solver);
+    /// for (c, b) in done.iter().zip(&batch) {
+    ///     assert_eq!(c.report.x, b.x);
+    ///     assert_eq!(c.report.flops, b.flops);
+    /// }
+    /// ```
+    pub fn open_session(
+        &self,
+        shared: SharedDict,
+        cfg: crate::coordinator::SessionConfig,
+    ) -> crate::coordinator::SessionEngine {
+        crate::coordinator::SessionEngine::with_pool(
+            shared,
+            Arc::clone(&self.pool),
+            self.shard_min,
+            cfg,
+            Arc::clone(&self.metrics),
+        )
     }
 }
 

@@ -1,16 +1,22 @@
 //! The batch solve engine: schedules many Lasso solves (benchmark
-//! campaigns, λ-paths, ad-hoc job streams, batched multi-RHS traffic)
-//! over the in-repo thread pool, with metrics and deterministic
-//! per-job seeding.
+//! campaigns, λ-paths, ad-hoc job streams, batched multi-RHS traffic,
+//! long-lived streaming sessions) over the in-repo thread pool, with
+//! metrics and deterministic per-job seeding.
 //!
 //! This is the L3 "coordination" layer: examples and the CLI never spawn
 //! threads themselves — they submit [`jobs::SolveJob`]s, route a
 //! multi-RHS batch over one shared store through
-//! [`jobs::JobEngine::run_batch`], or run a [`campaign::Campaign`] and
-//! collect structured results.
+//! [`jobs::JobEngine::run_batch`], open a streaming
+//! [`session::SessionEngine`] for RHS that arrive over time, or run a
+//! [`campaign::Campaign`] and collect structured results.
 
 pub mod campaign;
 pub mod jobs;
+pub mod session;
 
 pub use campaign::{Campaign, CampaignResult};
 pub use jobs::{JobEngine, JobResult, SolveJob};
+pub use session::{
+    Completed, RequestId, SessionConfig, SessionEngine, SubmitError,
+    SubmitManyError, SubmitPolicy,
+};

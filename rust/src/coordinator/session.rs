@@ -1,0 +1,755 @@
+//! Streaming RHS sessions: a long-lived engine over **one**
+//! [`SharedDict`] that accepts observations as they arrive.
+//!
+//! [`crate::solver::solve_many`] is one-shot — every right-hand side
+//! must exist before the call.  The serving regime is the opposite:
+//! the dictionary is fixed and requests trickle in over time.  A
+//! [`SessionEngine`] holds one [`SharedDict`] plus one pool for its
+//! whole lifetime; [`submit`](SessionEngine::submit) enqueues an
+//! observation as a pool job (the per-RHS `Aᵀy` matvec and the solve
+//! both run on the workers), completed [`SolveReport`]s come back
+//! through [`try_recv_completed`](SessionEngine::try_recv_completed) /
+//! [`recv_completed`](SessionEngine::recv_completed) /
+//! [`drain`](SessionEngine::drain), and a bounded in-flight window
+//! applies backpressure at the submission edge.
+//!
+//! ## Backpressure
+//!
+//! [`SessionConfig::queue_depth`] bounds the number of **outstanding**
+//! requests — submitted but not yet received by the consumer (queued +
+//! solving + completed-but-uncollected).  Counting until *receipt*
+//! (rather than until solve completion) bounds the session's memory
+//! end to end: a consumer that stops collecting cannot accumulate an
+//! unbounded backlog of completed reports, whose full-length `x`
+//! vectors dominate the footprint.  At capacity,
+//! [`submit`](SessionEngine::submit) follows
+//! [`SessionConfig::policy`]: [`SubmitPolicy::Block`] parks the caller
+//! until a receive frees a slot, [`SubmitPolicy::Reject`] returns
+//! [`SubmitError::WouldBlock`] immediately.
+//! [`try_submit`](SessionEngine::try_submit) is always non-blocking,
+//! whatever the policy — it is what a single-threaded submit/receive
+//! loop (e.g. [`replay`](SessionEngine::replay)) must use, since a
+//! blocked `submit` can only be unblocked by a receive the same thread
+//! would perform.
+//!
+//! ## Arrival-order invariance
+//!
+//! The load-bearing invariant, one layer up from the batch entry's
+//! parity: **any arrival order, interleaving or chunking of the same
+//! RHS set yields per-request reports bitwise identical to one
+//! [`solve_many`](crate::solver::solve_many) call** (and hence to B
+//! independent [`solve`](crate::solver::solve) calls — flops
+//! included).  It holds structurally: a request's report is a pure
+//! function of `(SharedDict, y, LambdaSpec, SolverConfig)` — the
+//! session runs exactly the code path `solve_many` runs per RHS (build
+//! the problem via [`SharedDict::problem`], solve on a fresh
+//! [`WorkingSet`] under the session's config) — and the fp-order
+//! replay discipline below makes the pool scheduling invisible (see
+//! `ARCHITECTURE.md`).  `rust/tests/session_parity.rs` asserts it
+//! across arrival permutations, chunk sizes, solvers, thread counts
+//! and storage formats; `rust/tests/backpressure.rs` covers the
+//! bounded-queue semantics.
+//!
+//! ## Metrics
+//!
+//! Each request is classed by its [`LambdaSpec`] variant
+//! ([`LambdaSpec::class_name`]) and observed into log-bucketed latency
+//! histograms, aggregate and per class
+//! ([`crate::metrics::Registry::observe_classed_secs`]):
+//!
+//! * `session_queue_secs[_<class>]` — submit → solve start (queue wait);
+//! * `session_solve_secs[_<class>]` — solve start → done;
+//!
+//! plus counters `session_submitted` / `session_completed` /
+//! `session_received` / `session_rejected` and
+//! `session_flops_total`.  A session opened from a
+//! [`JobEngine`](crate::coordinator::JobEngine) shares the engine's
+//! registry.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::metrics::Registry;
+use crate::par::{ParContext, ThreadPool};
+use crate::problem::{LambdaSpec, SharedDict};
+use crate::solver::{solve_warm_ws, BatchRhs, SolveReport, SolverConfig};
+use crate::util::timer::Stopwatch;
+use crate::workset::WorkingSet;
+
+/// Ticket for one submitted request.  Ids are assigned in submission
+/// order, starting at 0, unique within a session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+/// What [`SessionEngine::submit`] does when the session is at
+/// [`SessionConfig::queue_depth`] outstanding requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitPolicy {
+    /// Park the submitting thread until a receive frees a slot.
+    Block,
+    /// Return [`SubmitError::WouldBlock`] immediately.
+    Reject,
+}
+
+/// Why a submission was not accepted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The session is at capacity (Reject policy, or
+    /// [`SessionEngine::try_submit`]).  The request was **not**
+    /// enqueued; retry after receiving a completion.
+    WouldBlock,
+    /// Observation length does not match the dictionary's rows.
+    ShapeMismatch { expected: usize, got: usize },
+    /// The session was [`close`](SessionEngine::close)d.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::WouldBlock => {
+                write!(f, "session at capacity (WouldBlock)")
+            }
+            SubmitError::ShapeMismatch { expected, got } => write!(
+                f,
+                "observation length {got} does not match dictionary \
+                 rows {expected}"
+            ),
+            SubmitError::Closed => write!(f, "session is closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A [`SessionEngine::submit_many`] failure: the prefix in `accepted`
+/// was enqueued and will complete normally; `rhs[index]` triggered
+/// `error` and nothing after it was submitted.
+#[derive(Clone, Debug)]
+pub struct SubmitManyError {
+    pub accepted: Vec<RequestId>,
+    pub index: usize,
+    pub error: SubmitError,
+}
+
+impl std::fmt::Display for SubmitManyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "submit_many stopped at rhs[{}] after {} accepted: {}",
+            self.index,
+            self.accepted.len(),
+            self.error
+        )
+    }
+}
+
+impl std::error::Error for SubmitManyError {}
+
+/// Session-engine configuration.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Per-request solver configuration.  Its [`ParContext`] is
+    /// re-pointed at the session's pool on open, exactly as
+    /// [`JobEngine::run_batch`](crate::coordinator::JobEngine::run_batch)
+    /// re-points batch jobs.
+    pub solver: SolverConfig,
+    /// Maximum outstanding requests (submitted − received); at least 1.
+    pub queue_depth: usize,
+    /// Behavior of [`SessionEngine::submit`] at capacity.
+    pub policy: SubmitPolicy,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            solver: SolverConfig::default(),
+            queue_depth: 256,
+            policy: SubmitPolicy::Block,
+        }
+    }
+}
+
+/// One finished request: the full [`SolveReport`] plus the session's
+/// two latency legs.
+#[derive(Clone, Debug)]
+pub struct Completed {
+    pub id: RequestId,
+    pub report: SolveReport,
+    /// Submit → solve start (time spent queued behind other requests).
+    pub queue_secs: f64,
+    /// Solve start → done, as measured by the session (includes the
+    /// per-RHS problem build; `report.wall_secs` is the solver-only
+    /// twin).
+    pub solve_secs: f64,
+}
+
+struct SessionState {
+    /// Completed-but-unreceived reports, in completion order.
+    done: VecDeque<Completed>,
+    /// Submitted − received (queued + solving + in `done`).
+    outstanding: usize,
+    closed: bool,
+}
+
+struct SessionShared {
+    state: Mutex<SessionState>,
+    /// Signals both capacity freed (a receive) and completions landing.
+    cv: Condvar,
+    metrics: Arc<Registry>,
+}
+
+/// A long-lived streaming-solve session over one [`SharedDict`].
+///
+/// Construction: [`SessionEngine::new`] spins up a dedicated pool;
+/// [`JobEngine::open_session`](crate::coordinator::JobEngine::open_session)
+/// shares an engine's pool and metrics registry.  The dictionary and
+/// its observation-independent caches are pinned for the session's
+/// lifetime; every request carries only its own `y` and
+/// [`LambdaSpec`].
+///
+/// ```
+/// use holder_screening::linalg::Mat;
+/// use holder_screening::problem::{LambdaSpec, SharedDict};
+/// use holder_screening::coordinator::{SessionConfig, SessionEngine};
+/// use holder_screening::solver::solve;
+/// use holder_screening::sparse::DictStore;
+///
+/// let a = Mat::from_col_major(2, 3, vec![1.0, 0.0, 0.0, 1.0, 0.6, 0.8]);
+/// let shared = SharedDict::new(DictStore::Dense(a));
+/// let session =
+///     SessionEngine::new(shared.clone(), 2, SessionConfig::default());
+///
+/// // Requests arrive one by one...
+/// let id0 = session.submit(vec![1.0, 0.5], LambdaSpec::RatioOfMax(0.5));
+/// let id1 = session.submit(vec![0.2, 0.9], LambdaSpec::RatioOfMax(0.5));
+/// assert!(id0.is_ok() && id1.is_ok());
+///
+/// // ...and drain returns every report, sorted by request id,
+/// // bitwise identical to an offline solve of the same observation.
+/// let done = session.drain();
+/// assert_eq!(done.len(), 2);
+/// let solo = solve(
+///     &shared.problem(vec![1.0, 0.5], LambdaSpec::RatioOfMax(0.5)),
+///     &SessionConfig::default().solver,
+/// );
+/// assert_eq!(done[0].report.x, solo.x);
+/// assert_eq!(done[0].report.flops, solo.flops);
+/// ```
+pub struct SessionEngine {
+    dict: SharedDict,
+    pool: Arc<ThreadPool>,
+    /// Did this session spawn `pool` itself (vs. borrowing an
+    /// engine's)?  Governs the quiesce-on-drop behavior.
+    owns_pool: bool,
+    /// Solver config with `par` pointed at `pool`.
+    cfg: SolverConfig,
+    queue_depth: usize,
+    policy: SubmitPolicy,
+    inner: Arc<SessionShared>,
+    next_id: AtomicU64,
+}
+
+impl SessionEngine {
+    /// Open a session with its own dedicated pool of `threads` workers.
+    pub fn new(dict: SharedDict, threads: usize, cfg: SessionConfig) -> Self {
+        let shard_min = cfg.solver.par.shard_min;
+        let mut s = Self::with_pool(
+            dict,
+            Arc::new(ThreadPool::new(threads)),
+            shard_min,
+            cfg,
+            Arc::new(Registry::new()),
+        );
+        s.owns_pool = true;
+        s
+    }
+
+    /// Open a session over an existing pool + metrics registry (the
+    /// [`JobEngine::open_session`](crate::coordinator::JobEngine::open_session)
+    /// path: sessions and batch jobs share one set of workers).
+    pub(crate) fn with_pool(
+        dict: SharedDict,
+        pool: Arc<ThreadPool>,
+        shard_min: usize,
+        cfg: SessionConfig,
+        metrics: Arc<Registry>,
+    ) -> Self {
+        let mut solver = cfg.solver;
+        solver.par = ParContext::with_pool(Arc::clone(&pool), shard_min);
+        SessionEngine {
+            dict,
+            pool,
+            owns_pool: false,
+            cfg: solver,
+            queue_depth: cfg.queue_depth.max(1),
+            policy: cfg.policy,
+            inner: Arc::new(SessionShared {
+                state: Mutex::new(SessionState {
+                    done: VecDeque::new(),
+                    outstanding: 0,
+                    closed: false,
+                }),
+                cv: Condvar::new(),
+                metrics,
+            }),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// The session's pinned dictionary handle.
+    pub fn shared(&self) -> &SharedDict {
+        &self.dict
+    }
+
+    /// Worker threads backing the session.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// The backpressure window.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Submitted − received right now.
+    pub fn outstanding(&self) -> usize {
+        self.inner.state.lock().unwrap().outstanding
+    }
+
+    /// The session's metrics registry (the engine's, when opened from
+    /// a [`JobEngine`](crate::coordinator::JobEngine)).
+    pub fn metrics(&self) -> Arc<Registry> {
+        Arc::clone(&self.inner.metrics)
+    }
+
+    /// Submit one observation under the session's policy: blocks at
+    /// capacity ([`SubmitPolicy::Block`]) or returns
+    /// [`SubmitError::WouldBlock`] ([`SubmitPolicy::Reject`]).
+    pub fn submit(
+        &self,
+        y: Vec<f64>,
+        lam: LambdaSpec,
+    ) -> Result<RequestId, SubmitError> {
+        self.submit_inner(y, lam, self.policy)
+    }
+
+    /// Non-blocking submit, whatever the session policy: returns
+    /// [`SubmitError::WouldBlock`] at capacity.  A single-threaded
+    /// submit/receive loop must use this — a blocked
+    /// [`submit`](Self::submit) could only be freed by a receive the
+    /// same thread would perform (see [`replay`](Self::replay)).
+    pub fn try_submit(
+        &self,
+        y: Vec<f64>,
+        lam: LambdaSpec,
+    ) -> Result<RequestId, SubmitError> {
+        self.submit_inner(y, lam, SubmitPolicy::Reject)
+    }
+
+    fn submit_inner(
+        &self,
+        y: Vec<f64>,
+        lam: LambdaSpec,
+        policy: SubmitPolicy,
+    ) -> Result<RequestId, SubmitError> {
+        if y.len() != self.dict.rows() {
+            return Err(SubmitError::ShapeMismatch {
+                expected: self.dict.rows(),
+                got: y.len(),
+            });
+        }
+        // Reserve an outstanding slot (or bail) under the lock...
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            loop {
+                if st.closed {
+                    return Err(SubmitError::Closed);
+                }
+                if st.outstanding < self.queue_depth {
+                    break;
+                }
+                match policy {
+                    SubmitPolicy::Reject => {
+                        self.inner.metrics.counter("session_rejected").inc();
+                        return Err(SubmitError::WouldBlock);
+                    }
+                    SubmitPolicy::Block => {
+                        st = self.inner.cv.wait(st).unwrap();
+                    }
+                }
+            }
+            st.outstanding += 1;
+        }
+        // ...then enqueue the solve job outside it.
+        let id = RequestId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.inner.metrics.counter("session_submitted").inc();
+        let inner = Arc::clone(&self.inner);
+        let dict = self.dict.clone();
+        let cfg = self.cfg.clone();
+        let class = lam.class_name();
+        let submitted = Stopwatch::start();
+        self.pool.execute(move || {
+            let queue_secs = submitted.elapsed_secs();
+            let sw = Stopwatch::start();
+            // Exactly the per-RHS path of `solve_many`: build the
+            // problem over the shared caches (one Aᵀy matvec), solve
+            // on a fresh working set under the session's config.  The
+            // report is a pure function of (dict, y, lam, cfg) — this
+            // is what makes arrival order bitwise invisible.
+            let p = dict.problem(y, lam);
+            let mut ws = WorkingSet::new(cfg.compaction, p.n());
+            let report = solve_warm_ws(&p, &cfg, None, &mut ws);
+            let solve_secs = sw.elapsed_secs();
+            let m = &inner.metrics;
+            m.observe_classed_secs("session_queue_secs", class, queue_secs);
+            m.observe_classed_secs("session_solve_secs", class, solve_secs);
+            m.counter("session_completed").inc();
+            m.counter("session_flops_total").add(report.flops);
+            m.gauge("session_last_gap").set(report.gap);
+            let mut st = inner.state.lock().unwrap();
+            st.done.push_back(Completed { id, report, queue_secs, solve_secs });
+            inner.cv.notify_all();
+        });
+        Ok(id)
+    }
+
+    /// Submit a batch of requests one after another under the session
+    /// policy.  On failure the accepted prefix keeps running (its ids
+    /// are in the error) and nothing after the failing index was
+    /// enqueued.
+    pub fn submit_many(
+        &self,
+        rhs: Vec<BatchRhs>,
+    ) -> Result<Vec<RequestId>, SubmitManyError> {
+        let mut accepted = Vec::with_capacity(rhs.len());
+        for (index, req) in rhs.into_iter().enumerate() {
+            match self.submit(req.y, req.lam) {
+                Ok(id) => accepted.push(id),
+                Err(error) => {
+                    return Err(SubmitManyError { accepted, index, error })
+                }
+            }
+        }
+        Ok(accepted)
+    }
+
+    /// Pop one completed report if one is ready (completion order);
+    /// never blocks.  Receiving frees one backpressure slot.
+    pub fn try_recv_completed(&self) -> Option<Completed> {
+        let mut st = self.inner.state.lock().unwrap();
+        self.take_done(&mut st)
+    }
+
+    /// Block until a report completes and return it (completion
+    /// order); `None` once nothing is outstanding.
+    pub fn recv_completed(&self) -> Option<Completed> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(c) = self.take_done(&mut st) {
+                return Some(c);
+            }
+            if st.outstanding == 0 {
+                return None;
+            }
+            st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+
+    fn take_done(
+        &self,
+        st: &mut std::sync::MutexGuard<'_, SessionState>,
+    ) -> Option<Completed> {
+        let c = st.done.pop_front();
+        if c.is_some() {
+            st.outstanding -= 1;
+            self.inner.metrics.counter("session_received").inc();
+            // A slot freed: wake blocked submitters (and drainers).
+            self.inner.cv.notify_all();
+        }
+        c
+    }
+
+    /// Wait until the session is **idle** (nothing outstanding) and
+    /// return all unreceived reports, **sorted by [`RequestId`]** —
+    /// each exactly once.  Requests submitted *while* draining are
+    /// waited for and included too, so under sustained concurrent
+    /// traffic a drain only returns once submitters pause — it is a
+    /// quiesce, not a snapshot flush (use
+    /// [`try_recv_completed`](Self::try_recv_completed) in a loop for
+    /// the latter).  The session stays open: drain is not
+    /// [`close`](Self::close).
+    pub fn drain(&self) -> Vec<Completed> {
+        let mut out = Vec::new();
+        while let Some(c) = self.recv_completed() {
+            out.push(c);
+        }
+        out.sort_by_key(|c| c.id);
+        out
+    }
+
+    /// Refuse all future submissions ([`SubmitError::Closed`]) —
+    /// including parked [`SubmitPolicy::Block`] callers, which wake
+    /// with the error.  In-flight requests finish normally and remain
+    /// receivable/drainable.
+    pub fn close(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.closed = true;
+        self.inner.cv.notify_all();
+    }
+
+    /// Has [`close`](Self::close) been called?
+    pub fn is_closed(&self) -> bool {
+        self.inner.state.lock().unwrap().closed
+    }
+
+    /// Replay a prerecorded arrival trace: submit `rhs[order[k]]` for
+    /// `k = 0, 1, …` in `chunk`-sized bursts, then drain.  Bursts
+    /// shape the submit/receive interleaving: *between* bursts every
+    /// already-completed report is collected, while *inside* a burst
+    /// submissions go back to back and a completion is received only
+    /// when the bounded queue pushes back
+    /// ([`try_submit`](Self::try_submit) + blocking receive, so any
+    /// `queue_depth ≥ 1` and either policy make progress from one
+    /// thread).  `chunk = 1` is a submit/collect ping-pong;
+    /// `chunk = rhs.len()` submits the whole trace before the final
+    /// drain.  Returns the reports **in `rhs` index order** — by the
+    /// arrival-order-invariance contract the result is bitwise the
+    /// same for every `order`/`chunk`, only the latency histograms
+    /// move (`rust/tests/session_parity.rs`).
+    ///
+    /// The session must be **quiet** when a replay starts: no
+    /// unreceived pre-replay requests (a replay claims every
+    /// completion it sees, so a leftover from an earlier `submit`
+    /// panics as an unknown id).  Panics likewise if an index is out
+    /// of bounds, repeated, or a submission fails for a reason other
+    /// than backpressure — a replay drives a trace the caller fully
+    /// controls.
+    pub fn replay(
+        &self,
+        rhs: &[BatchRhs],
+        order: &[usize],
+        chunk: usize,
+    ) -> Vec<Completed> {
+        assert_eq!(
+            order.len(),
+            rhs.len(),
+            "replay: order must visit each rhs exactly once"
+        );
+        let chunk = chunk.max(1);
+        let mut slots: Vec<Option<Completed>> =
+            rhs.iter().map(|_| None).collect();
+        // RequestId → rhs index, in submission order.  Ids are
+        // assigned monotonically, so the map stays sorted and lookups
+        // can binary-search (a 100k-request trace must not go
+        // quadratic on bookkeeping).
+        let mut submitted: Vec<(RequestId, usize)> =
+            Vec::with_capacity(rhs.len());
+        let place = |slots: &mut Vec<Option<Completed>>,
+                     map: &[(RequestId, usize)],
+                     c: Completed| {
+            let idx = map
+                .binary_search_by_key(&c.id, |(id, _)| *id)
+                .map(|k| map[k].1)
+                .expect("replay: completion for an unknown request id");
+            assert!(
+                slots[idx].replace(c).is_none(),
+                "replay: rhs[{idx}] completed twice"
+            );
+        };
+        for burst in order.chunks(chunk) {
+            // Between bursts: collect whatever has already finished.
+            while let Some(c) = self.try_recv_completed() {
+                place(&mut slots, &submitted, c);
+            }
+            for &idx in burst {
+                let req = &rhs[idx];
+                loop {
+                    match self.try_submit(req.y.clone(), req.lam) {
+                        Ok(id) => {
+                            submitted.push((id, idx));
+                            break;
+                        }
+                        Err(SubmitError::WouldBlock) => {
+                            let c = self
+                                .recv_completed()
+                                .expect("replay: at capacity yet idle");
+                            place(&mut slots, &submitted, c);
+                        }
+                        Err(e) => panic!("replay: submit failed: {e}"),
+                    }
+                }
+            }
+        }
+        for c in self.drain() {
+            place(&mut slots, &submitted, c);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.unwrap_or_else(|| panic!("replay: rhs[{i}] lost")))
+            .collect()
+    }
+}
+
+impl Drop for SessionEngine {
+    /// Dedicated-pool quiesce before teardown.  A solve job holds a
+    /// pool handle (through its `ParContext`), so dropping an
+    /// un-drained session could otherwise leave a *worker* holding the
+    /// last handle — and a pool must never be torn down from its own
+    /// worker thread.  Joining a dedicated pool waits only for this
+    /// session's own solves (nothing else runs there).  Engine-shared
+    /// sessions deliberately do **not** join — a busy sibling session
+    /// would make that wait unbounded; the engine owns the pool, so
+    /// keep the [`JobEngine`](crate::coordinator::JobEngine) alive
+    /// until its sessions' in-flight work has drained.
+    fn drop(&mut self) {
+        if self.owns_pool {
+            self.pool.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dict::{generate_batch, DictKind, InstanceConfig};
+    use crate::regions::RegionKind;
+    use crate::solver::{solve, Budget};
+
+    fn small_cfg() -> InstanceConfig {
+        let mut c = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+        c.m = 20;
+        c.n = 60;
+        c
+    }
+
+    fn session_cfg(queue_depth: usize, policy: SubmitPolicy) -> SessionConfig {
+        SessionConfig {
+            solver: SolverConfig {
+                budget: Budget::gap(1e-9),
+                region: Some(RegionKind::HolderDome),
+                ..Default::default()
+            },
+            queue_depth,
+            policy,
+        }
+    }
+
+    #[test]
+    fn submit_and_drain_matches_independent_solves() {
+        let (shared, ys) = generate_batch(&small_cfg(), 1, 4);
+        let scfg = session_cfg(8, SubmitPolicy::Block);
+        let session = SessionEngine::new(shared.clone(), 2, scfg.clone());
+        for y in &ys {
+            session
+                .submit(y.clone(), LambdaSpec::RatioOfMax(0.5))
+                .unwrap();
+        }
+        let done = session.drain();
+        assert_eq!(done.len(), 4);
+        for (k, c) in done.iter().enumerate() {
+            assert_eq!(c.id, RequestId(k as u64));
+            let solo = solve(
+                &shared.problem(ys[k].clone(), LambdaSpec::RatioOfMax(0.5)),
+                &scfg.solver,
+            );
+            assert_eq!(c.report.iters, solo.iters);
+            assert_eq!(c.report.flops, solo.flops);
+            for (a, b) in c.report.x.iter().zip(&solo.x) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!(session.outstanding(), 0);
+        assert_eq!(session.metrics().counter("session_received").get(), 4);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let (shared, _) = generate_batch(&small_cfg(), 2, 0);
+        let session =
+            SessionEngine::new(shared, 1, session_cfg(4, SubmitPolicy::Block));
+        let err = session
+            .submit(vec![0.0; 7], LambdaSpec::Value(0.5))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::ShapeMismatch { expected: 20, got: 7 }
+        );
+        assert_eq!(session.outstanding(), 0);
+        assert!(session.drain().is_empty());
+    }
+
+    #[test]
+    fn close_refuses_new_work_but_drains_old() {
+        let (shared, ys) = generate_batch(&small_cfg(), 3, 2);
+        let session = SessionEngine::new(
+            shared,
+            2,
+            session_cfg(4, SubmitPolicy::Reject),
+        );
+        for y in &ys {
+            session
+                .submit(y.clone(), LambdaSpec::RatioOfMax(0.5))
+                .unwrap();
+        }
+        session.close();
+        assert!(session.is_closed());
+        assert_eq!(
+            session
+                .submit(ys[0].clone(), LambdaSpec::RatioOfMax(0.5))
+                .unwrap_err(),
+            SubmitError::Closed
+        );
+        let done = session.drain();
+        assert_eq!(done.len(), 2);
+        assert!(session.drain().is_empty(), "drained twice");
+    }
+
+    /// Dropping a session with solves still in flight must quiesce
+    /// cleanly — never tear the pool down from one of its own workers,
+    /// never deadlock.
+    #[test]
+    fn dropping_an_undrained_session_is_safe() {
+        let (shared, ys) = generate_batch(&small_cfg(), 5, 3);
+        let session = SessionEngine::new(
+            shared,
+            2,
+            session_cfg(8, SubmitPolicy::Block),
+        );
+        for y in &ys {
+            session
+                .submit(y.clone(), LambdaSpec::RatioOfMax(0.5))
+                .unwrap();
+        }
+        drop(session);
+    }
+
+    #[test]
+    fn replay_is_order_invariant() {
+        let (shared, ys) = generate_batch(&small_cfg(), 4, 5);
+        let rhs: Vec<BatchRhs> = ys
+            .into_iter()
+            .map(|y| BatchRhs::ratio(y, 0.5))
+            .collect();
+        let mk = || {
+            SessionEngine::new(
+                shared.clone(),
+                2,
+                session_cfg(2, SubmitPolicy::Block),
+            )
+        };
+        let fwd: Vec<usize> = (0..rhs.len()).collect();
+        let rev: Vec<usize> = fwd.iter().rev().copied().collect();
+        let a = mk().replay(&rhs, &fwd, 1);
+        let b = mk().replay(&rhs, &rev, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.report.iters, y.report.iters);
+            assert_eq!(x.report.flops, y.report.flops);
+            for (va, vb) in x.report.x.iter().zip(&y.report.x) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+}

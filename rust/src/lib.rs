@@ -118,6 +118,26 @@
 //! counts, storage formats and compaction policies
 //! (`rust/tests/batch_parity.rs`).
 //!
+//! ## The streaming session layer (RHS arriving over time)
+//!
+//! [`solver::solve_many`] is one-shot; serving traffic is not.  A
+//! [`coordinator::SessionEngine`] pins one [`problem::SharedDict`] and
+//! one pool for its lifetime and accepts observations as they arrive:
+//! `submit(y, LambdaSpec)` / `submit_many` enqueue requests under a
+//! bounded in-flight window (blocking or `WouldBlock` backpressure,
+//! per [`coordinator::SubmitPolicy`]), completions come back through
+//! `try_recv_completed` / `recv_completed` / `drain` carrying the full
+//! [`solver::SolveReport`], and per-request-class latency histograms
+//! (queue wait and solve time, log-bucketed) land in [`metrics`].
+//! The load-bearing invariant is **arrival-order invariance**: any
+//! arrival order, interleaving or chunking of the same RHS set is
+//! bitwise identical to one `solve_many` call — and hence to
+//! independent solves (`rust/tests/session_parity.rs`;
+//! bounded-queue semantics in `rust/tests/backpressure.rs`).  Open a
+//! session from a [`coordinator::JobEngine`] (`open_session`) to share
+//! its workers and metrics; the CLI `serve` subcommand replays a
+//! generated arrival trace and prints the histograms.
+//!
 //! A map of how these layers stack — and why the bitwise-parity
 //! discipline holds across all of them — lives in `ARCHITECTURE.md`
 //! at the repository root.
@@ -172,6 +192,10 @@ pub mod prelude {
     pub use crate::solver::{
         solve, solve_many, solve_warm, solve_warm_ws, BatchRhs, Budget,
         SolveReport, SolverConfig, SolverKind, StopReason,
+    };
+    pub use crate::coordinator::{
+        Completed, JobEngine, RequestId, SessionConfig, SessionEngine,
+        SubmitError, SubmitPolicy,
     };
     pub use crate::workset::{CompactionPolicy, WorkingSet};
 }

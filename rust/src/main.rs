@@ -11,7 +11,8 @@
 //!   fig2             reproduce Fig. 2 (performance profiles)
 //!   screenrate       screening-rate-vs-iteration curves (Extra-1)
 //!   ablation         design-choice ablations (Extra-2)
-//!   serve            PJRT batch engine over the AOT artifacts
+//!   serve            streaming session engine: replay an arrival trace
+//!   serve-pjrt       PJRT batch engine over the AOT artifacts
 //!   artifacts-check  validate artifacts/manifest against the runtime
 
 use holder_screening::cli::{spec, Args, Command, Flag};
@@ -188,6 +189,44 @@ const ABLATION_FLAGS: &[Flag] = &[
 ];
 
 const SERVE_FLAGS: &[Flag] = &[
+    COMMON_INSTANCE_FLAGS[0],
+    COMMON_INSTANCE_FLAGS[1],
+    COMMON_INSTANCE_FLAGS[2],
+    COMMON_INSTANCE_FLAGS[3],
+    COMMON_INSTANCE_FLAGS[4],
+    COMMON_INSTANCE_FLAGS[5],
+    SHARD_MIN_FLAG,
+    COMPACTION_FLAG,
+    DICT_FORMAT_FLAG,
+    PULSE_CUTOFF_FLAG,
+    Flag::int("requests", Some("64"),
+              "arrival-trace length: observations generated with the \
+               batch draw's prefix-stable per-RHS streams and replayed \
+               into the session"),
+    Flag::int("queue-depth", Some("16"),
+              "bounded in-flight window (submitted minus received); \
+               submissions at capacity follow --policy"),
+    Flag::str("policy", Some("block"),
+              "backpressure policy at capacity: block | reject \
+               (reject = submit returns WouldBlock)"),
+    Flag::int("chunk", Some("1"),
+              "submission burst size of the replay (requests per \
+               submit_many-style burst); never changes results"),
+    Flag::str("arrival", Some("inorder"),
+              "arrival order of the trace: inorder | reversed | \
+               shuffled (seeded permutation); never changes results"),
+    Flag::switch("verify",
+                 "cross-check the streamed reports bitwise against one \
+                  offline solve_many call over the same RHS set"),
+    Flag::str("region", Some("holder_dome"),
+              "screening region: holder_dome | gap_dome | gap_sphere | \
+               static_sphere | dynamic_sphere | none"),
+    Flag::str("solver", Some("fista"), "fista | ista | cd"),
+    Flag::num("target-gap", Some("1e-9"), "per-request duality-gap target"),
+    Flag::int("max-iters", Some("100000"), "per-request iteration cap"),
+];
+
+const SERVE_PJRT_FLAGS: &[Flag] = &[
     Flag::str("artifacts", Some("artifacts"), "artifact directory"),
     Flag::int("requests", Some("32"), "number of solve requests"),
     Flag::str("region", Some("holder_dome"), "screening region or none"),
@@ -211,7 +250,8 @@ fn commands() -> Vec<Command> {
         Command { name: "fig2", summary: "paper Fig. 2: performance profiles", flags: FIG_FLAGS },
         Command { name: "screenrate", summary: "screen rate vs iteration", flags: SCREENRATE_FLAGS },
         Command { name: "ablation", summary: "design-choice ablations", flags: ABLATION_FLAGS },
-        Command { name: "serve", summary: "PJRT batch engine over AOT artifacts", flags: SERVE_FLAGS },
+        Command { name: "serve", summary: "streaming session engine: replay an arrival trace", flags: SERVE_FLAGS },
+        Command { name: "serve-pjrt", summary: "PJRT batch engine over AOT artifacts", flags: SERVE_PJRT_FLAGS },
         Command { name: "artifacts-check", summary: "validate the artifact manifest", flags: ARTIFACTS_FLAGS },
     ]
 }
@@ -254,6 +294,7 @@ fn main() {
         "screenrate" => cmd_screenrate(&args),
         "ablation" => cmd_ablation(&args),
         "serve" => cmd_serve(&args),
+        "serve-pjrt" => cmd_serve_pjrt(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
         _ => unreachable!(),
     };
@@ -672,17 +713,222 @@ fn cmd_ablation(args: &Args) -> i32 {
     0
 }
 
+/// Native streaming serve: open a session over one shared store and
+/// drive a generated arrival trace through it — a producer thread
+/// submits in `--chunk`-sized `submit_many` bursts under the real
+/// `--policy` semantics (Block parks the producer at capacity; Reject
+/// spins on `WouldBlock`) while a consumer collects completions
+/// concurrently — then print the per-request-class latency
+/// histograms.  `--verify` additionally cross-checks every streamed
+/// report bitwise against one offline `solve_many` call — the
+/// session's arrival-order-invariance contract, exercised end to end.
+fn cmd_serve(args: &Args) -> i32 {
+    use holder_screening::coordinator::{
+        Completed, SessionConfig, SubmitError, SubmitPolicy,
+    };
+    use holder_screening::util::rng::Pcg64;
+
+    let icfg = instance_from_args(args);
+    if !(icfg.lam_ratio > 0.0 && icfg.lam_ratio < 1.0) {
+        eprintln!(
+            "error: --lam-ratio must be in (0, 1), got {}",
+            icfg.lam_ratio
+        );
+        return 2;
+    }
+    let requests = args.int_or("requests", 64);
+    let seed = args.int_or("seed", 0) as u64;
+    let queue_depth = args.int_or("queue-depth", 16).max(1);
+    let policy = match args.str_or("policy", "block") {
+        "block" => SubmitPolicy::Block,
+        "reject" | "wouldblock" => SubmitPolicy::Reject,
+        other => {
+            eprintln!("unknown policy '{other}'; using block");
+            SubmitPolicy::Block
+        }
+    };
+    let chunk = args.int_or("chunk", 1).max(1);
+    let order: Vec<usize> = match args.str_or("arrival", "inorder") {
+        "reversed" => (0..requests).rev().collect(),
+        "shuffled" | "shuffle" | "random" => {
+            // Seeded Fisher-Yates permutation: the trace is part of
+            // the reproducible experiment definition.
+            let mut rng = Pcg64::with_stream(seed, 0x5e55_10a0);
+            rng.sample_indices(requests, requests)
+        }
+        other => {
+            if other != "inorder" {
+                eprintln!("unknown arrival order '{other}'; using inorder");
+            }
+            (0..requests).collect()
+        }
+    };
+
+    let (shared, ys) = generate_batch(&icfg, seed, requests);
+    let rhs: Vec<BatchRhs> = ys
+        .into_iter()
+        .map(|y| BatchRhs::ratio(y, icfg.lam_ratio))
+        .collect();
+    let threads = threads_from_args(args);
+    let shard_min = args
+        .int_or("shard-min", holder_screening::par::DEFAULT_SHARD_MIN)
+        .max(1);
+    let engine = JobEngine::with_shard_min(threads, shard_min);
+    let session = engine.open_session(
+        shared.clone(),
+        SessionConfig {
+            solver: solver_from_args(args),
+            queue_depth,
+            policy,
+        },
+    );
+    println!(
+        "session: {}x{} dict={}/{} pinned for the session | {} threads | \
+         queue depth {} ({:?}) | {} requests arriving {} in bursts of {}",
+        shared.rows(),
+        shared.cols(),
+        icfg.kind.name(),
+        shared.store().format().name(),
+        session.threads(),
+        session.queue_depth(),
+        policy,
+        requests,
+        args.str_or("arrival", "inorder"),
+        chunk
+    );
+
+    let sw = holder_screening::util::timer::Stopwatch::start();
+    // Producer (this thread) + consumer thread, so --policy is
+    // honored for real: under Block the producer parks at capacity
+    // and the consumer's receives free it; under Reject the producer
+    // spins on WouldBlock.  The session is fresh and single-producer,
+    // so request id k is submission k, i.e. rhs index order[k].
+    let received: Vec<Completed> = std::thread::scope(|s| {
+        let consumer = {
+            let session = &session;
+            s.spawn(move || {
+                let mut got = Vec::with_capacity(requests);
+                while got.len() < requests {
+                    match session.recv_completed() {
+                        // recv parks on the condvar while solves are
+                        // in flight; None only when nothing is
+                        // outstanding yet (producer hasn't submitted),
+                        // so the yield spin is confined to startup
+                        // gaps instead of burning a core all trace.
+                        Some(c) => got.push(c),
+                        None => std::thread::yield_now(),
+                    }
+                }
+                got
+            })
+        };
+        for burst in order.chunks(chunk) {
+            let mut pending: Vec<usize> = burst.to_vec();
+            while !pending.is_empty() {
+                let reqs: Vec<BatchRhs> =
+                    pending.iter().map(|&i| rhs[i].clone()).collect();
+                match session.submit_many(reqs) {
+                    Ok(_) => pending.clear(),
+                    Err(err) => {
+                        if err.error != SubmitError::WouldBlock {
+                            // Unreachable by construction (shapes match,
+                            // session never closed); exit hard rather
+                            // than deadlock the consumer join.
+                            eprintln!("serve: submit failed: {}", err.error);
+                            std::process::exit(1);
+                        }
+                        pending.drain(..err.index);
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+        consumer.join().expect("serve: consumer panicked")
+    });
+    let secs = sw.elapsed_secs();
+    // Re-index the completions to original rhs order.
+    let mut by_rhs: Vec<Option<Completed>> =
+        (0..requests).map(|_| None).collect();
+    for c in received {
+        let slot = &mut by_rhs[order[c.id.0 as usize]];
+        assert!(slot.replace(c).is_none(), "serve: duplicate delivery");
+    }
+    let completed: Vec<Completed> = by_rhs
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| o.unwrap_or_else(|| panic!("serve: request {i} lost")))
+        .collect();
+
+    let converged = completed
+        .iter()
+        .filter(|c| c.report.stop == StopReason::Converged)
+        .count();
+    let total_flops: u64 =
+        completed.iter().map(|c| c.report.flops).sum();
+    println!(
+        "served {requests} requests in {:.2}s ({:.1} req/s) | \
+         {converged}/{requests} converged | {total_flops} flops total",
+        secs,
+        requests as f64 / secs.max(1e-12)
+    );
+
+    let metrics = session.metrics();
+    let fmt = holder_screening::util::timer::fmt_duration;
+    for (label, name) in [
+        ("queue wait (submit -> start)", "session_queue_secs"),
+        ("solve time (start -> done)", "session_solve_secs"),
+        ("  class 'ratio'", "session_solve_secs_ratio"),
+    ] {
+        let h = metrics.histogram(name);
+        if h.count() == 0 {
+            continue;
+        }
+        println!(
+            "{label:<32} n={:<5} mean={:<9} p50={:<9} p90={:<9} p99={}",
+            h.count(),
+            fmt(h.mean()),
+            fmt(h.quantile(0.50)),
+            fmt(h.quantile(0.90)),
+            fmt(h.quantile(0.99))
+        );
+    }
+    let (queued, running) = engine.pool_utilization();
+    println!(
+        "backpressure: {} submissions rejected (WouldBlock) | \
+         outstanding after drain: {} | pool: {} queued / {} running",
+        metrics.counter("session_rejected").get(),
+        session.outstanding(),
+        queued,
+        running
+    );
+
+    if args.switch("verify") {
+        // One offline batch call over the same RHS set: the streamed
+        // reports must match it bitwise, flops included (panics with
+        // the offending field on divergence — the shared parity gate).
+        let batch = engine.run_batch(&shared, &rhs, &solver_from_args(args));
+        for (i, (c, b)) in completed.iter().zip(&batch).enumerate() {
+            b.assert_bitwise_eq(&c.report, &format!("serve verify rhs {i}"));
+        }
+        println!(
+            "verify: {requests} streamed reports bitwise identical to one \
+             solve_many call (x, gap, flops, screening, stop reasons)"
+        );
+    }
+    if converged == requests { 0 } else { 1 }
+}
+
 #[cfg(not(feature = "xla"))]
-fn cmd_serve(_args: &Args) -> i32 {
+fn cmd_serve_pjrt(_args: &Args) -> i32 {
     eprintln!(
-        "'serve' needs the PJRT runtime bridge; rebuild with \
+        "'serve-pjrt' needs the PJRT runtime bridge; rebuild with \
          `--features xla` (requires the xla/anyhow dependencies)"
     );
     2
 }
 
 #[cfg(feature = "xla")]
-fn cmd_serve(args: &Args) -> i32 {
+fn cmd_serve_pjrt(args: &Args) -> i32 {
     use holder_screening::runtime::{ArtifactRegistry, PjrtSolver};
     let dir = args.str_or("artifacts", "artifacts");
     let reg = match ArtifactRegistry::load(

@@ -90,6 +90,21 @@ impl Registry {
         self.histogram(name).observe(secs);
     }
 
+    /// Observe a duration under both the aggregate histogram `name`
+    /// and its per-request-class variant `name_<class>` — the
+    /// streaming session's latency discipline
+    /// ([`crate::coordinator::SessionEngine`] classes each request by
+    /// its [`crate::problem::LambdaSpec`] variant).  Class labels
+    /// must not contain `.` (it is the snapshot path separator).
+    pub fn observe_classed_secs(&self, name: &str, class: &str, secs: f64) {
+        debug_assert!(
+            !class.contains('.'),
+            "class label '{class}' would break snapshot path lookup"
+        );
+        self.histogram(name).observe(secs);
+        self.histogram(&format!("{name}_{class}")).observe(secs);
+    }
+
     /// Snapshot everything as a JSON-able [`Value`].
     pub fn snapshot(&self) -> Value {
         let mut root = Value::obj();
@@ -139,6 +154,23 @@ mod tests {
         assert_eq!(back.usize_or("counters.a", 0), 1);
         assert_eq!(back.f64_or("gauges.b", 0.0), 2.5);
         assert_eq!(back.usize_or("histograms.lat.count", 0), 2);
+    }
+
+    #[test]
+    fn classed_observation_feeds_aggregate_and_class() {
+        let reg = Registry::new();
+        reg.observe_classed_secs("lat", "ratio", 0.001);
+        reg.observe_classed_secs("lat", "ratio", 0.002);
+        reg.observe_classed_secs("lat", "value", 0.004);
+        assert_eq!(reg.histogram("lat").count(), 3);
+        assert_eq!(reg.histogram("lat_ratio").count(), 2);
+        assert_eq!(reg.histogram("lat_value").count(), 1);
+        let snap = reg.snapshot();
+        let text = crate::configfmt::json::to_string(&snap);
+        let back = crate::configfmt::json::parse(&text).unwrap();
+        assert_eq!(back.usize_or("histograms.lat.count", 0), 3);
+        assert_eq!(back.usize_or("histograms.lat_ratio.count", 0), 2);
+        assert_eq!(back.usize_or("histograms.lat_value.count", 0), 1);
     }
 
     #[test]

@@ -126,6 +126,12 @@ impl ThreadPool {
         q.jobs.len() + q.shard_jobs.len()
     }
 
+    /// Jobs currently executing, both classes — `queued()`'s running
+    /// twin, together a pool-utilization snapshot (diagnostic).
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::Acquire)
+    }
+
     /// Pop one queued **shard** job and run it on the *calling* thread;
     /// returns `false` when no shard job is queued.
     ///
@@ -331,6 +337,37 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.join();
         assert!(!pool.help_run_one());
+    }
+
+    #[test]
+    fn in_flight_tracks_running_jobs() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.in_flight(), 0);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let started = Arc::new(AtomicU64::new(0));
+        {
+            let gate = Arc::clone(&gate);
+            let started = Arc::clone(&started);
+            pool.execute(move || {
+                started.store(1, Ordering::Release);
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        while started.load(Ordering::Acquire) == 0 {
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.in_flight(), 1);
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        pool.join();
+        assert_eq!(pool.in_flight(), 0);
     }
 
     #[test]

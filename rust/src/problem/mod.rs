@@ -75,6 +75,16 @@ impl LambdaSpec {
             MIN_LAMBDA
         }
     }
+
+    /// Request-class label for serving metrics: `"value"` | `"ratio"`.
+    /// The streaming session buckets its latency histograms by this
+    /// ([`crate::metrics::Registry::observe_classed_secs`]).
+    pub fn class_name(self) -> &'static str {
+        match self {
+            LambdaSpec::Value(_) => "value",
+            LambdaSpec::RatioOfMax(_) => "ratio",
+        }
+    }
 }
 
 /// One immutable dictionary plus every observation-independent
@@ -508,6 +518,12 @@ mod tests {
         assert_eq!(LambdaSpec::RatioOfMax(0.5).resolve(0.0), MIN_LAMBDA);
         assert_eq!(LambdaSpec::Value(0.0).resolve(1.0), MIN_LAMBDA);
         assert_eq!(LambdaSpec::Value(-3.0).resolve(1.0), MIN_LAMBDA);
+    }
+
+    #[test]
+    fn lambda_spec_class_names() {
+        assert_eq!(LambdaSpec::Value(0.7).class_name(), "value");
+        assert_eq!(LambdaSpec::RatioOfMax(0.5).class_name(), "ratio");
     }
 
     /// A shared build must be bitwise the one-shot build: same caches,

@@ -186,6 +186,37 @@ impl SolveReport {
     pub fn support(&self, tol: f64) -> Vec<usize> {
         (0..self.x.len()).filter(|&i| self.x[i].abs() > tol).collect()
     }
+
+    /// Assert `other` replays this report **bitwise**: every
+    /// deterministic field — iteration/flop counters, active/screened
+    /// counts, the screening history, stop reason, objectives and the
+    /// solution bits — must match exactly.  `wall_secs` and `trace`
+    /// are excluded (wall-clock is never reproducible; traces are
+    /// opt-in diagnostics).
+    ///
+    /// This is the single comparison the parity gates share —
+    /// `rust/tests/session_parity.rs`, the bench columns, the e2e
+    /// example and `serve --verify` — so no gate can silently drift to
+    /// a weaker field subset.  Panics with `what`-prefixed context on
+    /// the first mismatch.
+    pub fn assert_bitwise_eq(&self, other: &SolveReport, what: &str) {
+        assert_eq!(self.iters, other.iters, "{what}: iters");
+        assert_eq!(self.flops, other.flops, "{what}: flops");
+        assert_eq!(self.screened, other.screened, "{what}: screened");
+        assert_eq!(self.active, other.active, "{what}: active");
+        assert_eq!(
+            self.screen_history, other.screen_history,
+            "{what}: screen history"
+        );
+        assert_eq!(self.stop, other.stop, "{what}: stop reason");
+        assert_eq!(self.gap.to_bits(), other.gap.to_bits(), "{what}: gap");
+        assert_eq!(self.p.to_bits(), other.p.to_bits(), "{what}: primal");
+        assert_eq!(self.d.to_bits(), other.d.to_bits(), "{what}: dual");
+        assert_eq!(self.x.len(), other.x.len(), "{what}: x length");
+        for (i, (a, b)) in self.x.iter().zip(&other.x).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{what}: x[{i}]");
+        }
+    }
 }
 
 /// Solve from the zero initialization.

@@ -341,3 +341,117 @@ fn unnormalized_dictionary_screening_safe() {
         }
     }
 }
+
+// ---------------------------------------------------------------------
+// LambdaSpec edge cases (PR 4's resolution rules, tested directly —
+// previously only exercised through the batch-parity grid)
+// ---------------------------------------------------------------------
+
+mod lambda_spec_edges {
+    use holder_screening::dict::{generate, DictKind, InstanceConfig};
+    use holder_screening::problem::{
+        LambdaSpec, SharedDict, MIN_LAMBDA,
+    };
+    use holder_screening::solver::{
+        solve, Budget, SolverConfig, StopReason,
+    };
+
+    fn shared_dict(m: usize, n: usize, seed: u64) -> SharedDict {
+        let mut cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+        cfg.m = m;
+        cfg.n = n;
+        generate(&cfg, seed).problem.shared().clone()
+    }
+
+    /// RatioOfMax on λ_max = 0 (the y = 0 observation): the resolved λ
+    /// clamps to MIN_LAMBDA and the solve is immediate and exact.
+    #[test]
+    fn ratio_of_max_with_zero_lam_max_clamps() {
+        let shared = shared_dict(12, 30, 0);
+        for ratio in [0.5, 1.0, 100.0] {
+            let p = shared
+                .problem(vec![0.0; 12], LambdaSpec::RatioOfMax(ratio));
+            assert_eq!(p.lam_max(), 0.0, "ratio {ratio}");
+            assert_eq!(p.lam(), MIN_LAMBDA, "ratio {ratio}");
+            let rep = solve(&p, &SolverConfig::default());
+            assert_eq!(rep.stop, StopReason::Converged);
+            assert!(rep.x.iter().all(|&v| v == 0.0));
+            assert_eq!(rep.gap, 0.0);
+        }
+    }
+
+    /// Every non-positive resolution — zero/negative Value, zero/
+    /// negative ratio, -inf — clamps to MIN_LAMBDA instead of
+    /// violating the λ > 0 problem invariant.  NaN fails the `> 0`
+    /// test too, so even a poisoned spec yields a valid problem.
+    #[test]
+    fn non_positive_resolutions_clamp_to_min_lambda() {
+        for (spec, lam_max) in [
+            (LambdaSpec::Value(0.0), 1.0),
+            (LambdaSpec::Value(-3.0), 1.0),
+            (LambdaSpec::Value(f64::NEG_INFINITY), 1.0),
+            (LambdaSpec::Value(f64::NAN), 1.0),
+            (LambdaSpec::RatioOfMax(0.0), 2.5),
+            (LambdaSpec::RatioOfMax(-0.4), 2.5),
+            (LambdaSpec::RatioOfMax(0.5), 0.0),
+            (LambdaSpec::RatioOfMax(f64::NAN), 2.5),
+        ] {
+            let lam = spec.resolve(lam_max);
+            assert_eq!(
+                lam, MIN_LAMBDA,
+                "{spec:?} at lam_max {lam_max} resolved to {lam}"
+            );
+        }
+        // Positive degenerate inputs pass through untouched.
+        assert_eq!(
+            LambdaSpec::Value(f64::INFINITY).resolve(1.0),
+            f64::INFINITY
+        );
+        assert_eq!(LambdaSpec::Value(1e-300).resolve(0.0), 1e-300);
+    }
+
+    /// A clamped (λ = MIN_LAMBDA ≈ 0) problem on a nonzero observation
+    /// is the near-least-squares limit: the solver must run without
+    /// panicking and terminate via one of its budgets.
+    #[test]
+    fn clamped_lambda_on_nonzero_observation_is_solvable() {
+        let shared = shared_dict(20, 12, 1);
+        let mut g = holder_screening::proptest::Gen::for_case(5, 0);
+        let y = g.observation(20);
+        let p = shared.problem(y, LambdaSpec::RatioOfMax(0.0));
+        assert_eq!(p.lam(), MIN_LAMBDA);
+        assert!(p.lam_max() > 0.0);
+        let rep = solve(
+            &p,
+            &SolverConfig {
+                budget: Budget {
+                    max_iters: 5_000,
+                    max_flops: None,
+                    target_gap: 1e-6,
+                },
+                ..Default::default()
+            },
+        );
+        assert!(
+            matches!(
+                rep.stop,
+                StopReason::Converged | StopReason::MaxIters
+            ),
+            "unexpected stop {:?}",
+            rep.stop
+        );
+        assert!(rep.x.iter().all(|v| v.is_finite()));
+    }
+
+    /// Value specs sail through independently of the observation's own
+    /// λ_max — the fixed-level serving protocol.
+    #[test]
+    fn value_spec_ignores_lam_max() {
+        let shared = shared_dict(12, 30, 2);
+        let mut g = holder_screening::proptest::Gen::for_case(6, 0);
+        let y = g.observation(12);
+        let p = shared.problem(y, LambdaSpec::Value(0.125));
+        assert_eq!(p.lam(), 0.125);
+        assert!(p.lam_max() > 0.0);
+    }
+}
