@@ -1,6 +1,7 @@
 //! Bench: end-to-end solver throughput (native path) per region, plus
 //! the shared-store batch column (`BENCH_batch_solve.json`), the
-//! streamed session column (`BENCH_stream_solve.json`) and the PJRT
+//! streamed session column (`BENCH_stream_solve.json`), the
+//! warm-replay session column (`BENCH_warm_session.json`) and the PJRT
 //! artifact path when `make artifacts` has run.
 //!
 //! This is the serving-facing number: solves/second to the target gap
@@ -223,6 +224,7 @@ fn stream_column(
             solver: scfg.clone(),
             queue_depth,
             policy: SubmitPolicy::Block,
+            ..Default::default()
         },
     );
     let order: Vec<usize> = (0..b_size).rev().collect();
@@ -286,6 +288,136 @@ fn stream_column(
         b_size as f64 / s_stream.mean.max(1e-12),
     );
     log.metric("queue_wait_p99_secs", q.quantile(0.99));
+    log.write();
+
+    warm_column(
+        quick,
+        cfg,
+        shared,
+        rhs,
+        scfg,
+        batch_reports,
+        s_stream.mean,
+        b_size,
+        threads,
+        tau,
+        queue_depth,
+    );
+}
+
+/// The warm-replay column: the same trace replayed through a
+/// cache-enabled session, so every request after the pre-warm pass is
+/// a cache hit seeded by its own previous solve.  Parity first — every
+/// warm report must be bitwise the direct
+/// `solve_warm_ws(seed_region: Sequential, Some(&cold.x))` call the
+/// cache-hit contract names — then timing against the cache-less
+/// stream column, logged to `BENCH_warm_session.json`.
+#[allow(clippy::too_many_arguments)]
+fn warm_column(
+    quick: bool,
+    cfg: &InstanceConfig,
+    shared: &SharedDict,
+    rhs: &[BatchRhs],
+    scfg: &SolverConfig,
+    batch_reports: &[holder_screening::solver::SolveReport],
+    cold_stream_mean: f64,
+    b_size: usize,
+    threads: usize,
+    tau: f64,
+    queue_depth: usize,
+) {
+    use holder_screening::solver::solve_warm_ws;
+    use holder_screening::workset::WorkingSet;
+
+    println!(
+        "\n# warm session replay: {b_size} repeat RHS through a \
+         {b_size}-entry cache, gap target {tau:.0e}, {threads} threads"
+    );
+    let engine = JobEngine::new(threads);
+    let session = engine.open_session(
+        shared.clone(),
+        SessionConfig {
+            solver: scfg.clone(),
+            queue_depth,
+            policy: SubmitPolicy::Block,
+            cache_capacity: b_size,
+            lambda_buckets: 16,
+        },
+    );
+    let order: Vec<usize> = (0..b_size).collect();
+
+    // Pre-warm pass: all misses, reports bitwise the cold batch.
+    let first = session.replay(rhs, &order, 1);
+    for (i, (b, c)) in batch_reports.iter().zip(&first).enumerate() {
+        assert!(!c.cache_hit, "pre-warm rhs {i} must miss");
+        b.assert_bitwise_eq(&c.report, &format!("pre-warm rhs {i}"));
+    }
+
+    // Warm pass: all hits, and each report bitwise the direct seeded
+    // call the cache-hit contract promises.
+    let warm = session.replay(rhs, &order, 1);
+    let mut warm_cfg = scfg.clone();
+    warm_cfg.seed_region = Some(RegionKind::Sequential);
+    for (i, c) in warm.iter().enumerate() {
+        assert!(c.cache_hit, "warm rhs {i} must hit");
+        let p = shared.problem(rhs[i].y.clone(), rhs[i].lam);
+        let mut ws = WorkingSet::new(warm_cfg.compaction, p.n());
+        let reference =
+            solve_warm_ws(&p, &warm_cfg, Some(&batch_reports[i].x), &mut ws);
+        reference
+            .assert_bitwise_eq(&c.report, &format!("warm contract rhs {i}"));
+    }
+    println!(
+        "#   parity: {b_size} warm reports bitwise identical to the \
+         seeded solve_warm_ws contract"
+    );
+
+    let mut log = BenchLog::new("warm_session");
+    log.metric("m", cfg.m as u64);
+    log.metric("n", cfg.n as u64);
+    log.metric("batch", b_size as u64);
+    log.metric("threads", threads as u64);
+    log.metric("queue_depth", queue_depth as u64);
+    log.metric("cache_capacity", b_size as u64);
+    log.metric("target_gap", tau);
+    log.metric("quick", quick);
+    log.metric("parity_rhs", b_size as u64);
+
+    let bench = if quick {
+        Bench::quick()
+    } else {
+        Bench { min_iters: 3, min_secs: 0.5, warmup_secs: 0.1 }
+    };
+    let s_warm = bench.report(
+        &format!("warm:  session replay, {b_size} cache-hit arrivals"),
+        || session.replay(rhs, &order, 1).len(),
+    );
+    log.record("warm_session", &s_warm);
+
+    let speedup = cold_stream_mean / s_warm.mean.max(1e-12);
+    println!("    -> warm vs cold stream: {speedup:.2}x");
+    println!(
+        "    -> {:.1} solves/s warm",
+        b_size as f64 / s_warm.mean.max(1e-12)
+    );
+    let m = session.metrics();
+    println!(
+        "    -> cache: {} hits / {} misses / {} evictions",
+        m.counter("session_cache_hits").get(),
+        m.counter("session_cache_misses").get(),
+        m.counter("session_cache_evictions").get()
+    );
+    log.metric("warm_speedup_vs_cold_stream", speedup);
+    log.metric(
+        "warm_solves_per_sec",
+        b_size as f64 / s_warm.mean.max(1e-12),
+    );
+    log.metric("cache_hits", m.counter("session_cache_hits").get());
+    log.metric("cache_misses", m.counter("session_cache_misses").get());
+    log.metric(
+        "cache_evictions",
+        m.counter("session_cache_evictions").get(),
+    );
     log.write();
 }
 

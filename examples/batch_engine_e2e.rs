@@ -110,6 +110,7 @@ fn main() {
             solver: mk_cfg(),
             queue_depth: (threads * 4).max(1),
             policy: SubmitPolicy::Block,
+            ..Default::default()
         },
     );
     // The trace arrives REVERSED, one request per burst — the

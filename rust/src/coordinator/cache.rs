@@ -1,0 +1,384 @@
+//! The session warm-start cache: previous solves seed the next ones.
+//!
+//! Serving traffic repeats itself — nearby λ on the same observation,
+//! identical observations from returning users.  [`SessionCache`] is a
+//! bounded LRU map owned by every
+//! [`SessionEngine`](crate::coordinator::SessionEngine), keyed on
+//! **(observation hash, λ bucket)** and holding, per entry, the
+//! previous solve's converged primal iterate `x`, its final dual point
+//! (`SolveReport::dual`), and its surviving-atom set
+//! (`SolveReport::survivors`).
+//!
+//! ## What a hit does
+//!
+//! A hit does **not** replay the cached report — λ may differ within
+//! the bucket, and the entry may be stale.  Instead the session runs
+//! `solve_warm_ws(p, cfg + seed_region: Sequential, Some(&hit.x), ws)`:
+//! the cached iterate seeds the solver, and one iteration-0 screening
+//! round with [`RegionKind::Sequential`](crate::regions::RegionKind)
+//! rebuilds the previous solve's geometry — the Hölder dome at the
+//! warm couple — so the first real iteration already runs on the
+//! reduced dictionary.
+//!
+//! ## The safety argument (why staleness cannot corrupt results)
+//!
+//! The sequential region is built inside the solver from the couple
+//! `(x₀, u₀)` where `x₀` is the cached iterate and `u₀` the **freshly
+//! dual-scaled** residual `y − A·x₀` at the *current* λ.  Dual scaling
+//! makes `u₀` feasible by construction and Theorem 1 holds for any
+//! primal point, so the region contains the dual optimum *no matter
+//! what the cache handed over* — an entry from a different λ in the
+//! same bucket, or a half-converged iterate, can only yield a wider
+//! dome (less screening), never an unsafe one.  The cached dual point
+//! and survivor set are carried for observability and benchmarking;
+//! correctness never reads them.  `rust/tests/screening_safety.rs`
+//! pins this for the sequential region.
+//!
+//! ## The parity contract (the repo's first deliberate bitwise exception)
+//!
+//! Warm starts legitimately change solve trajectories, so a cache-hit
+//! report is *not* bitwise equal to the cold solve of the same request
+//! — the first such exception in this codebase.  The replacement
+//! contract is exact: **a cache-hit solve is bitwise identical (full
+//! `SolveReport`, flops included) to a direct `solve_warm_ws` call
+//! handed the same seed vector and the same sequential seed region.**
+//! The hit path is a pure function of `(dict, y, λ, cfg, cached x)` —
+//! it shares every kernel with the cold path — and
+//! `rust/tests/session_cache_parity.rs` pins the contract across
+//! solvers × threads × storage formats.
+//!
+//! ## Keys, collisions, eviction
+//!
+//! * **Observation hash** — FNV-1a over the raw `f64` bits of `y`.  A
+//!   hash/bucket match alone never seeds: [`SessionCache::lookup`]
+//!   compares the stored `y` against the request's bit for bit, so two
+//!   distinct observations colliding into one key simply miss (and the
+//!   newer one overwrites the entry on insert).
+//! * **λ bucket** — `⌊(λ/λ_max)·buckets⌋`, clamped to
+//!   `[0, buckets − 1]`; requests at nearby regularization land in the
+//!   same bucket and can seed each other (safe by the argument above).
+//!   `λ_max = 0` (degenerate `y = 0` dictionaries) pins bucket 0.
+//! * **Eviction** — least-recently-used by a monotonic touch tick;
+//!   capacity is in entries and `0` disables the cache entirely
+//!   (lookups miss, inserts drop, no counters move — bitwise identical
+//!   to a cache-less session, pinned by the edge-case tests).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::solver::SolveReport;
+
+/// Cache key: (FNV-1a observation hash, λ bucket).
+type Key = (u64, u32);
+
+/// What a [`SessionCache::lookup`] hit hands the solver: the previous
+/// solve's iterate (the warm-start seed) plus the diagnostic payload.
+#[derive(Clone, Debug)]
+pub struct CacheHit {
+    /// Seed vector for `solve_warm_ws` (full length n).
+    pub x: Vec<f64>,
+    /// The previous solve's final dual point (`SolveReport::dual`).
+    /// Observability only — the seeded solve re-derives its own dual
+    /// point through fresh dual scaling (see the module docs).
+    pub dual: Vec<f64>,
+    /// The previous solve's surviving-atom set
+    /// (`SolveReport::survivors`).  Observability only — trusting it
+    /// across λ would be unsafe, so the sequential seed round
+    /// re-screens instead.
+    pub survivors: Vec<usize>,
+    /// The λ the entry was solved at (the current request's λ may
+    /// differ within the bucket).
+    pub lam: f64,
+}
+
+struct Entry {
+    /// The exact observation, for the bitwise collision guard.
+    y: Vec<f64>,
+    x: Vec<f64>,
+    dual: Vec<f64>,
+    survivors: Vec<usize>,
+    lam: f64,
+    /// Last-touched tick (insert or hit) — the LRU order.
+    tick: u64,
+}
+
+struct Inner {
+    map: HashMap<Key, Entry>,
+    tick: u64,
+}
+
+/// Bounded LRU warm-start cache (see the module docs).  Thread-safe:
+/// pool workers look up and insert concurrently under one mutex — the
+/// critical sections are O(n) copies, noise next to a solve.
+pub struct SessionCache {
+    capacity: usize,
+    buckets: u32,
+    inner: Mutex<Inner>,
+}
+
+impl SessionCache {
+    /// `capacity` in entries (`0` disables the cache);
+    /// `lambda_buckets ≥ 1` (clamped) λ/λ_max buckets.
+    pub fn new(capacity: usize, lambda_buckets: u32) -> Self {
+        SessionCache {
+            capacity,
+            buckets: lambda_buckets.max(1),
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+        }
+    }
+
+    /// Is the cache on at all?  (`capacity > 0`.)
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn lambda_buckets(&self) -> u32 {
+        self.buckets
+    }
+
+    /// Entries currently stored.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// FNV-1a over the raw `f64` bits of an observation.  Identical
+    /// observations (bitwise) always collide into one key; the reverse
+    /// is guarded by [`lookup`](Self::lookup)'s exact comparison.
+    pub fn hash_obs(y: &[f64]) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        for v in y {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(PRIME);
+            }
+        }
+        h
+    }
+
+    /// The λ bucket of a resolved `(λ, λ_max)` pair:
+    /// `⌊(λ/λ_max)·buckets⌋` clamped to `[0, buckets − 1]`; a
+    /// degenerate `λ_max ≤ 0` pins bucket 0.
+    pub fn bucket_of(&self, lam: f64, lam_max: f64) -> u32 {
+        if lam_max <= 0.0 {
+            return 0;
+        }
+        let ratio = (lam / lam_max).clamp(0.0, 1.0);
+        ((ratio * f64::from(self.buckets)) as u32).min(self.buckets - 1)
+    }
+
+    /// Look up `(hash, bucket)`; a stored entry only hits when its
+    /// observation equals `y` **bit for bit** (the collision guard).
+    /// A hit refreshes the entry's LRU tick.  Disabled caches always
+    /// miss.
+    pub fn lookup(&self, hash: u64, bucket: u32, y: &[f64]) -> Option<CacheHit> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let e = inner.map.get_mut(&(hash, bucket))?;
+        if !bits_eq(&e.y, y) {
+            return None;
+        }
+        e.tick = tick;
+        Some(CacheHit {
+            x: e.x.clone(),
+            dual: e.dual.clone(),
+            survivors: e.survivors.clone(),
+            lam: e.lam,
+        })
+    }
+
+    /// Insert (or refresh) the entry for `(hash, bucket)` from a
+    /// finished solve.  Returns `true` when a *different* key was
+    /// evicted to make room (LRU).  Disabled caches drop the insert.
+    pub fn insert(
+        &self,
+        hash: u64,
+        bucket: u32,
+        y: &[f64],
+        lam: f64,
+        report: &SolveReport,
+    ) -> bool {
+        if self.capacity == 0 {
+            return false;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let key = (hash, bucket);
+        let mut evicted = false;
+        if !inner.map.contains_key(&key) && inner.map.len() >= self.capacity {
+            // Evict the least-recently-touched entry.  O(capacity)
+            // scan — capacities are small and inserts are once per
+            // solve.
+            if let Some(&lru) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| k)
+            {
+                inner.map.remove(&lru);
+                evicted = true;
+            }
+        }
+        inner.map.insert(
+            key,
+            Entry {
+                y: y.to_vec(),
+                x: report.x.clone(),
+                dual: report.dual.clone(),
+                survivors: report.survivors.clone(),
+                lam,
+                tick,
+            },
+        );
+        evicted
+    }
+}
+
+/// Bitwise slice equality (`-0.0 ≠ 0.0`, `NaN == NaN` at equal bits) —
+/// the collision guard must be as strict as the parity gates.
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{SolveReport, StopReason};
+
+    fn report(x: Vec<f64>) -> SolveReport {
+        SolveReport {
+            x,
+            p: 0.0,
+            d: 0.0,
+            gap: 0.0,
+            iters: 1,
+            flops: 1,
+            active: 1,
+            screened: 0,
+            stop: StopReason::Converged,
+            trace: vec![],
+            screen_history: vec![],
+            dual: vec![0.25, -0.5],
+            survivors: vec![0],
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn hit_requires_exact_observation_not_just_the_hash() {
+        // Forced collision: two distinct observations filed under the
+        // SAME (hash, bucket) key must never cross-seed.
+        let cache = SessionCache::new(4, 8);
+        let y_a = vec![1.0, 2.0];
+        let y_b = vec![1.0, 2.0000001];
+        cache.insert(42, 3, &y_a, 0.5, &report(vec![1.0]));
+        assert!(cache.lookup(42, 3, &y_a).is_some());
+        assert!(
+            cache.lookup(42, 3, &y_b).is_none(),
+            "hash collision must miss on the exact-y guard"
+        );
+        // Negative zero differs from zero bitwise: no cross-seeding.
+        cache.insert(7, 0, &[0.0], 0.5, &report(vec![2.0]));
+        assert!(cache.lookup(7, 0, &[-0.0]).is_none());
+    }
+
+    #[test]
+    fn lambda_bucket_boundaries() {
+        let cache = SessionCache::new(1, 4);
+        // ratio in [0, 0.25) → 0, [0.25, 0.5) → 1, …, 1.0 clamps to 3.
+        assert_eq!(cache.bucket_of(0.0, 1.0), 0);
+        assert_eq!(cache.bucket_of(0.2499, 1.0), 0);
+        assert_eq!(cache.bucket_of(0.25, 1.0), 1);
+        assert_eq!(cache.bucket_of(0.5, 1.0), 2);
+        assert_eq!(cache.bucket_of(0.9999, 1.0), 3);
+        assert_eq!(cache.bucket_of(1.0, 1.0), 3);
+        // λ beyond λ_max clamps into the last bucket; degenerate
+        // dictionaries (λ_max = 0) pin bucket 0.
+        assert_eq!(cache.bucket_of(2.0, 1.0), 3);
+        assert_eq!(cache.bucket_of(0.5, 0.0), 0);
+        // buckets = 0 is clamped to 1 at construction.
+        let one = SessionCache::new(1, 0);
+        assert_eq!(one.lambda_buckets(), 1);
+        assert_eq!(one.bucket_of(0.9, 1.0), 0);
+    }
+
+    #[test]
+    fn capacity_zero_is_fully_disabled() {
+        let cache = SessionCache::new(0, 16);
+        assert!(!cache.enabled());
+        let y = vec![1.0, 2.0];
+        assert!(!cache.insert(SessionCache::hash_obs(&y), 0, &y, 0.5,
+                              &report(vec![1.0])));
+        assert!(cache.lookup(SessionCache::hash_obs(&y), 0, &y).is_none());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn lru_eviction_prefers_the_least_recently_touched() {
+        let cache = SessionCache::new(2, 8);
+        let (ya, yb, yc) = (vec![1.0], vec![2.0], vec![3.0]);
+        let (ha, hb, hc) = (
+            SessionCache::hash_obs(&ya),
+            SessionCache::hash_obs(&yb),
+            SessionCache::hash_obs(&yc),
+        );
+        assert!(!cache.insert(ha, 0, &ya, 0.5, &report(vec![1.0])));
+        assert!(!cache.insert(hb, 0, &yb, 0.5, &report(vec![2.0])));
+        // Touch A so B becomes the LRU victim.
+        assert!(cache.lookup(ha, 0, &ya).is_some());
+        assert!(cache.insert(hc, 0, &yc, 0.5, &report(vec![3.0])));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(ha, 0, &ya).is_some(), "A survived");
+        assert!(cache.lookup(hb, 0, &yb).is_none(), "B evicted");
+        assert!(cache.lookup(hc, 0, &yc).is_some(), "C inserted");
+        // Re-inserting an existing key refreshes in place: no eviction.
+        assert!(!cache.insert(hc, 0, &yc, 0.6, &report(vec![4.0])));
+        let hit = cache.lookup(hc, 0, &yc).unwrap();
+        assert_eq!(hit.x, vec![4.0]);
+        assert_eq!(hit.lam, 0.6);
+    }
+
+    #[test]
+    fn same_y_different_bucket_is_a_miss() {
+        let cache = SessionCache::new(4, 4);
+        let y = vec![1.0, -1.0];
+        let h = SessionCache::hash_obs(&y);
+        let b_lo = cache.bucket_of(0.2, 1.0);
+        let b_hi = cache.bucket_of(0.8, 1.0);
+        assert_ne!(b_lo, b_hi);
+        cache.insert(h, b_lo, &y, 0.2, &report(vec![1.0]));
+        assert!(cache.lookup(h, b_hi, &y).is_none());
+        assert!(cache.lookup(h, b_lo, &y).is_some());
+    }
+
+    #[test]
+    fn hash_is_sensitive_to_bits_and_order() {
+        assert_ne!(
+            SessionCache::hash_obs(&[1.0, 2.0]),
+            SessionCache::hash_obs(&[2.0, 1.0])
+        );
+        assert_ne!(
+            SessionCache::hash_obs(&[0.0]),
+            SessionCache::hash_obs(&[-0.0])
+        );
+        assert_eq!(
+            SessionCache::hash_obs(&[1.5, -2.5]),
+            SessionCache::hash_obs(&[1.5, -2.5])
+        );
+    }
+}

@@ -10,10 +10,12 @@
 //! [`session::SessionEngine`] for RHS that arrive over time, or run a
 //! [`campaign::Campaign`] and collect structured results.
 
+pub mod cache;
 pub mod campaign;
 pub mod jobs;
 pub mod session;
 
+pub use cache::{CacheHit, SessionCache};
 pub use campaign::{Campaign, CampaignResult};
 pub use jobs::{JobEngine, JobResult, SolveJob};
 pub use session::{

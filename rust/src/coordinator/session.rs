@@ -50,6 +50,25 @@
 //! and storage formats; `rust/tests/backpressure.rs` covers the
 //! bounded-queue semantics.
 //!
+//! ## Warm-start cache
+//!
+//! Serving traffic repeats itself, so every session owns a
+//! [`SessionCache`](crate::coordinator::cache::SessionCache) (size
+//! [`SessionConfig::cache_capacity`]; `0`, the default, disables it
+//! bitwise).  A finished solve deposits its converged `x`, final dual
+//! point and survivor set under **(observation hash, λ bucket)**; a
+//! later request that hits (same `y` bit for bit, λ in the same
+//! bucket) is solved as
+//! `solve_warm_ws(p, cfg + seed_region: Sequential, Some(&cached_x))`
+//! — seeded with the cached iterate and opened by one
+//! [`RegionKind::Sequential`] screening round at iteration 0, so the
+//! first real iteration already runs on the previous solve's reduced
+//! geometry.  This is the repo's first deliberate bitwise-parity
+//! exception; the replacement contract (a hit ≡ that exact seeded
+//! call, bitwise) and the safety argument (dual scaling at the current
+//! λ makes any seed safe) live in [`crate::coordinator::cache`] and
+//! are pinned by `rust/tests/session_cache_parity.rs`.
+//!
 //! ## Metrics
 //!
 //! Each request is classed by its [`LambdaSpec`] variant
@@ -64,15 +83,21 @@
 //! `session_received` / `session_rejected` and
 //! `session_flops_total`.  A session opened from a
 //! [`JobEngine`](crate::coordinator::JobEngine) shares the engine's
-//! registry.
+//! registry.  With the cache enabled, solves are additionally split
+//! into warm/cold latency classes (`session_solve_warm_secs` /
+//! `session_solve_cold_secs`) and counted by `session_cache_hits` /
+//! `session_cache_misses` / `session_cache_evictions`; a disabled
+//! cache leaves the metric surface exactly as it was.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::coordinator::cache::SessionCache;
 use crate::metrics::Registry;
 use crate::par::{ParContext, ThreadPool};
 use crate::problem::{LambdaSpec, SharedDict};
+use crate::regions::RegionKind;
 use crate::solver::{solve_warm_ws, BatchRhs, SolveReport, SolverConfig};
 use crate::util::timer::Stopwatch;
 use crate::workset::WorkingSet;
@@ -159,6 +184,14 @@ pub struct SessionConfig {
     pub queue_depth: usize,
     /// Behavior of [`SessionEngine::submit`] at capacity.
     pub policy: SubmitPolicy,
+    /// Warm-start cache capacity in entries.  `0` (the default)
+    /// disables the cache entirely — every solve runs the cold path,
+    /// bitwise identical to a session without a cache.
+    pub cache_capacity: usize,
+    /// λ/λ_max buckets for the cache key (clamped to ≥ 1).  Requests
+    /// at nearby regularization land in one bucket and can seed each
+    /// other; see [`crate::coordinator::cache`] for why that is safe.
+    pub lambda_buckets: u32,
 }
 
 impl Default for SessionConfig {
@@ -167,6 +200,8 @@ impl Default for SessionConfig {
             solver: SolverConfig::default(),
             queue_depth: 256,
             policy: SubmitPolicy::Block,
+            cache_capacity: 0,
+            lambda_buckets: 16,
         }
     }
 }
@@ -183,6 +218,9 @@ pub struct Completed {
     /// per-RHS problem build; `report.wall_secs` is the solver-only
     /// twin).
     pub solve_secs: f64,
+    /// Did this request warm-start from the session cache?  Always
+    /// `false` with the cache disabled.
+    pub cache_hit: bool,
 }
 
 struct SessionState {
@@ -198,6 +236,8 @@ struct SessionShared {
     /// Signals both capacity freed (a receive) and completions landing.
     cv: Condvar,
     metrics: Arc<Registry>,
+    /// Warm-start cache (capacity 0 ⇒ disabled, all lookups miss).
+    cache: SessionCache,
 }
 
 /// A long-lived streaming-solve session over one [`SharedDict`].
@@ -293,6 +333,10 @@ impl SessionEngine {
                 }),
                 cv: Condvar::new(),
                 metrics,
+                cache: SessionCache::new(
+                    cfg.cache_capacity,
+                    cfg.lambda_buckets,
+                ),
             }),
             next_id: AtomicU64::new(0),
         }
@@ -322,6 +366,12 @@ impl SessionEngine {
     /// a [`JobEngine`](crate::coordinator::JobEngine)).
     pub fn metrics(&self) -> Arc<Registry> {
         Arc::clone(&self.inner.metrics)
+    }
+
+    /// The session's warm-start cache (disabled unless
+    /// [`SessionConfig::cache_capacity`] > 0).
+    pub fn cache(&self) -> &SessionCache {
+        &self.inner.cache
     }
 
     /// Submit one observation under the session's policy: blocks at
@@ -393,23 +443,72 @@ impl SessionEngine {
         self.pool.execute(move || {
             let queue_secs = submitted.elapsed_secs();
             let sw = Stopwatch::start();
-            // Exactly the per-RHS path of `solve_many`: build the
-            // problem over the shared caches (one Aᵀy matvec), solve
-            // on a fresh working set under the session's config.  The
-            // report is a pure function of (dict, y, lam, cfg) — this
-            // is what makes arrival order bitwise invisible.
+            // Cold path: exactly the per-RHS path of `solve_many` —
+            // build the problem over the shared caches (one Aᵀy
+            // matvec), solve on a fresh working set under the
+            // session's config.  The report is a pure function of
+            // (dict, y, lam, cfg) — this is what makes arrival order
+            // bitwise invisible.  A cache hit swaps in the one other
+            // pure function this session ever runs: the same call
+            // seeded with the cached iterate and one Sequential
+            // screening round (see the module docs' cache section).
+            let y_hash = if inner.cache.enabled() {
+                SessionCache::hash_obs(&y)
+            } else {
+                0
+            };
             let p = dict.problem(y, lam);
             let mut ws = WorkingSet::new(cfg.compaction, p.n());
-            let report = solve_warm_ws(&p, &cfg, None, &mut ws);
+            let bucket = inner.cache.bucket_of(p.lam(), p.lam_max());
+            let hit = inner.cache.lookup(y_hash, bucket, p.y());
+            let cache_hit = hit.is_some();
+            let report = match hit {
+                Some(h) => {
+                    let mut warm = cfg.clone();
+                    warm.seed_region = Some(RegionKind::Sequential);
+                    solve_warm_ws(&p, &warm, Some(&h.x), &mut ws)
+                }
+                None => solve_warm_ws(&p, &cfg, None, &mut ws),
+            };
             let solve_secs = sw.elapsed_secs();
             let m = &inner.metrics;
             m.observe_classed_secs("session_queue_secs", class, queue_secs);
             m.observe_classed_secs("session_solve_secs", class, solve_secs);
+            if inner.cache.enabled() {
+                m.counter(if cache_hit {
+                    "session_cache_hits"
+                } else {
+                    "session_cache_misses"
+                })
+                .inc();
+                // Warm-vs-cold latency split, only meaningful (and
+                // only emitted) with the cache on.
+                m.observe_secs(
+                    if cache_hit {
+                        "session_solve_warm_secs"
+                    } else {
+                        "session_solve_cold_secs"
+                    },
+                    solve_secs,
+                );
+                // Insert on hits too: refreshes the entry with the
+                // newest iterate/λ for this key.
+                if inner.cache.insert(y_hash, bucket, p.y(), p.lam(), &report)
+                {
+                    m.counter("session_cache_evictions").inc();
+                }
+            }
             m.counter("session_completed").inc();
             m.counter("session_flops_total").add(report.flops);
             m.gauge("session_last_gap").set(report.gap);
             let mut st = inner.state.lock().unwrap();
-            st.done.push_back(Completed { id, report, queue_secs, solve_secs });
+            st.done.push_back(Completed {
+                id,
+                report,
+                queue_secs,
+                solve_secs,
+                cache_hit,
+            });
             inner.cv.notify_all();
         });
         Ok(id)
@@ -634,6 +733,7 @@ mod tests {
             },
             queue_depth,
             policy,
+            ..Default::default()
         }
     }
 
@@ -724,6 +824,37 @@ mod tests {
                 .unwrap();
         }
         drop(session);
+    }
+
+    #[test]
+    fn cache_hits_repeat_requests_and_misses_fresh_ones() {
+        let (shared, ys) = generate_batch(&small_cfg(), 6, 2);
+        let mut scfg = session_cfg(8, SubmitPolicy::Block);
+        scfg.cache_capacity = 8;
+        let session = SessionEngine::new(shared, 2, scfg);
+        let submit_all = |session: &SessionEngine| {
+            for y in &ys {
+                session
+                    .submit(y.clone(), LambdaSpec::RatioOfMax(0.5))
+                    .unwrap();
+            }
+            session.drain()
+        };
+        let first = submit_all(&session);
+        assert!(first.iter().all(|c| !c.cache_hit), "cold pass");
+        let second = submit_all(&session);
+        assert!(second.iter().all(|c| c.cache_hit), "warm pass");
+        // Warm solves still converge to the same solution.
+        for (a, b) in first.iter().zip(&second) {
+            assert!(
+                crate::linalg::max_abs_diff(&a.report.x, &b.report.x) < 1e-6
+            );
+        }
+        let m = session.metrics();
+        assert_eq!(m.counter("session_cache_hits").get(), 2);
+        assert_eq!(m.counter("session_cache_misses").get(), 2);
+        assert_eq!(m.counter("session_cache_evictions").get(), 0);
+        assert_eq!(session.cache().len(), 2);
     }
 
     #[test]

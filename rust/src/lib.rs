@@ -136,7 +136,13 @@
 //! bounded-queue semantics in `rust/tests/backpressure.rs`).  Open a
 //! session from a [`coordinator::JobEngine`] (`open_session`) to share
 //! its workers and metrics; the CLI `serve` subcommand replays a
-//! generated arrival trace and prints the histograms.
+//! generated arrival trace and prints the histograms.  An optional
+//! per-session warm-start cache ([`coordinator::SessionCache`],
+//! `serve --cache-capacity`) re-seeds repeat requests from their
+//! previous solve through a [`regions::RegionKind::Sequential`]
+//! iteration-0 screening round — the repo's first deliberate
+//! bitwise-parity exception, with its own exact replacement contract
+//! (`rust/tests/session_cache_parity.rs`).
 //!
 //! A map of how these layers stack — and why the bitwise-parity
 //! discipline holds across all of them — lives in `ARCHITECTURE.md`
@@ -194,8 +200,8 @@ pub mod prelude {
         SolveReport, SolverConfig, SolverKind, StopReason,
     };
     pub use crate::coordinator::{
-        Completed, JobEngine, RequestId, SessionConfig, SessionEngine,
-        SubmitError, SubmitPolicy,
+        Completed, JobEngine, RequestId, SessionCache, SessionConfig,
+        SessionEngine, SubmitError, SubmitPolicy,
     };
     pub use crate::workset::{CompactionPolicy, WorkingSet};
 }

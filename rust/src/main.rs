@@ -215,9 +215,19 @@ const SERVE_FLAGS: &[Flag] = &[
     Flag::str("arrival", Some("inorder"),
               "arrival order of the trace: inorder | reversed | \
                shuffled (seeded permutation); never changes results"),
+    Flag::int("passes", Some("1"),
+              "replay the whole trace this many times through one \
+               session; with a cache, passes after the first hit"),
+    Flag::int("cache-capacity", Some("0"),
+              "warm-start cache entries (0 disables the cache; repeat \
+               requests then always run the cold path)"),
+    Flag::int("lambda-buckets", Some("16"),
+              "lambda/lambda_max buckets of the cache key; nearby \
+               regularization shares a bucket and can cross-seed"),
     Flag::switch("verify",
-                 "cross-check the streamed reports bitwise against one \
-                  offline solve_many call over the same RHS set"),
+                 "cross-check every streamed report bitwise: cold \
+                  solves against one offline solve_many call, cache \
+                  hits against the seeded solve_warm_ws contract"),
     Flag::str("region", Some("holder_dome"),
               "screening region: holder_dome | gap_dome | gap_sphere | \
                static_sphere | dynamic_sphere | none"),
@@ -719,9 +729,14 @@ fn cmd_ablation(args: &Args) -> i32 {
 /// `--policy` semantics (Block parks the producer at capacity; Reject
 /// spins on `WouldBlock`) while a consumer collects completions
 /// concurrently — then print the per-request-class latency
-/// histograms.  `--verify` additionally cross-checks every streamed
-/// report bitwise against one offline `solve_many` call — the
-/// session's arrival-order-invariance contract, exercised end to end.
+/// histograms.  `--passes` replays the whole trace repeatedly through
+/// the same session; with `--cache-capacity` > 0, passes after the
+/// first warm-start from the session cache (hit/miss/eviction counters
+/// and the warm/cold latency split are printed).  `--verify`
+/// cross-checks every streamed report bitwise: cold solves against one
+/// offline `solve_many` call (the arrival-order-invariance contract),
+/// cache hits against the seeded `solve_warm_ws` call the cache-hit
+/// contract names — both exercised end to end.
 fn cmd_serve(args: &Args) -> i32 {
     use holder_screening::coordinator::{
         Completed, SessionConfig, SubmitError, SubmitPolicy,
@@ -739,6 +754,9 @@ fn cmd_serve(args: &Args) -> i32 {
     let requests = args.int_or("requests", 64);
     let seed = args.int_or("seed", 0) as u64;
     let queue_depth = args.int_or("queue-depth", 16).max(1);
+    let passes = args.int_or("passes", 1).max(1);
+    let cache_capacity = args.int_or("cache-capacity", 0).max(0) as usize;
+    let lambda_buckets = args.int_or("lambda-buckets", 16).max(1) as u32;
     let policy = match args.str_or("policy", "block") {
         "block" => SubmitPolicy::Block,
         "reject" | "wouldblock" => SubmitPolicy::Reject,
@@ -780,11 +798,14 @@ fn cmd_serve(args: &Args) -> i32 {
             solver: solver_from_args(args),
             queue_depth,
             policy,
+            cache_capacity,
+            lambda_buckets,
         },
     );
     println!(
         "session: {}x{} dict={}/{} pinned for the session | {} threads | \
-         queue depth {} ({:?}) | {} requests arriving {} in bursts of {}",
+         queue depth {} ({:?}) | {} requests x {} passes arriving {} in \
+         bursts of {} | cache {}",
         shared.rows(),
         shared.cols(),
         icfg.kind.name(),
@@ -793,22 +814,36 @@ fn cmd_serve(args: &Args) -> i32 {
         session.queue_depth(),
         policy,
         requests,
+        passes,
         args.str_or("arrival", "inorder"),
-        chunk
+        chunk,
+        if cache_capacity > 0 {
+            format!("{cache_capacity} entries / {lambda_buckets} buckets")
+        } else {
+            "off".to_string()
+        }
     );
 
+    let total = requests * passes;
     let sw = holder_screening::util::timer::Stopwatch::start();
     // Producer (this thread) + consumer thread, so --policy is
     // honored for real: under Block the producer parks at capacity
     // and the consumer's receives free it; under Reject the producer
     // spins on WouldBlock.  The session is fresh and single-producer,
-    // so request id k is submission k, i.e. rhs index order[k].
+    // so request id k is submission k, i.e. pass k / requests, rhs
+    // index order[k % requests].  The producer quiesces between
+    // passes (waits until the consumer has received everything), so
+    // each pass's cache lookups see exactly the previous pass's
+    // inserts — without the barrier, two solves of the same
+    // observation could overlap on different workers and a "warm"
+    // pass would nondeterministically miss (and --verify's seed chain
+    // would not know which entry a hit actually took).
     let received: Vec<Completed> = std::thread::scope(|s| {
         let consumer = {
             let session = &session;
             s.spawn(move || {
-                let mut got = Vec::with_capacity(requests);
-                while got.len() < requests {
+                let mut got = Vec::with_capacity(total);
+                while got.len() < total {
                     match session.recv_completed() {
                         // recv parks on the condvar while solves are
                         // in flight; None only when nothing is
@@ -822,23 +857,37 @@ fn cmd_serve(args: &Args) -> i32 {
                 got
             })
         };
-        for burst in order.chunks(chunk) {
-            let mut pending: Vec<usize> = burst.to_vec();
-            while !pending.is_empty() {
-                let reqs: Vec<BatchRhs> =
-                    pending.iter().map(|&i| rhs[i].clone()).collect();
-                match session.submit_many(reqs) {
-                    Ok(_) => pending.clear(),
-                    Err(err) => {
-                        if err.error != SubmitError::WouldBlock {
-                            // Unreachable by construction (shapes match,
-                            // session never closed); exit hard rather
-                            // than deadlock the consumer join.
-                            eprintln!("serve: submit failed: {}", err.error);
-                            std::process::exit(1);
+        for pass in 0..passes {
+            if pass > 0 {
+                // Inter-pass barrier: every prior solve completed,
+                // inserted and been received before the next pass
+                // submits (see above).
+                while session.outstanding() > 0 {
+                    std::thread::yield_now();
+                }
+            }
+            for burst in order.chunks(chunk) {
+                let mut pending: Vec<usize> = burst.to_vec();
+                while !pending.is_empty() {
+                    let reqs: Vec<BatchRhs> =
+                        pending.iter().map(|&i| rhs[i].clone()).collect();
+                    match session.submit_many(reqs) {
+                        Ok(_) => pending.clear(),
+                        Err(err) => {
+                            if err.error != SubmitError::WouldBlock {
+                                // Unreachable by construction (shapes
+                                // match, session never closed); exit
+                                // hard rather than deadlock the
+                                // consumer join.
+                                eprintln!(
+                                    "serve: submit failed: {}",
+                                    err.error
+                                );
+                                std::process::exit(1);
+                            }
+                            pending.drain(..err.index);
+                            std::thread::yield_now();
                         }
-                        pending.drain(..err.index);
-                        std::thread::yield_now();
                     }
                 }
             }
@@ -846,14 +895,16 @@ fn cmd_serve(args: &Args) -> i32 {
         consumer.join().expect("serve: consumer panicked")
     });
     let secs = sw.elapsed_secs();
-    // Re-index the completions to original rhs order.
-    let mut by_rhs: Vec<Option<Completed>> =
-        (0..requests).map(|_| None).collect();
+    // Re-index the completions to (pass, original rhs order).
+    let mut by_slot: Vec<Option<Completed>> =
+        (0..total).map(|_| None).collect();
     for c in received {
-        let slot = &mut by_rhs[order[c.id.0 as usize]];
+        let id = c.id.0 as usize;
+        let slot = &mut by_slot[(id / requests) * requests
+            + order[id % requests]];
         assert!(slot.replace(c).is_none(), "serve: duplicate delivery");
     }
-    let completed: Vec<Completed> = by_rhs
+    let completed: Vec<Completed> = by_slot
         .into_iter()
         .enumerate()
         .map(|(i, o)| o.unwrap_or_else(|| panic!("serve: request {i} lost")))
@@ -863,13 +914,15 @@ fn cmd_serve(args: &Args) -> i32 {
         .iter()
         .filter(|c| c.report.stop == StopReason::Converged)
         .count();
+    let hits = completed.iter().filter(|c| c.cache_hit).count();
     let total_flops: u64 =
         completed.iter().map(|c| c.report.flops).sum();
     println!(
-        "served {requests} requests in {:.2}s ({:.1} req/s) | \
-         {converged}/{requests} converged | {total_flops} flops total",
+        "served {total} requests in {:.2}s ({:.1} req/s) | \
+         {converged}/{total} converged | {hits} cache hits | \
+         {total_flops} flops total",
         secs,
-        requests as f64 / secs.max(1e-12)
+        total as f64 / secs.max(1e-12)
     );
 
     let metrics = session.metrics();
@@ -878,6 +931,8 @@ fn cmd_serve(args: &Args) -> i32 {
         ("queue wait (submit -> start)", "session_queue_secs"),
         ("solve time (start -> done)", "session_solve_secs"),
         ("  class 'ratio'", "session_solve_secs_ratio"),
+        ("  cold (cache miss)", "session_solve_cold_secs"),
+        ("  warm (cache hit)", "session_solve_warm_secs"),
     ] {
         let h = metrics.histogram(name);
         if h.count() == 0 {
@@ -901,21 +956,75 @@ fn cmd_serve(args: &Args) -> i32 {
         queued,
         running
     );
-
-    if args.switch("verify") {
-        // One offline batch call over the same RHS set: the streamed
-        // reports must match it bitwise, flops included (panics with
-        // the offending field on divergence — the shared parity gate).
-        let batch = engine.run_batch(&shared, &rhs, &solver_from_args(args));
-        for (i, (c, b)) in completed.iter().zip(&batch).enumerate() {
-            b.assert_bitwise_eq(&c.report, &format!("serve verify rhs {i}"));
-        }
+    if cache_capacity > 0 {
         println!(
-            "verify: {requests} streamed reports bitwise identical to one \
-             solve_many call (x, gap, flops, screening, stop reasons)"
+            "cache: {} hits / {} misses / {} evictions | {} of {} \
+             entries resident",
+            metrics.counter("session_cache_hits").get(),
+            metrics.counter("session_cache_misses").get(),
+            metrics.counter("session_cache_evictions").get(),
+            session.cache().len(),
+            cache_capacity
         );
     }
-    if converged == requests { 0 } else { 1 }
+
+    if args.switch("verify") {
+        // Two exact contracts, one per code path.  Cold solves (cache
+        // misses) must match one offline batch call over the same RHS
+        // set bitwise, flops included — the arrival-order-invariance
+        // gate.  Cache hits must match the direct seeded
+        // solve_warm_ws call the cache-hit contract names, seeded with
+        // the previous solve of the same observation (panics with the
+        // offending field on divergence — the shared parity gate).
+        let scfg = solver_from_args(args);
+        let batch = engine.run_batch(&shared, &rhs, &scfg);
+        let mut warm_cfg = scfg.clone();
+        warm_cfg.seed_region =
+            Some(holder_screening::regions::RegionKind::Sequential);
+        // Most recent streamed x per rhs index, in pass order — the
+        // seed a hit in the next pass took from the cache.
+        let mut prev_x: Vec<Option<Vec<f64>>> =
+            (0..requests).map(|_| None).collect();
+        let (mut cold_checked, mut warm_checked) = (0usize, 0usize);
+        for (k, c) in completed.iter().enumerate() {
+            let i = k % requests;
+            if c.cache_hit {
+                let seed = prev_x[i]
+                    .as_ref()
+                    .expect("serve verify: hit before any solve of this rhs");
+                let p = shared
+                    .problem(rhs[i].y.clone(), rhs[i].lam);
+                let mut ws = holder_screening::workset::WorkingSet::new(
+                    warm_cfg.compaction,
+                    p.n(),
+                );
+                let reference = holder_screening::solver::solve_warm_ws(
+                    &p,
+                    &warm_cfg,
+                    Some(seed),
+                    &mut ws,
+                );
+                reference.assert_bitwise_eq(
+                    &c.report,
+                    &format!("serve verify warm rhs {i} (slot {k})"),
+                );
+                warm_checked += 1;
+            } else {
+                batch[i].assert_bitwise_eq(
+                    &c.report,
+                    &format!("serve verify cold rhs {i} (slot {k})"),
+                );
+                cold_checked += 1;
+            }
+            prev_x[i] = Some(c.report.x.clone());
+        }
+        println!(
+            "verify: {cold_checked} cold reports bitwise identical to one \
+             solve_many call, {warm_checked} cache hits bitwise identical \
+             to the seeded solve_warm_ws contract"
+        );
+    }
+    if converged == total { 0 } else { 1 }
 }
 
 #[cfg(not(feature = "xla"))]

@@ -11,6 +11,27 @@
 //! | `HolderDome`  | same ball ∩ `H(Ax, λ‖x‖₁)`                 | Thm 1 |
 //! | `StaticSphere`| `B(y, (1−λ/λ_max)‖y‖)` (El Ghaoui, static) | [5]   |
 //! | `DynamicSphere`| `B(y, ‖y−u‖)` (Bonnefoy et al.)           | [7]   |
+//! | `Sequential`  | the Hölder dome at a *warm-start* couple   | Thm 1 |
+//!
+//! ## Sequential screening (`RegionKind::Sequential`)
+//!
+//! The GAP Safe *sequential* rules (Fercoq et al.) and the EDPP path
+//! rules (Wang et al.) exploit the fact that a previous solve's
+//! primal-dual couple yields a tight safe region for the *next* nearby
+//! solve — same observation at a neighboring λ, or a near-duplicate
+//! observation.  `Sequential` is that idea expressed inside this
+//! repo's geometry: it is the Hölder dome (Theorem 1) **instantiated
+//! at a warm-start couple** `(x₀, u₀)` where `x₀` came from somewhere
+//! else (a session cache, a λ-path predecessor) and `u₀ = s·r₀` is the
+//! *freshly dual-scaled* residual `r₀ = y − A x₀` at the **current**
+//! λ.  Theorem 1 holds for any primal point and any dual-feasible
+//! point, and dual scaling makes `u₀` feasible by construction — so
+//! the region is safe *no matter where `x₀` came from*: a stale or
+//! mismatched seed can only cost screening power, never correctness.
+//! The solvers run it as an iteration-0 seed round
+//! ([`crate::solver::SolverConfig::seed_region`]) so a cache hit
+//! starts its first iteration on the already-reduced dictionary
+//! (see `coordinator::cache`).
 //!
 //! ## Correlation reuse
 //!
@@ -94,15 +115,22 @@ pub enum RegionKind {
     HolderDome,
     StaticSphere,
     DynamicSphere,
+    /// The Hölder dome built at a warm-start couple — the sequential
+    /// screening region seeded by the session cache (see the module
+    /// docs).  Geometrically identical to [`RegionKind::HolderDome`];
+    /// kept distinct so configs, metrics and reports can tell a
+    /// sequential seed round from ordinary dynamic screening.
+    Sequential,
 }
 
 impl RegionKind {
-    pub const ALL: [RegionKind; 5] = [
+    pub const ALL: [RegionKind; 6] = [
         RegionKind::GapSphere,
         RegionKind::GapDome,
         RegionKind::HolderDome,
         RegionKind::StaticSphere,
         RegionKind::DynamicSphere,
+        RegionKind::Sequential,
     ];
 
     /// The paper's Fig. 2 contenders.
@@ -119,6 +147,7 @@ impl RegionKind {
             RegionKind::HolderDome => "holder_dome",
             RegionKind::StaticSphere => "static_sphere",
             RegionKind::DynamicSphere => "dynamic_sphere",
+            RegionKind::Sequential => "sequential",
         }
     }
 
@@ -129,6 +158,7 @@ impl RegionKind {
             "holder_dome" | "holder" | "hoelder" => Some(RegionKind::HolderDome),
             "static_sphere" | "static" | "safe" => Some(RegionKind::StaticSphere),
             "dynamic_sphere" | "dynamic" | "st1" => Some(RegionKind::DynamicSphere),
+            "sequential" | "seq" => Some(RegionKind::Sequential),
             _ => None,
         }
     }
@@ -218,7 +248,12 @@ impl SafeRegion {
                     combo_g: Some((0.5, -0.5 * s)),
                 }
             }
-            RegionKind::HolderDome => {
+            RegionKind::HolderDome | RegionKind::Sequential => {
+                // `Sequential` is the same Theorem-1 dome, built at a
+                // warm-start couple: `x` is a seed iterate from a
+                // previous solve and `u` its freshly dual-scaled
+                // residual at the *current* λ.  Theorem 1 never asks
+                // where `x` came from, so the construction is shared.
                 let (ball, _) = midpoint_ball(y, u);
                 // g = Ax = y − r (no matvec); δ = λ‖x‖₁.
                 let g: Vec<f64> =
@@ -312,7 +347,9 @@ impl SafeRegion {
             | RegionKind::StaticSphere
             | RegionKind::DynamicSphere => ScreenSetupKind::GapSphere,
             RegionKind::GapDome => ScreenSetupKind::GapDome,
-            RegionKind::HolderDome => ScreenSetupKind::Holder,
+            RegionKind::HolderDome | RegionKind::Sequential => {
+                ScreenSetupKind::Holder
+            }
         };
         cost::screen_setup(kind, n_active, m)
     }
@@ -552,6 +589,43 @@ mod tests {
             assert_eq!(RegionKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(RegionKind::parse("holder"), Some(RegionKind::HolderDome));
+        assert_eq!(RegionKind::parse("seq"), Some(RegionKind::Sequential));
         assert_eq!(RegionKind::parse("nope"), None);
+    }
+
+    /// `Sequential` must be the Hölder dome at the same couple, bit for
+    /// bit — the variant exists for semantic bookkeeping, not to change
+    /// the geometry.
+    #[test]
+    fn sequential_is_the_holder_dome_at_the_same_couple() {
+        Runner::new(127).cases(10).run("sequential == holder", |g| {
+            let (p, x, ev) = setup(g);
+            let hld = SafeRegion::build(RegionKind::HolderDome, &p, &x, &ev);
+            let seq = SafeRegion::build(RegionKind::Sequential, &p, &x, &ev);
+            if seq.rad().to_bits() != hld.rad().to_bits() {
+                return Err("radii differ".to_string());
+            }
+            for i in 0..p.n() {
+                let a = hld.max_abs_inner_stat(
+                    p.aty()[i],
+                    ev.atr[i],
+                    p.col_norms()[i],
+                );
+                let b = seq.max_abs_inner_stat(
+                    p.aty()[i],
+                    ev.atr[i],
+                    p.col_norms()[i],
+                );
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("atom {i}: {a} vs {b}"));
+                }
+            }
+            if seq.setup_flops(p.n(), p.m()) != hld.setup_flops(p.n(), p.m())
+                || seq.test_flops(p.n()) != hld.test_flops(p.n())
+            {
+                return Err("flop models differ".to_string());
+            }
+            Ok(())
+        });
     }
 }

@@ -7,6 +7,20 @@
 //! therefore shards the active set into contiguous chunks on the
 //! [`ParContext`]'s pool — same flop charge, bitwise-identical mask,
 //! wall-clock divided by the shard count.
+//!
+//! The engine is agnostic to *when* a round runs: the solvers call it
+//! on their in-loop cadence ([`SolverConfig::screen_every`]), and a
+//! warm-started solve may additionally run one **seed** round at
+//! iteration 0 with a [`RegionKind::Sequential`] region built from the
+//! warm couple ([`SolverConfig::seed_region`], the session cache's hit
+//! path).  Both paths go through the same `compute_keep*` entry — a
+//! seed round is an ordinary round that merely happens before the
+//! first update step, so its safety rests on the region, not on any
+//! engine state.
+//!
+//! [`SolverConfig::screen_every`]: crate::solver::SolverConfig::screen_every
+//! [`SolverConfig::seed_region`]: crate::solver::SolverConfig::seed_region
+//! [`RegionKind::Sequential`]: crate::regions::RegionKind::Sequential
 
 use super::ScreeningState;
 use crate::flops::FlopCounter;

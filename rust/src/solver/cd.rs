@@ -77,6 +77,20 @@ pub(crate) fn run(
     };
 
     let mut ev = eval(&x, &r, &mut atr, &state, ws, p, &mut flops);
+    // Iteration-0 sequential seed round (cache hits / warm starts);
+    // `None` leaves the cold path bitwise untouched.  Unlike the
+    // in-loop rounds, a seed removal of a nonzero coordinate refreshes
+    // `r`/`Aᵀr` from scratch (the shared helper's stale path) — the
+    // incremental restore is an in-loop optimization, and the seed
+    // round happens before any incremental state is worth preserving.
+    if let Some(kind) = cfg.seed_region {
+        if ev.gap > target_gap {
+            ev = super::seed_screen(
+                kind, p, cfg, &mut state, &mut engine, ws, &mut x, &mut r,
+                &mut atr, ev, &mut flops,
+            );
+        }
+    }
     let mut trace = Vec::new();
     let push_trace = |it: usize,
                           fl: &FlopCounter,
@@ -191,6 +205,8 @@ pub(crate) fn run(
         stop,
         trace,
         screen_history: state.history.clone(),
+        dual: super::final_dual(&r, ev.s),
+        survivors: state.active().to_vec(),
         wall_secs: 0.0,
     }
 }

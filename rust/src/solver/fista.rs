@@ -58,7 +58,6 @@ pub(crate) fn run(
         }
         None => vec![0.0; p.n()],
     };
-    let mut x_prev = x_cur.clone();
     let mut t = 1.0_f64;
 
     // Cached residuals/correlations at x_cur and x_prev.
@@ -68,6 +67,19 @@ pub(crate) fn run(
         p, &state, ws, &x_cur, &mut r_cur, &mut atr_cur, &mut flops,
         &cfg.par,
     );
+    // Iteration-0 sequential seed round (cache hits / warm starts):
+    // screen once from the initial couple before any momentum state is
+    // cloned, so `x_prev`/`r_prev`/`atr_prev` inherit the reduced
+    // dictionary.  `None` leaves the cold path bitwise untouched.
+    if let Some(kind) = cfg.seed_region {
+        if ev.gap > target_gap {
+            ev = super::seed_screen(
+                kind, p, cfg, &mut state, &mut engine, ws, &mut x_cur,
+                &mut r_cur, &mut atr_cur, ev, &mut flops,
+            );
+        }
+    }
+    let mut x_prev = x_cur.clone();
     let mut r_prev = r_cur.clone();
     let mut atr_prev = atr_cur.clone();
 
@@ -235,6 +247,8 @@ pub(crate) fn run(
         stop,
         trace,
         screen_history: state.history.clone(),
+        dual: super::final_dual(&r_cur, ev.s),
+        survivors: state.active().to_vec(),
         wall_secs: 0.0,
     }
 }

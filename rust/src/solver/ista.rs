@@ -41,6 +41,16 @@ pub(crate) fn run(
     let mut ev = metered_eval(
         p, &state, ws, &x, &mut r, &mut atr, &mut flops, &cfg.par,
     );
+    // Iteration-0 sequential seed round (cache hits / warm starts);
+    // `None` leaves the cold path bitwise untouched.
+    if let Some(kind) = cfg.seed_region {
+        if ev.gap > target_gap {
+            ev = super::seed_screen(
+                kind, p, cfg, &mut state, &mut engine, ws, &mut x, &mut r,
+                &mut atr, ev, &mut flops,
+            );
+        }
+    }
 
     let mut trace = Vec::new();
     if cfg.record_trace {
@@ -140,6 +150,8 @@ pub(crate) fn run(
         stop,
         trace,
         screen_history: state.history.clone(),
+        dual: super::final_dual(&r, ev.s),
+        survivors: state.active().to_vec(),
         wall_secs: 0.0,
     }
 }

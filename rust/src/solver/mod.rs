@@ -14,7 +14,11 @@
 //!   iteration cap;
 //! * optionally interleaves a safe-region screening test (eq. 8) built
 //!   from the current primal-dual couple `(x^{(t)}, u^{(t)})`, with
-//!   `u^{(t)}` the dual-scaled residual (paper §V-b).
+//!   `u^{(t)}` the dual-scaled residual (paper §V-b);
+//! * optionally runs one *seed* screening round at iteration 0 from
+//!   the warm-start couple ([`SolverConfig::seed_region`]) — the
+//!   sequential-screening hook the session cache uses to start a
+//!   cache-hit solve on an already-reduced dictionary.
 //!
 //! Entry points: [`solve`] / [`solve_warm`] / [`solve_warm_ws`] for one
 //! right-hand side, and [`batch::solve_many`] for B observations
@@ -113,6 +117,17 @@ pub struct SolverConfig {
     /// Apply the screening test every `screen_every` iterations
     /// (paper: 1).
     pub screen_every: usize,
+    /// Run **one** screening round at iteration 0, before the first
+    /// update step, with this region built from the initial
+    /// primal-dual couple (the warm-start `x0` and its freshly
+    /// dual-scaled residual).  This is the *sequential screening*
+    /// hook: a session-cache hit seeds the solver with the previous
+    /// solve's iterate and `Some(RegionKind::Sequential)`, so the
+    /// first iteration already runs on the reduced dictionary (see
+    /// `coordinator::cache`).  `None` (the default) skips the seed
+    /// round entirely and leaves every existing code path bitwise
+    /// unchanged.
+    pub seed_region: Option<RegionKind>,
     /// Record a per-iteration trace (gap/flops/active) for figures.
     pub record_trace: bool,
     /// Shard-parallel execution context for the per-iteration matvecs
@@ -133,6 +148,7 @@ impl Default for SolverConfig {
             budget: Budget::default(),
             region: Some(RegionKind::HolderDome),
             screen_every: 1,
+            seed_region: None,
             record_trace: false,
             par: ParContext::sequential(),
             compaction: CompactionPolicy::default(),
@@ -178,6 +194,16 @@ pub struct SolveReport {
     pub trace: Vec<TracePoint>,
     /// Atoms removed per screening round.
     pub screen_history: Vec<usize>,
+    /// The final dual-feasible point `u = s·r` at the returned iterate
+    /// (length m).  This is the geometry a *sequential* screening
+    /// round reuses: the session cache stores it alongside `x`, and a
+    /// later nearby solve rebuilds it — through fresh dual scaling at
+    /// its own λ — from the seeded iterate, so its validity never
+    /// depends on how stale the cache entry is.
+    pub dual: Vec<f64>,
+    /// Indices of the atoms still active (unscreened) at exit — the
+    /// surviving-atom set the session cache carries per entry.
+    pub survivors: Vec<usize>,
     pub wall_secs: f64,
 }
 
@@ -208,6 +234,7 @@ impl SolveReport {
             self.screen_history, other.screen_history,
             "{what}: screen history"
         );
+        assert_eq!(self.survivors, other.survivors, "{what}: survivors");
         assert_eq!(self.stop, other.stop, "{what}: stop reason");
         assert_eq!(self.gap.to_bits(), other.gap.to_bits(), "{what}: gap");
         assert_eq!(self.p.to_bits(), other.p.to_bits(), "{what}: primal");
@@ -215,6 +242,10 @@ impl SolveReport {
         assert_eq!(self.x.len(), other.x.len(), "{what}: x length");
         for (i, (a, b)) in self.x.iter().zip(&other.x).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "{what}: x[{i}]");
+        }
+        assert_eq!(self.dual.len(), other.dual.len(), "{what}: dual length");
+        for (i, (a, b)) in self.dual.iter().zip(&other.dual).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{what}: dual[{i}]");
         }
     }
 }
@@ -337,6 +368,55 @@ pub(crate) fn build_region(
 ) -> crate::regions::SafeRegion {
     let u = ws.scaled_dual(r, ev.s, flops);
     crate::regions::SafeRegion::build_parts(kind, p, x_c, u, r, ev.gap, ev.s)
+}
+
+/// The iteration-0 *seed* screening round ([`SolverConfig::seed_region`]):
+/// one ordinary screening round run from the initial couple before the
+/// first update step, shared by all three solvers.  Builds the region
+/// (for a cache hit, [`RegionKind::Sequential`] at the warm couple),
+/// evaluates the keep mask, retains + compacts `x`/`atr`, and — when a
+/// *nonzero* seed coefficient was dropped — refreshes the cached
+/// residual/correlations from scratch (charged), exactly like the
+/// in-loop stale path.  Returns the (possibly refreshed) evaluation.
+///
+/// Safety is inherited, not assumed: the region is built from the
+/// freshly dual-scaled residual at the **current** λ, so it contains
+/// the dual optimum whatever produced the seed vector (see
+/// `rust/tests/screening_safety.rs`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn seed_screen(
+    kind: RegionKind,
+    p: &LassoProblem,
+    cfg: &SolverConfig,
+    state: &mut ScreeningState,
+    engine: &mut crate::screening::ScreeningEngine,
+    ws: &mut WorkingSet,
+    x: &mut Vec<f64>,
+    r: &mut Vec<f64>,
+    atr: &mut Vec<f64>,
+    ev: EvalOut,
+    flops: &mut FlopCounter,
+) -> EvalOut {
+    let region = build_region(kind, p, ws, x, r, &ev, flops);
+    let keep = engine
+        .compute_keep_ws(&region, p, state, ws, atr, flops, &cfg.par)
+        .to_vec();
+    let stale = keep.iter().enumerate().any(|(i, &kp)| !kp && x[i] != 0.0);
+    let removed = state.retain(&keep);
+    if removed > 0 {
+        crate::screening::compact_vectors(&keep, &mut [x, atr]);
+    }
+    ws.on_retain(p, state, &keep);
+    if removed > 0 && stale {
+        return metered_eval(p, state, ws, x, r, atr, flops, &cfg.par);
+    }
+    ev
+}
+
+/// The report's final dual point `u = s·r` (post-loop bookkeeping,
+/// uncharged like `ScreeningState::scatter`).
+pub(crate) fn final_dual(r: &[f64], s: f64) -> Vec<f64> {
+    r.iter().map(|&ri| s * ri).collect()
 }
 
 #[cfg(test)]
@@ -548,8 +628,65 @@ mod tests {
             stop: StopReason::Converged,
             trace: vec![],
             screen_history: vec![],
+            dual: vec![],
+            survivors: vec![],
             wall_secs: 0.0,
         };
         assert_eq!(rep.support(1e-9), vec![1, 3]);
+    }
+
+    /// The seed round must leave the solve bitwise unchanged when it
+    /// screens nothing new — and converge to the same solution (within
+    /// gap tolerance) when it does fire on a warm start.
+    #[test]
+    fn seed_round_solves_match_plain_solves() {
+        let p = paper_instance(9, 0.6, DictKind::Gaussian);
+        let cold = solve(
+            &p,
+            &SolverConfig { budget: Budget::gap(1e-10), ..Default::default() },
+        );
+        for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+            let cfg = SolverConfig {
+                kind,
+                budget: Budget::gap(1e-10),
+                seed_region: Some(RegionKind::Sequential),
+                ..Default::default()
+            };
+            let warm = solve_warm(&p, &cfg, Some(&cold.x));
+            assert_eq!(warm.stop, StopReason::Converged, "{}", kind.name());
+            let d = linalg::max_abs_diff(&warm.x, &cold.x);
+            assert!(d < 1e-4, "{}: diverged by {d}", kind.name());
+            // The seeded re-solve starts at the previous optimum: its
+            // seed round should already screen, and it must finish in
+            // far fewer iterations than the cold solve.
+            assert!(
+                warm.iters <= cold.iters / 4 + 2,
+                "{}: warm {} vs cold {}",
+                kind.name(),
+                warm.iters,
+                cold.iters
+            );
+        }
+    }
+
+    /// `seed_region: None` is the status quo: reports bitwise equal to
+    /// a build without the field ever existing (pinned against the
+    /// default-config solve).
+    #[test]
+    fn no_seed_region_is_bitwise_invisible() {
+        let p = paper_instance(10, 0.5, DictKind::Toeplitz);
+        let a = solve(
+            &p,
+            &SolverConfig { budget: Budget::gap(1e-9), ..Default::default() },
+        );
+        let b = solve(
+            &p,
+            &SolverConfig {
+                budget: Budget::gap(1e-9),
+                seed_region: None,
+                ..Default::default()
+            },
+        );
+        a.assert_bitwise_eq(&b, "seed_region=None invisibility");
     }
 }

@@ -48,6 +48,7 @@ fn session(
             },
             queue_depth,
             policy,
+            ..Default::default()
         },
     );
     (engine, ys)

@@ -1,7 +1,9 @@
 //! Screening *safety* coverage: a safe region may only discard atoms
-//! that are provably zero at the optimum, so no region — all five
-//! `RegionKind`s — may ever screen an atom of the final support, under
-//! any solver, and along a warm-started λ-path.
+//! that are provably zero at the optimum, so no region — all six
+//! `RegionKind`s, the sequential (warm-start) variant included — may
+//! ever screen an atom of the final support, under any solver, along a
+//! warm-started λ-path, and under the session cache's seeded-solve hit
+//! path with deliberately stale seeds.
 //!
 //! Protocol per instance: solve unscreened to a tight gap (reference),
 //! take its support, then re-solve with every (solver, region)
@@ -152,6 +154,65 @@ fn lambda_path_screening_stays_safe_at_every_point() {
                     "{} screened support atom {i} at lam ratio {:.3}",
                     region.name(),
                     pt.lam_ratio
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sequential_seed_round_is_safe_even_with_stale_seeds() {
+    // The session cache's hit path, driven directly: solve at one λ,
+    // then warm-solve at ANOTHER λ seeding from the first solution
+    // with a `seed_region: Sequential` iteration-0 round.  The seed is
+    // deliberately stale (wrong λ — exactly what λ-bucketed cache
+    // sharing produces), and the safety argument says that can cost
+    // screening power but never a support atom: the seed round's dual
+    // point is re-scaled at the *current* λ, so Theorem 1 applies to
+    // whatever couple the cache handed over.
+    use holder_screening::solver::solve_warm;
+    let mut cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    cfg.m = 30;
+    cfg.n = 100;
+    let p = generate(&cfg, 21).problem;
+    let seed_rep = solve(
+        &p,
+        &SolverConfig {
+            budget: Budget::gap(1e-10),
+            region: Some(RegionKind::HolderDome),
+            ..Default::default()
+        },
+    );
+    assert_eq!(seed_rep.stop, StopReason::Converged);
+    // Warm-solve above, at, and below the seed's λ.
+    for target_ratio in [0.35, 0.5, 0.65] {
+        let p2 = p.with_lambda(target_ratio * p.lam_max());
+        let support = reference_support(&p2, 1e-12, 1e-4);
+        assert!(!support.is_empty(), "empty support at {target_ratio}");
+        for kind in SOLVERS {
+            let rep = solve_warm(
+                &p2,
+                &SolverConfig {
+                    kind,
+                    budget: Budget::gap(1e-10),
+                    region: Some(RegionKind::Sequential),
+                    seed_region: Some(RegionKind::Sequential),
+                    ..Default::default()
+                },
+                Some(&seed_rep.x),
+            );
+            assert_eq!(
+                rep.stop,
+                StopReason::Converged,
+                "{} seeded at ratio {target_ratio}",
+                kind.name()
+            );
+            for &i in &support {
+                assert!(
+                    rep.x[i] != 0.0,
+                    "{} + stale sequential seed screened support atom {i} \
+                     at ratio {target_ratio}",
+                    kind.name()
                 );
             }
         }

@@ -1,0 +1,317 @@
+//! Session-cache parity: the warm-start cache is the repo's first
+//! *deliberate* bitwise-parity exception, so it gets its own exact
+//! replacement contract, pinned here across solvers × threads {1, 8} ×
+//! dense/CSC storage:
+//!
+//! * a cache **miss** is bitwise the cold path — the same pure
+//!   function of `(SharedDict, y, λ, cfg)` every session request has
+//!   always been (`session_parity.rs`'s invariant, unchanged);
+//! * a cache **hit** is bitwise a direct
+//!   `solve_warm_ws(p, cfg + seed_region: Sequential, Some(&prev.x))`
+//!   call — the full `SolveReport`, flops included;
+//! * a **disabled** cache (capacity 0) is bitwise invisible: reports,
+//!   `cache_hit` flags and the metric surface all match a cache-less
+//!   session.
+//!
+//! Plus the cache's edge cases end to end: λ-bucket boundaries (same
+//! observation at a different-bucket λ must miss; a same-bucket stale
+//! λ must hit and still satisfy the seeded contract) and LRU eviction
+//! under a capacity smaller than the replayed trace.
+
+use holder_screening::coordinator::{
+    SessionConfig, SessionEngine, SubmitPolicy,
+};
+use holder_screening::dict::{generate_batch, DictKind, InstanceConfig};
+use holder_screening::problem::{LambdaSpec, SharedDict};
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{
+    solve_warm_ws, BatchRhs, Budget, SolveReport, SolverConfig, SolverKind,
+};
+use holder_screening::sparse::DictFormat;
+use holder_screening::workset::WorkingSet;
+
+const LAM_RATIO: f64 = 0.6;
+const B: usize = 6;
+
+fn inst_cfg(format: DictFormat) -> InstanceConfig {
+    let mut c = InstanceConfig::paper(DictKind::Gaussian, LAM_RATIO);
+    c.m = 30;
+    c.n = 90;
+    c.format = format;
+    c
+}
+
+fn solver_cfg(kind: SolverKind) -> SolverConfig {
+    SolverConfig {
+        kind,
+        budget: Budget::gap(1e-9),
+        region: Some(RegionKind::HolderDome),
+        ..Default::default()
+    }
+}
+
+/// The seeded call the cache-hit contract names, run directly.
+fn seeded_reference(
+    shared: &SharedDict,
+    y: &[f64],
+    lam: LambdaSpec,
+    cfg: &SolverConfig,
+    seed: &[f64],
+) -> SolveReport {
+    let mut warm = cfg.clone();
+    warm.seed_region = Some(RegionKind::Sequential);
+    let p = shared.problem(y.to_vec(), lam);
+    let mut ws = WorkingSet::new(warm.compaction, p.n());
+    solve_warm_ws(&p, &warm, Some(seed), &mut ws)
+}
+
+/// The acceptance grid: one cold replay (all misses, ≡ the cold pure
+/// function) then one warm replay (all hits, ≡ the seeded contract),
+/// across solvers × threads {1, 8} × dense/CSC.
+#[test]
+fn cache_hit_equals_seeded_solve_across_grid() {
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        for format in [DictFormat::Dense, DictFormat::Csc] {
+            let (shared, ys) = generate_batch(&inst_cfg(format), 7, B);
+            let scfg = solver_cfg(kind);
+            // Cold references: the plain per-request pure function.
+            let cold_refs: Vec<SolveReport> = ys
+                .iter()
+                .map(|y| {
+                    let p = shared.problem(
+                        y.clone(),
+                        LambdaSpec::RatioOfMax(LAM_RATIO),
+                    );
+                    let mut ws = WorkingSet::new(scfg.compaction, p.n());
+                    solve_warm_ws(&p, &scfg, None, &mut ws)
+                })
+                .collect();
+            assert!(
+                cold_refs.iter().any(|r| r.screened > 0),
+                "{kind:?} {format:?}: screening never fired"
+            );
+            let rhs: Vec<BatchRhs> = ys
+                .iter()
+                .cloned()
+                .map(|y| BatchRhs::ratio(y, LAM_RATIO))
+                .collect();
+            let order: Vec<usize> = (0..B).collect();
+            for threads in [1usize, 8] {
+                let session = SessionEngine::new(
+                    shared.clone(),
+                    threads,
+                    SessionConfig {
+                        solver: scfg.clone(),
+                        queue_depth: 3,
+                        policy: SubmitPolicy::Block,
+                        cache_capacity: B,
+                        lambda_buckets: 16,
+                    },
+                );
+                // Pass 1: every request misses and runs the cold path.
+                let first = session.replay(&rhs, &order, 2);
+                for (i, (want, got)) in
+                    cold_refs.iter().zip(&first).enumerate()
+                {
+                    assert!(
+                        !got.cache_hit,
+                        "{kind:?} {format:?} {threads}t rhs {i}: \
+                         spurious hit on an empty cache"
+                    );
+                    want.assert_bitwise_eq(
+                        &got.report,
+                        &format!(
+                            "{kind:?} {format:?} {threads}t cold rhs {i}"
+                        ),
+                    );
+                }
+                // Pass 2: every request hits and must be bitwise the
+                // seeded solve_warm_ws call of the contract.
+                let second = session.replay(&rhs, &order, 2);
+                for (i, got) in second.iter().enumerate() {
+                    assert!(
+                        got.cache_hit,
+                        "{kind:?} {format:?} {threads}t rhs {i}: \
+                         repeat request missed a warm cache"
+                    );
+                    let want = seeded_reference(
+                        &shared,
+                        &ys[i],
+                        LambdaSpec::RatioOfMax(LAM_RATIO),
+                        &scfg,
+                        &cold_refs[i].x,
+                    );
+                    want.assert_bitwise_eq(
+                        &got.report,
+                        &format!(
+                            "{kind:?} {format:?} {threads}t warm rhs {i}"
+                        ),
+                    );
+                }
+                let m = session.metrics();
+                assert_eq!(
+                    m.counter("session_cache_misses").get(),
+                    B as u64
+                );
+                assert_eq!(m.counter("session_cache_hits").get(), B as u64);
+                assert_eq!(
+                    m.counter("session_cache_evictions").get(),
+                    0,
+                    "capacity B must hold the whole trace"
+                );
+            }
+        }
+    }
+}
+
+/// Capacity 0 is bitwise disabled: same reports as the cold pure
+/// function on every pass, `cache_hit` never set, no cache counters,
+/// no warm/cold histogram split.
+#[test]
+fn capacity_zero_is_bitwise_a_cacheless_session() {
+    let (shared, ys) = generate_batch(&inst_cfg(DictFormat::Dense), 3, 3);
+    let scfg = solver_cfg(SolverKind::Fista);
+    let session = SessionEngine::new(
+        shared.clone(),
+        2,
+        SessionConfig {
+            solver: scfg.clone(),
+            queue_depth: 4,
+            policy: SubmitPolicy::Block,
+            cache_capacity: 0,
+            lambda_buckets: 16,
+        },
+    );
+    for pass in 0..2 {
+        for y in &ys {
+            session
+                .submit(y.clone(), LambdaSpec::RatioOfMax(LAM_RATIO))
+                .unwrap();
+        }
+        for (i, c) in session.drain().iter().enumerate() {
+            assert!(!c.cache_hit, "pass {pass} rhs {i}: hit with cache off");
+            let p = shared
+                .problem(ys[i].clone(), LambdaSpec::RatioOfMax(LAM_RATIO));
+            let mut ws = WorkingSet::new(scfg.compaction, p.n());
+            solve_warm_ws(&p, &scfg, None, &mut ws).assert_bitwise_eq(
+                &c.report,
+                &format!("capacity-0 pass {pass} rhs {i}"),
+            );
+        }
+    }
+    let m = session.metrics();
+    assert_eq!(m.counter("session_cache_hits").get(), 0);
+    assert_eq!(m.counter("session_cache_misses").get(), 0);
+    assert_eq!(m.counter("session_cache_evictions").get(), 0);
+    assert_eq!(m.histogram("session_solve_warm_secs").count(), 0);
+    assert_eq!(m.histogram("session_solve_cold_secs").count(), 0);
+    assert!(session.cache().is_empty());
+}
+
+/// λ-bucket boundaries: the same observation at a λ in a *different*
+/// bucket must miss (and run the cold path bitwise); at a nearby λ in
+/// the *same* bucket it must hit — seeded by the stale-λ entry — and
+/// still satisfy the seeded contract bitwise.
+#[test]
+fn lambda_buckets_gate_cross_seeding() {
+    let (shared, ys) = generate_batch(&inst_cfg(DictFormat::Dense), 5, 1);
+    let y = ys[0].clone();
+    let scfg = solver_cfg(SolverKind::Fista);
+    // 4 buckets over λ/λ_max: [0, .25) [.25, .5) [.5, .75) [.75, 1].
+    let session = SessionEngine::new(
+        shared.clone(),
+        2,
+        SessionConfig {
+            solver: scfg.clone(),
+            queue_depth: 4,
+            policy: SubmitPolicy::Block,
+            cache_capacity: 8,
+            lambda_buckets: 4,
+        },
+    );
+    let solve_one = |ratio: f64| {
+        session
+            .submit(y.clone(), LambdaSpec::RatioOfMax(ratio))
+            .unwrap();
+        session.drain().pop().unwrap()
+    };
+    let at_052 = solve_one(0.52);
+    assert!(!at_052.cache_hit, "first request must miss");
+
+    // Different bucket (0.3 → bucket 1, 0.52 → bucket 2): miss, cold.
+    let at_030 = solve_one(0.30);
+    assert!(
+        !at_030.cache_hit,
+        "cross-bucket λ must not seed from the 0.52 entry"
+    );
+    {
+        let p =
+            shared.problem(y.clone(), LambdaSpec::RatioOfMax(0.30));
+        let mut ws = WorkingSet::new(scfg.compaction, p.n());
+        solve_warm_ws(&p, &scfg, None, &mut ws)
+            .assert_bitwise_eq(&at_030.report, "cross-bucket cold solve");
+    }
+
+    // Same bucket, different λ (0.53 → bucket 2): hit, seeded by the
+    // 0.52 solution — stale λ, still bitwise the seeded contract.
+    let at_053 = solve_one(0.53);
+    assert!(at_053.cache_hit, "same-bucket λ must hit");
+    seeded_reference(
+        &shared,
+        &y,
+        LambdaSpec::RatioOfMax(0.53),
+        &scfg,
+        &at_052.report.x,
+    )
+    .assert_bitwise_eq(&at_053.report, "same-bucket stale-λ hit");
+    // And the warm solve actually converged to the right problem's
+    // solution: its report is for λ(0.53), not the seed's λ(0.52).
+    assert_ne!(at_053.report.x, at_052.report.x);
+}
+
+/// Eviction under a cache smaller than the trace: the replay completes
+/// with cold-path parity intact, the eviction counter accounts for the
+/// overflow exactly, and the cache never exceeds capacity.
+#[test]
+fn eviction_during_replay_keeps_parity() {
+    let n_rhs = 5usize;
+    let capacity = 2usize;
+    let (shared, ys) =
+        generate_batch(&inst_cfg(DictFormat::Dense), 9, n_rhs);
+    let scfg = solver_cfg(SolverKind::Cd);
+    let rhs: Vec<BatchRhs> = ys
+        .iter()
+        .cloned()
+        .map(|y| BatchRhs::ratio(y, LAM_RATIO))
+        .collect();
+    let order: Vec<usize> = (0..n_rhs).collect();
+    let session = SessionEngine::new(
+        shared.clone(),
+        2,
+        SessionConfig {
+            solver: scfg.clone(),
+            queue_depth: 2,
+            policy: SubmitPolicy::Block,
+            cache_capacity: capacity,
+            lambda_buckets: 16,
+        },
+    );
+    let done = session.replay(&rhs, &order, 1);
+    for (i, c) in done.iter().enumerate() {
+        assert!(!c.cache_hit, "distinct observations cannot hit");
+        let p = shared
+            .problem(ys[i].clone(), LambdaSpec::RatioOfMax(LAM_RATIO));
+        let mut ws = WorkingSet::new(scfg.compaction, p.n());
+        solve_warm_ws(&p, &scfg, None, &mut ws)
+            .assert_bitwise_eq(&c.report, &format!("evicting rhs {i}"));
+    }
+    let m = session.metrics();
+    assert_eq!(m.counter("session_cache_misses").get(), n_rhs as u64);
+    assert_eq!(m.counter("session_cache_hits").get(), 0);
+    assert_eq!(
+        m.counter("session_cache_evictions").get(),
+        (n_rhs - capacity) as u64,
+        "every insert past capacity evicts exactly one entry"
+    );
+    assert_eq!(session.cache().len(), capacity);
+}

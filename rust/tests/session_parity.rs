@@ -142,6 +142,7 @@ fn stream_equals_batch_equals_independent_across_grid() {
                                 ),
                                 queue_depth: 2,
                                 policy: SubmitPolicy::Block,
+                                ..Default::default()
                             },
                         );
                         let done = session.replay(&rhs, &order, chunk);
@@ -201,6 +202,7 @@ fn engine_opened_session_matches_run_batch() {
             solver: scfg,
             queue_depth: 3,
             policy: SubmitPolicy::Reject,
+            ..Default::default()
         },
     );
     let order: Vec<usize> = (0..B).rev().collect();
@@ -243,6 +245,7 @@ fn interleaved_submission_across_threads_is_bitwise_invariant() {
             solver: scfg,
             queue_depth: 3,
             policy: SubmitPolicy::Block,
+            ..Default::default()
         },
     );
     // Two producers submit disjoint halves concurrently; a consumer
@@ -341,6 +344,7 @@ fn single_rhs_trace_matches_solo_solve() {
                 solver: scfg.clone(),
                 queue_depth: 1,
                 policy: SubmitPolicy::Block,
+                ..Default::default()
             },
         );
         session
@@ -362,6 +366,7 @@ fn duplicate_observations_produce_identical_reports() {
             solver: mk_solver(SolverKind::Fista, ParContext::new_pool(1, 1)),
             queue_depth: 8,
             policy: SubmitPolicy::Block,
+            ..Default::default()
         },
     );
     // y0, y1, then y0 twice more — concurrent solves over the shared
@@ -390,6 +395,7 @@ fn zero_observation_request_is_well_posed() {
             solver: scfg.clone(),
             queue_depth: 4,
             policy: SubmitPolicy::Block,
+            ..Default::default()
         },
     );
     session
@@ -430,6 +436,7 @@ fn submit_after_drain_keeps_the_session_live() {
             solver: scfg,
             queue_depth: 4,
             policy: SubmitPolicy::Block,
+            ..Default::default()
         },
     );
     // Wave 1: first two observations.
