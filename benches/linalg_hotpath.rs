@@ -1,16 +1,81 @@
-//! Bench: the BLAS-1/2 substrate hot paths (profiling anchor for the
-//! EXPERIMENTS.md perf log).  Reports GB/s and GFLOP/s.
+//! Bench: the BLAS-1/2 substrate hot paths, scalar tier vs SIMD tier
+//! (profiling anchor for the EXPERIMENTS.md perf log).
+//!
+//! Every kernel is timed under [`KernelTier::Scalar`], then under
+//! [`KernelTier::Simd`] (if AVX2 is available), with the SIMD output
+//! asserted **bitwise equal** to the scalar output before its timing
+//! counts — a bench that got faster by drifting is a bug, not a win.
+//! Per-kernel summaries and `speedup <label>` metrics land in
+//! `BENCH_linalg_hotpath.json` via [`BenchLog`].
+//!
+//! Env: HOLDER_BENCH_QUICK=1 shrinks shapes for smoke runs;
+//! HOLDER_BENCH_STRICT=1 asserts the headline SIMD speedups (dot and
+//! gemv_t at 400×4000) reach 2x — only meaningful on AVX2 hardware,
+//! and skipped automatically elsewhere.
 
-use holder_screening::benchkit::Bench;
-use holder_screening::linalg::{self, Mat};
+use holder_screening::benchkit::{Bench, BenchLog, Summary};
+use holder_screening::linalg::tier::{force, simd_available};
+use holder_screening::linalg::{self, KernelTier, Mat};
+use holder_screening::sparse::CscMat;
 use holder_screening::util::rng::Pcg64;
 
-fn main() {
-    let bench = Bench::default();
-    let mut rng = Pcg64::new(0);
-    println!("# linalg hot paths");
+/// Time `f` under both tiers: report + record the scalar run, then (on
+/// AVX2) assert `f`'s output is bitwise unchanged under SIMD, report +
+/// record that run, and log the speedup.  Returns the speedup if the
+/// SIMD tier ran.
+fn compare(
+    bench: &Bench,
+    log: &mut BenchLog,
+    label: &str,
+    mut f: impl FnMut() -> Vec<f64>,
+) -> Option<f64> {
+    force(KernelTier::Scalar);
+    let want = f();
+    let s_scalar: Summary =
+        bench.report(&format!("{label} [scalar]"), &mut f);
+    log.record(&format!("{label} scalar"), &s_scalar);
 
-    for (m, n) in [(100, 500), (100, 5000), (400, 4000)] {
+    if force(KernelTier::Simd) != KernelTier::Simd {
+        return None; // no AVX2: scalar numbers only
+    }
+    let got = f();
+    assert_eq!(want.len(), got.len(), "{label}: output length drift");
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(
+            w.to_bits(),
+            g.to_bits(),
+            "{label}: SIMD tier drifted at [{i}]"
+        );
+    }
+    let s_simd: Summary = bench.report(&format!("{label} [simd]"), &mut f);
+    log.record(&format!("{label} simd"), &s_simd);
+    force(KernelTier::Scalar);
+
+    let speedup = s_scalar.mean / s_simd.mean.max(1e-12);
+    log.metric(&format!("speedup {label}"), speedup);
+    println!("    -> simd speedup {speedup:.2}x");
+    Some(speedup)
+}
+
+fn main() {
+    let quick = std::env::var("HOLDER_BENCH_QUICK").is_ok();
+    let strict = std::env::var("HOLDER_BENCH_STRICT").is_ok();
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut log = BenchLog::new("linalg_hotpath");
+    let mut rng = Pcg64::new(0);
+    let simd = simd_available();
+    log.metric("simd_available", simd);
+    log.metric("quick", quick);
+    println!("# linalg hot paths (scalar vs simd; avx2={simd})");
+
+    let shapes: &[(usize, usize)] = if quick {
+        &[(64, 512)]
+    } else {
+        &[(100, 500), (100, 5000), (400, 4000)]
+    };
+
+    let mut headline_gemv_t = None;
+    for &(m, n) in shapes {
         let mut a = Mat::zeros(m, n);
         for j in 0..n {
             for v in a.col_mut(j) {
@@ -21,43 +86,93 @@ fn main() {
         rng.fill_normal(&mut r);
         let mut x = vec![0.0; n];
         rng.fill_normal(&mut x);
+
         let mut out_n = vec![0.0; n];
-        let mut out_m = vec![0.0; m];
-
-        let flops = 2.0 * m as f64 * n as f64;
-        let bytes = 8.0 * (m * n) as f64;
-
-        let s = bench.report(&format!("gemv_t {m}x{n}"), || {
+        let label = format!("gemv_t {m}x{n}");
+        let sp = compare(&bench, &mut log, &label, || {
             linalg::gemv_t(&a, &r, &mut out_n);
-            out_n[0]
+            out_n.clone()
         });
-        println!(
-            "    -> {:.2} GFLOP/s, {:.2} GB/s",
-            flops / s.mean / 1e9,
-            bytes / s.mean / 1e9
-        );
-        let s = bench.report(&format!("gemv   {m}x{n}"), || {
+        if (m, n) == (400, 4000) {
+            headline_gemv_t = sp;
+        }
+
+        let mut out_nb = vec![0.0; n];
+        compare(&bench, &mut log, &format!("gemv_t_blocked {m}x{n}"), || {
+            linalg::gemv_t_blocked(&a, &r, &mut out_nb);
+            out_nb.clone()
+        });
+
+        let mut out_m = vec![0.0; m];
+        compare(&bench, &mut log, &format!("gemv {m}x{n}"), || {
             linalg::gemv(&a, &x, &mut out_m);
-            out_m[0]
+            out_m.clone()
         });
-        println!(
-            "    -> {:.2} GFLOP/s, {:.2} GB/s",
-            flops / s.mean / 1e9,
-            bytes / s.mean / 1e9
-        );
     }
 
-    let v: Vec<f64> = (0..100_000).map(|i| i as f64 * 0.1).collect();
-    let w: Vec<f64> = (0..100_000).map(|i| i as f64 * 0.2).collect();
-    let s = bench.report("dot 100k", || linalg::dot(&v, &w));
-    println!(
-        "    -> {:.2} GFLOP/s",
-        2.0 * 100_000.0 / s.mean / 1e9
-    );
-    let mut st = vec![0.0; 100_000];
-    let s = bench.report("soft_threshold 100k", || {
+    // Sparse matvec: a planted-sparsity matrix at the large shape.
+    {
+        let (m, n, keep) = if quick { (64, 512, 0.1) } else { (400, 4000, 0.1) };
+        let mut a = Mat::zeros(m, n);
+        for j in 0..n {
+            for v in a.col_mut(j) {
+                if rng.uniform() < keep {
+                    *v = rng.normal();
+                }
+            }
+        }
+        let c = CscMat::from_dense(&a);
+        let mut r = vec![0.0; m];
+        rng.fill_normal(&mut r);
+        let mut x = vec![0.0; n];
+        rng.fill_normal(&mut x);
+        let mut out_n = vec![0.0; n];
+        compare(&bench, &mut log, &format!("spmv_t {m}x{n} keep={keep}"), || {
+            linalg::spmv_t(&c, &r, &mut out_n);
+            out_n.clone()
+        });
+        let mut out_m = vec![0.0; m];
+        compare(&bench, &mut log, &format!("spmv {m}x{n} keep={keep}"), || {
+            linalg::spmv(&c, &x, &mut out_m);
+            out_m.clone()
+        });
+    }
+
+    let nv = if quick { 10_000 } else { 100_000 };
+    let v: Vec<f64> = (0..nv).map(|i| i as f64 * 0.1).collect();
+    let w: Vec<f64> = (0..nv).map(|i| i as f64 * 0.2).collect();
+    let dot_speedup = compare(&bench, &mut log, &format!("dot {nv}"), || {
+        vec![linalg::dot(&v, &w)]
+    });
+    // alpha = 0.0 keeps the closure idempotent across timed iterations
+    // (y += 0.0 · x leaves y's bits alone) while running the identical
+    // mul+add per element — axpy itself never branches on alpha.
+    let mut y = vec![0.0; nv];
+    rng.fill_normal(&mut y);
+    compare(&bench, &mut log, &format!("axpy {nv}"), || {
+        linalg::axpy(0.0, &v, &mut y);
+        vec![y[0], y[nv - 1]]
+    });
+
+    // soft_threshold has no SIMD twin (branchy, not on the tier seam);
+    // keep its scalar number for trend continuity.
+    let mut st = vec![0.0; nv];
+    let s = bench.report(&format!("soft_threshold {nv}"), || {
         linalg::soft_threshold(&v, 5.0, &mut st);
         st[0]
     });
-    println!("    -> {:.2} Gelem/s", 100_000.0 / s.mean / 1e9);
+    log.record(&format!("soft_threshold {nv} scalar"), &s);
+    println!("    -> {:.2} Gelem/s", nv as f64 / s.mean / 1e9);
+
+    // The tentpole bar: >= 2x on the AVX2 hot paths.  Advisory by
+    // default (CI machines throttle); HOLDER_BENCH_STRICT enforces it
+    // where SIMD actually ran.
+    if strict && simd && !quick {
+        let d = dot_speedup.expect("simd ran");
+        assert!(d >= 2.0, "dot speedup {d:.2}x below the 2x bar");
+        let g = headline_gemv_t.expect("simd ran");
+        assert!(g >= 2.0, "gemv_t 400x4000 speedup {g:.2}x below 2x");
+    }
+
+    log.write();
 }

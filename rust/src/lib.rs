@@ -144,6 +144,22 @@
 //! bitwise-parity exception, with its own exact replacement contract
 //! (`rust/tests/session_cache_parity.rs`).
 //!
+//! ## The SIMD kernel tier
+//!
+//! Underneath every layer above sits one more performance knob: the
+//! **kernel tier** ([`linalg::tier`]).  Each public `linalg` kernel —
+//! dense, sparse, compact, blocked — dispatches at its entry point to
+//! either the scalar reference implementation or an explicit AVX2
+//! `core::arch` twin (`linalg::simd`, x86_64 only), selected once per
+//! process from `HOLDER_KERNEL_TIER=scalar|simd|auto` plus CPU
+//! detection.  The SIMD kernels replay the scalar kernels' exact
+//! 4-lane accumulation order lane for lane (no FMA — fusion rounds
+//! differently), so the tier joins threads, compaction and storage
+//! format in the repo-wide contract: `SolveReport`s are **bitwise
+//! identical** across every combination
+//! (`rust/tests/simd_parity.rs`); the speedup is measured by
+//! `benches/linalg_hotpath.rs` (`BENCH_linalg_hotpath.json`).
+//!
 //! A map of how these layers stack — and why the bitwise-parity
 //! discipline holds across all of them — lives in `ARCHITECTURE.md`
 //! at the repository root.
@@ -184,7 +200,7 @@ pub mod workset;
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::flops::FlopCounter;
-    pub use crate::linalg::Mat;
+    pub use crate::linalg::{KernelTier, Mat};
     pub use crate::sparse::{CscMat, DictFormat, DictStore};
     pub use crate::util::rng::Pcg64;
     pub use crate::dict::{DictKind, Instance, InstanceConfig};

@@ -52,22 +52,21 @@
 //! [`dot`].  Compaction on/off is therefore bitwise invisible
 //! (`rust/tests/workset_parity.rs`).
 
-use super::vec_ops::dot;
+use super::vec_ops::{axpy, dot};
 use super::Mat;
 use crate::par::ParContext;
 
 /// out = A x (dense x).  Zero entries of `x` are skipped, so the cost is
-/// `2 m · nnz(x)` flops.
+/// `2 m · nnz(x)` flops.  The per-column accumulation `out += x_j · a_j`
+/// is exactly [`axpy`], so it rides the kernel-tier dispatch
+/// ([`super::tier`]) like every other hot loop.
 pub fn gemv(a: &Mat, x: &[f64], out: &mut [f64]) {
     assert_eq!(x.len(), a.cols(), "gemv: x length");
     assert_eq!(out.len(), a.rows(), "gemv: out length");
     out.fill(0.0);
     for (j, &xj) in x.iter().enumerate() {
         if xj != 0.0 {
-            let col = a.col(j);
-            for (o, &c) in out.iter_mut().zip(col) {
-                *o += xj * c;
-            }
+            axpy(xj, a.col(j), out);
         }
     }
 }
@@ -90,10 +89,7 @@ pub fn gemv_cols(a: &Mat, active: &[usize], x: &[f64], out: &mut [f64]) {
     for (k, &j) in active.iter().enumerate() {
         let xk = x[k];
         if xk != 0.0 {
-            let col = a.col(j);
-            for (o, &c) in out.iter_mut().zip(col) {
-                *o += xk * c;
-            }
+            axpy(xk, a.col(j), out);
         }
     }
 }
@@ -202,10 +198,7 @@ pub fn gemv_cols_sharded_scratch(
     ctx.run_items(items, |(row0, dst)| {
         dst.fill(0.0);
         for &(j, xk) in nz_ref {
-            let col = &a.col(j)[row0..row0 + dst.len()];
-            for (o, &c) in dst.iter_mut().zip(col) {
-                *o += xk * c;
-            }
+            axpy(xk, &a.col(j)[row0..row0 + dst.len()], dst);
         }
     });
 }
@@ -230,10 +223,7 @@ pub fn gemv_compact(a: &Mat, x: &[f64], out: &mut [f64]) {
     out.fill(0.0);
     for (j, &xj) in x.iter().enumerate() {
         if xj != 0.0 {
-            let col = a.col(j);
-            for (o, &c) in out.iter_mut().zip(col) {
-                *o += xj * c;
-            }
+            axpy(xj, a.col(j), out);
         }
     }
 }
@@ -276,10 +266,7 @@ pub fn gemv_compact_sharded(
     ctx.run_items(items, |(row0, dst)| {
         dst.fill(0.0);
         for &(j, xk) in nz_ref {
-            let col = &a.col(j)[row0..row0 + dst.len()];
-            for (o, &c) in dst.iter_mut().zip(col) {
-                *o += xk * c;
-            }
+            axpy(xk, &a.col(j)[row0..row0 + dst.len()], dst);
         }
     });
 }
@@ -289,12 +276,29 @@ pub fn gemv_compact_sharded(
 /// sums over row quads, combined as `(s0 + s1) + (s2 + s3)`, then the
 /// scalar tail.  Interleaving the columns changes only the instruction
 /// schedule, never any column's own operation sequence, so every
-/// output is bitwise equal to `dot(a.col(j), r)`.
+/// output is bitwise equal to `dot(a.col(j), r)` — on either kernel
+/// tier (the SIMD twin keeps one `f64x4` accumulator per column; see
+/// `linalg::simd::block_dots`).
 fn block_dots<const B: usize>(a: &Mat, j0: usize, r: &[f64], out: &mut [f64]) {
     debug_assert_eq!(out.len(), B);
-    let m = a.rows();
-    let quads = m / 4;
     let cols: [&[f64]; B] = std::array::from_fn(|c| a.col(j0 + c));
+    #[cfg(target_arch = "x86_64")]
+    if super::tier::simd_active() {
+        // SAFETY: Simd tier ⇒ AVX2 detected; every column has
+        // a.rows() == r.len() elements and out.len() == B.
+        unsafe { super::simd::block_dots::<B>(&cols, r, out) };
+        return;
+    }
+    block_dots_scalar::<B>(&cols, r, out);
+}
+
+fn block_dots_scalar<const B: usize>(
+    cols: &[&[f64]; B],
+    r: &[f64],
+    out: &mut [f64],
+) {
+    let m = r.len();
+    let quads = m / 4;
     let mut acc = [[0.0f64; 4]; B];
     for i in 0..quads {
         let b = i * 4;

@@ -17,9 +17,22 @@
 //! its dense counterpart on the expanded matrix (see the module docs
 //! for the replay argument).  [`crate::sparse::DictStore`] is the seam
 //! that picks the family.
+//!
+//! Every kernel entry point additionally dispatches on the runtime
+//! **kernel tier** ([`tier`]): scalar reference implementations vs
+//! explicit AVX2 `core::arch` twins (`simd`, x86_64 only), selected
+//! once per process from `HOLDER_KERNEL_TIER` + CPU detection.  The
+//! tiers are bitwise identical by construction — the SIMD kernels
+//! replay the scalar 4-lane accumulation order exactly (no FMA) — so
+//! the tier is a pure performance knob, like thread count and storage
+//! format.  `rust/tests/simd_parity.rs` pins this per kernel and
+//! end-to-end.
 
 pub mod gemv;
+#[cfg(target_arch = "x86_64")]
+pub mod simd;
 pub mod spmv;
+pub mod tier;
 pub mod vec_ops;
 
 pub use gemv::{
@@ -33,6 +46,7 @@ pub use spmv::{
     spmv_t_cols, spmv_t_cols_sharded, spmv_t_compact,
     spmv_t_compact_sharded, ColView,
 };
+pub use tier::KernelTier;
 pub use vec_ops::*;
 
 /// Column-major dense matrix.

@@ -1,0 +1,363 @@
+//! Explicit AVX2 (`core::arch::x86_64`) kernel implementations,
+//! bitwise identical to the scalar tier by construction.
+//!
+//! ## Why the lane structure IS the scalar accumulation order
+//!
+//! The scalar reductions ([`super::vec_ops::dot`], the per-column
+//! pattern of `gemv::block_dots`, [`super::spmv::sparse_dot`]) all run
+//! the same fixed shape: four independent partial sums `s0..s3` where
+//! `s_k` accumulates the elements at indices `i ≡ k (mod 4)` of the
+//! quad region, merged as `(s0 + s1) + (s2 + s3)`, followed by the
+//! scalar tail in index order.  A 4-lane `f64x4` accumulator updated
+//! with `vmulpd`/`vaddpd` holds **exactly** those four sums: lane `k`
+//! of `acc = vaddpd(acc, vmulpd(x4, y4))` sees precisely the sequence
+//! `s_k += x[4i+k] * y[4i+k]`, because the packed AVX ops are
+//! per-lane IEEE-754 binary64 operations with round-to-nearest — bit
+//! for bit the same function as the scalar `mulsd`/`addsd` (same
+//! rounding, same subnormal handling under the same MXCSR, same NaN
+//! propagation for same-order operands).  `merge_lanes` then replays
+//! the scalar merge `(s0 + s1) + (s2 + s3)` literally, and tails stay
+//! scalar.  Elementwise kernels (`axpy`/`sub`/`add`/`scale`, the
+//! `out += x_j · a_j` column accumulation inside `gemv`) are even
+//! simpler: each output element is produced by one mul and one add in
+//! both tiers, and lane grouping cannot reorder anything.
+//!
+//! ## The no-FMA rule
+//!
+//! `vfmadd*` rounds once after the fused multiply-add; the scalar
+//! kernels round after the multiply *and* after the add.  Fusing would
+//! change results in the last ulp and break every bitwise gate in the
+//! repo, so this module uses only `vmulpd`/`vaddpd`/`vsubpd` — never
+//! an FMA intrinsic — and `rust/tests/simd_parity.rs` would catch a
+//! regression that introduced one.
+//!
+//! ## Sparse kernels: vector products, scalar routing
+//!
+//! AVX2 has gathers but no scatters.  The sparse kernels therefore
+//! vectorize what is vectorizable without touching the accumulation
+//! order: stored values (and gathered residual entries, for
+//! [`sparse_dot`]) are multiplied four entries per `vmulpd` — each
+//! product bitwise equal to its scalar twin — and then routed into the
+//! `row % 4` accumulator lanes (or scatter-added into `y[row]`) by
+//! scalar code, in the original ascending-row entry order.
+//!
+//! Every function here is `unsafe` and carries
+//! `#[target_feature(enable = "avx2")]`; the only safety requirement
+//! beyond slice lengths is that AVX2 is actually available — which
+//! [`super::tier`] guarantees before any call site dispatches here.
+
+use core::arch::x86_64::*;
+
+/// Merge the four lanes of `acc` exactly as the scalar kernels merge
+/// their four accumulators: `(s0 + s1) + (s2 + s3)`.
+///
+/// # Safety
+/// Requires AVX2.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn merge_lanes(acc: __m256d) -> f64 {
+    // SAFETY: register-only ops; caller guarantees AVX2.
+    unsafe {
+        let lo = _mm256_castpd256_pd128(acc); // [s0, s1]
+        let hi = _mm256_extractf128_pd::<1>(acc); // [s2, s3]
+        let pairs = _mm_hadd_pd(lo, hi); // [s0 + s1, s2 + s3]
+        _mm_cvtsd_f64(_mm_add_sd(pairs, _mm_unpackhi_pd(pairs, pairs)))
+    }
+}
+
+/// [`super::vec_ops::dot`]: lane `k` of the vector accumulator plays
+/// scalar accumulator `s_k`'s exact sequence; scalar tail.
+///
+/// # Safety
+/// Requires AVX2; `x.len() == y.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let quads = n / 4;
+    // SAFETY: each unaligned load reads x[b..b+4] / y[b..b+4] with
+    // b + 4 <= n; AVX2 guaranteed by the caller.
+    let mut s = unsafe {
+        let mut acc = _mm256_setzero_pd();
+        for i in 0..quads {
+            let b = i * 4;
+            let xv = _mm256_loadu_pd(x.as_ptr().add(b));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(b));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(xv, yv));
+        }
+        merge_lanes(acc)
+    };
+    for i in quads * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// [`super::vec_ops::axpy`]: `y[i] += alpha * x[i]`, four elements per
+/// `vmulpd`/`vaddpd` pair (same one-mul-one-add per element as the
+/// scalar lane pattern); scalar tail.
+///
+/// # Safety
+/// Requires AVX2; `x.len() == y.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let quads = n / 4;
+    // SAFETY: loads/stores cover [b, b+4) with b + 4 <= n.
+    unsafe {
+        let av = _mm256_set1_pd(alpha);
+        for i in 0..quads {
+            let b = i * 4;
+            let xv = _mm256_loadu_pd(x.as_ptr().add(b));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(b));
+            let t = _mm256_mul_pd(av, xv); // alpha * x[i], scalar order
+            _mm256_storeu_pd(y.as_mut_ptr().add(b), _mm256_add_pd(yv, t));
+        }
+    }
+    for i in quads * 4..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// [`super::vec_ops::scale`]: `x[i] *= alpha`.
+///
+/// # Safety
+/// Requires AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn scale(x: &mut [f64], alpha: f64) {
+    let n = x.len();
+    let quads = n / 4;
+    // SAFETY: loads/stores cover [b, b+4) with b + 4 <= n.
+    unsafe {
+        let av = _mm256_set1_pd(alpha);
+        for i in 0..quads {
+            let b = i * 4;
+            let xv = _mm256_loadu_pd(x.as_ptr().add(b));
+            // x[i] * alpha, matching the scalar operand order.
+            _mm256_storeu_pd(x.as_mut_ptr().add(b), _mm256_mul_pd(xv, av));
+        }
+    }
+    for i in quads * 4..n {
+        x[i] *= alpha;
+    }
+}
+
+/// [`super::vec_ops::sub`]: `out[i] = x[i] - y[i]`.
+///
+/// # Safety
+/// Requires AVX2; all three slices the same length.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let quads = n / 4;
+    // SAFETY: loads/stores cover [b, b+4) with b + 4 <= n.
+    unsafe {
+        for i in 0..quads {
+            let b = i * 4;
+            let xv = _mm256_loadu_pd(x.as_ptr().add(b));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(b));
+            _mm256_storeu_pd(out.as_mut_ptr().add(b), _mm256_sub_pd(xv, yv));
+        }
+    }
+    for i in quads * 4..n {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// [`super::vec_ops::add`]: `out[i] = x[i] + y[i]`.
+///
+/// # Safety
+/// Requires AVX2; all three slices the same length.
+#[target_feature(enable = "avx2")]
+pub unsafe fn add(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let quads = n / 4;
+    // SAFETY: loads/stores cover [b, b+4) with b + 4 <= n.
+    unsafe {
+        for i in 0..quads {
+            let b = i * 4;
+            let xv = _mm256_loadu_pd(x.as_ptr().add(b));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(b));
+            _mm256_storeu_pd(out.as_mut_ptr().add(b), _mm256_add_pd(xv, yv));
+        }
+    }
+    for i in quads * 4..n {
+        out[i] = x[i] + y[i];
+    }
+}
+
+/// The SIMD twin of `gemv::block_dots`: `B` simultaneous column dots
+/// against `r`, one `f64x4` accumulator per column.  Interleaving the
+/// columns changes only the instruction schedule; each column's
+/// accumulator lanes see exactly the scalar `s_k` sequences, merged by
+/// `merge_lanes`, with the tail rows scalar — so every output is
+/// bitwise `dot(col, r)`.
+///
+/// # Safety
+/// Requires AVX2; every `cols[c].len() >= r.len()` and
+/// `out.len() == B`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn block_dots<const B: usize>(
+    cols: &[&[f64]; B],
+    r: &[f64],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), B);
+    let m = r.len();
+    let quads = m / 4;
+    // SAFETY: loads read [b, b+4) of r and of each column, with
+    // b + 4 <= m <= cols[c].len().
+    unsafe {
+        let mut acc = [_mm256_setzero_pd(); B];
+        for i in 0..quads {
+            let b = i * 4;
+            let rv = _mm256_loadu_pd(r.as_ptr().add(b));
+            for c in 0..B {
+                let cv = _mm256_loadu_pd(cols[c].as_ptr().add(b));
+                acc[c] = _mm256_add_pd(acc[c], _mm256_mul_pd(cv, rv));
+            }
+        }
+        for c in 0..B {
+            let col = cols[c];
+            let mut s = merge_lanes(acc[c]);
+            for i in quads * 4..m {
+                s += col[i] * r[i];
+            }
+            out[c] = s;
+        }
+    }
+}
+
+/// [`super::spmv::sparse_dot`]: products of stored entries against
+/// gathered residual values, four per `vmulpd`, routed into the
+/// scalar `row % 4` accumulators in entry order (AVX2 has no
+/// scatter); quad/tail split and merge exactly as the scalar kernel.
+///
+/// # Safety
+/// Requires AVX2; `rows` sorted ascending with every entry
+/// `< r.len()`, `rows.len() == vals.len()`, and `r.len() < 2^31`
+/// (row indices are reinterpreted as i32 gather offsets).
+#[target_feature(enable = "avx2")]
+pub unsafe fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
+    debug_assert_eq!(rows.len(), vals.len());
+    let m = r.len();
+    let quad_end = ((m / 4) * 4) as u32;
+    let split = rows.partition_point(|&i| i < quad_end);
+    let mut acc = [0.0f64; 4];
+    let mut prod = [0.0f64; 4];
+    let mut p = 0;
+    while p + 4 <= split {
+        // SAFETY: rows[p..p+4] exist (p + 4 <= split <= rows.len())
+        // and are in-bounds gather indices (< quad_end <= m < 2^31).
+        unsafe {
+            let idx =
+                _mm_loadu_si128(rows.as_ptr().add(p) as *const __m128i);
+            let rv = _mm256_i32gather_pd::<8>(r.as_ptr(), idx);
+            let vv = _mm256_loadu_pd(vals.as_ptr().add(p));
+            // vals[p] * r[rows[p]], the scalar operand order.
+            _mm256_storeu_pd(prod.as_mut_ptr(), _mm256_mul_pd(vv, rv));
+        }
+        for k in 0..4 {
+            acc[(rows[p + k] & 3) as usize] += prod[k];
+        }
+        p += 4;
+    }
+    while p < split {
+        let i = rows[p] as usize;
+        acc[i & 3] += vals[p] * r[i];
+        p += 1;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    while p < rows.len() {
+        let i = rows[p] as usize;
+        s += vals[p] * r[i];
+        p += 1;
+    }
+    s
+}
+
+/// [`super::spmv::sparse_norm2`]: squared stored values four per
+/// `vmulpd`, scalar lane routing, merge + tail + `sqrt` as scalar.
+///
+/// # Safety
+/// Requires AVX2; `rows` sorted ascending with every entry `< m`,
+/// `rows.len() == vals.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sparse_norm2(rows: &[u32], vals: &[f64], m: usize) -> f64 {
+    debug_assert_eq!(rows.len(), vals.len());
+    let quad_end = ((m / 4) * 4) as u32;
+    let split = rows.partition_point(|&i| i < quad_end);
+    let mut acc = [0.0f64; 4];
+    let mut prod = [0.0f64; 4];
+    let mut p = 0;
+    while p + 4 <= split {
+        // SAFETY: vals[p..p+4] exist (p + 4 <= split <= vals.len()).
+        unsafe {
+            let vv = _mm256_loadu_pd(vals.as_ptr().add(p));
+            _mm256_storeu_pd(prod.as_mut_ptr(), _mm256_mul_pd(vv, vv));
+        }
+        for k in 0..4 {
+            acc[(rows[p + k] & 3) as usize] += prod[k];
+        }
+        p += 4;
+    }
+    while p < split {
+        let v = vals[p];
+        acc[(rows[p] & 3) as usize] += v * v;
+        p += 1;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    while p < rows.len() {
+        let v = vals[p];
+        s += v * v;
+        p += 1;
+    }
+    s.sqrt()
+}
+
+/// The sparse scatter-accumulate behind [`super::spmv::sparse_axpy`]
+/// and the row-sharded `spmv` bodies:
+/// `y[rows[p] - lo] += alpha * vals[p]` over the stored entries.
+/// Products four per `vmulpd` (bitwise the scalar products), the
+/// scatter-adds scalar in entry order — each `y` element is touched at
+/// most once (rows are strictly ascending), so the element's operation
+/// sequence is identical to the scalar kernel's.
+///
+/// # Safety
+/// Requires AVX2; every `rows[p]` in `[lo, lo + y.len())`,
+/// `rows.len() == vals.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sparse_axpy_off(
+    alpha: f64,
+    rows: &[u32],
+    vals: &[f64],
+    lo: u32,
+    y: &mut [f64],
+) {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let quads = n / 4;
+    let mut prod = [0.0f64; 4];
+    // SAFETY: register-only broadcast.
+    let av = unsafe { _mm256_set1_pd(alpha) };
+    for q in 0..quads {
+        let p = q * 4;
+        // SAFETY: vals[p..p+4] exist (p + 4 <= n).
+        unsafe {
+            let vv = _mm256_loadu_pd(vals.as_ptr().add(p));
+            // alpha * vals[p], the scalar operand order.
+            _mm256_storeu_pd(prod.as_mut_ptr(), _mm256_mul_pd(av, vv));
+        }
+        for k in 0..4 {
+            y[(rows[p + k] - lo) as usize] += prod[k];
+        }
+    }
+    for p in quads * 4..n {
+        y[(rows[p] - lo) as usize] += alpha * vals[p];
+    }
+}

@@ -27,6 +27,13 @@
 //! `rust/tests/workset_parity.rs` and the property tests below assert
 //! the contract on random sparsity patterns rather than assuming it.
 //!
+//! Like the dense kernels, the sparse primitives ([`sparse_dot`],
+//! [`sparse_norm2`], [`sparse_axpy`]) dispatch on the runtime
+//! [`super::tier`]: the AVX2 tier gathers/multiplies stored values
+//! four at a time but routes every product into its accumulator
+//! scalar-side, in entry order, so the tiers are bitwise identical
+//! (`rust/tests/simd_parity.rs`).
+//!
 //! ## Sharding
 //!
 //! The sharded variants split work exactly like the dense family —
@@ -43,9 +50,19 @@ use crate::sparse::CscMat;
 /// `⟨col, r⟩` for a sparse column given as `(rows, vals)`, replaying
 /// [`dot`] over the expanded column: four accumulators keyed by
 /// `row % 4` over the quad region, merged `(s0+s1)+(s2+s3)`, then the
-/// scalar tail rows in order.
+/// scalar tail rows in order.  Dispatches on [`super::tier`] like the
+/// dense kernels (the SIMD twin vectorizes the gathered products and
+/// keeps the accumulator routing scalar — same entry order, same
+/// bits).
 #[inline]
 pub fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if super::tier::simd_active() {
+        // SAFETY: Simd tier ⇒ AVX2 detected; CscMat guarantees rows
+        // ascending and < r.len(), and r.len() (a row count) is far
+        // below 2^31.
+        return unsafe { super::simd::sparse_dot(rows, vals, r) };
+    }
     let m = r.len();
     let quad_end = ((m / 4) * 4) as u32;
     let mut acc = [0.0f64; 4];
@@ -70,6 +87,11 @@ pub fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
 /// the dense path.
 #[inline]
 pub fn sparse_norm2(rows: &[u32], vals: &[f64], m: usize) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if super::tier::simd_active() {
+        // SAFETY: Simd tier ⇒ AVX2 detected; rows ascending, < m.
+        return unsafe { super::simd::sparse_norm2(rows, vals, m) };
+    }
     let quad_end = ((m / 4) * 4) as u32;
     let mut acc = [0.0f64; 4];
     let mut p = 0;
@@ -91,8 +113,33 @@ pub fn sparse_norm2(rows: &[u32], vals: &[f64], m: usize) -> f64 {
 /// counterpart of [`axpy`]; skipped dense zeros are `±0.0` no-ops).
 #[inline]
 pub fn sparse_axpy(alpha: f64, rows: &[u32], vals: &[f64], y: &mut [f64]) {
+    sparse_axpy_shifted(alpha, rows, vals, 0, y);
+}
+
+/// `y[row - lo] += alpha · v` over the stored entries — the shared
+/// body of [`sparse_axpy`] (`lo = 0`) and the row-sharded `A x`
+/// kernels (each shard's slice of `out` starts at row `lo`).  Each
+/// `y` element is touched at most once (rows strictly ascending), so
+/// quad-batching the products in the SIMD tier cannot reorder any
+/// element's operation sequence.
+#[inline]
+fn sparse_axpy_shifted(
+    alpha: f64,
+    rows: &[u32],
+    vals: &[f64],
+    lo: u32,
+    y: &mut [f64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if super::tier::simd_active() {
+        // SAFETY: Simd tier ⇒ AVX2 detected; the caller passes rows
+        // within [lo, lo + y.len()) (CscMat column invariant, or the
+        // shard's partition_point range).
+        unsafe { super::simd::sparse_axpy_off(alpha, rows, vals, lo, y) };
+        return;
+    }
     for (&i, &v) in rows.iter().zip(vals) {
-        y[i as usize] += alpha * v;
+        y[(i - lo) as usize] += alpha * v;
     }
 }
 
@@ -138,9 +185,7 @@ pub fn spmv(a: &CscMat, x: &[f64], out: &mut [f64]) {
     for (j, &xj) in x.iter().enumerate() {
         if xj != 0.0 {
             let (rows, vals) = a.col(j);
-            for (&i, &v) in rows.iter().zip(vals) {
-                out[i as usize] += xj * v;
-            }
+            sparse_axpy(xj, rows, vals, out);
         }
     }
 }
@@ -165,9 +210,7 @@ pub fn spmv_cols(a: &CscMat, active: &[usize], x: &[f64], out: &mut [f64]) {
     for (&j, &xk) in active.iter().zip(x.iter()) {
         if xk != 0.0 {
             let (rows, vals) = a.col(j);
-            for (&i, &v) in rows.iter().zip(vals) {
-                out[i as usize] += xk * v;
-            }
+            sparse_axpy(xk, rows, vals, out);
         }
     }
 }
@@ -234,9 +277,7 @@ fn spmv_rows_shard(
         let (rows, vals) = a.col(j);
         let s = rows.partition_point(|&r| r < lo);
         let e = s + rows[s..].partition_point(|&r| r < hi);
-        for p in s..e {
-            dst[(rows[p] - lo) as usize] += xk * vals[p];
-        }
+        sparse_axpy_shifted(xk, &rows[s..e], &vals[s..e], lo, dst);
     }
 }
 
@@ -297,9 +338,7 @@ pub fn spmv_compact(a: &CscMat, x: &[f64], out: &mut [f64]) {
     for (j, &xj) in x.iter().enumerate() {
         if xj != 0.0 {
             let (rows, vals) = a.col(j);
-            for (&i, &v) in rows.iter().zip(vals) {
-                out[i as usize] += xj * v;
-            }
+            sparse_axpy(xj, rows, vals, out);
         }
     }
 }

@@ -1,0 +1,157 @@
+//! Runtime kernel-tier selection: scalar vs explicit SIMD.
+//!
+//! Every public kernel in [`super::vec_ops`], [`super::gemv`] and
+//! [`super::spmv`] dispatches through [`active`] at its entry point, so
+//! no caller — solver, working set, screening, session — changes
+//! signature when the tier changes.  The tier is a pure performance
+//! knob under the repo-wide contract: **`SolveReport`s are bitwise
+//! identical across tiers** (× threads × storage formats), because the
+//! SIMD implementations replay the scalar kernels' exact accumulation
+//! order lane for lane (see the `simd` module docs for the argument,
+//! `rust/tests/simd_parity.rs` for the gate).
+//!
+//! ## Selection
+//!
+//! The first kernel call resolves the tier once and caches it:
+//!
+//! * `HOLDER_KERNEL_TIER=scalar` — force the scalar tier;
+//! * `HOLDER_KERNEL_TIER=simd`   — force SIMD; falls back to scalar
+//!   (with a one-line note on stderr) when the CPU lacks AVX2, so CI
+//!   matrices can set it unconditionally;
+//! * `HOLDER_KERNEL_TIER=auto` or unset — SIMD iff
+//!   `is_x86_feature_detected!("avx2")`.
+//!
+//! Tests and benches that need both tiers in one process use
+//! [`force`]; the per-call dispatch cost is one relaxed atomic load
+//! and a branch, far below the cost of any kernel body.
+//!
+//! Only AVX2/x86_64 has a SIMD tier today; every other target
+//! (aarch64 NEON is the natural follow-up) is permanently scalar and
+//! bitwise identical to an AVX2 machine's output either way.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel implementations the `linalg` entry points run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// The portable reference implementations (4-accumulator /
+    /// 4-lane-patterned plain Rust; LLVM may still auto-vectorize).
+    Scalar,
+    /// Explicit AVX2 `core::arch` implementations, bitwise identical
+    /// to [`KernelTier::Scalar`] by lane-order replay.
+    Simd,
+}
+
+const UNSET: u8 = 0;
+const SCALAR: u8 = 1;
+const SIMD: u8 = 2;
+
+static TIER: AtomicU8 = AtomicU8::new(UNSET);
+
+fn encode(t: KernelTier) -> u8 {
+    match t {
+        KernelTier::Scalar => SCALAR,
+        KernelTier::Simd => SIMD,
+    }
+}
+
+/// Whether this CPU can run the SIMD tier at all (AVX2 on x86_64;
+/// `false` on every other architecture).
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The tier the kernels are currently dispatching to, resolving it
+/// from the environment + CPU on first use.
+#[inline]
+pub fn active() -> KernelTier {
+    match TIER.load(Ordering::Relaxed) {
+        SCALAR => KernelTier::Scalar,
+        SIMD => KernelTier::Simd,
+        _ => init_from_env(),
+    }
+}
+
+/// `active() == KernelTier::Simd` — the single branch every kernel
+/// entry point takes.
+#[inline]
+pub fn simd_active() -> bool {
+    active() == KernelTier::Simd
+}
+
+#[cold]
+fn init_from_env() -> KernelTier {
+    let t = match std::env::var("HOLDER_KERNEL_TIER").as_deref() {
+        Ok("scalar") => KernelTier::Scalar,
+        Ok("simd") => {
+            if simd_available() {
+                KernelTier::Simd
+            } else {
+                eprintln!(
+                    "HOLDER_KERNEL_TIER=simd requested but AVX2 is not \
+                     available; running the scalar tier (bitwise \
+                     identical results)"
+                );
+                KernelTier::Scalar
+            }
+        }
+        Ok("auto") | Err(_) => {
+            if simd_available() {
+                KernelTier::Simd
+            } else {
+                KernelTier::Scalar
+            }
+        }
+        Ok(other) => panic!(
+            "HOLDER_KERNEL_TIER: unknown tier {other:?} \
+             (expected scalar | simd | auto)"
+        ),
+    };
+    TIER.store(encode(t), Ordering::Relaxed);
+    t
+}
+
+/// Force the tier for the rest of the process (tests and benches that
+/// compare both tiers in one run).  Forcing [`KernelTier::Simd`] on a
+/// machine without AVX2 clamps to scalar; the tier actually installed
+/// is returned.  Safe to call concurrently — both tiers produce
+/// bitwise-identical results, so a mid-kernel flip cannot change any
+/// output, only which implementation computes it.
+pub fn force(t: KernelTier) -> KernelTier {
+    let t = match t {
+        KernelTier::Simd if !simd_available() => KernelTier::Scalar,
+        t => t,
+    };
+    TIER.store(encode(t), Ordering::Relaxed);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_clamps_to_available_and_active_reflects_it() {
+        let before = active(); // also exercises lazy init
+        let got = force(KernelTier::Simd);
+        if simd_available() {
+            assert_eq!(got, KernelTier::Simd);
+        } else {
+            assert_eq!(got, KernelTier::Scalar);
+        }
+        assert_eq!(active(), got);
+        assert_eq!(force(KernelTier::Scalar), KernelTier::Scalar);
+        assert_eq!(active(), KernelTier::Scalar);
+        // Leave the process on the tier it started with: the kernels
+        // are bitwise identical either way, but benches prefer the
+        // environment's choice.
+        force(before);
+    }
+}

@@ -1,14 +1,45 @@
-//! BLAS-1 vector kernels with manual 4-way unrolling.
+//! BLAS-1 vector kernels, written against one shared lane pattern.
 //!
-//! These are the innermost loops of the whole engine; everything is
-//! written so LLVM auto-vectorizes (independent accumulators, no
-//! iterator-chain overhead on the hot variants).
+//! These are the innermost loops of the whole engine.  Every kernel
+//! with a hot path is structured on the **4-lane pattern** so that the
+//! scalar and SIMD tiers compute bit-identical results:
+//!
+//! * **Reductions** ([`dot`], and through it [`norm2`]/[`norm2_sq`])
+//!   keep four independent partial sums — `s_k` accumulates the
+//!   elements at indices `i ≡ k (mod 4)` of the quad region — merged
+//!   as `(s0 + s1) + (s2 + s3)`, then fold the `n % 4` tail in index
+//!   order.  Independent accumulators hide add latency and are
+//!   exactly the four lanes of an AVX2 `f64x4`.
+//! * **Elementwise kernels** ([`axpy`], [`sub`], [`add`], [`scale`])
+//!   process the quad region four elements per step with one mul
+//!   and/or one add per element, then the scalar tail.  Per element
+//!   the operation sequence is a single rounding chain, so quad
+//!   grouping is bitwise invisible — the structure exists so the SIMD
+//!   tier has a documented scalar order to replay (and so LLVM
+//!   auto-vectorizes the scalar tier).
+//!
+//! Each public entry point dispatches on [`super::tier::active`]: the
+//! `Simd` tier runs the `core::arch` AVX2 twins in `super::simd`,
+//! which replay these exact sequences lane for lane (see that module
+//! for the argument; `rust/tests/simd_parity.rs` for the bitwise
+//! gate).  Callers never see the tier — same signatures, same bits.
 
-/// ⟨x, y⟩ with four independent accumulators (enables SIMD + hides FMA
-/// latency).
+/// ⟨x, y⟩ with four independent accumulators (the canonical 4-lane
+/// reduction; see the module header).
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if super::tier::simd_active() {
+        // SAFETY: the Simd tier is only installed when AVX2 was
+        // detected (`tier::force` clamps); lengths asserted above.
+        return unsafe { super::simd::dot(x, y) };
+    }
+    dot_scalar(x, y)
+}
+
+#[inline]
+fn dot_scalar(x: &[f64], y: &[f64]) -> f64 {
     let n = x.len();
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
@@ -26,50 +57,112 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     s
 }
 
-/// y += alpha * x.
+/// y += alpha * x (elementwise 4-lane pattern; one mul + one add per
+/// element in both tiers).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
+    #[cfg(target_arch = "x86_64")]
+    if super::tier::simd_active() {
+        // SAFETY: Simd tier ⇒ AVX2 detected; lengths asserted above.
+        unsafe { super::simd::axpy(alpha, x, y) };
+        return;
+    }
+    let n = x.len();
+    let quads = n / 4;
+    for i in 0..quads {
+        let b = i * 4;
+        y[b] += alpha * x[b];
+        y[b + 1] += alpha * x[b + 1];
+        y[b + 2] += alpha * x[b + 2];
+        y[b + 3] += alpha * x[b + 3];
+    }
+    for i in quads * 4..n {
+        y[i] += alpha * x[i];
     }
 }
 
-/// x *= alpha.
+/// x *= alpha (elementwise 4-lane pattern).
 #[inline]
 pub fn scale(x: &mut [f64], alpha: f64) {
-    for xi in x.iter_mut() {
-        *xi *= alpha;
+    #[cfg(target_arch = "x86_64")]
+    if super::tier::simd_active() {
+        // SAFETY: Simd tier ⇒ AVX2 detected.
+        unsafe { super::simd::scale(x, alpha) };
+        return;
+    }
+    let n = x.len();
+    let quads = n / 4;
+    for i in 0..quads {
+        let b = i * 4;
+        x[b] *= alpha;
+        x[b + 1] *= alpha;
+        x[b + 2] *= alpha;
+        x[b + 3] *= alpha;
+    }
+    for i in quads * 4..n {
+        x[i] *= alpha;
     }
 }
 
-/// out = x - y.
+/// out = x - y (elementwise 4-lane pattern).
 #[inline]
 pub fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
-    for i in 0..x.len() {
+    #[cfg(target_arch = "x86_64")]
+    if super::tier::simd_active() {
+        // SAFETY: Simd tier ⇒ AVX2 detected; lengths asserted above.
+        unsafe { super::simd::sub(x, y, out) };
+        return;
+    }
+    let n = x.len();
+    let quads = n / 4;
+    for i in 0..quads {
+        let b = i * 4;
+        out[b] = x[b] - y[b];
+        out[b + 1] = x[b + 1] - y[b + 1];
+        out[b + 2] = x[b + 2] - y[b + 2];
+        out[b + 3] = x[b + 3] - y[b + 3];
+    }
+    for i in quads * 4..n {
         out[i] = x[i] - y[i];
     }
 }
 
-/// out = x + y.
+/// out = x + y (elementwise 4-lane pattern).
 #[inline]
 pub fn add(x: &[f64], y: &[f64], out: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
-    for i in 0..x.len() {
+    #[cfg(target_arch = "x86_64")]
+    if super::tier::simd_active() {
+        // SAFETY: Simd tier ⇒ AVX2 detected; lengths asserted above.
+        unsafe { super::simd::add(x, y, out) };
+        return;
+    }
+    let n = x.len();
+    let quads = n / 4;
+    for i in 0..quads {
+        let b = i * 4;
+        out[b] = x[b] + y[b];
+        out[b + 1] = x[b + 1] + y[b + 1];
+        out[b + 2] = x[b + 2] + y[b + 2];
+        out[b + 3] = x[b + 3] + y[b + 3];
+    }
+    for i in quads * 4..n {
         out[i] = x[i] + y[i];
     }
 }
 
-/// ‖x‖₂.
+/// ‖x‖₂ (via [`dot`], so it inherits the 4-lane order and the tier
+/// dispatch).
 #[inline]
 pub fn norm2(x: &[f64]) -> f64 {
     dot(x, x).sqrt()
 }
 
-/// ‖x‖₂².
+/// ‖x‖₂² (via [`dot`]).
 #[inline]
 pub fn norm2_sq(x: &[f64]) -> f64 {
     dot(x, x)
@@ -163,6 +256,32 @@ mod tests {
         sub(&y, &x, &mut out);
         assert_eq!(out, [5.0, 10.0, 15.0]);
         add(&out, &x, &mut out.clone()); // no alias in real use
+    }
+
+    #[test]
+    fn elementwise_kernels_cover_quads_and_tails() {
+        // Lengths straddling the quad boundary: the 4-lane body and
+        // the tail must agree with the naive per-element formula.
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 11] {
+            let x: Vec<f64> = (0..n).map(|i| i as f64 * 0.3 - 1.0).collect();
+            let mut y: Vec<f64> = (0..n).map(|i| i as f64 * 0.7).collect();
+            let y0 = y.clone();
+            axpy(1.5, &x, &mut y);
+            for i in 0..n {
+                assert_eq!(y[i].to_bits(), (y0[i] + 1.5 * x[i]).to_bits());
+            }
+            let mut s = y.clone();
+            scale(&mut s, -0.25);
+            let mut o_sub = vec![0.0; n];
+            sub(&x, &y, &mut o_sub);
+            let mut o_add = vec![0.0; n];
+            add(&x, &y, &mut o_add);
+            for i in 0..n {
+                assert_eq!(s[i].to_bits(), (y[i] * -0.25).to_bits());
+                assert_eq!(o_sub[i].to_bits(), (x[i] - y[i]).to_bits());
+                assert_eq!(o_add[i].to_bits(), (x[i] + y[i]).to_bits());
+            }
+        }
     }
 
     #[test]

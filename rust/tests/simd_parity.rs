@@ -1,0 +1,431 @@
+//! The kernel-tier acceptance bar: the scalar and SIMD tiers are
+//! **bitwise identical** — per kernel, on adversarial inputs, and
+//! end-to-end in the `SolveReport`.
+//!
+//! The SIMD implementations claim to replay the scalar kernels' exact
+//! floating-point operation order lane for lane (`linalg::simd` module
+//! docs).  These tests refuse to take that on faith:
+//!
+//! * every public kernel is compared across tiers at lengths covering
+//!   all tail residues `n % 4 ∈ {0, 1, 2, 3}` and misaligned slice
+//!   offsets (the SIMD loads are unaligned by design — alignment must
+//!   not matter);
+//! * special values ride along: `±0.0`, subnormals, `±inf`, and the
+//!   NaNs their products create.  Identical operand order means
+//!   identical NaN payloads and identical subnormal results (Rust
+//!   never enables FTZ/DAZ), so even these compare bit for bit;
+//! * the full solver grid — 3 solvers × threads {1, 8} × dense/CSC ×
+//!   tier — must produce one `SolveReport`, bit for bit, flops
+//!   included.
+//!
+//! On machines without AVX2, [`tier::force`] clamps the SIMD tier to
+//! scalar, every comparison becomes scalar-vs-scalar, and the suite
+//! passes vacuously — the scalar tier is the reference either way.
+//! Tier flips are process-global, so every test takes `TIER_LOCK`.
+
+use std::sync::Mutex;
+
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::linalg::tier::force;
+use holder_screening::linalg::{
+    add, axpy, dot, gemv, gemv_cols, gemv_cols_sharded, gemv_compact,
+    gemv_compact_sharded, gemv_t, gemv_t_blocked, gemv_t_blocked_sharded,
+    gemv_t_cols, gemv_t_cols_sharded, norm2, norm2_sq, scale, sparse_axpy,
+    sparse_dot, sparse_norm2, spmv, spmv_cols, spmv_cols_sharded_scratch,
+    spmv_compact, spmv_compact_sharded, spmv_t, spmv_t_cols,
+    spmv_t_cols_sharded, spmv_t_compact, spmv_t_compact_sharded, sub,
+    ColView, KernelTier, Mat,
+};
+use holder_screening::par::ParContext;
+use holder_screening::proptest::{Gen, Runner};
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{
+    solve, Budget, SolveReport, SolverConfig, SolverKind,
+};
+use holder_screening::sparse::{CscMat, DictFormat};
+
+/// The kernel tier is a process-global knob; tests that flip it must
+/// not interleave.  (A poisoned lock is fine — the tier state is valid
+/// after any panic, both tiers being bitwise identical.)
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` under the scalar tier, then under the (clamped) SIMD tier.
+fn both_tiers<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    force(KernelTier::Scalar);
+    let s = f();
+    force(KernelTier::Simd);
+    let v = f();
+    force(KernelTier::Scalar);
+    (s, v)
+}
+
+fn assert_bits(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}[{i}]: scalar {x:e} vs simd {y:e}"
+        );
+    }
+}
+
+/// A vector salted with every special-value class the kernels can
+/// meet: signed zeros, infinities (whose products breed NaNs),
+/// subnormals, and ordinary normals.
+fn special_vec(g: &mut Gen, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f64::INFINITY,
+            3 => f64::NEG_INFINITY,
+            4 => 2.0e-308 * g.normal(), // subnormal after the multiply
+            5 => 5e-324,                // smallest positive subnormal
+            _ => g.normal(),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// BLAS-1 kernels
+// ---------------------------------------------------------------------------
+
+/// Property sweep over the vector kernels: random lengths (covering
+/// every `n % 4` residue), random misalignment offsets, random
+/// normal data.
+#[test]
+fn vec_kernels_bitwise_identical_across_tiers() {
+    let _g = lock();
+    Runner::new(7001).cases(50).run("vec tier parity", |g| {
+        let n = g.usize_in(0, 64);
+        let off = g.usize_in(0, 3);
+        // Oversized buffers + an offset view: the SIMD loads must not
+        // care where the slice starts.
+        let xb = g.vec_normal(n + off);
+        let yb = g.vec_normal(n + off);
+        let alpha = g.normal();
+        let x = &xb[off..];
+        let y = &yb[off..];
+
+        let (ds, dv) = both_tiers(|| {
+            vec![dot(x, y), norm2(x), norm2_sq(y)]
+        });
+        assert_bits(&ds, &dv, "dot/norm2/norm2_sq");
+
+        let (aps, apv) = both_tiers(|| {
+            let mut out = yb[off..].to_vec();
+            axpy(alpha, x, &mut out);
+            out
+        });
+        assert_bits(&aps, &apv, "axpy");
+
+        let (scs, scv) = both_tiers(|| {
+            let mut out = xb[off..].to_vec();
+            scale(&mut out, alpha);
+            out
+        });
+        assert_bits(&scs, &scv, "scale");
+
+        let (sbs, sbv) = both_tiers(|| {
+            let mut out = vec![f64::NAN; n];
+            sub(x, y, &mut out);
+            out
+        });
+        assert_bits(&sbs, &sbv, "sub");
+
+        let (ads, adv) = both_tiers(|| {
+            let mut out = vec![f64::NAN; n];
+            add(x, y, &mut out);
+            out
+        });
+        assert_bits(&ads, &adv, "add");
+        Ok(())
+    });
+}
+
+/// Deterministic tail × offset × special-value grid: every `n % 4`
+/// residue and every misalignment, on vectors full of zeros,
+/// infinities and subnormals.  NaN payloads must match too
+/// (`to_bits`), which holds exactly because both tiers run the same
+/// operations on the same operands in the same order.
+#[test]
+fn vec_kernels_handle_special_values_and_all_tails() {
+    let _g = lock();
+    let mut g = Gen::for_case(7003, 0);
+    for n in 0..=9usize {
+        for off in 0..4usize {
+            let xb = special_vec(&mut g, n + off);
+            let yb = special_vec(&mut g, n + off);
+            let x = &xb[off..];
+            let y = &yb[off..];
+            for alpha in [0.0, -0.0, 1.5, f64::INFINITY, 5e-324] {
+                let what = format!("special n={n} off={off} a={alpha:e}");
+                let (s, v) = both_tiers(|| {
+                    let mut out = vec![dot(x, y)];
+                    let mut t = yb[off..].to_vec();
+                    axpy(alpha, x, &mut t);
+                    out.extend_from_slice(&t);
+                    let mut t = xb[off..].to_vec();
+                    scale(&mut t, alpha);
+                    out.extend_from_slice(&t);
+                    let mut t = vec![f64::NAN; n];
+                    sub(x, y, &mut t);
+                    out.extend_from_slice(&t);
+                    add(x, y, &mut t);
+                    out.extend_from_slice(&t);
+                    out
+                });
+                assert_bits(&s, &v, &what);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense BLAS-2 kernels
+// ---------------------------------------------------------------------------
+
+fn rand_mat(g: &mut Gen, m: usize, n: usize) -> Mat {
+    let mut mat = Mat::zeros(m, n);
+    for j in 0..n {
+        for i in 0..m {
+            mat.set(i, j, g.normal());
+        }
+    }
+    mat
+}
+
+/// The full dense matvec family across tiers, on shapes straddling the
+/// row quads, `T_BLOCK = 8` column blocks, and the sharded paths.
+#[test]
+fn gemv_family_bitwise_identical_across_tiers() {
+    let _g = lock();
+    let mut g = Gen::for_case(7005, 0);
+    for (m, n) in [(1usize, 1usize), (7, 3), (16, 8), (33, 17), (21, 40)] {
+        let a = rand_mat(&mut g, m, n);
+        let x: Vec<f64> = (0..n)
+            .map(|i| if i % 4 == 0 { 0.0 } else { g.normal() })
+            .collect();
+        let r: Vec<f64> = (0..m).map(|_| g.normal()).collect();
+        let active: Vec<usize> = (0..n).filter(|j| j % 3 != 1).collect();
+        let xc: Vec<f64> = (0..active.len())
+            .map(|i| if i % 5 == 0 { 0.0 } else { g.normal() })
+            .collect();
+        let what = format!("gemv family ({m}x{n})");
+
+        let (s, v) = both_tiers(|| {
+            let mut all = Vec::new();
+            let mut o = vec![f64::NAN; m];
+            gemv(&a, &x, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; n];
+            gemv_t(&a, &r, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; m];
+            gemv_cols(&a, &active, &xc, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; active.len()];
+            gemv_t_cols(&a, &active, &r, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; m];
+            gemv_compact(&a, &xc, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; n];
+            gemv_t_blocked(&a, &r, &mut o);
+            all.extend_from_slice(&o);
+            for threads in [2usize, 8] {
+                let ctx = ParContext::new_pool(threads, 1);
+                let mut o = vec![f64::NAN; active.len()];
+                gemv_t_cols_sharded(&a, &active, &r, &mut o, &ctx);
+                all.extend_from_slice(&o);
+                let mut o = vec![f64::NAN; m];
+                gemv_cols_sharded(&a, &active, &xc, &mut o, &ctx);
+                all.extend_from_slice(&o);
+                let mut o = vec![f64::NAN; n];
+                gemv_t_blocked_sharded(&a, &r, &mut o, &ctx);
+                all.extend_from_slice(&o);
+                let mut nz = Vec::new();
+                let mut o = vec![f64::NAN; m];
+                gemv_compact_sharded(&a, &x, &mut o, &ctx, &mut nz);
+                all.extend_from_slice(&o);
+            }
+            all
+        });
+        assert_bits(&s, &v, &what);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse (CSC) kernels
+// ---------------------------------------------------------------------------
+
+/// The sparse kernel family across tiers — gathers, scatter-adds,
+/// sharded variants, `ColView` — AND the dense↔CSC cross-check inside
+/// the SIMD tier, so the two bitwise contracts compose.
+#[test]
+fn sparse_family_bitwise_identical_across_tiers_and_formats() {
+    let _g = lock();
+    Runner::new(7007).cases(25).run("sparse tier parity", |g| {
+        let m = g.usize_in(1, 50);
+        let n = g.usize_in(1, 30);
+        let keep = g.f64_in(0.05, 0.9);
+        let a = g.sparse_matrix(m, n, keep);
+        let c = CscMat::from_dense(&a);
+        let r: Vec<f64> = (0..m).map(|_| g.normal()).collect();
+        let x: Vec<f64> = (0..n)
+            .map(|i| if i % 4 == 0 { 0.0 } else { g.normal() })
+            .collect();
+        let active: Vec<usize> = (0..n).filter(|j| j % 3 != 1).collect();
+        let xc: Vec<f64> =
+            active.iter().map(|&j| x[j]).collect();
+        let alpha = g.normal();
+        let (rows0, vals0) = c.col(0);
+
+        let (s, v) = both_tiers(|| {
+            let mut all = vec![
+                sparse_dot(rows0, vals0, &r),
+                sparse_norm2(rows0, vals0, m),
+                ColView::Sparse { rows: rows0, vals: vals0 }.dot(&r),
+            ];
+            let mut o = r.clone();
+            sparse_axpy(alpha, rows0, vals0, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; m];
+            spmv(&c, &x, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; n];
+            spmv_t(&c, &r, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; m];
+            spmv_cols(&c, &active, &xc, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; active.len()];
+            spmv_t_cols(&c, &active, &r, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; m];
+            spmv_compact(&c, &x, &mut o);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; n];
+            spmv_t_compact(&c, &r, &mut o);
+            all.extend_from_slice(&o);
+            let ctx = ParContext::new_pool(4, 1);
+            let mut nz = Vec::new();
+            let mut o = vec![f64::NAN; active.len()];
+            spmv_t_cols_sharded(&c, &active, &r, &mut o, &ctx);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; m];
+            spmv_cols_sharded_scratch(
+                &c, &active, &xc, &mut o, &ctx, &mut nz,
+            );
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; m];
+            spmv_compact_sharded(&c, &x, &mut o, &ctx, &mut nz);
+            all.extend_from_slice(&o);
+            let mut o = vec![f64::NAN; n];
+            spmv_t_compact_sharded(&c, &r, &mut o, &ctx);
+            all.extend_from_slice(&o);
+            all
+        });
+        assert_bits(&s, &v, &format!("sparse ({m}x{n})"));
+
+        // Dense ↔ CSC inside the SIMD tier: the storage-format replay
+        // argument must survive the tier switch.
+        force(KernelTier::Simd);
+        let mut want = vec![0.0; m];
+        gemv(&a, &x, &mut want);
+        let mut got = vec![f64::NAN; m];
+        spmv(&c, &x, &mut got);
+        let mut want_t = vec![0.0; n];
+        gemv_t(&a, &r, &mut want_t);
+        let mut got_t = vec![f64::NAN; n];
+        spmv_t(&c, &r, &mut got_t);
+        force(KernelTier::Scalar);
+        assert_bits(&want, &got, "simd-tier spmv vs gemv");
+        assert_bits(&want_t, &got_t, "simd-tier spmv_t vs gemv_t");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: the SolveReport
+// ---------------------------------------------------------------------------
+
+fn toeplitz(m: usize, n: usize, format: DictFormat) -> InstanceConfig {
+    InstanceConfig {
+        m,
+        n,
+        kind: DictKind::Toeplitz,
+        lam_ratio: 0.6,
+        pulse_width: 4.0,
+        pulse_cutoff: 8.0,
+        format,
+    }
+}
+
+/// The acceptance-level guarantee: one `SolveReport`, bit for bit,
+/// across solver × threads × storage format × kernel tier (flops,
+/// screening history and stop reason included).
+#[test]
+fn solve_reports_bitwise_identical_across_tiers() {
+    let _g = lock();
+    let seed = 7101;
+    let budget = Budget { max_iters: 40, max_flops: None, target_gap: 0.0 };
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        let run = |t: KernelTier, format: DictFormat, threads: usize| {
+            // Instance generation always runs scalar so the grid only
+            // varies the *solve* tier (generation parity has its own
+            // test below).
+            force(KernelTier::Scalar);
+            let p = generate(&toeplitz(800, 120, format), seed).problem;
+            force(t);
+            let rep = solve(
+                &p,
+                &SolverConfig {
+                    kind,
+                    budget,
+                    region: Some(RegionKind::HolderDome),
+                    par: ParContext::new_pool(threads, 1),
+                    ..Default::default()
+                },
+            );
+            force(KernelTier::Scalar);
+            rep
+        };
+        let base: SolveReport =
+            run(KernelTier::Scalar, DictFormat::Dense, 1);
+        assert!(base.screened > 0, "{kind:?}: screening never fired");
+        for t in [KernelTier::Scalar, KernelTier::Simd] {
+            for format in [DictFormat::Dense, DictFormat::Csc] {
+                for threads in [1usize, 8] {
+                    let rep = run(t, format, threads);
+                    base.assert_bitwise_eq(
+                        &rep,
+                        &format!("{kind:?} {t:?} {format:?} {threads}t"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The dictionary *build* (column normalization, `Aᵀy`, spectral norm
+/// power iteration) also runs through the tiered kernels; it must not
+/// drift either.
+#[test]
+fn instance_generation_bitwise_identical_across_tiers() {
+    let _g = lock();
+    let cfg = toeplitz(600, 90, DictFormat::Dense);
+    let (s, v) = both_tiers(|| {
+        let inst = generate(&cfg, 7201).problem;
+        let mut probe = inst.y().to_vec();
+        probe.push(inst.lam());
+        probe.push(inst.lam_max());
+        probe
+    });
+    assert_bits(&s, &v, "instance generation");
+}
