@@ -1,38 +1,66 @@
 //! Bench: per-iteration screening overhead — the paper's "same
-//! computational burden" claim, measured.
+//! computational burden" claim, measured — plus the joint-screening
+//! (grouped) pass head-to-head at large n.
 //!
-//! Times, at (m, n) = (100, 500):
+//! Part 1, at (m, n) = (100, 500):
 //!   * one gemv_t (the solver's unavoidable matvec) as the yardstick,
-//!   * region construction + test application for each of the five
-//!     regions (statistics via correlation reuse, no matvecs).
+//!   * region construction + test application for each region
+//!     (statistics via correlation reuse, no matvecs).
+//!   Expected: every region's screen cost is a small fraction of one
+//!   matvec, and holder ~ gap_dome >> gap_sphere only by the
+//!   f(psi1, psi2) evaluation.
 //!
-//! Expected: every region's screen cost is a small fraction of one
-//! matvec, and holder ~ gap_dome >> gap_sphere only by the
-//! f(psi1, psi2) evaluation.
+//! Part 2, on a truncated-pulse Toeplitz dictionary in CSC at
+//! n = 100 000: one flat screening round versus the grouped round
+//! (`ScreenConfig::grouped`), masks asserted bitwise equal **before**
+//! any timing.  Adjacent Toeplitz atoms are near-duplicates, so most
+//! contiguous groups are certified screened by a single pivot bound
+//! and the grouped pass runs per-atom tests on a small fraction of n
+//! (`tested_fraction` in the emitted metrics).
+//!
+//! Emits `BENCH_screening_overhead.json`.
+//!
+//! Env: HOLDER_BENCH_QUICK=1 shrinks shapes for smoke runs;
+//! HOLDER_BENCH_STRICT=1 asserts the grouped round's ≥ 2x speedup.
 
-use holder_screening::benchkit::Bench;
+use holder_screening::benchkit::{Bench, BenchLog};
 use holder_screening::dict::{generate, DictKind, InstanceConfig};
 use holder_screening::flops::FlopCounter;
 use holder_screening::par::ParContext;
+use holder_screening::problem::LassoProblem;
 use holder_screening::regions::{RegionKind, SafeRegion};
-use holder_screening::screening::{ScreeningEngine, ScreeningState};
+use holder_screening::screening::{
+    ScreenConfig, ScreeningEngine, ScreeningState,
+};
+use holder_screening::solver::{solve, Budget, SolverConfig, SolverKind};
+use holder_screening::sparse::DictFormat;
+
+/// A mid-trajectory iterate: a capped, unscreened ISTA solve (the
+/// solver's own loop — no hand-rolled iteration to drift from it).
+fn mid_iterate(p: &LassoProblem, iters: usize) -> Vec<f64> {
+    let cfg = SolverConfig {
+        kind: SolverKind::Ista,
+        budget: Budget { max_iters: iters, max_flops: None, target_gap: 0.0 },
+        region: None,
+        ..Default::default()
+    };
+    solve(p, &cfg).x
+}
 
 fn main() {
+    let quick = std::env::var("HOLDER_BENCH_QUICK").is_ok();
+    let strict = std::env::var("HOLDER_BENCH_STRICT").is_ok();
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut log = BenchLog::new("screening_overhead");
+    log.metric("quick", quick);
+
+    // ------------------------------------------------------------------
+    // Part 1: per-region cost vs the matvec yardstick (paper claim).
+    // ------------------------------------------------------------------
     let cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
     let p = generate(&cfg, 0).problem;
-    // A mid-trajectory iterate.
-    let mut x = vec![0.0; p.n()];
-    let step = p.default_step();
-    for _ in 0..10 {
-        let ev = p.eval(&x);
-        for i in 0..p.n() {
-            x[i] = holder_screening::linalg::soft_threshold_scalar(
-                x[i] + step * ev.atr[i], step * p.lam());
-        }
-    }
+    let x = mid_iterate(&p, 10);
     let ev = p.eval(&x);
-
-    let bench = Bench::default();
     println!("# screening overhead at (m, n) = ({}, {})", p.m(), p.n());
 
     // Yardstick: one full gemv_t.
@@ -41,6 +69,7 @@ fn main() {
         holder_screening::linalg::gemv_t(p.a(), &ev.r, &mut out);
         out[0]
     });
+    log.record("small/gemv_t", &base);
 
     for kind in RegionKind::ALL {
         let label = format!("build+test {}", kind.name());
@@ -63,6 +92,107 @@ fn main() {
         println!(
             "    -> {:.2}x of one matvec",
             s.mean / base.mean.max(1e-12)
+        );
+        log.record(&format!("small/build+test {}", kind.name()), &s);
+    }
+
+    // ------------------------------------------------------------------
+    // Part 2: flat vs grouped screening round at large n (Toeplitz,
+    // CSC, truncated pulse — the clustered dictionary the group tests
+    // are built for).
+    // ------------------------------------------------------------------
+    let (m_big, n_big) =
+        if quick { (256, 20_000) } else { (512, 100_000) };
+    let group_size = ScreenConfig::DEFAULT_GROUP_SIZE;
+    println!(
+        "# grouped screening round at (m, n) = ({m_big}, {n_big}), \
+         toeplitz/csc, group size {group_size}"
+    );
+    let mut bcfg = InstanceConfig::paper(DictKind::Toeplitz, 0.8);
+    bcfg.m = m_big;
+    bcfg.n = n_big;
+    bcfg.pulse_cutoff = 4.0;
+    bcfg.format = DictFormat::Csc;
+    let pb = generate(&bcfg, 7).problem;
+    let xb = mid_iterate(&pb, 10);
+    let evb = pb.eval(&xb);
+    let region = SafeRegion::build(RegionKind::HolderDome, &pb, &xb, &evb);
+    let state = ScreeningState::new(pb.n());
+    let ctx = ParContext::sequential();
+    let mut flops = FlopCounter::new();
+
+    let mut flat = ScreeningEngine::new();
+    let mut grouped =
+        ScreeningEngine::with_config(ScreenConfig::grouped(group_size));
+
+    // Parity FIRST, timing second: the grouped mask must be bitwise
+    // the flat mask (this call also pays the one-off clustering build,
+    // keeping it out of the timed rounds).
+    let mask_flat = flat
+        .compute_keep(&region, &pb, &state, &evb.atr, &mut flops, &ctx)
+        .to_vec();
+    let mask_grouped = grouped
+        .compute_keep(&region, &pb, &state, &evb.atr, &mut flops, &ctx)
+        .to_vec();
+    assert_eq!(
+        mask_flat, mask_grouped,
+        "grouped screening mask diverged from flat — parity bug"
+    );
+    let screened = mask_flat.iter().filter(|&&k| !k).count();
+    println!(
+        "  round screens {screened}/{} atoms (masks bitwise equal)",
+        pb.n()
+    );
+
+    let s_flat = bench.report("flat screening round", || {
+        flat.compute_keep(&region, &pb, &state, &evb.atr, &mut flops, &ctx)
+            .len()
+    });
+    let s_grp = bench.report("grouped screening round", || {
+        grouped
+            .compute_keep(&region, &pb, &state, &evb.atr, &mut flops, &ctx)
+            .len()
+    });
+
+    let stats = grouped.group_stats();
+    let speedup = s_flat.mean / s_grp.mean.max(1e-12);
+    println!(
+        "  grouped: {:.2}x speedup, tested fraction {:.4} \
+         ({} atoms certified by {} group tests per round)",
+        speedup,
+        stats.tested_fraction(),
+        stats.atoms_certified / stats.rounds.max(1),
+        stats.groups_screened / stats.rounds.max(1),
+    );
+
+    log.record("large/flat round", &s_flat);
+    log.record("large/grouped round", &s_grp);
+    log.metric("large_m", m_big as u64);
+    log.metric("large_n", n_big as u64);
+    log.metric("group_size", group_size as u64);
+    log.metric("screened_per_round", screened as u64);
+    log.metric("grouped_speedup", speedup);
+    log.metric("tested_fraction", stats.tested_fraction());
+    log.metric(
+        "atoms_certified_per_round",
+        (stats.atoms_certified / stats.rounds.max(1)) as u64,
+    );
+    log.write();
+
+    assert!(
+        stats.tested_fraction() < 1.0,
+        "group tests never certified anything on the clustered dictionary"
+    );
+    if strict {
+        assert!(
+            speedup >= 2.0,
+            "grouped screening round speedup {speedup:.2}x < 2x \
+             (HOLDER_BENCH_STRICT)"
+        );
+    } else if speedup < 2.0 {
+        println!(
+            "  note: speedup below the 2x expectation (not enforced \
+             without HOLDER_BENCH_STRICT)"
         );
     }
 }

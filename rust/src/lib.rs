@@ -160,6 +160,30 @@
 //! (`rust/tests/simd_parity.rs`); the speedup is measured by
 //! `benches/linalg_hotpath.rs` (`BENCH_linalg_hotpath.json`).
 //!
+//! ## Joint (grouped) screening
+//!
+//! At serving-scale dictionaries the screening pass itself — O(n)
+//! per-atom bound tests per round — becomes the hot path.  Following
+//! Herzet & Drémeau's joint screening tests, [`problem::SharedDict`]
+//! lazily caches an [`problem::AtomClustering`] (contiguous index
+//! blocks; per-group representative, certified radius, and per-atom
+//! distance-to-representative upper bounds), and the screening round
+//! under [`screening::ScreenConfig`] `grouped(g)` runs **two phases**:
+//! one [`regions::SafeRegion::group_bound`] test per surviving
+//! contiguous run of active atoms (pivoting on the run's first active
+//! member), then the ordinary per-atom tests only inside runs the
+//! group test could not certify.  On clustered dictionaries (the
+//! Toeplitz/convolutional family, where neighboring shifts are
+//! near-duplicates) most groups certify and the per-atom work
+//! collapses to a small fraction of n
+//! ([`screening::GroupPassStats::tested_fraction`]).  The contract
+//! matches compaction's exactly: `--group-screening` is purely a
+//! wall-clock knob — keep masks, `SolveReport`s and the flop meter
+//! are **bitwise identical** with grouping on or off, across threads,
+//! stores and compaction policies (`rust/tests/group_parity.rs`); the
+//! speedup is measured by `benches/screening_overhead.rs`
+//! (`BENCH_screening_overhead.json`).
+//!
 //! A map of how these layers stack — and why the bitwise-parity
 //! discipline holds across all of them — lives in `ARCHITECTURE.md`
 //! at the repository root.
@@ -207,10 +231,14 @@ pub mod prelude {
     pub use crate::geometry::{Ball, Dome, HalfSpace};
     pub use crate::par::ParContext;
     pub use crate::problem::{
-        LambdaSpec, LassoProblem, PrimalDualEval, SharedDict,
+        AtomClustering, LambdaSpec, LassoProblem, PrimalDualEval,
+        SharedDict,
     };
     pub use crate::regions::{RegionKind, SafeRegion};
-    pub use crate::screening::{ScreeningEngine, ScreeningState};
+    pub use crate::screening::{
+        GroupPassStats, GroupingPolicy, ScreenConfig, ScreeningEngine,
+        ScreeningState,
+    };
     pub use crate::solver::{
         solve, solve_many, solve_warm, solve_warm_ws, BatchRhs, Budget,
         SolveReport, SolverConfig, SolverKind, StopReason,

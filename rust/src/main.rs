@@ -27,6 +27,7 @@ use holder_screening::par::ParContext;
 use holder_screening::path::{solve_path, PathConfig};
 use holder_screening::perfprof::log_tau_grid;
 use holder_screening::regions::RegionKind;
+use holder_screening::screening::ScreenConfig;
 use holder_screening::solver::{
     solve, BatchRhs, Budget, SolverConfig, SolverKind, StopReason,
 };
@@ -79,6 +80,25 @@ const DICT_FORMAT_FLAG: Flag = Flag::str(
      dictionaries",
 );
 
+/// Joint (group) screening toggle (`screening::GroupingPolicy`).
+/// Results are bitwise identical on or off — grouping only changes
+/// how much work a screening round does.
+const GROUP_SCREENING_FLAG: Flag = Flag::switch(
+    "group-screening",
+    "joint screening: certify whole contiguous atom groups with one \
+     region bound, per-atom tests only inside surviving groups; \
+     never changes results — pays off on clustered (toeplitz) \
+     dictionaries at large n",
+);
+
+/// Group size of `--group-screening` (`ScreenConfig::grouped`).
+const GROUP_SIZE_FLAG: Flag = Flag::int(
+    "group-size",
+    Some("64"),
+    "atoms per contiguous screening group (with --group-screening); \
+     never changes results",
+);
+
 /// Toeplitz pulse truncation (`InstanceConfig::pulse_cutoff`).
 const PULSE_CUTOFF_FLAG: Flag = Flag::num(
     "pulse-cutoff",
@@ -99,6 +119,8 @@ const SOLVE_FLAGS: &[Flag] = &[
     COMPACTION_FLAG,
     DICT_FORMAT_FLAG,
     PULSE_CUTOFF_FLAG,
+    GROUP_SCREENING_FLAG,
+    GROUP_SIZE_FLAG,
     Flag::str("region", Some("holder_dome"),
               "screening region: holder_dome | gap_dome | gap_sphere | \
                static_sphere | dynamic_sphere | none"),
@@ -119,6 +141,8 @@ const BATCH_FLAGS: &[Flag] = &[
     COMPACTION_FLAG,
     DICT_FORMAT_FLAG,
     PULSE_CUTOFF_FLAG,
+    GROUP_SCREENING_FLAG,
+    GROUP_SIZE_FLAG,
     Flag::int("batch", Some("32"),
               "right-hand sides solved over the one shared dictionary \
                store (each gets its own lambda = lam-ratio * lam_max)"),
@@ -141,6 +165,8 @@ const PATH_FLAGS: &[Flag] = &[
     COMPACTION_FLAG,
     DICT_FORMAT_FLAG,
     PULSE_CUTOFF_FLAG,
+    GROUP_SCREENING_FLAG,
+    GROUP_SIZE_FLAG,
     Flag::str("region", Some("holder_dome"), "screening region or none"),
     Flag::int("points", Some("20"), "lambda grid points"),
     Flag::num("lam-min", Some("0.1"), "smallest lambda / lambda_max"),
@@ -369,6 +395,18 @@ fn compaction_from_args(args: &Args) -> CompactionPolicy {
     ))
 }
 
+/// Joint-screening configuration (`--group-screening`,
+/// `--group-size`); default off.
+fn screen_from_args(args: &Args) -> ScreenConfig {
+    if args.switch("group-screening") {
+        ScreenConfig::grouped(
+            args.int_or("group-size", ScreenConfig::DEFAULT_GROUP_SIZE),
+        )
+    } else {
+        ScreenConfig::default()
+    }
+}
+
 /// Solver configuration shared by `solve` and `batch` (`--solver`,
 /// `--target-gap`, `--max-iters`, `--region`,
 /// `--compaction-threshold`).  `par` is left at its default — each
@@ -385,6 +423,7 @@ fn solver_from_args(args: &Args) -> SolverConfig {
         },
         region: region_from_args(args),
         compaction: compaction_from_args(args),
+        screen: screen_from_args(args),
         ..Default::default()
     }
 }
@@ -518,6 +557,7 @@ fn cmd_path(args: &Args) -> i32 {
             budget: Budget::gap(1e-9),
             par: par_from_args(args),
             compaction: compaction_from_args(args),
+            screen: screen_from_args(args),
             ..Default::default()
         },
     };

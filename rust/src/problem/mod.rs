@@ -30,10 +30,14 @@
 //! and are bitwise identical to the shared path — sharing is purely an
 //! amortization, never a semantic.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::linalg::{self, Mat};
 use crate::sparse::DictStore;
+
+pub mod cluster;
+
+pub use cluster::AtomClustering;
 
 /// Guard value shared with the Python layer (`kernels/ref.py::EPS`).
 pub const EPS: f64 = 1e-12;
@@ -125,6 +129,13 @@ struct SharedDictInner {
     col_norms: Vec<f64>,
     col_nnz: Vec<usize>,
     lipschitz: f64,
+    /// Lazily built atom clustering for joint screening
+    /// ([`AtomClustering`]); `None` until the first grouped screening
+    /// round asks for it, so ungrouped workloads never pay the build.
+    /// A `Mutex` rather than a `OnceLock` because a later caller may
+    /// ask for a *different* group size (the slot is rebuilt, and the
+    /// previous `Arc` stays valid for whoever still holds it).
+    clustering: Mutex<Option<Arc<AtomClustering>>>,
 }
 
 impl SharedDict {
@@ -141,6 +152,7 @@ impl SharedDict {
                 col_norms,
                 col_nnz,
                 lipschitz,
+                clustering: Mutex::new(None),
             }),
         }
     }
@@ -173,6 +185,28 @@ impl SharedDict {
     /// ‖A‖₂² — gradient Lipschitz constant.
     pub fn lipschitz(&self) -> f64 {
         self.inner.lipschitz
+    }
+
+    /// The joint-screening atom clustering at this `group_size`,
+    /// building (and caching) it on first use.  The clustering depends
+    /// only on the dictionary, so every RHS / session / cache hit over
+    /// this handle shares one build; repeat calls with the same size
+    /// are an `Arc` bump.  Asking for a different size rebuilds the
+    /// cached slot — previously returned handles remain valid.
+    pub fn clustering(&self, group_size: usize) -> Arc<AtomClustering> {
+        let mut slot = self.inner.clustering.lock().unwrap();
+        if let Some(c) = slot.as_ref() {
+            if c.group_size() == group_size.max(1) {
+                return c.clone();
+            }
+        }
+        let built = Arc::new(AtomClustering::build(
+            &self.inner.store,
+            &self.inner.col_norms,
+            group_size,
+        ));
+        *slot = Some(built.clone());
+        built
     }
 
     /// Build the per-RHS problem for one observation: computes `Aᵀy`
@@ -575,5 +609,24 @@ mod tests {
         let x0 = vec![0.0; p.n()];
         let ev = p.eval(&x0);
         assert_eq!(ev.gap, 0.0);
+    }
+
+    /// The lazy clustering cache: same size is an Arc bump, a new size
+    /// rebuilds, and old handles stay valid across the rebuild.
+    #[test]
+    fn clustering_cache_reuses_and_rebuilds() {
+        let mut g = Gen::for_case(13, 0);
+        let a = g.dictionary(10, 40);
+        let shared = SharedDict::new(DictStore::Dense(a));
+        let c8 = shared.clustering(8);
+        let c8b = shared.clustering(8);
+        assert!(Arc::ptr_eq(&c8, &c8b), "same size must reuse the build");
+        assert_eq!(c8.group_size(), 8);
+        assert_eq!(c8.num_groups(), 5);
+        let c16 = shared.clustering(16);
+        assert_eq!(c16.group_size(), 16);
+        assert!(!Arc::ptr_eq(&c8, &c16));
+        // the old handle still answers after the slot was rebuilt
+        assert_eq!(c8.num_groups(), 5);
     }
 }

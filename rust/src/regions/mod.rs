@@ -168,6 +168,21 @@ impl RegionKind {
 /// per-atom correlations without extra matvecs.
 pub type StatCombo = (f64, f64);
 
+/// Relative inflation applied to every joint-screening group bound
+/// ([`SafeRegion::group_bound`]) before it is compared against λ.
+///
+/// In exact arithmetic the group bound dominates each member's
+/// per-atom bound, so a group that screens implies every member
+/// screens and the keep mask is identical with grouping on or off.
+/// Floating point evaluates the two sides along different instruction
+/// sequences, whose results can disagree by a few ulps (~1e-16
+/// relative) — three orders of magnitude below this margin.  Inflating
+/// the group bound by `1e-12·(1 + |bound|)` therefore makes the
+/// real-arithmetic dominance hold *bitwise*: a group only screens when
+/// every member's individually computed bound is strictly below λ too.
+/// The cost is a vanishing loss of group-test power, never safety.
+pub const GROUP_FP_MARGIN: f64 = 1e-12;
+
 /// The geometric payload of a safe region.
 #[derive(Clone, Debug)]
 pub enum RegionGeom {
@@ -337,6 +352,48 @@ impl SafeRegion {
                 d.max_abs_inner_stat(atc, atg, anrm)
             }
         }
+    }
+
+    /// Upper bound on `sup_{u∈R} ‖u‖` — the dual-norm factor of the
+    /// joint screening test.  For spheres this is exact
+    /// (`‖center‖ + radius`); for domes we bound over the enclosing
+    /// ball, ignoring the half-space cut.  That is conservative: it
+    /// can only weaken group tests (fewer groups certified at once),
+    /// never admit an unsafe one.  O(m), once per screening round.
+    pub fn sup_dual_norm(&self) -> f64 {
+        let b = match &self.geom {
+            RegionGeom::Sphere(b) => b,
+            RegionGeom::Dome(d) => &d.ball,
+        };
+        linalg::norm2(&b.center) + b.radius
+    }
+
+    /// The joint screening test bound (Herzet & Drémeau): for any atom
+    /// `a` with `‖a − a_pivot‖ ≤ ball_dist`,
+    ///
+    /// ```text
+    ///   sup_{u∈R} |⟨a, u⟩|  ≤  sup_{u∈R} |⟨a_pivot, u⟩|
+    ///                          + ball_dist · sup_{u∈R} ‖u‖
+    /// ```
+    ///
+    /// `pivot_bound` is the pivot's own [`max_abs_inner_stat`]
+    /// (exactly the flat pass's per-atom bound), `sup_u` the cached
+    /// [`sup_dual_norm`].  The result is inflated by
+    /// [`GROUP_FP_MARGIN`] so that in floating point too, a group
+    /// bound below λ certifies every member's per-atom bound is below
+    /// λ — the bitwise-parity contract of grouped screening.
+    ///
+    /// [`max_abs_inner_stat`]: Self::max_abs_inner_stat
+    /// [`sup_dual_norm`]: Self::sup_dual_norm
+    #[inline]
+    pub fn group_bound(
+        &self,
+        pivot_bound: f64,
+        ball_dist: f64,
+        sup_u: f64,
+    ) -> f64 {
+        let core = pivot_bound + ball_dist * sup_u;
+        core + GROUP_FP_MARGIN * (1.0 + core.abs())
     }
 
     /// Flop cost of *building* this region's statistics for `n_active`
@@ -577,6 +634,57 @@ mod tests {
                 // strictly and the radii still disagree the wrong way.
                 if r_h > r_g + 1e-12 {
                     return Err(format!("holder rad {r_h} > gap rad {r_g}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The joint-screening bound chain: for every region kind and any
+    /// "cluster" of atoms, the group bound computed from one pivot and
+    /// the true pairwise distances dominates every member's per-atom
+    /// bound — with strict slack at least the fp margin, which is what
+    /// the grouped engine's bitwise-parity contract rests on.
+    #[test]
+    fn group_bound_dominates_member_bounds() {
+        Runner::new(131).cases(15).run("group bound dominance", |g| {
+            let (p, x, ev) = setup(g);
+            let n = p.n();
+            for kind in RegionKind::ALL {
+                let region = SafeRegion::build(kind, &p, &x, &ev);
+                let sup_u = region.sup_dual_norm();
+                // treat a random contiguous window as one cluster,
+                // pivoting on its first atom
+                let start = g.usize_in(0, n - 1);
+                let end = (start + g.usize_in(1, 8)).min(n);
+                let pivot = start;
+                let pb = region.max_abs_inner_stat(
+                    p.aty()[pivot],
+                    ev.atr[pivot],
+                    p.col_norms()[pivot],
+                );
+                for i in start..end {
+                    let diff: Vec<f64> = p
+                        .a()
+                        .col(i)
+                        .iter()
+                        .zip(p.a().col(pivot))
+                        .map(|(a, b)| a - b)
+                        .collect();
+                    let dist = linalg::norm2(&diff);
+                    let gb = region.group_bound(pb, dist, sup_u);
+                    let mb = region.max_abs_inner_stat(
+                        p.aty()[i],
+                        ev.atr[i],
+                        p.col_norms()[i],
+                    );
+                    if mb >= gb {
+                        return Err(format!(
+                            "{} atom {i}: member bound {mb} >= group \
+                             bound {gb} (pivot {pivot})",
+                            kind.name()
+                        ));
+                    }
                 }
             }
             Ok(())

@@ -18,22 +18,64 @@
 //! first update step, so its safety rests on the region, not on any
 //! engine state.
 //!
+//! ## The grouped (joint-screening) pass
+//!
+//! With [`GroupingPolicy::Contiguous`] the round runs **two phases**
+//! instead of one flat sweep.  The active list is ascending, so the
+//! members of each [`AtomClustering`] block form contiguous *runs* in
+//! it, detectable in O(k) integer work:
+//!
+//! 1. **group tests** — each long-enough run is tested once, pivoting
+//!    on its *first active member* `p` (the precomputed representative
+//!    may already be screened, and `Aᵀr` exists only for active
+//!    atoms): every member `i` satisfies
+//!    `‖a_i − a_p‖ ≤ radius(g) + dist_to_rep(p)`, so
+//!    [`SafeRegion::group_bound`] with that slack and the cached
+//!    `sup_{u∈R}‖u‖` dominates every member's per-atom bound.  A group
+//!    bound below λ certifies the whole run screened with **one**
+//!    bound evaluation;
+//! 2. **per-atom tests** — surviving runs, and runs too short to be
+//!    worth a group test, fall through to *exactly* the flat pass's
+//!    per-atom body.
+//!
+//! A run dissolves to per-atom tests when fewer than
+//! `max(4, ⌈group_size·threshold⌉)` of its atoms are still active —
+//! the same "enough of it is dead" fraction the
+//! [`CompactionPolicy`] applies to the working set as a whole, so
+//! grouping fades out exactly where compaction kicks in.
+//!
+//! **Parity contract**: the keep mask is bitwise identical with
+//! grouping on or off (see [`crate::regions::GROUP_FP_MARGIN`] for
+//! why that survives floating point), and the flop meter charges the
+//! grouped round exactly the flat round's cost model — like working-set
+//! compaction, grouping is a *wall-clock* optimization the flop-based
+//! figures never see.  Per-round savings are reported out-of-band via
+//! [`ScreeningEngine::group_stats`].
+//!
 //! [`SolverConfig::screen_every`]: crate::solver::SolverConfig::screen_every
 //! [`SolverConfig::seed_region`]: crate::solver::SolverConfig::seed_region
 //! [`RegionKind::Sequential`]: crate::regions::RegionKind::Sequential
+//! [`GroupingPolicy::Contiguous`]: super::GroupingPolicy::Contiguous
 
-use super::ScreeningState;
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+use std::sync::Arc;
+
+use super::{GroupingPolicy, ScreenConfig, ScreeningState};
 use crate::flops::FlopCounter;
 use crate::par::ParContext;
-use crate::problem::LassoProblem;
+use crate::problem::{AtomClustering, LassoProblem};
 use crate::regions::SafeRegion;
-use crate::workset::WorkingSet;
+use crate::workset::{CompactionPolicy, WorkingSet};
 
 /// Stateless screening executor; holds scratch to avoid per-round
-/// allocation.
+/// allocation, plus the grouped-pass configuration and its lazily
+/// fetched clustering handle.
 #[derive(Default)]
 pub struct ScreeningEngine {
     keep: Vec<bool>,
+    config: ScreenConfig,
+    cluster: Option<Arc<AtomClustering>>,
+    gstats: GroupCounters,
 }
 
 /// Result of one screening round.
@@ -43,9 +85,135 @@ pub struct ScreenOutcome {
     pub removed: usize,
 }
 
+/// Cumulative wall-clock diagnostics of the grouped pass (across every
+/// round this engine ran).  Deliberately **not** part of
+/// [`ScreenOutcome`] or any `SolveReport`: reports stay bitwise
+/// identical with grouping on or off, and these counters are how the
+/// savings are observed anyway (`benches/screening_overhead.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GroupPassStats {
+    /// Grouped screening rounds run.
+    pub rounds: usize,
+    /// Group tests evaluated (one pivot bound + one combine each).
+    pub groups_tested: usize,
+    /// Group tests that certified their whole run screened.
+    pub groups_screened: usize,
+    /// Atoms certified screened by a group test — no individual test.
+    pub atoms_certified: usize,
+    /// Atoms that received the ordinary per-atom test.
+    pub atoms_tested: usize,
+}
+
+impl GroupPassStats {
+    /// Fraction of processed atoms that needed their own test — the
+    /// sublinearity headline (1.0 when grouping never fired).
+    pub fn tested_fraction(&self) -> f64 {
+        let total = self.atoms_tested + self.atoms_certified;
+        if total == 0 {
+            1.0
+        } else {
+            self.atoms_tested as f64 / total as f64
+        }
+    }
+}
+
+/// Shard-safe accumulators behind [`GroupPassStats`] (relaxed atomics:
+/// the counts are diagnostics, never part of the result).
+#[derive(Debug, Default)]
+struct GroupCounters {
+    rounds: AtomicUsize,
+    groups_tested: AtomicUsize,
+    groups_screened: AtomicUsize,
+    atoms_certified: AtomicUsize,
+    atoms_tested: AtomicUsize,
+}
+
+/// One stretch of the active list, by *position* `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Segment {
+    start: usize,
+    end: usize,
+    /// `Some(g)` — a run of cluster group `g` long enough for a group
+    /// test; `None` — tested per-atom (short runs, merged together).
+    group: Option<usize>,
+}
+
+/// Minimum surviving run length for a group test to pay for itself:
+/// one group test costs about two per-atom tests (pivot bound +
+/// combine), so runs shorter than this always dissolve.
+const MIN_GROUP_RUN: usize = 4;
+
+/// A run dissolves to per-atom tests when fewer than this many of its
+/// group's atoms remain active — `⌈group_size·threshold⌉` mirrors the
+/// working set's own rebuild fraction, so grouping and compaction
+/// agree on when a structure is "mostly dead".
+fn min_group_run(group_size: usize, policy: CompactionPolicy) -> usize {
+    let from_policy = match policy {
+        CompactionPolicy::Threshold(t) => {
+            (group_size as f64 * t.clamp(0.0, 1.0)).ceil() as usize
+        }
+        CompactionPolicy::Disabled => 0,
+    };
+    MIN_GROUP_RUN.max(from_policy)
+}
+
+/// Split the (ascending) active list into maximal same-group runs;
+/// runs of at least `min_run` become group segments, everything else
+/// merges into per-atom segments.  O(k) integer work.
+fn build_segments(
+    active: &[usize],
+    group_size: usize,
+    min_run: usize,
+) -> Vec<Segment> {
+    let mut segs: Vec<Segment> = Vec::new();
+    let mut k = 0;
+    while k < active.len() {
+        let g = active[k] / group_size;
+        let mut e = k + 1;
+        while e < active.len() && active[e] / group_size == g {
+            e += 1;
+        }
+        if e - k >= min_run {
+            segs.push(Segment { start: k, end: e, group: Some(g) });
+        } else if let Some(last) =
+            segs.last_mut().filter(|s| s.group.is_none())
+        {
+            last.end = e;
+        } else {
+            segs.push(Segment { start: k, end: e, group: None });
+        }
+        k = e;
+    }
+    segs
+}
+
 impl ScreeningEngine {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An engine with an explicit screening configuration (the solvers
+    /// construct theirs from [`SolverConfig::screen`]).
+    ///
+    /// [`SolverConfig::screen`]: crate::solver::SolverConfig::screen
+    pub fn with_config(config: ScreenConfig) -> Self {
+        ScreeningEngine { config, ..Default::default() }
+    }
+
+    pub fn config(&self) -> ScreenConfig {
+        self.config
+    }
+
+    /// Cumulative grouped-pass diagnostics (zeros when grouping never
+    /// ran).
+    pub fn group_stats(&self) -> GroupPassStats {
+        GroupPassStats {
+            rounds: self.gstats.rounds.load(Relaxed),
+            groups_tested: self.gstats.groups_tested.load(Relaxed),
+            groups_screened: self.gstats.groups_screened.load(Relaxed),
+            atoms_certified: self.gstats.atoms_certified.load(Relaxed),
+            atoms_tested: self.gstats.atoms_tested.load(Relaxed),
+        }
     }
 
     /// Run `region`'s test over the current active set.
@@ -103,6 +271,21 @@ impl ScreeningEngine {
         let lam = p.lam() * (1.0 - 1e-9);
         self.keep.clear();
         self.keep.resize(active.len(), false);
+        if let GroupingPolicy::Contiguous { group_size } =
+            self.config.grouping
+        {
+            if !active.is_empty() {
+                self.grouped_pass(
+                    region, p, state, ws, atr_compact, lam, group_size, ctx,
+                );
+            }
+            // Same flat-pass charges as below: grouping is wall-clock
+            // only, so the flop meter (and every report built from it)
+            // never sees it — exactly like working-set compaction.
+            flops.charge(region.setup_flops(active.len(), p.m()));
+            flops.charge(region.test_flops(active.len()));
+            return &self.keep;
+        }
         let shards = ctx.shards_for(active.len());
         if let Some((aty_c, norms_c)) = ws.compact_stats() {
             debug_assert_eq!(aty_c.len(), active.len());
@@ -168,6 +351,129 @@ impl ScreeningEngine {
         flops.charge(region.setup_flops(active.len(), p.m()));
         flops.charge(region.test_flops(active.len()));
         &self.keep
+    }
+
+    /// The two-phase grouped round (module docs): group tests over
+    /// contiguous active runs first, the flat per-atom body inside
+    /// whatever survives.  Writes `self.keep`; bitwise identical to
+    /// the flat pass by the group-bound dominance argument.
+    #[allow(clippy::too_many_arguments)]
+    fn grouped_pass(
+        &mut self,
+        region: &SafeRegion,
+        p: &LassoProblem,
+        state: &ScreeningState,
+        ws: &WorkingSet,
+        atr_compact: &[f64],
+        lam: f64,
+        group_size: usize,
+        ctx: &ParContext,
+    ) {
+        let active = state.active();
+        // First grouped round of this engine: fetch (or build) the
+        // dictionary-wide clustering once; every later round and every
+        // sibling solve over the same `SharedDict` reuses it.
+        let cached = matches!(
+            &self.cluster,
+            Some(c) if c.group_size() == group_size.max(1)
+        );
+        if !cached {
+            self.cluster = Some(p.shared().clustering(group_size));
+        }
+        let cluster = self.cluster.as_ref().unwrap().clone();
+        let min_run = min_group_run(cluster.group_size(), ws.policy());
+        let segments = build_segments(active, cluster.group_size(), min_run);
+        let u_max = region.sup_dual_norm();
+        self.gstats.rounds.fetch_add(1, Relaxed);
+
+        let compact = ws.compact_stats();
+        let aty_full = p.aty();
+        let norms_full = p.col_norms();
+        // Per-position stats from whichever source the flat pass would
+        // read — the compact caches are position-aligned bitwise
+        // copies, so the bound arithmetic below is the flat pass's
+        // exactly.
+        let stat_at = move |k: usize| -> (f64, f64) {
+            match compact {
+                Some((aty_c, norms_c)) => (aty_c[k], norms_c[k]),
+                None => {
+                    let j = active[k];
+                    (aty_full[j], norms_full[j])
+                }
+            }
+        };
+        let cluster_ref: &AtomClustering = &cluster;
+        let gstats = &self.gstats;
+        let proc = |segs: &[Segment], dst: &mut [bool], base: usize| {
+            for seg in segs {
+                let (s, e) = (seg.start, seg.end);
+                if let Some(g) = seg.group {
+                    gstats.groups_tested.fetch_add(1, Relaxed);
+                    // Pivot on the first *active* member: ‖a_i − a_s‖
+                    // ≤ radius(g) + dist_to_rep(active[s]) for every
+                    // member i of the run (triangle inequality through
+                    // the representative).
+                    let (aty_p, nrm_p) = stat_at(s);
+                    let pb = region
+                        .max_abs_inner_stat(aty_p, atr_compact[s], nrm_p);
+                    let slack = cluster_ref.radius(g)
+                        + cluster_ref.dist_to_rep(active[s]);
+                    if region.group_bound(pb, slack, u_max) < lam {
+                        // Whole run certified screened: the group
+                        // bound dominates every member's per-atom
+                        // bound, so the flat pass would clear these
+                        // slots too.  `dst` is false-initialized —
+                        // nothing to write.
+                        gstats.groups_screened.fetch_add(1, Relaxed);
+                        gstats.atoms_certified.fetch_add(e - s, Relaxed);
+                        continue;
+                    }
+                }
+                gstats.atoms_tested.fetch_add(e - s, Relaxed);
+                for k in s..e {
+                    let (aty_k, nrm_k) = stat_at(k);
+                    let bound = region
+                        .max_abs_inner_stat(aty_k, atr_compact[k], nrm_k);
+                    dst[k - base] = bound >= lam;
+                }
+            }
+        };
+        let shards = ctx.shards_for(active.len());
+        if shards <= 1 || segments.len() <= 1 {
+            proc(&segments, &mut self.keep, 0);
+        } else {
+            // Shard on segment boundaries: buckets of whole segments
+            // covering ~active/shards atoms each, each writing its
+            // own disjoint mask slice.  Every bound is computed by the
+            // same instruction sequence in every bucket layout, so the
+            // mask stays bitwise independent of threading.
+            let target = active.len().div_ceil(shards);
+            let mut items: Vec<(&[Segment], &mut [bool], usize)> =
+                Vec::new();
+            let mut segs_rest: &[Segment] = &segments;
+            let mut keep_rest: &mut [bool] = &mut self.keep;
+            let mut base = 0;
+            while !segs_rest.is_empty() {
+                let mut take = 0;
+                let mut count = 0;
+                while take < segs_rest.len() && count < target {
+                    count += segs_rest[take].end - segs_rest[take].start;
+                    take += 1;
+                }
+                let (bucket, sr) = segs_rest.split_at(take);
+                segs_rest = sr;
+                let (dst, kr) = {
+                    let tmp = keep_rest;
+                    tmp.split_at_mut(count)
+                };
+                keep_rest = kr;
+                items.push((bucket, dst, base));
+                base += count;
+            }
+            ctx.run_items(items, |(segs, dst, base)| {
+                proc(segs, dst, base);
+            });
+        }
     }
 
     /// Screen and compact `state`, the aligned coefficient vectors, and
@@ -454,6 +760,220 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn segments_partition_the_active_list() {
+        // group_size 8 over a gappy active list: runs of length >= 4
+        // become group segments, shorter runs merge into per-atom
+        // stretches, and together they cover every position once.
+        let active = vec![0, 1, 2, 3, 8, 9, 16, 17, 18, 19, 20];
+        let segs = build_segments(&active, 8, 4);
+        assert_eq!(
+            segs,
+            vec![
+                Segment { start: 0, end: 4, group: Some(0) },
+                Segment { start: 4, end: 6, group: None },
+                Segment { start: 6, end: 11, group: Some(2) },
+            ]
+        );
+        // A min_run longer than any run dissolves everything into one
+        // merged per-atom segment.
+        let segs = build_segments(&active, 8, 100);
+        assert_eq!(
+            segs,
+            vec![Segment { start: 0, end: 11, group: None }]
+        );
+        // Empty active list → no segments.
+        assert!(build_segments(&[], 8, 4).is_empty());
+    }
+
+    #[test]
+    fn min_run_tracks_compaction_threshold() {
+        use crate::workset::CompactionPolicy;
+        assert_eq!(min_group_run(64, CompactionPolicy::Disabled), 4);
+        assert_eq!(
+            min_group_run(64, CompactionPolicy::Threshold(0.25)),
+            16
+        );
+        // The floor wins for tiny groups and out-of-range thresholds.
+        assert_eq!(min_group_run(4, CompactionPolicy::Threshold(0.25)), 4);
+        assert_eq!(
+            min_group_run(64, CompactionPolicy::Threshold(0.0)),
+            4
+        );
+    }
+
+    /// The load-bearing invariant: the grouped mask is bitwise the flat
+    /// mask for every region kind, group size (including the degenerate
+    /// 1 and > n), and thread count.
+    #[test]
+    fn grouped_mask_matches_flat_bitwise() {
+        use super::super::ScreenConfig;
+        Runner::new(241).cases(8).run("grouped keep parity", |g| {
+            let (p, _) = make(g);
+            let mut x = vec![0.0; p.n()];
+            let step = p.default_step();
+            for _ in 0..3 {
+                let ev = p.eval(&x);
+                for i in 0..p.n() {
+                    x[i] = linalg::soft_threshold_scalar(
+                        x[i] + step * ev.atr[i],
+                        step * p.lam(),
+                    );
+                }
+            }
+            let ev = p.eval(&x);
+            for kind in RegionKind::ALL {
+                let region = SafeRegion::build(kind, &p, &x, &ev);
+                let state = ScreeningState::new(p.n());
+                let mut flat = ScreeningEngine::new();
+                let mut flops = FlopCounter::new();
+                let base = flat
+                    .compute_keep(
+                        &region,
+                        &p,
+                        &state,
+                        &ev.atr,
+                        &mut flops,
+                        &ParContext::sequential(),
+                    )
+                    .to_vec();
+                for gsize in [1usize, 5, 16, p.n(), 2 * p.n()] {
+                    let mut grouped = ScreeningEngine::with_config(
+                        ScreenConfig::grouped(gsize),
+                    );
+                    for threads in [1usize, 4] {
+                        let ctx = ParContext::new_pool(threads, 1);
+                        let mask = grouped
+                            .compute_keep(
+                                &region, &p, &state, &ev.atr, &mut flops,
+                                &ctx,
+                            )
+                            .to_vec();
+                        if mask != base {
+                            return Err(format!(
+                                "{}: grouped mask diverged at group \
+                                 size {gsize}, {threads} threads",
+                                kind.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Grouped rounds charge exactly the flat cost model — the flop
+    /// meter (hence every report) cannot tell the modes apart.
+    #[test]
+    fn grouped_round_charges_flat_flops() {
+        use super::super::ScreenConfig;
+        let mut g = Gen::for_case(17, 0);
+        let (p, x) = make(&mut g);
+        let ev = p.eval(&x);
+        for kind in RegionKind::ALL {
+            let region = SafeRegion::build(kind, &p, &x, &ev);
+            let state = ScreeningState::new(p.n());
+            let mut f_flat = FlopCounter::new();
+            let mut f_grp = FlopCounter::new();
+            ScreeningEngine::new().compute_keep(
+                &region,
+                &p,
+                &state,
+                &ev.atr,
+                &mut f_flat,
+                &ParContext::sequential(),
+            );
+            ScreeningEngine::with_config(ScreenConfig::grouped(8))
+                .compute_keep(
+                    &region,
+                    &p,
+                    &state,
+                    &ev.atr,
+                    &mut f_grp,
+                    &ParContext::sequential(),
+                );
+            assert_eq!(
+                f_flat.total(),
+                f_grp.total(),
+                "{}: grouped round charged differently",
+                kind.name()
+            );
+        }
+    }
+
+    /// On a dictionary of near-duplicate column blocks the group tests
+    /// must actually fire (certify whole runs) — and the mask must
+    /// still be bitwise the flat one.
+    #[test]
+    fn group_tests_fire_on_clustered_dictionary() {
+        use super::super::ScreenConfig;
+        use crate::linalg::Mat;
+        let mut g = Gen::for_case(77, 0);
+        let (m, n, gsize) = (8usize, 64usize, 8usize);
+        let mut cols = Vec::with_capacity(m * n);
+        for _ in 0..(n / gsize) {
+            let mut base = g.vec_normal(m);
+            let nb = linalg::norm2(&base).max(1e-9);
+            for v in &mut base {
+                *v /= nb;
+            }
+            // exact duplicates: the block radius is fp-noise sized, so
+            // the group bound is essentially the pivot bound
+            for _ in 0..gsize {
+                cols.extend_from_slice(&base);
+            }
+        }
+        let a = Mat::from_col_major(m, n, cols);
+        let y = g.observation(m);
+        let mut aty = vec![0.0; n];
+        linalg::gemv_t(&a, &y, &mut aty);
+        let lam = 0.9 * linalg::norm_inf(&aty).max(1e-9);
+        let p = LassoProblem::new(a, y, lam);
+        let x = vec![0.0; p.n()];
+        let ev = p.eval(&x);
+        // StaticSphere screens most non-maximal blocks at this ratio.
+        let region =
+            SafeRegion::build(RegionKind::StaticSphere, &p, &x, &ev);
+        let state = ScreeningState::new(p.n());
+        let mut flops = FlopCounter::new();
+        let mut flat = ScreeningEngine::new();
+        let base = flat
+            .compute_keep(
+                &region,
+                &p,
+                &state,
+                &ev.atr,
+                &mut flops,
+                &ParContext::sequential(),
+            )
+            .to_vec();
+        assert!(
+            base.iter().any(|&k| !k),
+            "setup failed: nothing screened at ratio 0.9"
+        );
+        let mut grouped =
+            ScreeningEngine::with_config(ScreenConfig::grouped(gsize));
+        let mask = grouped
+            .compute_keep(
+                &region,
+                &p,
+                &state,
+                &ev.atr,
+                &mut flops,
+                &ParContext::sequential(),
+            )
+            .to_vec();
+        assert_eq!(mask, base, "grouped mask diverged");
+        let stats = grouped.group_stats();
+        assert_eq!(stats.rounds, 1);
+        assert!(
+            stats.atoms_certified > 0,
+            "no group certified on exact-duplicate blocks: {stats:?}"
+        );
+        assert!(stats.tested_fraction() < 1.0);
     }
 
     #[test]

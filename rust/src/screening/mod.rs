@@ -15,7 +15,55 @@
 
 pub mod engine;
 
-pub use engine::ScreeningEngine;
+pub use engine::{GroupPassStats, ScreeningEngine};
+
+/// Whether (and how) screening rounds run joint **group tests** before
+/// falling back to per-atom tests (see [`engine`] and
+/// [`crate::problem::AtomClustering`]).
+///
+/// Grouping is a pure wall-clock knob: the keep mask, every
+/// `SolveReport` field and the flop meter are bitwise identical for
+/// every variant ([`crate::regions::GROUP_FP_MARGIN`] is what makes
+/// the dominance argument hold in floating point).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupingPolicy {
+    /// Per-atom tests only (the flat pass; the default).
+    Disabled,
+    /// Contiguous index blocks of `group_size` atoms
+    /// (`group = j / group_size`) — natural clusters for the shifted
+    /// Toeplitz/convolutional dictionary family.
+    Contiguous { group_size: usize },
+}
+
+impl Default for GroupingPolicy {
+    fn default() -> Self {
+        GroupingPolicy::Disabled
+    }
+}
+
+/// Screening-pass configuration carried by
+/// [`crate::solver::SolverConfig::screen`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScreenConfig {
+    pub grouping: GroupingPolicy,
+}
+
+impl ScreenConfig {
+    /// Default block size of `--group-screening`: wide enough that a
+    /// certified group saves a meaningful slice of the round, narrow
+    /// enough that Toeplitz shift clusters stay tight.
+    pub const DEFAULT_GROUP_SIZE: usize = 64;
+
+    /// Group screening on, with contiguous blocks of `group_size`
+    /// (clamped to ≥ 1) atoms.
+    pub fn grouped(group_size: usize) -> Self {
+        ScreenConfig {
+            grouping: GroupingPolicy::Contiguous {
+                group_size: group_size.max(1),
+            },
+        }
+    }
+}
 
 /// Tracks which atoms survive; indices are into the original dictionary.
 #[derive(Clone, Debug)]

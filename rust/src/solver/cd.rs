@@ -31,7 +31,7 @@ pub(crate) fn run(
     let lam = p.lam();
 
     let mut state = ScreeningState::new(p.n());
-    let mut engine = ScreeningEngine::new();
+    let mut engine = ScreeningEngine::with_config(cfg.screen);
 
     let mut x: Vec<f64> = match x0 {
         Some(x) => x.to_vec(),

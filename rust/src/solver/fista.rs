@@ -48,7 +48,7 @@ pub(crate) fn run(
     let lam = p.lam();
 
     let mut state = ScreeningState::new(p.n());
-    let mut engine = ScreeningEngine::new();
+    let mut engine = ScreeningEngine::with_config(cfg.screen);
 
     // Compact iterates.
     let mut x_cur: Vec<f64> = match x0 {

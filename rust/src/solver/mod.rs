@@ -139,6 +139,12 @@ pub struct SolverConfig {
     /// Purely a performance knob: results are bitwise identical for
     /// every policy.
     pub compaction: CompactionPolicy,
+    /// Screening-pass configuration — joint (group) screening on/off
+    /// (see [`crate::screening::ScreenConfig`] and the engine docs).
+    /// Purely a performance knob: the keep sets, and therefore every
+    /// report field including the flop meter, are bitwise identical
+    /// for every value (`rust/tests/group_parity.rs`).
+    pub screen: crate::screening::ScreenConfig,
 }
 
 impl Default for SolverConfig {
@@ -152,6 +158,7 @@ impl Default for SolverConfig {
             record_trace: false,
             par: ParContext::sequential(),
             compaction: CompactionPolicy::default(),
+            screen: crate::screening::ScreenConfig::default(),
         }
     }
 }

@@ -1,0 +1,257 @@
+//! Parity tests for the joint (grouped) screening pass: turning
+//! `ScreenConfig::grouped` on — at any group size, on any thread
+//! count, over either dictionary store, under any compaction policy —
+//! must be **bitwise invisible** in the `SolveReport`, flops included.
+//!
+//! This is the safety net for the group-bound design promise: a group
+//! test only ever *certifies* atoms the flat per-atom pass would also
+//! screen (the pivot bound plus the certified cluster slack dominates
+//! every member bound, `GROUP_FP_MARGIN` absorbing the fp noise), and
+//! the flop meter charges the grouped round exactly the flat cost
+//! model.  If either drifts — one mask slot, one flop — these fail.
+
+use holder_screening::dict::{generate, DictKind, InstanceConfig};
+use holder_screening::flops::FlopCounter;
+use holder_screening::linalg;
+use holder_screening::par::ParContext;
+use holder_screening::problem::LassoProblem;
+use holder_screening::proptest::Gen;
+use holder_screening::regions::{RegionKind, SafeRegion};
+use holder_screening::screening::{
+    ScreenConfig, ScreeningEngine, ScreeningState,
+};
+use holder_screening::solver::{
+    solve, Budget, SolverConfig, SolverKind,
+};
+use holder_screening::sparse::DictFormat;
+use holder_screening::workset::{CompactionPolicy, WorkingSet};
+
+const POLICIES: [CompactionPolicy; 3] = [
+    CompactionPolicy::Disabled,
+    CompactionPolicy::Threshold(0.0),
+    CompactionPolicy::Threshold(0.25),
+];
+
+fn gaussian(seed: u64, m: usize, n: usize, lam_ratio: f64) -> LassoProblem {
+    let mut g = Gen::for_case(seed, 0);
+    let a = g.dictionary(m, n);
+    let y = g.observation(m);
+    let mut aty = vec![0.0; n];
+    linalg::gemv_t(&a, &y, &mut aty);
+    let lam = lam_ratio * linalg::norm_inf(&aty).max(1e-9);
+    LassoProblem::new(a, y, lam)
+}
+
+/// The same truncated-pulse Toeplitz matrix in both stores — adjacent
+/// atoms are near-duplicates, so the group tests genuinely fire here.
+fn toeplitz_pair(
+    m: usize,
+    n: usize,
+    seed: u64,
+) -> (LassoProblem, LassoProblem) {
+    let mk = |format| InstanceConfig {
+        m,
+        n,
+        kind: DictKind::Toeplitz,
+        lam_ratio: 0.8,
+        pulse_width: 4.0,
+        pulse_cutoff: 8.0,
+        format,
+    };
+    let pd = generate(&mk(DictFormat::Dense), seed).problem;
+    let pc = generate(&mk(DictFormat::Csc), seed).problem;
+    (pd, pc)
+}
+
+/// Fixed iterations: comparable whole trajectories without waiting for
+/// convergence on the ill-conditioned Toeplitz dictionary.
+fn fixed_iters(n: usize) -> Budget {
+    Budget { max_iters: n, max_flops: None, target_gap: 0.0 }
+}
+
+/// The acceptance-level guarantee: for every solver, grouping ×
+/// threads × compaction yields the flat sequential uncompacted
+/// report, bit for bit.
+#[test]
+fn grouped_solve_reports_bitwise_match_flat() {
+    let (pd, _) = toeplitz_pair(400, 256, 901);
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        let mk = |par: ParContext,
+                  compaction: CompactionPolicy,
+                  screen: ScreenConfig| SolverConfig {
+            kind,
+            budget: fixed_iters(40),
+            region: Some(RegionKind::HolderDome),
+            par,
+            compaction,
+            screen,
+            ..Default::default()
+        };
+        let base = solve(
+            &pd,
+            &mk(
+                ParContext::sequential(),
+                CompactionPolicy::Disabled,
+                ScreenConfig::default(),
+            ),
+        );
+        assert!(base.screened > 0, "{kind:?}: screening never fired");
+        for threads in [1usize, 8] {
+            for policy in POLICIES {
+                let rep = solve(
+                    &pd,
+                    &mk(
+                        ParContext::new_pool(threads, 1),
+                        policy,
+                        ScreenConfig::grouped(64),
+                    ),
+                );
+                base.assert_bitwise_eq(
+                    &rep,
+                    &format!("grouped {kind:?} {threads}t {policy:?}"),
+                );
+            }
+        }
+    }
+}
+
+/// Grouping composes with the CSC store: a grouped CSC solve matches
+/// the flat dense solve of the same matrix bit for bit.
+#[test]
+fn grouped_csc_solve_matches_flat_dense() {
+    let (pd, pc) = toeplitz_pair(400, 192, 907);
+    let mk = |screen: ScreenConfig, par: ParContext| SolverConfig {
+        kind: SolverKind::Fista,
+        budget: fixed_iters(40),
+        region: Some(RegionKind::HolderDome),
+        screen,
+        par,
+        ..Default::default()
+    };
+    let base = solve(&pd, &mk(ScreenConfig::default(), ParContext::sequential()));
+    assert!(base.screened > 0, "screening never fired");
+    for threads in [1usize, 8] {
+        let rep = solve(
+            &pc,
+            &mk(ScreenConfig::grouped(64), ParContext::new_pool(threads, 1)),
+        );
+        base.assert_bitwise_eq(&rep, &format!("grouped csc {threads}t"));
+    }
+}
+
+/// Degenerate clusterings are still bitwise invisible: one atom per
+/// group, one group holding the whole dictionary, and a group size
+/// beyond n (a single underfull group).
+#[test]
+fn degenerate_group_sizes_are_bitwise_invisible() {
+    let p = gaussian(911, 40, 300, 0.7);
+    let mk = |screen: ScreenConfig| SolverConfig {
+        kind: SolverKind::Ista,
+        budget: Budget::gap(1e-10),
+        region: Some(RegionKind::HolderDome),
+        screen,
+        ..Default::default()
+    };
+    let base = solve(&p, &mk(ScreenConfig::default()));
+    assert!(base.screened > 0, "screening never fired");
+    for gsize in [1usize, 64, p.n(), 2 * p.n()] {
+        let rep = solve(&p, &mk(ScreenConfig::grouped(gsize)));
+        base.assert_bitwise_eq(&rep, &format!("group size {gsize}"));
+    }
+}
+
+/// Round-by-round `ScreenOutcome` parity driven through the engine
+/// directly, for every region kind: round 1 empties some groups, so
+/// round 2 exercises partially- and fully-emptied clusters (short
+/// surviving runs must dissolve to per-atom tests, never drift).
+#[test]
+fn screen_outcomes_match_round_by_round() {
+    let (pd, _) = toeplitz_pair(400, 256, 919);
+    let p = pd;
+    let step = p.default_step();
+    for kind in RegionKind::ALL {
+        // Two independent engine+state tracks, flat vs grouped.
+        let mut st_f = ScreeningState::new(p.n());
+        let mut st_g = ScreeningState::new(p.n());
+        let mut ws_f = WorkingSet::new(CompactionPolicy::Threshold(0.0), p.n());
+        let mut ws_g = WorkingSet::new(CompactionPolicy::Threshold(0.0), p.n());
+        let mut eng_f = ScreeningEngine::new();
+        let mut eng_g =
+            ScreeningEngine::with_config(ScreenConfig::grouped(16));
+        let mut flops = FlopCounter::new();
+        let mut x = vec![0.0; p.n()];
+        for round in 0..3 {
+            // A few ISTA steps on the full problem for a fresh couple.
+            for _ in 0..3 {
+                let ev = p.eval(&x);
+                for i in 0..p.n() {
+                    x[i] = linalg::soft_threshold_scalar(
+                        x[i] + step * ev.atr[i],
+                        step * p.lam(),
+                    );
+                }
+            }
+            let ev = p.eval(&x);
+            let region = SafeRegion::build(kind, &p, &x, &ev);
+            let atr_f = st_f.gather(&ev.atr);
+            let atr_g = st_g.gather(&ev.atr);
+            let out_f = eng_f.apply_and_compact(
+                &region,
+                &p,
+                &mut st_f,
+                &mut ws_f,
+                &atr_f,
+                &mut [],
+                &mut flops,
+                &ParContext::sequential(),
+            );
+            let out_g = eng_g.apply_and_compact(
+                &region,
+                &p,
+                &mut st_g,
+                &mut ws_g,
+                &atr_g,
+                &mut [],
+                &mut flops,
+                &ParContext::sequential(),
+            );
+            assert_eq!(
+                out_f.tested,
+                out_g.tested,
+                "{} round {round}: tested diverged",
+                kind.name()
+            );
+            assert_eq!(
+                out_f.removed,
+                out_g.removed,
+                "{} round {round}: removed diverged",
+                kind.name()
+            );
+            assert_eq!(
+                st_f.active(),
+                st_g.active(),
+                "{} round {round}: active sets diverged",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// The flop meter cannot tell grouping apart from flat — on a full
+/// solve, not just a single engine round (`SolveReport.flops` is
+/// covered by `assert_bitwise_eq` above; this pins the cheapest
+/// possible repro for bisecting).
+#[test]
+fn grouped_flop_totals_match_flat_exactly() {
+    let p = gaussian(929, 30, 200, 0.6);
+    let mk = |screen: ScreenConfig| SolverConfig {
+        kind: SolverKind::Fista,
+        budget: fixed_iters(25),
+        region: Some(RegionKind::GapDome),
+        screen,
+        ..Default::default()
+    };
+    let flat = solve(&p, &mk(ScreenConfig::default()));
+    let grouped = solve(&p, &mk(ScreenConfig::grouped(32)));
+    assert_eq!(flat.flops, grouped.flops, "flop meter saw the grouping");
+}

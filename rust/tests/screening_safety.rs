@@ -16,6 +16,7 @@ use holder_screening::path::{solve_path, PathConfig};
 use holder_screening::problem::LassoProblem;
 use holder_screening::proptest::{Gen, Runner};
 use holder_screening::regions::RegionKind;
+use holder_screening::screening::ScreenConfig;
 use holder_screening::solver::{
     solve, Budget, SolverConfig, SolverKind, StopReason,
 };
@@ -75,6 +76,96 @@ fn no_region_screens_the_final_support_any_solver() {
                     );
                 }
             }
+        }
+    }
+}
+
+/// The same bar with joint (group) screening on: a group test may only
+/// certify atoms the per-atom pass would also screen, so no
+/// (solver, region, group size) combination may ever lose a support
+/// atom — on the clustered Toeplitz dictionary where group tests
+/// genuinely fire, and on Gaussian where clusters are loose and the
+/// group bound almost never certifies.
+#[test]
+fn group_screening_never_screens_the_final_support() {
+    // Gaussian: loose clusters, the group bound almost never certifies
+    // — full solver × region × group-size grid at the usual gaps.
+    let mut cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    cfg.m = 30;
+    cfg.n = 100;
+    let p = generate(&cfg, 4).problem;
+    let support = reference_support(&p, 1e-12, 1e-4);
+    assert!(!support.is_empty(), "degenerate instance (empty support)");
+    for kind in SOLVERS {
+        for region in RegionKind::ALL {
+            for gsize in [8usize, 64] {
+                let rep = solve(
+                    &p,
+                    &SolverConfig {
+                        kind,
+                        budget: Budget::gap(1e-10),
+                        region: Some(region),
+                        screen: ScreenConfig::grouped(gsize),
+                        ..Default::default()
+                    },
+                );
+                assert_eq!(
+                    rep.stop,
+                    StopReason::Converged,
+                    "{} + {} grouped({gsize})",
+                    kind.name(),
+                    region.name()
+                );
+                for &i in &support {
+                    assert!(
+                        rep.x[i] != 0.0,
+                        "{} + {} grouped({gsize}) screened support \
+                         atom {i}",
+                        kind.name(),
+                        region.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Toeplitz twin of the grid above — adjacent atoms are tight shift
+/// clusters, so the group tests genuinely certify here (the dangerous
+/// direction for a bound bug).  Gaps are kept looser than the Gaussian
+/// grid: the >0.97-correlated atoms converge slowly at tiny shapes
+/// (see the fuzz test's note), and a 1e-9 gap already puts the
+/// solution error two orders below the support threshold.
+#[test]
+fn group_screening_is_safe_on_clustered_toeplitz() {
+    let mut cfg = InstanceConfig::paper(DictKind::Toeplitz, 0.8);
+    cfg.m = 100;
+    cfg.n = 120;
+    let p = generate(&cfg, 3).problem;
+    let support = reference_support(&p, 1e-10, 1e-3);
+    assert!(!support.is_empty(), "degenerate instance (empty support)");
+    for region in RegionKind::ALL {
+        let rep = solve(
+            &p,
+            &SolverConfig {
+                budget: Budget::gap(1e-9),
+                region: Some(region),
+                screen: ScreenConfig::grouped(8),
+                ..Default::default()
+            },
+        );
+        assert_eq!(
+            rep.stop,
+            StopReason::Converged,
+            "{} grouped(8) on toeplitz",
+            region.name()
+        );
+        for &i in &support {
+            assert!(
+                rep.x[i] != 0.0,
+                "{} grouped(8) screened toeplitz support atom {i}",
+                region.name()
+            );
         }
     }
 }
