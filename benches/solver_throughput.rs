@@ -1,8 +1,9 @@
 //! Bench: end-to-end solver throughput (native path) per region, plus
 //! the shared-store batch column (`BENCH_batch_solve.json`), the
 //! streamed session column (`BENCH_stream_solve.json`), the
-//! warm-replay session column (`BENCH_warm_session.json`) and the PJRT
-//! artifact path when `make artifacts` has run.
+//! warm-replay session column (`BENCH_warm_session.json`), the
+//! scheduling/hot-swap column (`BENCH_sched_session.json`) and the
+//! PJRT artifact path when `make artifacts` has run.
 //!
 //! This is the serving-facing number: solves/second to the target gap
 //! on the paper's instance family — for the batch column, how much one
@@ -342,6 +343,7 @@ fn warm_column(
             policy: SubmitPolicy::Block,
             cache_capacity: b_size,
             lambda_buckets: 16,
+            ..Default::default()
         },
     );
     let order: Vec<usize> = (0..b_size).collect();
@@ -418,6 +420,149 @@ fn warm_column(
         "cache_evictions",
         m.counter("session_cache_evictions").get(),
     );
+    log.write();
+
+    sched_column(quick, cfg, shared, rhs, scfg, b_size, threads, tau);
+}
+
+/// The scheduling/hot-swap column: the same observations at *mixed*
+/// hardness (λ/λ_max swept across the trace so predicted costs differ)
+/// through a cost-aware, class-prioritised session, with one mid-run
+/// dictionary hot-swap.  Parity first — cost-aware reordering, priority
+/// classes and the epoch machinery must be bitwise invisible in every
+/// report, per epoch — then timing, logged to
+/// `BENCH_sched_session.json`.  Scheduling moves only the latency
+/// histograms, so those are the numbers recorded.
+#[allow(clippy::too_many_arguments)]
+fn sched_column(
+    quick: bool,
+    cfg: &InstanceConfig,
+    shared: &SharedDict,
+    rhs: &[BatchRhs],
+    scfg: &SolverConfig,
+    b_size: usize,
+    threads: usize,
+    tau: f64,
+) {
+    use holder_screening::coordinator::{RequestClass, SchedPolicy};
+
+    println!(
+        "\n# scheduled session: {b_size} mixed-hardness RHS, cost-aware + \
+         priority classes + one hot-swap, gap target {tau:.0e}, \
+         {threads} threads"
+    );
+    // Sweep λ/λ_max across the trace: with one shared λ the cost proxy
+    // is flat and cost-aware ordering degenerates to FIFO.
+    let sched_rhs: Vec<BatchRhs> = rhs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let t = i as f64 / (b_size - 1).max(1) as f64;
+            BatchRhs::ratio(r.y.clone(), 0.35 + 0.5 * t)
+        })
+        .collect();
+    let refs0 = solve_many(shared, &sched_rhs, scfg);
+
+    let engine = JobEngine::new(threads);
+    // Queue deep enough to hold a whole burst: the backlog is what the
+    // scheduler reorders, so the bench keeps one resident on purpose.
+    let session = engine.open_session(
+        shared.clone(),
+        SessionConfig {
+            solver: scfg.clone(),
+            queue_depth: b_size.max(1),
+            policy: SubmitPolicy::Block,
+            scheduling: SchedPolicy::CostAware,
+            ..Default::default()
+        },
+    );
+    let class_of = |i: usize| RequestClass::ALL[i % RequestClass::ALL.len()];
+    let run_burst = |rhs: &[BatchRhs]| {
+        for (i, r) in rhs.iter().enumerate() {
+            session
+                .submit_classed(r.y.clone(), r.lam, class_of(i))
+                .unwrap();
+        }
+        session.drain() // sorted by id == submission order
+    };
+
+    // Epoch 0 parity: cost-aware + classes bitwise ≡ solve_many.
+    let done0 = run_burst(&sched_rhs);
+    for (i, (want, got)) in refs0.iter().zip(&done0).enumerate() {
+        want.assert_bitwise_eq(&got.report, &format!("sched rhs {i}"));
+    }
+
+    // One hot-swap to a fresh same-shape dictionary, then the same
+    // trace again: epoch-1 reports must be bitwise solve_many against
+    // the *new* dictionary, and epoch 0 must have retired.
+    let (swapped, _) = generate_batch(cfg, 1, 0);
+    let refs1 = solve_many(&swapped, &sched_rhs, scfg);
+    session.swap_dict(swapped);
+    let done1 = run_burst(&sched_rhs);
+    for (i, (want, got)) in refs1.iter().zip(&done1).enumerate() {
+        want.assert_bitwise_eq(&got.report, &format!("post-swap rhs {i}"));
+    }
+    assert_eq!(session.live_epochs(), 1, "old epoch must retire");
+    println!(
+        "#   parity: {} reports bitwise identical across cost-aware \
+         ordering and one hot-swap",
+        2 * b_size
+    );
+
+    let mut log = BenchLog::new("sched_session");
+    log.metric("m", cfg.m as u64);
+    log.metric("n", cfg.n as u64);
+    log.metric("batch", b_size as u64);
+    log.metric("threads", threads as u64);
+    log.metric("target_gap", tau);
+    log.metric("quick", quick);
+    log.metric("parity_rhs", 2 * b_size as u64);
+
+    let bench = if quick {
+        Bench::quick()
+    } else {
+        Bench { min_iters: 3, min_secs: 0.5, warmup_secs: 0.1 }
+    };
+    let s_sched = bench.report(
+        &format!(
+            "sched: cost-aware burst, {b_size} mixed-hardness arrivals"
+        ),
+        || run_burst(&sched_rhs).len(),
+    );
+    log.record("sched_session", &s_sched);
+    log.metric(
+        "sched_solves_per_sec",
+        b_size as f64 / s_sched.mean.max(1e-12),
+    );
+
+    let m = session.metrics();
+    for class in RequestClass::ALL {
+        let h =
+            m.histogram(&format!("session_queue_secs_{}", class.name()));
+        println!(
+            "    -> {} queue wait p50 {:.3}ms p99 {:.3}ms ({} reqs)",
+            class.name(),
+            h.quantile(0.50) * 1e3,
+            h.quantile(0.99) * 1e3,
+            h.count()
+        );
+        log.metric(
+            &format!("queue_wait_p99_{}_secs", class.name()),
+            h.quantile(0.99),
+        );
+    }
+    println!(
+        "    -> swaps {} | epochs retired {} | aged pops {}",
+        m.counter("session_swaps").get(),
+        m.counter("session_epochs_retired").get(),
+        m.counter("session_aged_pops").get()
+    );
+    log.metric("swaps", m.counter("session_swaps").get());
+    log.metric(
+        "epochs_retired",
+        m.counter("session_epochs_retired").get(),
+    );
+    log.metric("aged_pops", m.counter("session_aged_pops").get());
     log.write();
 }
 

@@ -4,7 +4,8 @@
 //! identical observations from returning users.  [`SessionCache`] is a
 //! bounded LRU map owned by every
 //! [`SessionEngine`](crate::coordinator::SessionEngine), keyed on
-//! **(observation hash, λ bucket)** and holding, per entry, the
+//! **(dictionary epoch, observation hash, λ bucket)** and holding, per
+//! entry, the
 //! previous solve's converged primal iterate `x`, its final dual point
 //! (`SolveReport::dual`), and its surviving-atom set
 //! (`SolveReport::survivors`).
@@ -49,6 +50,15 @@
 //!
 //! ## Keys, collisions, eviction
 //!
+//! * **Dictionary epoch** — the [`EpochId`] the request was admitted
+//!   under (see the session's hot-swap story).  A seed is only ever
+//!   valid against the dictionary it was computed on, so the epoch is
+//!   part of the key: the same observation at the same λ **misses**
+//!   across a [`swap_dict`](crate::coordinator::SessionEngine::swap_dict)
+//!   — a stale-dictionary seed can never cross a swap.  When an old
+//!   epoch retires (its last in-flight request completes), the session
+//!   calls [`SessionCache::purge_epoch`] so dead entries stop holding
+//!   capacity.
 //! * **Observation hash** — FNV-1a over the raw `f64` bits of `y`.  A
 //!   hash/bucket match alone never seeds: [`SessionCache::lookup`]
 //!   compares the stored `y` against the request's bit for bit, so two
@@ -66,10 +76,11 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::coordinator::session::EpochId;
 use crate::solver::SolveReport;
 
-/// Cache key: (FNV-1a observation hash, λ bucket).
-type Key = (u64, u32);
+/// Cache key: (dictionary epoch, FNV-1a observation hash, λ bucket).
+type Key = (EpochId, u64, u32);
 
 /// What a [`SessionCache::lookup`] hit hands the solver: the previous
 /// solve's iterate (the warm-start seed) plus the diagnostic payload.
@@ -176,18 +187,25 @@ impl SessionCache {
         ((ratio * f64::from(self.buckets)) as u32).min(self.buckets - 1)
     }
 
-    /// Look up `(hash, bucket)`; a stored entry only hits when its
-    /// observation equals `y` **bit for bit** (the collision guard).
-    /// A hit refreshes the entry's LRU tick.  Disabled caches always
-    /// miss.
-    pub fn lookup(&self, hash: u64, bucket: u32, y: &[f64]) -> Option<CacheHit> {
+    /// Look up `(epoch, hash, bucket)`; a stored entry only hits when
+    /// its observation equals `y` **bit for bit** (the collision
+    /// guard) — and only within the same dictionary epoch (the swap
+    /// guard).  A hit refreshes the entry's LRU tick.  Disabled caches
+    /// always miss.
+    pub fn lookup(
+        &self,
+        epoch: EpochId,
+        hash: u64,
+        bucket: u32,
+        y: &[f64],
+    ) -> Option<CacheHit> {
         if self.capacity == 0 {
             return None;
         }
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
-        let e = inner.map.get_mut(&(hash, bucket))?;
+        let e = inner.map.get_mut(&(epoch, hash, bucket))?;
         if !bits_eq(&e.y, y) {
             return None;
         }
@@ -200,11 +218,12 @@ impl SessionCache {
         })
     }
 
-    /// Insert (or refresh) the entry for `(hash, bucket)` from a
-    /// finished solve.  Returns `true` when a *different* key was
+    /// Insert (or refresh) the entry for `(epoch, hash, bucket)` from
+    /// a finished solve.  Returns `true` when a *different* key was
     /// evicted to make room (LRU).  Disabled caches drop the insert.
     pub fn insert(
         &self,
+        epoch: EpochId,
         hash: u64,
         bucket: u32,
         y: &[f64],
@@ -217,7 +236,7 @@ impl SessionCache {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
-        let key = (hash, bucket);
+        let key = (epoch, hash, bucket);
         let mut evicted = false;
         if !inner.map.contains_key(&key) && inner.map.len() >= self.capacity {
             // Evict the least-recently-touched entry.  O(capacity)
@@ -246,6 +265,23 @@ impl SessionCache {
         );
         evicted
     }
+
+    /// Drop every entry keyed under `epoch`, returning how many were
+    /// removed.  The session calls this when an epoch **retires**
+    /// (last in-flight request completed after a
+    /// [`swap_dict`](crate::coordinator::SessionEngine::swap_dict)):
+    /// the epoch key already guarantees those entries can never hit
+    /// again, so purging is memory hygiene, not correctness — dead
+    /// seeds must not squat on LRU capacity the live epoch could use.
+    pub fn purge_epoch(&self, epoch: EpochId) -> usize {
+        if self.capacity == 0 {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.map.len();
+        inner.map.retain(|(e, _, _), _| *e != epoch);
+        before - inner.map.len()
+    }
 }
 
 /// Bitwise slice equality (`-0.0 ≠ 0.0`, `NaN == NaN` at equal bits) —
@@ -259,6 +295,10 @@ fn bits_eq(a: &[f64], b: &[f64]) -> bool {
 mod tests {
     use super::*;
     use crate::solver::{SolveReport, StopReason};
+
+    /// Every pre-hot-swap test runs in the session's first epoch.
+    const E0: EpochId = EpochId(0);
+    const E1: EpochId = EpochId(1);
 
     fn report(x: Vec<f64>) -> SolveReport {
         SolveReport {
@@ -286,15 +326,15 @@ mod tests {
         let cache = SessionCache::new(4, 8);
         let y_a = vec![1.0, 2.0];
         let y_b = vec![1.0, 2.0000001];
-        cache.insert(42, 3, &y_a, 0.5, &report(vec![1.0]));
-        assert!(cache.lookup(42, 3, &y_a).is_some());
+        cache.insert(E0, 42, 3, &y_a, 0.5, &report(vec![1.0]));
+        assert!(cache.lookup(E0, 42, 3, &y_a).is_some());
         assert!(
-            cache.lookup(42, 3, &y_b).is_none(),
+            cache.lookup(E0, 42, 3, &y_b).is_none(),
             "hash collision must miss on the exact-y guard"
         );
         // Negative zero differs from zero bitwise: no cross-seeding.
-        cache.insert(7, 0, &[0.0], 0.5, &report(vec![2.0]));
-        assert!(cache.lookup(7, 0, &[-0.0]).is_none());
+        cache.insert(E0, 7, 0, &[0.0], 0.5, &report(vec![2.0]));
+        assert!(cache.lookup(E0, 7, 0, &[-0.0]).is_none());
     }
 
     #[test]
@@ -322,9 +362,9 @@ mod tests {
         let cache = SessionCache::new(0, 16);
         assert!(!cache.enabled());
         let y = vec![1.0, 2.0];
-        assert!(!cache.insert(SessionCache::hash_obs(&y), 0, &y, 0.5,
+        assert!(!cache.insert(E0, SessionCache::hash_obs(&y), 0, &y, 0.5,
                               &report(vec![1.0])));
-        assert!(cache.lookup(SessionCache::hash_obs(&y), 0, &y).is_none());
+        assert!(cache.lookup(E0, SessionCache::hash_obs(&y), 0, &y).is_none());
         assert!(cache.is_empty());
     }
 
@@ -337,18 +377,18 @@ mod tests {
             SessionCache::hash_obs(&yb),
             SessionCache::hash_obs(&yc),
         );
-        assert!(!cache.insert(ha, 0, &ya, 0.5, &report(vec![1.0])));
-        assert!(!cache.insert(hb, 0, &yb, 0.5, &report(vec![2.0])));
+        assert!(!cache.insert(E0, ha, 0, &ya, 0.5, &report(vec![1.0])));
+        assert!(!cache.insert(E0, hb, 0, &yb, 0.5, &report(vec![2.0])));
         // Touch A so B becomes the LRU victim.
-        assert!(cache.lookup(ha, 0, &ya).is_some());
-        assert!(cache.insert(hc, 0, &yc, 0.5, &report(vec![3.0])));
+        assert!(cache.lookup(E0, ha, 0, &ya).is_some());
+        assert!(cache.insert(E0, hc, 0, &yc, 0.5, &report(vec![3.0])));
         assert_eq!(cache.len(), 2);
-        assert!(cache.lookup(ha, 0, &ya).is_some(), "A survived");
-        assert!(cache.lookup(hb, 0, &yb).is_none(), "B evicted");
-        assert!(cache.lookup(hc, 0, &yc).is_some(), "C inserted");
+        assert!(cache.lookup(E0, ha, 0, &ya).is_some(), "A survived");
+        assert!(cache.lookup(E0, hb, 0, &yb).is_none(), "B evicted");
+        assert!(cache.lookup(E0, hc, 0, &yc).is_some(), "C inserted");
         // Re-inserting an existing key refreshes in place: no eviction.
-        assert!(!cache.insert(hc, 0, &yc, 0.6, &report(vec![4.0])));
-        let hit = cache.lookup(hc, 0, &yc).unwrap();
+        assert!(!cache.insert(E0, hc, 0, &yc, 0.6, &report(vec![4.0])));
+        let hit = cache.lookup(E0, hc, 0, &yc).unwrap();
         assert_eq!(hit.x, vec![4.0]);
         assert_eq!(hit.lam, 0.6);
     }
@@ -361,9 +401,54 @@ mod tests {
         let b_lo = cache.bucket_of(0.2, 1.0);
         let b_hi = cache.bucket_of(0.8, 1.0);
         assert_ne!(b_lo, b_hi);
-        cache.insert(h, b_lo, &y, 0.2, &report(vec![1.0]));
-        assert!(cache.lookup(h, b_hi, &y).is_none());
-        assert!(cache.lookup(h, b_lo, &y).is_some());
+        cache.insert(E0, h, b_lo, &y, 0.2, &report(vec![1.0]));
+        assert!(cache.lookup(E0, h, b_hi, &y).is_none());
+        assert!(cache.lookup(E0, h, b_lo, &y).is_some());
+    }
+
+    /// The hot-swap guard at the cache layer: identical observation,
+    /// hash, bucket and λ — but a different dictionary epoch — must
+    /// MISS.  This is what makes a stale-dictionary seed structurally
+    /// unable to cross a `swap_dict`.
+    #[test]
+    fn same_observation_different_epoch_is_a_miss() {
+        let cache = SessionCache::new(4, 8);
+        let y = vec![1.0, 2.0, 3.0];
+        let h = SessionCache::hash_obs(&y);
+        cache.insert(E0, h, 3, &y, 0.5, &report(vec![1.0]));
+        assert!(cache.lookup(E0, h, 3, &y).is_some(), "same epoch hits");
+        assert!(
+            cache.lookup(E1, h, 3, &y).is_none(),
+            "epoch {E1:?} must not see epoch {E0:?}'s seed"
+        );
+        // Both epochs may hold their own entry for the same key tail.
+        cache.insert(E1, h, 3, &y, 0.5, &report(vec![2.0]));
+        assert_eq!(cache.lookup(E0, h, 3, &y).unwrap().x, vec![1.0]);
+        assert_eq!(cache.lookup(E1, h, 3, &y).unwrap().x, vec![2.0]);
+    }
+
+    /// Retirement hygiene: purging an epoch removes exactly its
+    /// entries, leaves other epochs untouched, and reports the count.
+    #[test]
+    fn purge_epoch_drops_only_that_epoch() {
+        let cache = SessionCache::new(8, 8);
+        let (ya, yb) = (vec![1.0], vec![2.0]);
+        let (ha, hb) =
+            (SessionCache::hash_obs(&ya), SessionCache::hash_obs(&yb));
+        cache.insert(E0, ha, 0, &ya, 0.5, &report(vec![1.0]));
+        cache.insert(E0, hb, 1, &yb, 0.5, &report(vec![2.0]));
+        cache.insert(E1, ha, 0, &ya, 0.5, &report(vec![3.0]));
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.purge_epoch(E0), 2);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.lookup(E0, ha, 0, &ya).is_none());
+        assert!(cache.lookup(E0, hb, 1, &yb).is_none());
+        assert_eq!(cache.lookup(E1, ha, 0, &ya).unwrap().x, vec![3.0]);
+        // Purging again (or a never-used epoch) is a no-op.
+        assert_eq!(cache.purge_epoch(E0), 0);
+        assert_eq!(cache.purge_epoch(EpochId(99)), 0);
+        // Disabled caches report nothing to purge.
+        assert_eq!(SessionCache::new(0, 8).purge_epoch(E0), 0);
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub use cache::{CacheHit, SessionCache};
 pub use campaign::{Campaign, CampaignResult};
 pub use jobs::{JobEngine, JobResult, SolveJob};
 pub use session::{
-    Completed, RequestId, SessionConfig, SessionEngine, SubmitError,
-    SubmitManyError, SubmitPolicy,
+    pick_index, predicted_cost, ClassPolicy, Completed, EpochId, RequestClass,
+    RequestId, SchedKey, SchedPolicy, SessionConfig, SessionEngine,
+    SubmitError, SubmitManyError, SubmitPolicy,
 };

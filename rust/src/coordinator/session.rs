@@ -1,15 +1,19 @@
-//! Streaming RHS sessions: a long-lived engine over **one**
-//! [`SharedDict`] that accepts observations as they arrive.
+//! Streaming RHS sessions: a long-lived engine over a pinned
+//! [`SharedDict`] that accepts observations as they arrive — with
+//! cost-aware scheduling, priority classes and epoch-based dictionary
+//! hot-swap.
 //!
 //! [`crate::solver::solve_many`] is one-shot — every right-hand side
 //! must exist before the call.  The serving regime is the opposite:
-//! the dictionary is fixed and requests trickle in over time.  A
-//! [`SessionEngine`] holds one [`SharedDict`] plus one pool for its
-//! whole lifetime; [`submit`](SessionEngine::submit) enqueues an
-//! observation as a pool job (the per-RHS `Aᵀy` matvec and the solve
-//! both run on the workers), completed [`SolveReport`]s come back
-//! through [`try_recv_completed`](SessionEngine::try_recv_completed) /
-//! [`recv_completed`](SessionEngine::recv_completed) /
+//! the dictionary is (mostly) fixed and requests trickle in over time.
+//! A [`SessionEngine`] holds one pool for its whole lifetime plus an
+//! **epoch table** of dictionaries (one live [`SharedDict`] per
+//! [`EpochId`], the newest being *current*);
+//! [`submit`](SessionEngine::submit) admits an observation into a
+//! session-level **scheduler queue**, pool runners pull the
+//! scheduled-best entry and solve it, completed [`SolveReport`]s come
+//! back through [`try_recv_completed`](SessionEngine::try_recv_completed)
+//! / [`recv_completed`](SessionEngine::recv_completed) /
 //! [`drain`](SessionEngine::drain), and a bounded in-flight window
 //! applies backpressure at the submission edge.
 //!
@@ -32,23 +36,82 @@
 //! blocked `submit` can only be unblocked by a receive the same thread
 //! would perform.
 //!
+//! On top of the global window, every [`RequestClass`] may carry its
+//! own [`ClassPolicy`]: a per-class depth (outstanding requests *of
+//! that class*) and an optional per-class Block/Reject override.  A
+//! bulk backfill job can then be capped at a handful of slots — and
+//! rejected at its cap — while interactive traffic keeps the rest of
+//! the window, under one shared pool.
+//!
+//! ## Scheduling (latency-only, bitwise invisible)
+//!
+//! The backlog between admission and solve is a session-level queue,
+//! not the pool's FIFO: each admitted request enqueues one pool
+//! *runner*, and a runner pops whichever pending request the
+//! [`SchedPolicy`] ranks first (a task-bag — runner count equals
+//! request count, but a runner does not necessarily execute the
+//! request whose submission spawned it).  Ranking
+//! ([`pick_index`], the exact function the engine runs):
+//!
+//! 1. **aged** requests first, FIFO among themselves (see below);
+//! 2. then by [`RequestClass`] priority (interactive before standard
+//!    before bulk);
+//! 3. within a class, [`SchedPolicy::Fifo`] takes arrival order, while
+//!    [`SchedPolicy::CostAware`] takes the **cheapest predicted
+//!    solve** first ([`predicted_cost`]: the λ/λ_max ratio is an
+//!    iteration-count proxy — small ratios mean weakly regularized,
+//!    slow-converging solves — so shortest-job-first drains the
+//!    backlog with a lower mean/p99 queue wait than FIFO; the
+//!    per-class latency histograms make the shift observable);
+//! 4. request id as the final tie-break.
+//!
+//! **Starvation is bounded by aging**: a pending request passed over
+//! at least [`SessionConfig::aging_after`] times is *aged* — it jumps
+//! ahead of every class and is served FIFO among aged requests, so no
+//! adversarial mix can park a bulk request forever (worst-case wait is
+//! `aging_after + queue_depth` pops).
+//!
+//! Scheduling is **safe by construction**: a request's report is a
+//! pure function of `(dict, y, λ-spec, solver config)` — arrival-order
+//! invariance (below) means any reorder leaves every `SolveReport`
+//! bitwise identical, and only the latency histograms move.
+//! `rust/tests/scheduling_parity.rs` pins both halves.
+//!
+//! ## Epoch-based dictionary hot-swap
+//!
+//! [`SessionEngine::swap_dict`] installs a new dictionary **without
+//! draining**: it opens a new epoch (monotonic [`EpochId`]) that all
+//! *future* admissions run against, while requests admitted under
+//! earlier epochs keep solving against the exact [`SharedDict`] they
+//! were admitted under — so per-epoch parity holds: every request is
+//! bitwise ≡ `solve_many` against its admission epoch's dictionary.
+//! An old epoch **retires** when its last in-flight request completes
+//! (or at swap time, if already idle): its dictionary handle is
+//! dropped and its warm-start cache entries are purged
+//! ([`SessionCache::purge_epoch`]) — cache keys carry the epoch id, so
+//! a stale-dictionary seed can never cross a swap even before the
+//! purge.  The current epoch never retires, even when the session is
+//! closed.  `rust/tests/hotswap_parity.rs` pins parity, exactly-once
+//! retirement and the cache×epoch interaction.
+//!
 //! ## Arrival-order invariance
 //!
 //! The load-bearing invariant, one layer up from the batch entry's
-//! parity: **any arrival order, interleaving or chunking of the same
-//! RHS set yields per-request reports bitwise identical to one
-//! [`solve_many`](crate::solver::solve_many) call** (and hence to B
-//! independent [`solve`](crate::solver::solve) calls — flops
-//! included).  It holds structurally: a request's report is a pure
-//! function of `(SharedDict, y, LambdaSpec, SolverConfig)` — the
-//! session runs exactly the code path `solve_many` runs per RHS (build
-//! the problem via [`SharedDict::problem`], solve on a fresh
-//! [`WorkingSet`] under the session's config) — and the fp-order
-//! replay discipline below makes the pool scheduling invisible (see
-//! `ARCHITECTURE.md`).  `rust/tests/session_parity.rs` asserts it
-//! across arrival permutations, chunk sizes, solvers, thread counts
-//! and storage formats; `rust/tests/backpressure.rs` covers the
-//! bounded-queue semantics.
+//! parity: **any arrival order, interleaving, chunking or scheduling
+//! of the same RHS set yields per-request reports bitwise identical to
+//! one [`solve_many`](crate::solver::solve_many) call** against the
+//! admission epoch's dictionary (and hence to B independent
+//! [`solve`](crate::solver::solve) calls — flops included).  It holds
+//! structurally: a request's report is a pure function of
+//! `(SharedDict, y, LambdaSpec, SolverConfig)` — the runner executes
+//! exactly the code path `solve_many` runs per RHS (build the problem
+//! via [`SharedDict::problem`], solve on a fresh [`WorkingSet`] under
+//! the session's config) — and the fp-order replay discipline makes
+//! pool scheduling invisible (see `ARCHITECTURE.md`).
+//! `rust/tests/session_parity.rs` asserts it across arrival
+//! permutations, chunk sizes, solvers, thread counts and storage
+//! formats; `rust/tests/backpressure.rs` covers the bounded-queue
+//! semantics (including the multi-class soak).
 //!
 //! ## Warm-start cache
 //!
@@ -56,9 +119,9 @@
 //! [`SessionCache`](crate::coordinator::cache::SessionCache) (size
 //! [`SessionConfig::cache_capacity`]; `0`, the default, disables it
 //! bitwise).  A finished solve deposits its converged `x`, final dual
-//! point and survivor set under **(observation hash, λ bucket)**; a
-//! later request that hits (same `y` bit for bit, λ in the same
-//! bucket) is solved as
+//! point and survivor set under **(epoch, observation hash, λ
+//! bucket)**; a later request that hits (same epoch, same `y` bit for
+//! bit, λ in the same bucket) is solved as
 //! `solve_warm_ws(p, cfg + seed_region: Sequential, Some(&cached_x))`
 //! — seeded with the cached iterate and opened by one
 //! [`RegionKind::Sequential`] screening round at iteration 0, so the
@@ -71,17 +134,23 @@
 //!
 //! ## Metrics
 //!
-//! Each request is classed by its [`LambdaSpec`] variant
-//! ([`LambdaSpec::class_name`]) and observed into log-bucketed latency
-//! histograms, aggregate and per class
-//! ([`crate::metrics::Registry::observe_classed_secs`]):
+//! Each request is classed two ways — by its [`LambdaSpec`] variant
+//! ([`LambdaSpec::class_name`]: `value` | `ratio`) and by its
+//! [`RequestClass`] (`interactive` | `standard` | `bulk`) — and
+//! observed into log-bucketed latency histograms, aggregate and per
+//! class ([`crate::metrics::Registry::observe_classed_secs`] /
+//! [`observe_class_secs`](crate::metrics::Registry::observe_class_secs)):
 //!
 //! * `session_queue_secs[_<class>]` — submit → solve start (queue wait);
 //! * `session_solve_secs[_<class>]` — solve start → done;
 //!
-//! plus counters `session_submitted` / `session_completed` /
-//! `session_received` / `session_rejected` and
-//! `session_flops_total`.  A session opened from a
+//! plus counters `session_submitted[_<reqclass>]` /
+//! `session_completed` / `session_received` /
+//! `session_rejected[_<reqclass>]` / `session_flops_total` /
+//! `session_aged_pops` (scheduler aging boosts) and, once
+//! [`swap_dict`](SessionEngine::swap_dict) is used, `session_swaps` /
+//! `session_epochs_retired` / `session_cache_purged` with gauges
+//! `session_epoch` / `session_epochs_live`.  A session opened from a
 //! [`JobEngine`](crate::coordinator::JobEngine) shares the engine's
 //! registry.  With the cache enabled, solves are additionally split
 //! into warm/cold latency classes (`session_solve_warm_secs` /
@@ -90,7 +159,6 @@
 //! cache leaves the metric surface exactly as it was.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::cache::SessionCache;
@@ -102,13 +170,21 @@ use crate::solver::{solve_warm_ws, BatchRhs, SolveReport, SolverConfig};
 use crate::util::timer::Stopwatch;
 use crate::workset::WorkingSet;
 
-/// Ticket for one submitted request.  Ids are assigned in submission
+/// Ticket for one submitted request.  Ids are assigned in admission
 /// order, starting at 0, unique within a session.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct RequestId(pub u64);
 
+/// One dictionary generation of a session.  Epoch 0 is the dictionary
+/// the session opened with; every [`SessionEngine::swap_dict`]
+/// increments it.  A request is pinned to the epoch it was *admitted*
+/// under for its whole life — solve, report, cache key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct EpochId(pub u64);
+
 /// What [`SessionEngine::submit`] does when the session is at
-/// [`SessionConfig::queue_depth`] outstanding requests.
+/// [`SessionConfig::queue_depth`] outstanding requests (or the
+/// request's class is at its [`ClassPolicy::depth`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SubmitPolicy {
     /// Park the submitting thread until a receive frees a slot.
@@ -117,14 +193,214 @@ pub enum SubmitPolicy {
     Reject,
 }
 
+/// Priority class of a request.  Classes shape *when* a queued request
+/// runs and how much of the backpressure window it may hold
+/// ([`ClassPolicy`]) — never *what* it computes: reports are bitwise
+/// identical whatever the class (`rust/tests/scheduling_parity.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RequestClass {
+    /// Latency-sensitive foreground traffic: scheduled first.
+    Interactive,
+    /// The default class — what classless [`SessionEngine::submit`]
+    /// admits.
+    #[default]
+    Standard,
+    /// Throughput traffic (backfills, re-solves): scheduled last,
+    /// protected from starvation by the aging rule.
+    Bulk,
+}
+
+impl RequestClass {
+    /// Number of classes (array-table size).
+    pub const COUNT: usize = 3;
+
+    /// All classes, highest priority first.
+    pub const ALL: [RequestClass; RequestClass::COUNT] = [
+        RequestClass::Interactive,
+        RequestClass::Standard,
+        RequestClass::Bulk,
+    ];
+
+    /// Scheduling rank: 0 is served first.
+    pub fn rank(self) -> usize {
+        match self {
+            RequestClass::Interactive => 0,
+            RequestClass::Standard => 1,
+            RequestClass::Bulk => 2,
+        }
+    }
+
+    /// Metric/CLI label: `"interactive"` | `"standard"` | `"bulk"`.
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::Interactive => "interactive",
+            RequestClass::Standard => "standard",
+            RequestClass::Bulk => "bulk",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RequestClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" | "high" => Some(RequestClass::Interactive),
+            "standard" | "normal" | "default" => Some(RequestClass::Standard),
+            "bulk" | "low" | "background" => Some(RequestClass::Bulk),
+            _ => None,
+        }
+    }
+}
+
+/// How the session orders its queued backlog.  Purely a latency knob:
+/// every policy yields bitwise-identical `SolveReport`s (arrival-order
+/// invariance); only the queue-wait histograms move.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Arrival order within each priority class (the pre-scheduler
+    /// behavior when every request is [`RequestClass::Standard`]).
+    #[default]
+    Fifo,
+    /// Cheapest predicted solve first within each priority class
+    /// ([`predicted_cost`]) — shortest-job-first over the λ/λ_max
+    /// iteration-count proxy.
+    CostAware,
+}
+
+impl SchedPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::CostAware => "cost",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(SchedPolicy::Fifo),
+            "cost" | "cost-aware" | "cost_aware" => Some(SchedPolicy::CostAware),
+            _ => None,
+        }
+    }
+}
+
+/// Per-[`RequestClass`] admission limits, layered on the session's
+/// global [`SessionConfig::queue_depth`] window.  Defaults (`None`)
+/// leave the class bounded by the global window alone.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassPolicy {
+    /// Maximum outstanding requests of this class (submitted −
+    /// received).  A submission is admitted only when both the global
+    /// window *and* this class window have room.
+    pub depth: Option<usize>,
+    /// At-capacity behavior for this class, overriding
+    /// [`SessionConfig::policy`] — e.g. Block interactive traffic but
+    /// Reject bulk backfill.
+    pub policy: Option<SubmitPolicy>,
+}
+
+/// Predicted relative solve cost of a request, in `[0, 1]` — the
+/// scheduler's shortest-job-first key ([`SchedPolicy::CostAware`]).
+///
+/// The λ/λ_max ratio is the iteration-count proxy: first-order Lasso
+/// solvers converge slowly at small ratios (weak regularization, large
+/// support, small screening radii — the per-class latency histograms
+/// measure exactly this spread), so predicted cost is `1 − ratio` for
+/// [`LambdaSpec::RatioOfMax`] requests.  An absolute
+/// [`LambdaSpec::Value`] does not reveal its ratio until `λ_max` is
+/// computed from the observation (a full matvec — too expensive at
+/// admission), so it gets the neutral midpoint `0.5`.  Always finite;
+/// a non-finite ratio also maps to `0.5`.
+pub fn predicted_cost(lam: LambdaSpec) -> f64 {
+    match lam {
+        LambdaSpec::RatioOfMax(r) if r.is_finite() => 1.0 - r.clamp(0.0, 1.0),
+        _ => 0.5,
+    }
+}
+
+/// Scheduling view of one pending request — what [`pick_index`] ranks.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedKey {
+    /// Admission order ([`RequestId`]): the FIFO key and final
+    /// tie-break.
+    pub id: u64,
+    pub class: RequestClass,
+    /// [`predicted_cost`] of the request's λ spec.
+    pub cost: f64,
+    /// Scheduler tick at admission (see [`pick_index`]'s `tick`).
+    pub enqueue_tick: u64,
+}
+
+impl SchedKey {
+    /// Has this request been passed over at least `aging_after` times
+    /// by pop `tick`?  (`aging_after == 0` disables aging.)
+    fn aged(&self, aging_after: u64, tick: u64) -> bool {
+        aging_after > 0 && tick.saturating_sub(self.enqueue_tick) > aging_after
+    }
+}
+
+/// The scheduling decision — the exact function every session runner
+/// executes, public so `rust/tests/scheduling_parity.rs` can pin its
+/// ordering and starvation bound deterministically.  Returns the index
+/// of the request to run next and whether it was taken via the aging
+/// boost.
+///
+/// `tick` is the current pop's scheduler tick (ticks count pops; a
+/// request admitted at tick T has been passed over `tick − T − 1`
+/// times when pop `tick` examines it).  Order: aged requests first,
+/// FIFO among themselves; then priority class; then cost
+/// ([`SchedPolicy::CostAware`]) or nothing ([`SchedPolicy::Fifo`]);
+/// then id.  Starvation bound: a request ages after at most
+/// `aging_after` pops and aged requests drain FIFO ahead of
+/// everything, so it runs within `aging_after + (requests admitted
+/// before it)` pops — with a bounded window, `aging_after +
+/// queue_depth`.
+///
+/// # Panics
+/// On an empty `keys` slice — the engine enqueues exactly one runner
+/// per admitted request, so a runner always finds work.
+pub fn pick_index(
+    keys: &[SchedKey],
+    policy: SchedPolicy,
+    aging_after: u64,
+    tick: u64,
+) -> (usize, bool) {
+    assert!(!keys.is_empty(), "scheduler popped an empty backlog");
+    let rank = |k: &SchedKey| -> (u64, usize, f64, u64) {
+        if k.aged(aging_after, tick) {
+            // Aged: ahead of every class, FIFO among aged.
+            (0, 0, 0.0, k.id)
+        } else {
+            let cost = match policy {
+                SchedPolicy::Fifo => 0.0,
+                SchedPolicy::CostAware => k.cost,
+            };
+            (1, k.class.rank(), cost, k.id)
+        }
+    };
+    let mut best = 0usize;
+    let mut best_rank = rank(&keys[0]);
+    for (i, k) in keys.iter().enumerate().skip(1) {
+        let r = rank(k);
+        // Lexicographic min; costs are finite (`predicted_cost`), so
+        // total_cmp agrees with the naive order.
+        if (r.0, r.1).cmp(&(best_rank.0, best_rank.1)).then(
+            r.2.total_cmp(&best_rank.2).then(r.3.cmp(&best_rank.3)),
+        ) == std::cmp::Ordering::Less
+        {
+            best = i;
+            best_rank = r;
+        }
+    }
+    (best, keys[best].aged(aging_after, tick))
+}
+
 /// Why a submission was not accepted.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    /// The session is at capacity (Reject policy, or
-    /// [`SessionEngine::try_submit`]).  The request was **not**
-    /// enqueued; retry after receiving a completion.
+    /// The session (or the request's class) is at capacity (Reject
+    /// policy, or [`SessionEngine::try_submit`]).  The request was
+    /// **not** enqueued; retry after receiving a completion.
     WouldBlock,
-    /// Observation length does not match the dictionary's rows.
+    /// Observation length does not match the **current epoch**
+    /// dictionary's rows.
     ShapeMismatch { expected: usize, got: usize },
     /// The session was [`close`](SessionEngine::close)d.
     Closed,
@@ -182,8 +458,20 @@ pub struct SessionConfig {
     pub solver: SolverConfig,
     /// Maximum outstanding requests (submitted − received); at least 1.
     pub queue_depth: usize,
-    /// Behavior of [`SessionEngine::submit`] at capacity.
+    /// Behavior of [`SessionEngine::submit`] at capacity (overridable
+    /// per class via [`ClassPolicy::policy`]).
     pub policy: SubmitPolicy,
+    /// Backlog ordering — FIFO (default, the pre-scheduler behavior)
+    /// or cost-aware shortest-job-first.  Latency-only; never changes
+    /// results.
+    pub scheduling: SchedPolicy,
+    /// Per-class admission limits, indexed by [`RequestClass::rank`].
+    /// Defaults impose no per-class bound and no policy override.
+    pub classes: [ClassPolicy; RequestClass::COUNT],
+    /// Scheduler pops a pending request may be passed over before it
+    /// is boosted ahead of every class (the starvation bound; see
+    /// [`pick_index`]).  `0` disables aging.
+    pub aging_after: u64,
     /// Warm-start cache capacity in entries.  `0` (the default)
     /// disables the cache entirely — every solve runs the cold path,
     /// bitwise identical to a session without a cache.
@@ -200,6 +488,9 @@ impl Default for SessionConfig {
             solver: SolverConfig::default(),
             queue_depth: 256,
             policy: SubmitPolicy::Block,
+            scheduling: SchedPolicy::Fifo,
+            classes: [ClassPolicy::default(); RequestClass::COUNT],
+            aging_after: 64,
             cache_capacity: 0,
             lambda_buckets: 16,
         }
@@ -207,7 +498,7 @@ impl Default for SessionConfig {
 }
 
 /// One finished request: the full [`SolveReport`] plus the session's
-/// two latency legs.
+/// two latency legs and its admission coordinates.
 #[derive(Clone, Debug)]
 pub struct Completed {
     pub id: RequestId,
@@ -221,33 +512,81 @@ pub struct Completed {
     /// Did this request warm-start from the session cache?  Always
     /// `false` with the cache disabled.
     pub cache_hit: bool,
+    /// Priority class the request was submitted under.
+    pub class: RequestClass,
+    /// Dictionary epoch the request was admitted under — the epoch
+    /// whose [`SharedDict`] this report is bitwise a `solve_many`
+    /// result of.
+    pub epoch: EpochId,
+}
+
+/// One admitted-but-not-yet-started request in the scheduler queue.
+struct Pending {
+    id: RequestId,
+    y: Vec<f64>,
+    lam: LambdaSpec,
+    class: RequestClass,
+    epoch: EpochId,
+    /// [`predicted_cost`], computed once at admission.
+    cost: f64,
+    enqueue_tick: u64,
+    submitted: Stopwatch,
+}
+
+/// One live dictionary generation.
+struct EpochSlot {
+    id: EpochId,
+    dict: SharedDict,
+    /// Requests admitted under this epoch and not yet *completed*
+    /// (pending + solving).  Retirement triggers at zero.
+    in_flight: usize,
 }
 
 struct SessionState {
+    /// Admitted requests awaiting a runner, in no particular order
+    /// (runners select via [`pick_index`]; O(backlog) per pop, and the
+    /// backlog is bounded by `queue_depth` — scan beats heap upkeep at
+    /// serving depths, and aging re-ranks entries every pop anyway).
+    pending: Vec<Pending>,
     /// Completed-but-unreceived reports, in completion order.
     done: VecDeque<Completed>,
-    /// Submitted − received (queued + solving + in `done`).
+    /// Submitted − received (pending + solving + in `done`).
     outstanding: usize,
+    /// Per-class slice of `outstanding`, indexed by
+    /// [`RequestClass::rank`].
+    class_outstanding: [usize; RequestClass::COUNT],
+    /// Live dictionary epochs, ascending by id; the last is current.
+    /// Never empty.
+    epochs: Vec<EpochSlot>,
+    /// Next [`RequestId`] — assigned under the lock, so id order is
+    /// admission order.
+    next_id: u64,
+    /// Pops so far; the aging clock (see [`pick_index`]).
+    sched_tick: u64,
     closed: bool,
 }
 
 struct SessionShared {
     state: Mutex<SessionState>,
-    /// Signals both capacity freed (a receive) and completions landing.
+    /// Signals capacity freed (a receive), completions landing, close,
+    /// and epoch swaps (parked submitters revalidate their shape).
     cv: Condvar,
     metrics: Arc<Registry>,
     /// Warm-start cache (capacity 0 ⇒ disabled, all lookups miss).
+    /// Lock order: `state` before `cache`, never the reverse.
     cache: SessionCache,
 }
 
-/// A long-lived streaming-solve session over one [`SharedDict`].
+/// A long-lived streaming-solve session over an epoch table of
+/// [`SharedDict`]s (one at open; more after
+/// [`swap_dict`](Self::swap_dict)).
 ///
 /// Construction: [`SessionEngine::new`] spins up a dedicated pool;
 /// [`JobEngine::open_session`](crate::coordinator::JobEngine::open_session)
 /// shares an engine's pool and metrics registry.  The dictionary and
-/// its observation-independent caches are pinned for the session's
-/// lifetime; every request carries only its own `y` and
-/// [`LambdaSpec`].
+/// its observation-independent caches are pinned per epoch; every
+/// request carries only its own `y`, [`LambdaSpec`] and
+/// [`RequestClass`].
 ///
 /// ```
 /// use holder_screening::linalg::Mat;
@@ -278,7 +617,6 @@ struct SessionShared {
 /// assert_eq!(done[0].report.flops, solo.flops);
 /// ```
 pub struct SessionEngine {
-    dict: SharedDict,
     pool: Arc<ThreadPool>,
     /// Did this session spawn `pool` itself (vs. borrowing an
     /// engine's)?  Governs the quiesce-on-drop behavior.
@@ -287,8 +625,10 @@ pub struct SessionEngine {
     cfg: SolverConfig,
     queue_depth: usize,
     policy: SubmitPolicy,
+    scheduling: SchedPolicy,
+    classes: [ClassPolicy; RequestClass::COUNT],
+    aging_after: u64,
     inner: Arc<SessionShared>,
-    next_id: AtomicU64,
 }
 
 impl SessionEngine {
@@ -319,16 +659,27 @@ impl SessionEngine {
         let mut solver = cfg.solver;
         solver.par = ParContext::with_pool(Arc::clone(&pool), shard_min);
         SessionEngine {
-            dict,
             pool,
             owns_pool: false,
             cfg: solver,
             queue_depth: cfg.queue_depth.max(1),
             policy: cfg.policy,
+            scheduling: cfg.scheduling,
+            classes: cfg.classes,
+            aging_after: cfg.aging_after,
             inner: Arc::new(SessionShared {
                 state: Mutex::new(SessionState {
+                    pending: Vec::new(),
                     done: VecDeque::new(),
                     outstanding: 0,
+                    class_outstanding: [0; RequestClass::COUNT],
+                    epochs: vec![EpochSlot {
+                        id: EpochId(0),
+                        dict,
+                        in_flight: 0,
+                    }],
+                    next_id: 0,
+                    sched_tick: 0,
                     closed: false,
                 }),
                 cv: Condvar::new(),
@@ -338,13 +689,25 @@ impl SessionEngine {
                     cfg.lambda_buckets,
                 ),
             }),
-            next_id: AtomicU64::new(0),
         }
     }
 
-    /// The session's pinned dictionary handle.
-    pub fn shared(&self) -> &SharedDict {
-        &self.dict
+    /// The **current epoch's** dictionary handle (an Arc bump).
+    pub fn shared(&self) -> SharedDict {
+        let st = self.inner.state.lock().unwrap();
+        st.epochs.last().expect("epoch table never empty").dict.clone()
+    }
+
+    /// The current [`EpochId`] — what the next admission runs against.
+    pub fn epoch(&self) -> EpochId {
+        let st = self.inner.state.lock().unwrap();
+        st.epochs.last().expect("epoch table never empty").id
+    }
+
+    /// Epochs still resident: the current one plus every old epoch
+    /// with in-flight requests (retired epochs are gone).
+    pub fn live_epochs(&self) -> usize {
+        self.inner.state.lock().unwrap().epochs.len()
     }
 
     /// Worker threads backing the session.
@@ -357,9 +720,20 @@ impl SessionEngine {
         self.queue_depth
     }
 
+    /// The backlog-ordering policy.
+    pub fn scheduling(&self) -> SchedPolicy {
+        self.scheduling
+    }
+
     /// Submitted − received right now.
     pub fn outstanding(&self) -> usize {
         self.inner.state.lock().unwrap().outstanding
+    }
+
+    /// Submitted − received of one class right now (bounded by its
+    /// [`ClassPolicy::depth`], when set).
+    pub fn outstanding_for(&self, class: RequestClass) -> usize {
+        self.inner.state.lock().unwrap().class_outstanding[class.rank()]
     }
 
     /// The session's metrics registry (the engine's, when opened from
@@ -374,55 +748,126 @@ impl SessionEngine {
         &self.inner.cache
     }
 
-    /// Submit one observation under the session's policy: blocks at
-    /// capacity ([`SubmitPolicy::Block`]) or returns
-    /// [`SubmitError::WouldBlock`] ([`SubmitPolicy::Reject`]).
+    /// Install a new dictionary as a fresh epoch **without draining**
+    /// and return its id.  Future admissions solve against `dict`;
+    /// requests already admitted keep their own epoch's dictionary
+    /// (per-epoch parity — see the module docs).  Old epochs retire —
+    /// dictionary handle dropped, cache entries purged, counted once
+    /// in `session_epochs_retired` — as soon as nothing of theirs is
+    /// in flight: immediately here if idle, otherwise when their last
+    /// in-flight request completes.  `dict` need not share the old
+    /// shape; submissions are validated against the current epoch at
+    /// admission (a parked submitter revalidates on wake).  Callable
+    /// any time, including after [`close`](Self::close) (the new
+    /// epoch then only ever serves the empty admission stream).
+    pub fn swap_dict(&self, dict: SharedDict) -> EpochId {
+        let mut st = self.inner.state.lock().unwrap();
+        let id = EpochId(
+            st.epochs.last().expect("epoch table never empty").id.0 + 1,
+        );
+        st.epochs.push(EpochSlot { id, dict, in_flight: 0 });
+        self.inner.metrics.counter("session_swaps").inc();
+        self.inner.metrics.gauge("session_epoch").set(id.0 as f64);
+        retire_idle_epochs(&mut st, &self.inner);
+        // Parked submitters must revalidate against the new epoch.
+        self.inner.cv.notify_all();
+        id
+    }
+
+    /// Submit one [`RequestClass::Standard`] observation under the
+    /// session's policy: blocks at capacity ([`SubmitPolicy::Block`])
+    /// or returns [`SubmitError::WouldBlock`]
+    /// ([`SubmitPolicy::Reject`]).
     pub fn submit(
         &self,
         y: Vec<f64>,
         lam: LambdaSpec,
     ) -> Result<RequestId, SubmitError> {
-        self.submit_inner(y, lam, self.policy)
+        self.submit_classed(y, lam, RequestClass::default())
     }
 
-    /// Non-blocking submit, whatever the session policy: returns
-    /// [`SubmitError::WouldBlock`] at capacity.  A single-threaded
-    /// submit/receive loop must use this — a blocked
-    /// [`submit`](Self::submit) could only be freed by a receive the
-    /// same thread would perform (see [`replay`](Self::replay)).
+    /// Submit one observation under `class`, honoring the class's
+    /// at-capacity policy ([`ClassPolicy::policy`], falling back to
+    /// the session policy) against both the global window and the
+    /// class window.
+    pub fn submit_classed(
+        &self,
+        y: Vec<f64>,
+        lam: LambdaSpec,
+        class: RequestClass,
+    ) -> Result<RequestId, SubmitError> {
+        let policy =
+            self.classes[class.rank()].policy.unwrap_or(self.policy);
+        self.submit_inner(y, lam, class, policy)
+    }
+
+    /// Non-blocking [`RequestClass::Standard`] submit, whatever the
+    /// session policy: returns [`SubmitError::WouldBlock`] at
+    /// capacity.  A single-threaded submit/receive loop must use this
+    /// — a blocked [`submit`](Self::submit) could only be freed by a
+    /// receive the same thread would perform (see
+    /// [`replay`](Self::replay)).
     pub fn try_submit(
         &self,
         y: Vec<f64>,
         lam: LambdaSpec,
     ) -> Result<RequestId, SubmitError> {
-        self.submit_inner(y, lam, SubmitPolicy::Reject)
+        self.try_submit_classed(y, lam, RequestClass::default())
+    }
+
+    /// Non-blocking classed submit.
+    pub fn try_submit_classed(
+        &self,
+        y: Vec<f64>,
+        lam: LambdaSpec,
+        class: RequestClass,
+    ) -> Result<RequestId, SubmitError> {
+        self.submit_inner(y, lam, class, SubmitPolicy::Reject)
     }
 
     fn submit_inner(
         &self,
         y: Vec<f64>,
         lam: LambdaSpec,
+        class: RequestClass,
         policy: SubmitPolicy,
     ) -> Result<RequestId, SubmitError> {
-        if y.len() != self.dict.rows() {
-            return Err(SubmitError::ShapeMismatch {
-                expected: self.dict.rows(),
-                got: y.len(),
-            });
-        }
-        // Reserve an outstanding slot (or bail) under the lock...
-        {
+        let class_depth =
+            self.classes[class.rank()].depth.unwrap_or(usize::MAX);
+        // Admit (or bail) under the lock: reserve global + class
+        // slots, pin the current epoch, assign the id, enqueue the
+        // pending record.
+        let id = {
             let mut st = self.inner.state.lock().unwrap();
             loop {
                 if st.closed {
                     return Err(SubmitError::Closed);
                 }
-                if st.outstanding < self.queue_depth {
+                // Validated against the epoch this request would be
+                // admitted under — inside the wait loop, since a swap
+                // may land while parked.
+                let rows = st
+                    .epochs
+                    .last()
+                    .expect("epoch table never empty")
+                    .dict
+                    .rows();
+                if y.len() != rows {
+                    return Err(SubmitError::ShapeMismatch {
+                        expected: rows,
+                        got: y.len(),
+                    });
+                }
+                if st.outstanding < self.queue_depth
+                    && st.class_outstanding[class.rank()] < class_depth
+                {
                     break;
                 }
                 match policy {
                     SubmitPolicy::Reject => {
-                        self.inner.metrics.counter("session_rejected").inc();
+                        self.inner
+                            .metrics
+                            .inc_classed("session_rejected", class.name());
                         return Err(SubmitError::WouldBlock);
                     }
                     SubmitPolicy::Block => {
@@ -431,100 +876,61 @@ impl SessionEngine {
                 }
             }
             st.outstanding += 1;
-        }
-        // ...then enqueue the solve job outside it.
-        let id = RequestId(self.next_id.fetch_add(1, Ordering::Relaxed));
-        self.inner.metrics.counter("session_submitted").inc();
-        let inner = Arc::clone(&self.inner);
-        let dict = self.dict.clone();
-        let cfg = self.cfg.clone();
-        let class = lam.class_name();
-        let submitted = Stopwatch::start();
-        self.pool.execute(move || {
-            let queue_secs = submitted.elapsed_secs();
-            let sw = Stopwatch::start();
-            // Cold path: exactly the per-RHS path of `solve_many` —
-            // build the problem over the shared caches (one Aᵀy
-            // matvec), solve on a fresh working set under the
-            // session's config.  The report is a pure function of
-            // (dict, y, lam, cfg) — this is what makes arrival order
-            // bitwise invisible.  A cache hit swaps in the one other
-            // pure function this session ever runs: the same call
-            // seeded with the cached iterate and one Sequential
-            // screening round (see the module docs' cache section).
-            let y_hash = if inner.cache.enabled() {
-                SessionCache::hash_obs(&y)
-            } else {
-                0
-            };
-            let p = dict.problem(y, lam);
-            let mut ws = WorkingSet::new(cfg.compaction, p.n());
-            let bucket = inner.cache.bucket_of(p.lam(), p.lam_max());
-            let hit = inner.cache.lookup(y_hash, bucket, p.y());
-            let cache_hit = hit.is_some();
-            let report = match hit {
-                Some(h) => {
-                    let mut warm = cfg.clone();
-                    warm.seed_region = Some(RegionKind::Sequential);
-                    solve_warm_ws(&p, &warm, Some(&h.x), &mut ws)
-                }
-                None => solve_warm_ws(&p, &cfg, None, &mut ws),
-            };
-            let solve_secs = sw.elapsed_secs();
-            let m = &inner.metrics;
-            m.observe_classed_secs("session_queue_secs", class, queue_secs);
-            m.observe_classed_secs("session_solve_secs", class, solve_secs);
-            if inner.cache.enabled() {
-                m.counter(if cache_hit {
-                    "session_cache_hits"
-                } else {
-                    "session_cache_misses"
-                })
-                .inc();
-                // Warm-vs-cold latency split, only meaningful (and
-                // only emitted) with the cache on.
-                m.observe_secs(
-                    if cache_hit {
-                        "session_solve_warm_secs"
-                    } else {
-                        "session_solve_cold_secs"
-                    },
-                    solve_secs,
-                );
-                // Insert on hits too: refreshes the entry with the
-                // newest iterate/λ for this key.
-                if inner.cache.insert(y_hash, bucket, p.y(), p.lam(), &report)
-                {
-                    m.counter("session_cache_evictions").inc();
-                }
-            }
-            m.counter("session_completed").inc();
-            m.counter("session_flops_total").add(report.flops);
-            m.gauge("session_last_gap").set(report.gap);
-            let mut st = inner.state.lock().unwrap();
-            st.done.push_back(Completed {
+            st.class_outstanding[class.rank()] += 1;
+            let slot = st.epochs.last_mut().expect("epoch table never empty");
+            slot.in_flight += 1;
+            let epoch = slot.id;
+            let id = RequestId(st.next_id);
+            st.next_id += 1;
+            let enqueue_tick = st.sched_tick;
+            st.pending.push(Pending {
                 id,
-                report,
-                queue_secs,
-                solve_secs,
-                cache_hit,
+                y,
+                lam,
+                class,
+                epoch,
+                cost: predicted_cost(lam),
+                enqueue_tick,
+                submitted: Stopwatch::start(),
             });
-            inner.cv.notify_all();
-        });
+            id
+        };
+        self.inner.metrics.inc_classed("session_submitted", class.name());
+        // One pool runner per admitted request.  The runner pops the
+        // *scheduled-best* pending request — not necessarily this one
+        // (task-bag pattern): runner count equals request count, so
+        // every pending entry is eventually popped exactly once, and
+        // reordering is bitwise invisible because each report is a
+        // pure function of its own (dict, y, λ, cfg).
+        let inner = Arc::clone(&self.inner);
+        let cfg = self.cfg.clone();
+        let scheduling = self.scheduling;
+        let aging_after = self.aging_after;
+        self.pool
+            .execute(move || run_one(&inner, &cfg, scheduling, aging_after));
         Ok(id)
     }
 
-    /// Submit a batch of requests one after another under the session
-    /// policy.  On failure the accepted prefix keeps running (its ids
-    /// are in the error) and nothing after the failing index was
-    /// enqueued.
+    /// Submit a batch of [`RequestClass::Standard`] requests one after
+    /// another under the session policy.  On failure the accepted
+    /// prefix keeps running (its ids are in the error) and nothing
+    /// after the failing index was enqueued.
     pub fn submit_many(
         &self,
         rhs: Vec<BatchRhs>,
     ) -> Result<Vec<RequestId>, SubmitManyError> {
+        self.submit_many_classed(rhs, RequestClass::default())
+    }
+
+    /// [`submit_many`](Self::submit_many) under one explicit class.
+    pub fn submit_many_classed(
+        &self,
+        rhs: Vec<BatchRhs>,
+        class: RequestClass,
+    ) -> Result<Vec<RequestId>, SubmitManyError> {
         let mut accepted = Vec::with_capacity(rhs.len());
         for (index, req) in rhs.into_iter().enumerate() {
-            match self.submit(req.y, req.lam) {
+            match self.submit_classed(req.y, req.lam, class) {
                 Ok(id) => accepted.push(id),
                 Err(error) => {
                     return Err(SubmitManyError { accepted, index, error })
@@ -535,7 +941,8 @@ impl SessionEngine {
     }
 
     /// Pop one completed report if one is ready (completion order);
-    /// never blocks.  Receiving frees one backpressure slot.
+    /// never blocks.  Receiving frees one backpressure slot (global
+    /// and class).
     pub fn try_recv_completed(&self) -> Option<Completed> {
         let mut st = self.inner.state.lock().unwrap();
         self.take_done(&mut st)
@@ -561,8 +968,9 @@ impl SessionEngine {
         st: &mut std::sync::MutexGuard<'_, SessionState>,
     ) -> Option<Completed> {
         let c = st.done.pop_front();
-        if c.is_some() {
+        if let Some(c) = &c {
             st.outstanding -= 1;
+            st.class_outstanding[c.class.rank()] -= 1;
             self.inner.metrics.counter("session_received").inc();
             // A slot freed: wake blocked submitters (and drainers).
             self.inner.cv.notify_all();
@@ -578,7 +986,9 @@ impl SessionEngine {
     /// quiesce, not a snapshot flush (use
     /// [`try_recv_completed`](Self::try_recv_completed) in a loop for
     /// the latter).  The session stays open: drain is not
-    /// [`close`](Self::close).
+    /// [`close`](Self::close).  A [`swap_dict`](Self::swap_dict)
+    /// landing mid-drain is fine — the drain simply keeps collecting
+    /// whatever either epoch completes.
     pub fn drain(&self) -> Vec<Completed> {
         let mut out = Vec::new();
         while let Some(c) = self.recv_completed() {
@@ -591,7 +1001,8 @@ impl SessionEngine {
     /// Refuse all future submissions ([`SubmitError::Closed`]) —
     /// including parked [`SubmitPolicy::Block`] callers, which wake
     /// with the error.  In-flight requests finish normally and remain
-    /// receivable/drainable.
+    /// receivable/drainable; old epochs still retire as their last
+    /// requests complete (the current epoch stays resident).
     pub fn close(&self) {
         let mut st = self.inner.state.lock().unwrap();
         st.closed = true;
@@ -615,8 +1026,9 @@ impl SessionEngine {
     /// `chunk = rhs.len()` submits the whole trace before the final
     /// drain.  Returns the reports **in `rhs` index order** — by the
     /// arrival-order-invariance contract the result is bitwise the
-    /// same for every `order`/`chunk`, only the latency histograms
-    /// move (`rust/tests/session_parity.rs`).
+    /// same for every `order`/`chunk` (and either [`SchedPolicy`]),
+    /// only the latency histograms move
+    /// (`rust/tests/session_parity.rs`).
     ///
     /// The session must be **quiet** when a replay starts: no
     /// unreceived pre-replay requests (a replay claims every
@@ -692,6 +1104,159 @@ impl SessionEngine {
     }
 }
 
+/// The body of one pool runner: pop the scheduled-best pending
+/// request, solve it against its admission epoch's dictionary, file
+/// the completion and the epoch/cache bookkeeping.
+fn run_one(
+    inner: &Arc<SessionShared>,
+    cfg: &SolverConfig,
+    scheduling: SchedPolicy,
+    aging_after: u64,
+) {
+    let (req, dict) = {
+        let mut st = inner.state.lock().unwrap();
+        st.sched_tick += 1;
+        let tick = st.sched_tick;
+        let keys: Vec<SchedKey> = st
+            .pending
+            .iter()
+            .map(|p| SchedKey {
+                id: p.id.0,
+                class: p.class,
+                cost: p.cost,
+                enqueue_tick: p.enqueue_tick,
+            })
+            .collect();
+        let (k, aged) = pick_index(&keys, scheduling, aging_after, tick);
+        let req = st.pending.swap_remove(k);
+        if aged {
+            inner.metrics.counter("session_aged_pops").inc();
+        }
+        // The admission epoch is resident as long as it has anything
+        // in flight — this request proves it does.
+        let dict = st
+            .epochs
+            .iter()
+            .find(|e| e.id == req.epoch)
+            .expect("in-flight epoch must be resident")
+            .dict
+            .clone();
+        (req, dict)
+    };
+    let Pending { id, y, lam, class, epoch, submitted, .. } = req;
+    let queue_secs = submitted.elapsed_secs();
+    let sw = Stopwatch::start();
+    // Cold path: exactly the per-RHS path of `solve_many` — build the
+    // problem over the epoch's shared caches (one Aᵀy matvec), solve
+    // on a fresh working set under the session's config.  The report
+    // is a pure function of (dict, y, lam, cfg) — this is what makes
+    // arrival order AND scheduler order bitwise invisible.  A cache
+    // hit swaps in the one other pure function this session ever
+    // runs: the same call seeded with the cached iterate and one
+    // Sequential screening round (see the module docs' cache
+    // section).
+    let y_hash = if inner.cache.enabled() {
+        SessionCache::hash_obs(&y)
+    } else {
+        0
+    };
+    let p = dict.problem(y, lam);
+    let mut ws = WorkingSet::new(cfg.compaction, p.n());
+    let bucket = inner.cache.bucket_of(p.lam(), p.lam_max());
+    let hit = inner.cache.lookup(epoch, y_hash, bucket, p.y());
+    let cache_hit = hit.is_some();
+    let report = match hit {
+        Some(h) => {
+            let mut warm = cfg.clone();
+            warm.seed_region = Some(RegionKind::Sequential);
+            solve_warm_ws(&p, &warm, Some(&h.x), &mut ws)
+        }
+        None => solve_warm_ws(&p, cfg, None, &mut ws),
+    };
+    let solve_secs = sw.elapsed_secs();
+    let m = &inner.metrics;
+    let lam_class = lam.class_name();
+    m.observe_classed_secs("session_queue_secs", lam_class, queue_secs);
+    m.observe_class_secs("session_queue_secs", class.name(), queue_secs);
+    m.observe_classed_secs("session_solve_secs", lam_class, solve_secs);
+    m.observe_class_secs("session_solve_secs", class.name(), solve_secs);
+    if inner.cache.enabled() {
+        m.counter(if cache_hit {
+            "session_cache_hits"
+        } else {
+            "session_cache_misses"
+        })
+        .inc();
+        // Warm-vs-cold latency split, only meaningful (and only
+        // emitted) with the cache on.
+        m.observe_secs(
+            if cache_hit {
+                "session_solve_warm_secs"
+            } else {
+                "session_solve_cold_secs"
+            },
+            solve_secs,
+        );
+        // Insert on hits too: refreshes the entry with the newest
+        // iterate/λ for this (epoch-scoped) key.
+        if inner.cache.insert(epoch, y_hash, bucket, p.y(), p.lam(), &report)
+        {
+            m.counter("session_cache_evictions").inc();
+        }
+    }
+    m.counter("session_completed").inc();
+    m.counter("session_flops_total").add(report.flops);
+    m.gauge("session_last_gap").set(report.gap);
+    let mut st = inner.state.lock().unwrap();
+    // This completion may be its epoch's last: retire-on-complete.
+    let slot = st
+        .epochs
+        .iter_mut()
+        .find(|e| e.id == epoch)
+        .expect("in-flight epoch must be resident");
+    slot.in_flight -= 1;
+    retire_idle_epochs(&mut st, inner);
+    st.done.push_back(Completed {
+        id,
+        report,
+        queue_secs,
+        solve_secs,
+        cache_hit,
+        class,
+        epoch,
+    });
+    inner.cv.notify_all();
+}
+
+/// Retire every **non-current** epoch with nothing in flight: drop
+/// its dictionary handle, purge its cache entries, count it exactly
+/// once.  Called with the state lock held (lock order: state before
+/// cache).  The current epoch never retires — not even when idle or
+/// closed — so the table is never empty.
+fn retire_idle_epochs(st: &mut SessionState, inner: &SessionShared) {
+    let current = st.epochs.last().expect("epoch table never empty").id;
+    let mut i = 0;
+    while i < st.epochs.len() {
+        if st.epochs[i].id != current && st.epochs[i].in_flight == 0 {
+            let slot = st.epochs.remove(i);
+            inner.metrics.counter("session_epochs_retired").inc();
+            let purged = inner.cache.purge_epoch(slot.id);
+            if purged > 0 {
+                inner
+                    .metrics
+                    .counter("session_cache_purged")
+                    .add(purged as u64);
+            }
+        } else {
+            i += 1;
+        }
+    }
+    inner
+        .metrics
+        .gauge("session_epochs_live")
+        .set(st.epochs.len() as f64);
+}
+
 impl Drop for SessionEngine {
     /// Dedicated-pool quiesce before teardown.  A solve job holds a
     /// pool handle (through its `ParContext`), so dropping an
@@ -751,6 +1316,8 @@ mod tests {
         assert_eq!(done.len(), 4);
         for (k, c) in done.iter().enumerate() {
             assert_eq!(c.id, RequestId(k as u64));
+            assert_eq!(c.class, RequestClass::Standard);
+            assert_eq!(c.epoch, EpochId(0));
             let solo = solve(
                 &shared.problem(ys[k].clone(), LambdaSpec::RatioOfMax(0.5)),
                 &scfg.solver,
@@ -763,6 +1330,13 @@ mod tests {
         }
         assert_eq!(session.outstanding(), 0);
         assert_eq!(session.metrics().counter("session_received").get(), 4);
+        assert_eq!(
+            session
+                .metrics()
+                .counter("session_submitted_standard")
+                .get(),
+            4
+        );
     }
 
     #[test]
@@ -882,5 +1456,63 @@ mod tests {
                 assert_eq!(va.to_bits(), vb.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn predicted_cost_orders_by_hardness() {
+        // Smaller λ/λ_max ratio ⇒ harder solve ⇒ larger predicted cost.
+        let c = |r| predicted_cost(LambdaSpec::RatioOfMax(r));
+        assert!(c(0.1) > c(0.5));
+        assert!(c(0.5) > c(0.9));
+        assert_eq!(c(0.0), 1.0);
+        assert_eq!(c(1.0), 0.0);
+        // Out-of-range and non-finite ratios stay in [0, 1].
+        assert_eq!(c(2.0), 0.0);
+        assert_eq!(c(-1.0), 1.0);
+        assert_eq!(c(f64::NAN), 0.5);
+        // Absolute λ reveals nothing at admission: neutral midpoint.
+        assert_eq!(predicted_cost(LambdaSpec::Value(3.0)), 0.5);
+    }
+
+    #[test]
+    fn class_table_is_consistent() {
+        for (i, c) in RequestClass::ALL.iter().enumerate() {
+            assert_eq!(c.rank(), i);
+            assert_eq!(RequestClass::parse(c.name()), Some(*c));
+        }
+        assert_eq!(RequestClass::default(), RequestClass::Standard);
+        assert_eq!(RequestClass::parse("HIGH"), Some(RequestClass::Interactive));
+        assert_eq!(RequestClass::parse("nope"), None);
+        assert_eq!(SchedPolicy::parse("cost"), Some(SchedPolicy::CostAware));
+        assert_eq!(SchedPolicy::parse("fifo"), Some(SchedPolicy::Fifo));
+    }
+
+    /// swap_dict with nothing in flight retires the old epoch
+    /// immediately and re-points future admissions.
+    #[test]
+    fn idle_swap_retires_immediately() {
+        let (shared, ys) = generate_batch(&small_cfg(), 7, 1);
+        let (shared2, _) = generate_batch(&small_cfg(), 8, 0);
+        let session = SessionEngine::new(
+            shared,
+            1,
+            session_cfg(4, SubmitPolicy::Block),
+        );
+        assert_eq!(session.epoch(), EpochId(0));
+        assert_eq!(session.live_epochs(), 1);
+        let e1 = session.swap_dict(shared2.clone());
+        assert_eq!(e1, EpochId(1));
+        assert_eq!(session.epoch(), e1);
+        assert_eq!(session.live_epochs(), 1, "idle epoch 0 retired at swap");
+        let m = session.metrics();
+        assert_eq!(m.counter("session_swaps").get(), 1);
+        assert_eq!(m.counter("session_epochs_retired").get(), 1);
+        // New admissions land in (and solve against) epoch 1.
+        session
+            .submit(ys[0].clone(), LambdaSpec::RatioOfMax(0.5))
+            .unwrap();
+        let done = session.drain();
+        assert_eq!(done[0].epoch, e1);
+        assert!(SharedDict::ptr_eq(&session.shared(), &shared2));
     }
 }

@@ -133,10 +133,28 @@
 //! arrival order, interleaving or chunking of the same RHS set is
 //! bitwise identical to one `solve_many` call — and hence to
 //! independent solves (`rust/tests/session_parity.rs`;
-//! bounded-queue semantics in `rust/tests/backpressure.rs`).  Open a
-//! session from a [`coordinator::JobEngine`] (`open_session`) to share
-//! its workers and metrics; the CLI `serve` subcommand replays a
-//! generated arrival trace and prints the histograms.  An optional
+//! bounded-queue semantics in `rust/tests/backpressure.rs`).
+//!
+//! On top of that invariant sits the **serving hardening** layer:
+//! queued backlog ordered by predicted solve cost
+//! ([`coordinator::SchedPolicy`], λ/λ_max as iteration-count proxy),
+//! priority classes with per-class queue depths and Block/Reject
+//! overrides ([`coordinator::RequestClass`],
+//! [`coordinator::ClassPolicy`], aging-bounded starvation), and
+//! **epoch-based dictionary hot-swap**
+//! ([`coordinator::SessionEngine::swap_dict`]): a new dictionary
+//! installs as a fresh [`coordinator::EpochId`] without draining,
+//! requests keep solving against their admission epoch's dictionary
+//! (per-epoch parity), and old epochs retire — cache entries purged —
+//! when their last in-flight request completes.  Scheduling and
+//! hot-swap are bitwise invisible in every report; only latency
+//! histograms move (`rust/tests/scheduling_parity.rs`,
+//! `rust/tests/hotswap_parity.rs`).
+//!
+//! Open a session from a [`coordinator::JobEngine`] (`open_session`)
+//! to share its workers and metrics; the CLI `serve` subcommand
+//! replays a generated arrival trace and prints the histograms.  An
+//! optional
 //! per-session warm-start cache ([`coordinator::SessionCache`],
 //! `serve --cache-capacity`) re-seeds repeat requests from their
 //! previous solve through a [`regions::RegionKind::Sequential`]
@@ -244,8 +262,9 @@ pub mod prelude {
         SolveReport, SolverConfig, SolverKind, StopReason,
     };
     pub use crate::coordinator::{
-        Completed, JobEngine, RequestId, SessionCache, SessionConfig,
-        SessionEngine, SubmitError, SubmitPolicy,
+        ClassPolicy, Completed, EpochId, JobEngine, RequestClass, RequestId,
+        SchedPolicy, SessionCache, SessionConfig, SessionEngine, SubmitError,
+        SubmitPolicy,
     };
     pub use crate::workset::{CompactionPolicy, WorkingSet};
 }

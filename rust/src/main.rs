@@ -235,6 +235,21 @@ const SERVE_FLAGS: &[Flag] = &[
     Flag::str("policy", Some("block"),
               "backpressure policy at capacity: block | reject \
                (reject = submit returns WouldBlock)"),
+    Flag::str("priority", Some("standard"),
+              "request class of submissions: interactive | standard | \
+               bulk | mixed (mixed cycles the classes across bursts); \
+               never changes results"),
+    Flag::str("sched", Some("fifo"),
+              "backlog ordering: fifo | cost (cost-aware: predicted \
+               iteration count from lambda/lambda_max); never changes \
+               results"),
+    Flag::int("aging-after", Some("64"),
+              "a queued request pops first once passed over this many \
+               times, whatever its class (0 disables aging)"),
+    Flag::int("swap-after", Some("0"),
+              "hot-swap to a fresh same-shape dictionary (seed+1) after \
+               this many submissions (0 disables); per-epoch reports \
+               stay bitwise"),
     Flag::int("chunk", Some("1"),
               "submission burst size of the replay (requests per \
                submit_many-style burst); never changes results"),
@@ -772,15 +787,22 @@ fn cmd_ablation(args: &Args) -> i32 {
 /// histograms.  `--passes` replays the whole trace repeatedly through
 /// the same session; with `--cache-capacity` > 0, passes after the
 /// first warm-start from the session cache (hit/miss/eviction counters
-/// and the warm/cold latency split are printed).  `--verify`
-/// cross-checks every streamed report bitwise: cold solves against one
-/// offline `solve_many` call (the arrival-order-invariance contract),
-/// cache hits against the seeded `solve_warm_ws` call the cache-hit
-/// contract names — both exercised end to end.
+/// and the warm/cold latency split are printed).  `--priority` picks
+/// the request class of every burst (or cycles them with `mixed`),
+/// `--sched cost` turns on cost-aware backlog ordering, and
+/// `--swap-after K` hot-swaps a fresh same-shape dictionary (seed+1)
+/// into the live session after K submissions — all latency/epoch
+/// knobs that never change a report bit.  `--verify` cross-checks
+/// every streamed report bitwise: cold solves against one offline
+/// `solve_many` call *per epoch* (the arrival-order-invariance
+/// contract), cache hits against the seeded `solve_warm_ws` call the
+/// cache-hit contract names — both exercised end to end.
 fn cmd_serve(args: &Args) -> i32 {
     use holder_screening::coordinator::{
-        Completed, SessionConfig, SubmitError, SubmitPolicy,
+        Completed, RequestClass, SchedPolicy, SessionConfig, SubmitError,
+        SubmitPolicy,
     };
+    use holder_screening::problem::SharedDict;
     use holder_screening::util::rng::Pcg64;
 
     let icfg = instance_from_args(args);
@@ -805,6 +827,27 @@ fn cmd_serve(args: &Args) -> i32 {
             SubmitPolicy::Block
         }
     };
+    let scheduling = {
+        let s = args.str_or("sched", "fifo");
+        SchedPolicy::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown sched '{s}'; using fifo");
+            SchedPolicy::Fifo
+        })
+    };
+    let aging_after = args.int_or("aging-after", 64).max(0) as u64;
+    // None = cycle interactive/standard/bulk across submission bursts.
+    let fixed_class: Option<RequestClass> = {
+        let s = args.str_or("priority", "standard");
+        if s.eq_ignore_ascii_case("mixed") {
+            None
+        } else {
+            Some(RequestClass::parse(s).unwrap_or_else(|| {
+                eprintln!("unknown priority '{s}'; using standard");
+                RequestClass::Standard
+            }))
+        }
+    };
+    let swap_after = args.int_or("swap-after", 0).max(0) as usize;
     let chunk = args.int_or("chunk", 1).max(1);
     let order: Vec<usize> = match args.str_or("arrival", "inorder") {
         "reversed" => (0..requests).rev().collect(),
@@ -840,8 +883,21 @@ fn cmd_serve(args: &Args) -> i32 {
             policy,
             cache_capacity,
             lambda_buckets,
+            scheduling,
+            aging_after,
+            ..Default::default()
         },
     );
+    let total = requests * passes;
+    // The hot-swap target: a fresh same-shape dictionary from the next
+    // seed, installed mid-trace without draining.  Requests keep the
+    // epoch they were *admitted* under for their whole life, so the
+    // trace stays reproducible: submission k solves against epoch 0
+    // iff k < swap point.
+    let swap_at: Option<usize> =
+        (swap_after > 0 && swap_after < total).then_some(swap_after);
+    let swap_dict: Option<SharedDict> =
+        swap_at.map(|_| generate_batch(&icfg, seed + 1, 0).0);
     println!(
         "session: {}x{} dict={}/{} pinned for the session | {} threads | \
          queue depth {} ({:?}) | {} requests x {} passes arriving {} in \
@@ -863,8 +919,21 @@ fn cmd_serve(args: &Args) -> i32 {
             "off".to_string()
         }
     );
+    println!(
+        "scheduling: {} | priority {} | aging after {} | hot-swap {}",
+        scheduling.name(),
+        fixed_class.map(|c| c.name()).unwrap_or("mixed"),
+        if aging_after > 0 {
+            format!("{aging_after} pass-overs")
+        } else {
+            "off".to_string()
+        },
+        match swap_at {
+            Some(at) => format!("after submission {at} (seed {})", seed + 1),
+            None => "off".to_string(),
+        }
+    );
 
-    let total = requests * passes;
     let sw = holder_screening::util::timer::Stopwatch::start();
     // Producer (this thread) + consumer thread, so --policy is
     // honored for real: under Block the producer parks at capacity
@@ -897,6 +966,13 @@ fn cmd_serve(args: &Args) -> i32 {
                 got
             })
         };
+        // Submission counter across passes: the hot-swap lands after
+        // exactly `swap_at` submissions (bursts are split at the
+        // boundary), so epoch-of-request-id is a pure function of the
+        // flags and --verify can rebuild it offline.
+        let mut submitted = 0usize;
+        let mut burst_idx = 0usize;
+        let mut swapped = false;
         for pass in 0..passes {
             if pass > 0 {
                 // Inter-pass barrier: every prior solve completed,
@@ -907,12 +983,34 @@ fn cmd_serve(args: &Args) -> i32 {
                 }
             }
             for burst in order.chunks(chunk) {
+                let class = fixed_class.unwrap_or(
+                    RequestClass::ALL[burst_idx % RequestClass::COUNT],
+                );
+                burst_idx += 1;
                 let mut pending: Vec<usize> = burst.to_vec();
                 while !pending.is_empty() {
-                    let reqs: Vec<BatchRhs> =
-                        pending.iter().map(|&i| rhs[i].clone()).collect();
-                    match session.submit_many(reqs) {
-                        Ok(_) => pending.clear(),
+                    if let (Some(at), Some(dict)) = (swap_at, &swap_dict) {
+                        if !swapped && submitted == at {
+                            session.swap_dict(dict.clone());
+                            swapped = true;
+                        }
+                    }
+                    // Never submit past an un-landed swap point.
+                    let take = match swap_at {
+                        Some(at) if submitted < at => {
+                            (at - submitted).min(pending.len())
+                        }
+                        _ => pending.len(),
+                    };
+                    let reqs: Vec<BatchRhs> = pending[..take]
+                        .iter()
+                        .map(|&i| rhs[i].clone())
+                        .collect();
+                    match session.submit_many_classed(reqs, class) {
+                        Ok(_) => {
+                            submitted += take;
+                            pending.drain(..take);
+                        }
                         Err(err) => {
                             if err.error != SubmitError::WouldBlock {
                                 // Unreachable by construction (shapes
@@ -925,6 +1023,7 @@ fn cmd_serve(args: &Args) -> i32 {
                                 );
                                 std::process::exit(1);
                             }
+                            submitted += err.index;
                             pending.drain(..err.index);
                             std::thread::yield_now();
                         }
@@ -969,6 +1068,9 @@ fn cmd_serve(args: &Args) -> i32 {
     let fmt = holder_screening::util::timer::fmt_duration;
     for (label, name) in [
         ("queue wait (submit -> start)", "session_queue_secs"),
+        ("  interactive", "session_queue_secs_interactive"),
+        ("  standard", "session_queue_secs_standard"),
+        ("  bulk", "session_queue_secs_bulk"),
         ("solve time (start -> done)", "session_solve_secs"),
         ("  class 'ratio'", "session_solve_secs_ratio"),
         ("  cold (cache miss)", "session_solve_cold_secs"),
@@ -996,6 +1098,24 @@ fn cmd_serve(args: &Args) -> i32 {
         queued,
         running
     );
+    println!(
+        "scheduling: {} aged pops | per class submitted i/s/b = {}/{}/{}",
+        metrics.counter("session_aged_pops").get(),
+        metrics.counter("session_submitted_interactive").get(),
+        metrics.counter("session_submitted_standard").get(),
+        metrics.counter("session_submitted_bulk").get()
+    );
+    if swap_at.is_some() {
+        println!(
+            "epochs: current {} | {} live | {} swaps | {} retired | \
+             {} cache entries purged on retirement",
+            session.epoch().0,
+            session.live_epochs(),
+            metrics.counter("session_swaps").get(),
+            metrics.counter("session_epochs_retired").get(),
+            metrics.counter("session_cache_purged").get()
+        );
+    }
     if cache_capacity > 0 {
         println!(
             "cache: {} hits / {} misses / {} evictions | {} of {} \
@@ -1017,22 +1137,38 @@ fn cmd_serve(args: &Args) -> i32 {
         // the previous solve of the same observation (panics with the
         // offending field on divergence — the shared parity gate).
         let scfg = solver_from_args(args);
-        let batch = engine.run_batch(&shared, &rhs, &scfg);
+        // One reference batch (and one seed chain) per epoch: a
+        // request is pinned to the dictionary generation it was
+        // admitted under, and the cache key carries the epoch, so a
+        // hit's seed is always the previous solve of the same
+        // observation *in the same epoch*.
+        let dicts: Vec<&SharedDict> = std::iter::once(&shared)
+            .chain(swap_dict.iter())
+            .collect();
+        let batch: Vec<Vec<holder_screening::solver::SolveReport>> = dicts
+            .iter()
+            .map(|d| engine.run_batch(*d, &rhs, &scfg))
+            .collect();
         let mut warm_cfg = scfg.clone();
         warm_cfg.seed_region =
             Some(holder_screening::regions::RegionKind::Sequential);
-        // Most recent streamed x per rhs index, in pass order — the
-        // seed a hit in the next pass took from the cache.
-        let mut prev_x: Vec<Option<Vec<f64>>> =
-            (0..requests).map(|_| None).collect();
+        // Most recent streamed x per (epoch, rhs index), in pass order
+        // — the seed a hit in the next pass took from the cache.
+        let mut prev_x: Vec<Vec<Option<Vec<f64>>>> =
+            vec![vec![None; requests]; dicts.len()];
         let (mut cold_checked, mut warm_checked) = (0usize, 0usize);
         for (k, c) in completed.iter().enumerate() {
             let i = k % requests;
+            let e = c.epoch.0 as usize;
+            assert!(
+                e < dicts.len(),
+                "serve verify: epoch {e} outside the swap schedule"
+            );
             if c.cache_hit {
-                let seed = prev_x[i]
+                let seed = prev_x[e][i]
                     .as_ref()
                     .expect("serve verify: hit before any solve of this rhs");
-                let p = shared
+                let p = dicts[e]
                     .problem(rhs[i].y.clone(), rhs[i].lam);
                 let mut ws = holder_screening::workset::WorkingSet::new(
                     warm_cfg.compaction,
@@ -1046,22 +1182,22 @@ fn cmd_serve(args: &Args) -> i32 {
                 );
                 reference.assert_bitwise_eq(
                     &c.report,
-                    &format!("serve verify warm rhs {i} (slot {k})"),
+                    &format!("serve verify warm rhs {i} epoch {e} (slot {k})"),
                 );
                 warm_checked += 1;
             } else {
-                batch[i].assert_bitwise_eq(
+                batch[e][i].assert_bitwise_eq(
                     &c.report,
-                    &format!("serve verify cold rhs {i} (slot {k})"),
+                    &format!("serve verify cold rhs {i} epoch {e} (slot {k})"),
                 );
                 cold_checked += 1;
             }
-            prev_x[i] = Some(c.report.x.clone());
+            prev_x[e][i] = Some(c.report.x.clone());
         }
         println!(
             "verify: {cold_checked} cold reports bitwise identical to one \
-             solve_many call, {warm_checked} cache hits bitwise identical \
-             to the seeded solve_warm_ws contract"
+             solve_many call per epoch, {warm_checked} cache hits bitwise \
+             identical to the seeded solve_warm_ws contract"
         );
     }
     if converged == total { 0 } else { 1 }

@@ -105,6 +105,33 @@ impl Registry {
         self.histogram(&format!("{name}_{class}")).observe(secs);
     }
 
+    /// Observe a duration under the per-class histogram
+    /// `name_<class>` **only** — for a second classing dimension on a
+    /// metric whose aggregate is already fed by
+    /// [`observe_classed_secs`](Self::observe_classed_secs) (the
+    /// session observes each latency once per λ class *and* once per
+    /// [`crate::coordinator::RequestClass`]; feeding the aggregate
+    /// twice would double-count).
+    pub fn observe_class_secs(&self, name: &str, class: &str, secs: f64) {
+        debug_assert!(
+            !class.contains('.'),
+            "class label '{class}' would break snapshot path lookup"
+        );
+        self.histogram(&format!("{name}_{class}")).observe(secs);
+    }
+
+    /// Increment both the aggregate counter `name` and its per-class
+    /// variant `name_<class>` — the counter twin of
+    /// [`observe_classed_secs`](Self::observe_classed_secs).
+    pub fn inc_classed(&self, name: &str, class: &str) {
+        debug_assert!(
+            !class.contains('.'),
+            "class label '{class}' would break snapshot path lookup"
+        );
+        self.counter(name).inc();
+        self.counter(&format!("{name}_{class}")).inc();
+    }
+
     /// Snapshot everything as a JSON-able [`Value`].
     pub fn snapshot(&self) -> Value {
         let mut root = Value::obj();
@@ -171,6 +198,28 @@ mod tests {
         assert_eq!(back.usize_or("histograms.lat.count", 0), 3);
         assert_eq!(back.usize_or("histograms.lat_ratio.count", 0), 2);
         assert_eq!(back.usize_or("histograms.lat_value.count", 0), 1);
+    }
+
+    #[test]
+    fn classed_counter_feeds_aggregate_and_class() {
+        let reg = Registry::new();
+        reg.inc_classed("sub", "bulk");
+        reg.inc_classed("sub", "bulk");
+        reg.inc_classed("sub", "interactive");
+        assert_eq!(reg.counter("sub").get(), 3);
+        assert_eq!(reg.counter("sub_bulk").get(), 2);
+        assert_eq!(reg.counter("sub_interactive").get(), 1);
+    }
+
+    #[test]
+    fn class_only_observation_skips_aggregate() {
+        let reg = Registry::new();
+        reg.observe_classed_secs("lat", "ratio", 0.001);
+        reg.observe_class_secs("lat", "bulk", 0.001);
+        // The second classing dimension must not double-feed `lat`.
+        assert_eq!(reg.histogram("lat").count(), 1);
+        assert_eq!(reg.histogram("lat_ratio").count(), 1);
+        assert_eq!(reg.histogram("lat_bulk").count(), 1);
     }
 
     #[test]

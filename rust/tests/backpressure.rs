@@ -2,7 +2,10 @@
 //! (`coordinator::session`): the in-flight window is never exceeded,
 //! both backpressure policies complete every request, and
 //! drain-after-shutdown returns each outstanding report exactly once —
-//! no loss, no duplication.
+//! no loss, no duplication.  The multi-class soak at the end runs the
+//! same guarantees under contention: two producer threads (Block
+//! interactive + Reject bulk with its own class depth) against a slow
+//! consumer for ≥ 10k requests.
 //!
 //! Capacity counts **outstanding** requests (submitted − received):
 //! a completed-but-uncollected report still holds its slot, so the
@@ -12,8 +15,8 @@
 use std::collections::BTreeSet;
 
 use holder_screening::coordinator::{
-    Completed, RequestId, SessionConfig, SessionEngine, SubmitError,
-    SubmitPolicy,
+    ClassPolicy, Completed, RequestClass, RequestId, SessionConfig,
+    SessionEngine, SubmitError, SubmitPolicy,
 };
 use holder_screening::dict::{generate_batch, DictKind, InstanceConfig};
 use holder_screening::problem::LambdaSpec;
@@ -233,6 +236,147 @@ fn close_wakes_blocked_submitter() {
     });
     let got = session.drain();
     assert_ids_unique(&got, 1);
+}
+
+/// Multi-class soak: two producer threads — one Block-policy
+/// interactive, one Reject-policy bulk with its own class depth —
+/// push ≥ 10k requests through a slow consumer.  Pins, under real
+/// contention: exactly-once completion (no loss, no duplication, per
+/// class), the global window AND the bulk class window never observed
+/// above their depths, and a clean `close()` at the end (the test
+/// finishing *is* the no-deadlock assertion).
+///
+/// The instance is tiny and the budget is 2 iterations — the soak
+/// stresses the admission/receive machinery, not the solver, so
+/// convergence is deliberately not asserted.
+#[test]
+fn multi_class_soak_is_exactly_once_and_bounded() {
+    const PER_PRODUCER: usize = 5_000;
+    const DEPTH: usize = 8;
+    const BULK_DEPTH: usize = 2;
+
+    let mut icfg = InstanceConfig::paper(DictKind::Gaussian, LAM_RATIO);
+    icfg.m = 10;
+    icfg.n = 20;
+    let (shared, ys) = generate_batch(&icfg, 42, 4);
+    let mut classes = [ClassPolicy::default(); RequestClass::COUNT];
+    classes[RequestClass::Bulk.rank()] = ClassPolicy {
+        depth: Some(BULK_DEPTH),
+        policy: Some(SubmitPolicy::Reject),
+    };
+    let session = SessionEngine::new(
+        shared,
+        2,
+        SessionConfig {
+            solver: SolverConfig {
+                budget: Budget {
+                    max_iters: 2,
+                    max_flops: None,
+                    target_gap: 0.0,
+                },
+                region: Some(RegionKind::HolderDome),
+                ..Default::default()
+            },
+            queue_depth: DEPTH,
+            policy: SubmitPolicy::Block,
+            classes,
+            ..Default::default()
+        },
+    );
+
+    let mut got: Vec<Completed> = Vec::new();
+    std::thread::scope(|s| {
+        // Producer 1: interactive traffic under the Block policy —
+        // parks at the global window, never rejected.
+        let blocker = {
+            let session = &session;
+            let ys = &ys;
+            s.spawn(move || {
+                for i in 0..PER_PRODUCER {
+                    session
+                        .submit_classed(
+                            ys[i % ys.len()].clone(),
+                            LambdaSpec::RatioOfMax(LAM_RATIO),
+                            RequestClass::Interactive,
+                        )
+                        .unwrap();
+                }
+            })
+        };
+        // Producer 2: bulk backfill under its class's Reject policy —
+        // spins on WouldBlock until all its requests are accepted.
+        let rejecter = {
+            let session = &session;
+            let ys = &ys;
+            s.spawn(move || {
+                let mut rejected = 0u64;
+                let mut accepted = 0usize;
+                while accepted < PER_PRODUCER {
+                    match session.submit_classed(
+                        ys[accepted % ys.len()].clone(),
+                        LambdaSpec::RatioOfMax(LAM_RATIO),
+                        RequestClass::Bulk,
+                    ) {
+                        Ok(_) => accepted += 1,
+                        Err(SubmitError::WouldBlock) => {
+                            rejected += 1;
+                            std::thread::yield_now();
+                        }
+                        Err(e) => panic!("unexpected: {e}"),
+                    }
+                }
+                rejected
+            })
+        };
+        // Slow consumer: the main thread receives everything, checking
+        // both windows as it goes.
+        while got.len() < 2 * PER_PRODUCER {
+            match session.try_recv_completed() {
+                Some(c) => got.push(c),
+                None => std::thread::yield_now(),
+            }
+            assert!(session.outstanding() <= DEPTH);
+            assert!(session.outstanding_for(RequestClass::Bulk) <= BULK_DEPTH);
+        }
+        blocker.join().unwrap();
+        let rejected = rejecter.join().unwrap();
+        assert!(
+            rejected > 0,
+            "a depth-{BULK_DEPTH} bulk window under {PER_PRODUCER} \
+             requests must push back at least once"
+        );
+    });
+
+    // Exactly once, globally and per class.
+    let ids: BTreeSet<RequestId> = got.iter().map(|c| c.id).collect();
+    assert_eq!(ids.len(), got.len(), "a report was delivered twice");
+    assert_eq!(got.len(), 2 * PER_PRODUCER, "a report was lost");
+    for class in [RequestClass::Interactive, RequestClass::Bulk] {
+        assert_eq!(
+            got.iter().filter(|c| c.class == class).count(),
+            PER_PRODUCER,
+            "class {} lost or duplicated requests",
+            class.name()
+        );
+    }
+    assert_eq!(session.outstanding(), 0);
+    assert_eq!(session.outstanding_for(RequestClass::Bulk), 0);
+    let m = session.metrics();
+    assert_eq!(
+        m.counter("session_submitted_interactive").get(),
+        PER_PRODUCER as u64
+    );
+    assert_eq!(
+        m.counter("session_submitted_bulk").get(),
+        PER_PRODUCER as u64
+    );
+    assert_eq!(m.counter("session_rejected_interactive").get(), 0);
+    assert!(m.counter("session_rejected_bulk").get() > 0);
+
+    // Clean shutdown after the storm.
+    session.close();
+    assert!(session.is_closed());
+    assert!(session.drain().is_empty());
 }
 
 /// submit_many under Reject policy: the accepted prefix completes

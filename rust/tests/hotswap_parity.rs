@@ -1,0 +1,392 @@
+//! Hot-swap parity: `SessionEngine::swap_dict` installs a new
+//! dictionary epoch **without draining**, and the results are pinned
+//! per epoch — every request is bitwise identical to one `solve_many`
+//! call against the dictionary version it was **admitted** under,
+//! whatever was in flight when the swap landed.  On top of the parity
+//! grid:
+//!
+//! * old-epoch retirement fires exactly once (counter-pinned), the
+//!   current epoch never retires, and the epoch table ends at exactly
+//!   one live entry;
+//! * the warm-start cache cannot leak a seed across a swap: keys carry
+//!   the epoch id (same observation hash, different epoch ⇒ miss — the
+//!   cache unit tests pin the key level, here the end-to-end counters
+//!   and bitwise cold parity pin it through the session), and retired
+//!   epochs purge their entries;
+//! * the edge cases: a swap landing while a `drain` is in progress
+//!   (no loss, no duplication, no deadlock) and swap-then-`close`
+//!   (old work finishes, new epoch stays resident, submissions refuse).
+
+use std::collections::BTreeSet;
+
+use holder_screening::coordinator::{
+    Completed, EpochId, RequestId, SessionConfig, SessionEngine,
+    SubmitError, SubmitPolicy,
+};
+use holder_screening::dict::{generate_batch, DictKind, InstanceConfig};
+use holder_screening::par::ParContext;
+use holder_screening::problem::{LambdaSpec, SharedDict};
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{
+    solve_many, BatchRhs, Budget, SolveReport, SolverConfig, SolverKind,
+};
+use holder_screening::sparse::DictFormat;
+use holder_screening::workset::CompactionPolicy;
+
+const LAM_RATIO: f64 = 0.6;
+
+fn toeplitz_cfg(m: usize) -> InstanceConfig {
+    InstanceConfig {
+        m,
+        n: 110,
+        kind: DictKind::Toeplitz,
+        lam_ratio: LAM_RATIO,
+        pulse_width: 3.0,
+        pulse_cutoff: 4.0,
+        format: DictFormat::Dense,
+    }
+}
+
+fn mk_solver(kind: SolverKind) -> SolverConfig {
+    SolverConfig {
+        kind,
+        budget: Budget::gap(1e-8),
+        region: Some(RegionKind::HolderDome),
+        par: ParContext::sequential(),
+        compaction: CompactionPolicy::default(),
+        ..Default::default()
+    }
+}
+
+fn ratio_rhs(ys: &[Vec<f64>]) -> Vec<BatchRhs> {
+    ys.iter()
+        .cloned()
+        .map(|y| BatchRhs::ratio(y, LAM_RATIO))
+        .collect()
+}
+
+/// Mid-stream swap with work in flight: epoch-0 requests solve
+/// bitwise against dict 0, epoch-1 requests against dict 1, across
+/// solvers × threads {1, 8}.  Afterwards exactly one epoch is live
+/// and exactly one retirement was counted — however the solves and
+/// the swap actually interleaved.
+#[test]
+fn per_epoch_parity_across_a_mid_stream_swap() {
+    const B: usize = 4;
+    let (dict0, ys0) = generate_batch(&toeplitz_cfg(40), 21, B);
+    let (dict1, ys1) = generate_batch(&toeplitz_cfg(40), 22, B);
+    let (rhs0, rhs1) = (ratio_rhs(&ys0), ratio_rhs(&ys1));
+    for kind in [SolverKind::Fista, SolverKind::Cd] {
+        // Per-epoch references: one offline solve_many per dictionary.
+        let refs0 = solve_many(&dict0, &rhs0, &mk_solver(kind));
+        let refs1 = solve_many(&dict1, &rhs1, &mk_solver(kind));
+        assert!(
+            refs0[0].x != refs1[0].x,
+            "the two dictionaries must actually disagree"
+        );
+        for threads in [1usize, 8] {
+            let session = SessionEngine::new(
+                dict0.clone(),
+                threads,
+                SessionConfig {
+                    solver: mk_solver(kind),
+                    queue_depth: 2 * B,
+                    policy: SubmitPolicy::Block,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(session.epoch(), EpochId(0));
+            // First wave admitted under epoch 0...
+            for req in &rhs0 {
+                session.submit(req.y.clone(), req.lam).unwrap();
+            }
+            // ...swap lands mid-stream (epoch-0 solves typically still
+            // in flight — nothing was received yet)...
+            let e1 = session.swap_dict(dict1.clone());
+            assert_eq!(e1, EpochId(1));
+            assert_eq!(session.epoch(), e1);
+            // ...second wave admitted under epoch 1.
+            for req in &rhs1 {
+                session.submit(req.y.clone(), req.lam).unwrap();
+            }
+            let done = session.drain();
+            assert_eq!(done.len(), 2 * B);
+            for (i, c) in done.iter().enumerate() {
+                assert_eq!(c.id, RequestId(i as u64));
+                let (want, epoch, label) = if i < B {
+                    (&refs0[i], EpochId(0), "epoch 0")
+                } else {
+                    (&refs1[i - B], EpochId(1), "epoch 1")
+                };
+                assert_eq!(c.epoch, epoch, "rhs {i} admitted under {label}");
+                want.assert_bitwise_eq(
+                    &c.report,
+                    &format!("{kind:?} {threads}t {label} rhs {i}"),
+                );
+            }
+            // Retirement: exactly once, and only the current epoch
+            // remains resident.
+            assert_eq!(session.live_epochs(), 1);
+            let m = session.metrics();
+            assert_eq!(m.counter("session_swaps").get(), 1);
+            assert_eq!(m.counter("session_epochs_retired").get(), 1);
+            assert_eq!(m.gauge("session_epoch").get(), 1.0);
+            assert_eq!(m.gauge("session_epochs_live").get(), 1.0);
+        }
+    }
+}
+
+/// Repeated swaps: each old epoch retires exactly once (counters march
+/// in lock-step with the swaps), ids stay monotonic, and the session
+/// keeps serving bitwise-correct results for the newest epoch.
+#[test]
+fn repeated_swaps_retire_each_epoch_exactly_once() {
+    let scfg = mk_solver(SolverKind::Fista);
+    let (dict0, _) = generate_batch(&toeplitz_cfg(40), 31, 0);
+    let session = SessionEngine::new(
+        dict0,
+        2,
+        SessionConfig {
+            solver: scfg.clone(),
+            queue_depth: 8,
+            policy: SubmitPolicy::Block,
+            ..Default::default()
+        },
+    );
+    for k in 1..=3u64 {
+        let (dict, ys) = generate_batch(&toeplitz_cfg(40), 31 + k, 2);
+        let rhs = ratio_rhs(&ys);
+        assert_eq!(session.swap_dict(dict.clone()), EpochId(k));
+        for req in &rhs {
+            session.submit(req.y.clone(), req.lam).unwrap();
+        }
+        let done = session.drain();
+        let refs = solve_many(&dict, &rhs, &scfg);
+        for (want, got) in refs.iter().zip(&done) {
+            assert_eq!(got.epoch, EpochId(k));
+            want.assert_bitwise_eq(&got.report, &format!("epoch {k}"));
+        }
+        assert_eq!(session.live_epochs(), 1);
+        let m = session.metrics();
+        assert_eq!(m.counter("session_swaps").get(), k);
+        assert_eq!(m.counter("session_epochs_retired").get(), k);
+    }
+}
+
+/// The cache × epoch interaction, end to end: a repeat observation
+/// hits within an epoch, then **misses across the swap** — the
+/// post-swap solve is bitwise the cold solve against the new
+/// dictionary (no stale seed crossed), the old epoch's entries are
+/// purged at retirement, and a post-swap repeat hits again within the
+/// new epoch.
+#[test]
+fn cache_never_leaks_a_seed_across_a_swap() {
+    let scfg = mk_solver(SolverKind::Fista);
+    let (dict0, ys) = generate_batch(&toeplitz_cfg(40), 41, 1);
+    let (dict1, _) = generate_batch(&toeplitz_cfg(40), 42, 0);
+    let y = ys[0].clone();
+    let lam = LambdaSpec::RatioOfMax(LAM_RATIO);
+    let session = SessionEngine::new(
+        dict0,
+        2,
+        SessionConfig {
+            solver: scfg.clone(),
+            queue_depth: 4,
+            policy: SubmitPolicy::Block,
+            cache_capacity: 8,
+            ..Default::default()
+        },
+    );
+    let one = |session: &SessionEngine| {
+        session.submit(y.clone(), lam).unwrap();
+        let mut done = session.drain();
+        assert_eq!(done.len(), 1);
+        done.pop().unwrap()
+    };
+    // Epoch 0: cold miss, then a warm hit on the repeat.
+    assert!(!one(&session).cache_hit);
+    assert!(one(&session).cache_hit);
+    let m = session.metrics();
+    assert_eq!(m.counter("session_cache_hits").get(), 1);
+    assert_eq!(m.counter("session_cache_misses").get(), 1);
+    assert_eq!(session.cache().len(), 1);
+
+    // Swap.  Epoch 0 is idle, so it retires immediately and its one
+    // cache entry is purged.
+    session.swap_dict(dict1.clone());
+    assert_eq!(m.counter("session_epochs_retired").get(), 1);
+    assert_eq!(m.counter("session_cache_purged").get(), 1);
+    assert_eq!(session.cache().len(), 0);
+
+    // The same observation after the swap: a MISS (different epoch),
+    // and the report is bitwise the cold solve against the NEW
+    // dictionary — proof no stale seed crossed.
+    let post = one(&session);
+    assert!(!post.cache_hit, "epoch-0 seed must not hit under epoch 1");
+    assert_eq!(post.epoch, EpochId(1));
+    let cold =
+        solve_many(&dict1, &[BatchRhs { y: y.clone(), lam }], &scfg);
+    cold[0].assert_bitwise_eq(&post.report, "post-swap cold parity");
+    assert_eq!(m.counter("session_cache_misses").get(), 2);
+    // And within epoch 1 the cache works again.
+    assert!(one(&session).cache_hit);
+    assert_eq!(m.counter("session_cache_hits").get(), 2);
+}
+
+/// A swap landing while a `drain` is in progress: whatever the
+/// interleaving, nothing is lost, nothing duplicates, nothing
+/// deadlocks, and per-epoch parity still holds for every completion.
+#[test]
+fn swap_during_drain_loses_nothing() {
+    const B: usize = 4;
+    let scfg = mk_solver(SolverKind::Fista);
+    let (dict0, ys0) = generate_batch(&toeplitz_cfg(40), 51, B);
+    let (dict1, ys1) = generate_batch(&toeplitz_cfg(40), 52, 2);
+    let (rhs0, rhs1) = (ratio_rhs(&ys0), ratio_rhs(&ys1));
+    let refs0 = solve_many(&dict0, &rhs0, &scfg);
+    let refs1 = solve_many(&dict1, &rhs1, &scfg);
+    let session = SessionEngine::new(
+        dict0,
+        1,
+        SessionConfig {
+            solver: scfg,
+            queue_depth: B + 2,
+            policy: SubmitPolicy::Block,
+            ..Default::default()
+        },
+    );
+    for req in &rhs0 {
+        session.submit(req.y.clone(), req.lam).unwrap();
+    }
+    // One thread drains while the other swaps and submits.  The drain
+    // may quiesce before, between, or after the swap-side submissions
+    // — every interleaving must conserve requests, so the two result
+    // sets are checked jointly.
+    let mut got: Vec<Completed> = Vec::new();
+    std::thread::scope(|s| {
+        let drainer = {
+            let session = &session;
+            s.spawn(move || session.drain())
+        };
+        session.swap_dict(dict1.clone());
+        for req in &rhs1 {
+            session.submit(req.y.clone(), req.lam).unwrap();
+        }
+        got.extend(drainer.join().unwrap());
+    });
+    got.extend(session.drain());
+    let ids: BTreeSet<RequestId> = got.iter().map(|c| c.id).collect();
+    assert_eq!(ids.len(), got.len(), "a report was delivered twice");
+    assert_eq!(got.len(), B + 2, "a report was lost across the swap");
+    for c in &got {
+        let i = c.id.0 as usize;
+        let (want, epoch) = if i < B {
+            (&refs0[i], EpochId(0))
+        } else {
+            (&refs1[i - B], EpochId(1))
+        };
+        assert_eq!(c.epoch, epoch);
+        want.assert_bitwise_eq(&c.report, &format!("drain-swap rhs {i}"));
+    }
+    assert_eq!(session.live_epochs(), 1);
+    assert_eq!(session.metrics().counter("session_epochs_retired").get(), 1);
+}
+
+/// Swap-then-close: in-flight epoch-0 work finishes and drains, new
+/// submissions refuse with `Closed`, the new (current) epoch stays
+/// resident even though it never served a request, and a further swap
+/// after close is harmless.
+#[test]
+fn swap_then_close_finishes_old_work_and_refuses_new() {
+    const B: usize = 3;
+    let scfg = mk_solver(SolverKind::Fista);
+    let (dict0, ys0) = generate_batch(&toeplitz_cfg(40), 61, B);
+    let (dict1, _) = generate_batch(&toeplitz_cfg(40), 62, 0);
+    let (dict2, _) = generate_batch(&toeplitz_cfg(40), 63, 0);
+    let rhs0 = ratio_rhs(&ys0);
+    let refs0 = solve_many(&dict0, &rhs0, &scfg);
+    let session = SessionEngine::new(
+        dict0,
+        2,
+        SessionConfig {
+            solver: scfg,
+            queue_depth: B,
+            policy: SubmitPolicy::Block,
+            ..Default::default()
+        },
+    );
+    for req in &rhs0 {
+        session.submit(req.y.clone(), req.lam).unwrap();
+    }
+    session.swap_dict(dict1);
+    session.close();
+    assert!(session.is_closed());
+    assert_eq!(
+        session
+            .submit(rhs0[0].y.clone(), rhs0[0].lam)
+            .unwrap_err(),
+        SubmitError::Closed
+    );
+    let done = session.drain();
+    assert_eq!(done.len(), B);
+    for (i, c) in done.iter().enumerate() {
+        assert_eq!(c.epoch, EpochId(0));
+        refs0[i].assert_bitwise_eq(&c.report, &format!("pre-close rhs {i}"));
+    }
+    // Epoch 0 retired with its last completion; the never-used current
+    // epoch stays resident (the table is never empty).
+    assert_eq!(session.live_epochs(), 1);
+    let m = session.metrics();
+    assert_eq!(m.counter("session_epochs_retired").get(), 1);
+    // Swapping after close is allowed (it only re-points an admission
+    // stream that is now empty) — and retires the idle epoch 1.
+    assert_eq!(session.swap_dict(dict2), EpochId(2));
+    assert_eq!(session.live_epochs(), 1);
+    assert_eq!(m.counter("session_epochs_retired").get(), 2);
+    assert!(session.drain().is_empty());
+}
+
+/// Shape validation tracks the **current** epoch: after swapping to a
+/// dictionary with different rows, old-shape submissions refuse with
+/// the new expectation, and new-shape submissions solve bitwise
+/// against the new dictionary.
+#[test]
+fn shape_validation_follows_the_current_epoch() {
+    let scfg = mk_solver(SolverKind::Fista);
+    let (dict_a, ys_a) = generate_batch(&toeplitz_cfg(40), 71, 1);
+    let (dict_b, ys_b) = generate_batch(&toeplitz_cfg(30), 72, 1);
+    let rhs_b = ratio_rhs(&ys_b);
+    let refs_b = solve_many(&dict_b, &rhs_b, &scfg);
+    let session = SessionEngine::new(
+        dict_a,
+        1,
+        SessionConfig {
+            solver: scfg,
+            queue_depth: 4,
+            policy: SubmitPolicy::Reject,
+            ..Default::default()
+        },
+    );
+    // 30-row observation against the 40-row epoch: refused.
+    assert_eq!(
+        session
+            .submit(ys_b[0].clone(), LambdaSpec::RatioOfMax(LAM_RATIO))
+            .unwrap_err(),
+        SubmitError::ShapeMismatch { expected: 40, got: 30 }
+    );
+    session.swap_dict(dict_b.clone());
+    assert!(SharedDict::ptr_eq(&session.shared(), &dict_b));
+    // Now the 40-row observation is the misfit...
+    assert_eq!(
+        session
+            .submit(ys_a[0].clone(), LambdaSpec::RatioOfMax(LAM_RATIO))
+            .unwrap_err(),
+        SubmitError::ShapeMismatch { expected: 30, got: 40 }
+    );
+    // ...and the 30-row one solves, bitwise against dict B.
+    session
+        .submit(ys_b[0].clone(), LambdaSpec::RatioOfMax(LAM_RATIO))
+        .unwrap();
+    let done = session.drain();
+    refs_b[0].assert_bitwise_eq(&done[0].report, "post-swap shape");
+}

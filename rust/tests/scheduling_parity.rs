@@ -1,0 +1,345 @@
+//! Scheduling parity: the serving layer's cost-aware scheduler and
+//! priority classes are **latency-only** knobs — every completion's
+//! `SolveReport` is bitwise identical to the FIFO session's and to one
+//! offline `solve_many` call, across solvers × threads {1, 8}, with
+//! mixed λ specs (so predicted costs genuinely differ) and mixed
+//! request classes.  On top of the parity grid:
+//!
+//! * the scheduler decision itself (`pick_index` — the exact function
+//!   every session runner executes) is pinned deterministically:
+//!   cost order within a class, class priority across classes, id
+//!   tie-breaks, and the aging boost;
+//! * per-class depth bounds reject at exactly the class window even
+//!   when the global window has room;
+//! * a simulated 10:1 adversarial interactive:bulk mix proves the
+//!   starvation bound: the bulk request is popped within
+//!   `aging_after + backlog` pops, via the aging path, with the aged
+//!   counter firing.
+
+use holder_screening::coordinator::{
+    pick_index, predicted_cost, ClassPolicy, RequestClass, SchedKey,
+    SchedPolicy, SessionConfig, SessionEngine, SubmitError, SubmitPolicy,
+};
+use holder_screening::dict::{generate_batch, DictKind, InstanceConfig};
+use holder_screening::par::ParContext;
+use holder_screening::problem::LambdaSpec;
+use holder_screening::regions::RegionKind;
+use holder_screening::solver::{
+    solve_many, BatchRhs, Budget, SolveReport, SolverConfig, SolverKind,
+};
+use holder_screening::sparse::DictFormat;
+use holder_screening::workset::CompactionPolicy;
+
+fn toeplitz_cfg() -> InstanceConfig {
+    InstanceConfig {
+        m: 40,
+        n: 110,
+        kind: DictKind::Toeplitz,
+        lam_ratio: 0.6,
+        pulse_width: 3.0,
+        pulse_cutoff: 4.0,
+        format: DictFormat::Dense,
+    }
+}
+
+fn mk_solver(kind: SolverKind, par: ParContext) -> SolverConfig {
+    SolverConfig {
+        kind,
+        budget: Budget::gap(1e-8),
+        region: Some(RegionKind::HolderDome),
+        par,
+        compaction: CompactionPolicy::default(),
+        ..Default::default()
+    }
+}
+
+/// A trace whose predicted costs genuinely differ: ratio specs across
+/// the bucket range plus absolute-λ specs (neutral cost 0.5).
+fn mixed_rhs(ys: Vec<Vec<f64>>) -> Vec<BatchRhs> {
+    let specs = [
+        LambdaSpec::RatioOfMax(0.3),
+        LambdaSpec::RatioOfMax(0.85),
+        LambdaSpec::Value(0.5),
+        LambdaSpec::RatioOfMax(0.6),
+        LambdaSpec::RatioOfMax(0.45),
+        LambdaSpec::Value(1.5),
+    ];
+    ys.into_iter()
+        .enumerate()
+        .map(|(i, y)| BatchRhs { y, lam: specs[i % specs.len()] })
+        .collect()
+}
+
+/// Round-robin over all classes, so every class appears in every grid
+/// cell.
+fn class_of(i: usize) -> RequestClass {
+    RequestClass::ALL[i % RequestClass::ALL.len()]
+}
+
+/// The acceptance grid: cost-aware scheduling × priority classes ×
+/// threads {1, 8} × {fista, ista, cd} — bitwise ≡ the FIFO session ≡
+/// one `solve_many` call.  Drain returns completions sorted by request
+/// id (= submission order), so reports align index-for-index with the
+/// trace whatever order the scheduler actually ran them in.
+#[test]
+fn cost_aware_and_classes_are_bitwise_invisible() {
+    const B: usize = 6;
+    let (shared, ys) = generate_batch(&toeplitz_cfg(), 11, B);
+    let rhs = mixed_rhs(ys);
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        // Reference: one offline solve_many call.
+        let batch: Vec<SolveReport> = solve_many(
+            &shared,
+            &rhs,
+            &mk_solver(kind, ParContext::sequential()),
+        );
+        for threads in [1usize, 8] {
+            for sched in [SchedPolicy::Fifo, SchedPolicy::CostAware] {
+                let session = SessionEngine::new(
+                    shared.clone(),
+                    threads,
+                    SessionConfig {
+                        solver: mk_solver(kind, ParContext::new_pool(1, 1)),
+                        queue_depth: B,
+                        policy: SubmitPolicy::Block,
+                        scheduling: sched,
+                        aging_after: 2,
+                        ..Default::default()
+                    },
+                );
+                for (i, req) in rhs.iter().enumerate() {
+                    session
+                        .submit_classed(req.y.clone(), req.lam, class_of(i))
+                        .unwrap();
+                }
+                let done = session.drain();
+                assert_eq!(done.len(), B);
+                for (i, (want, got)) in batch.iter().zip(&done).enumerate() {
+                    assert_eq!(got.class, class_of(i));
+                    want.assert_bitwise_eq(
+                        &got.report,
+                        &format!(
+                            "{kind:?} {threads}t {} rhs {i}",
+                            sched.name()
+                        ),
+                    );
+                }
+                // Every request landed in its request-class histogram
+                // exactly once (and the λ-class split still covers the
+                // aggregate: 4 ratio + 2 value specs per trace).
+                let m = session.metrics();
+                let per_class: u64 = RequestClass::ALL
+                    .iter()
+                    .map(|c| {
+                        m.histogram(&format!("session_queue_secs_{}", c.name()))
+                            .count()
+                    })
+                    .sum();
+                assert_eq!(per_class, B as u64);
+                assert_eq!(
+                    m.histogram("session_queue_secs").count(),
+                    B as u64,
+                    "request-class split must not double-feed the aggregate"
+                );
+                assert_eq!(
+                    m.histogram("session_queue_secs_ratio").count(),
+                    4
+                );
+                assert_eq!(
+                    m.histogram("session_queue_secs_value").count(),
+                    2
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The scheduler decision, pinned deterministically
+// ---------------------------------------------------------------------
+
+fn key(id: u64, class: RequestClass, cost: f64, tick: u64) -> SchedKey {
+    SchedKey { id, class, cost, enqueue_tick: tick }
+}
+
+/// CostAware takes the cheapest predicted solve within a class; Fifo
+/// ignores cost entirely; ids break exact ties.
+#[test]
+fn cost_order_within_a_class_and_fifo_ignores_cost() {
+    let std = RequestClass::Standard;
+    let keys = [
+        key(0, std, predicted_cost(LambdaSpec::RatioOfMax(0.3)), 0),
+        key(1, std, predicted_cost(LambdaSpec::RatioOfMax(0.9)), 0),
+        key(2, std, predicted_cost(LambdaSpec::RatioOfMax(0.6)), 0),
+    ];
+    // Cheapest first: ratio 0.9 ⇒ cost 0.1 wins.
+    assert_eq!(pick_index(&keys, SchedPolicy::CostAware, 0, 1), (1, false));
+    // FIFO: lowest id wins regardless of cost.
+    assert_eq!(pick_index(&keys, SchedPolicy::Fifo, 0, 1), (0, false));
+    // Exact cost tie falls back to id order.
+    let tie = [key(7, std, 0.5, 0), key(3, std, 0.5, 0)];
+    assert_eq!(pick_index(&tie, SchedPolicy::CostAware, 0, 1), (1, false));
+}
+
+/// Class priority dominates cost: an expensive interactive request
+/// beats a cheap bulk one under every policy.
+#[test]
+fn class_priority_dominates_cost() {
+    let keys = [
+        key(0, RequestClass::Bulk, 0.0, 0),
+        key(1, RequestClass::Interactive, 1.0, 0),
+        key(2, RequestClass::Standard, 0.0, 0),
+    ];
+    for policy in [SchedPolicy::Fifo, SchedPolicy::CostAware] {
+        assert_eq!(pick_index(&keys, policy, 0, 1), (1, false));
+    }
+    // Without the interactive entry, standard beats bulk.
+    assert_eq!(
+        pick_index(&keys[..1], SchedPolicy::CostAware, 0, 1),
+        (0, false)
+    );
+    assert_eq!(
+        pick_index(
+            &[keys[0], keys[2]],
+            SchedPolicy::CostAware,
+            0,
+            1
+        ),
+        (1, false)
+    );
+}
+
+/// The aging boost: once passed over at least `aging_after` pops, a
+/// bulk request jumps ahead of fresh interactive traffic; aged
+/// requests drain FIFO among themselves; `aging_after = 0` disables
+/// the rule.
+#[test]
+fn aging_boosts_starved_requests_ahead_of_every_class() {
+    let aging = 3u64;
+    let old_bulk = key(0, RequestClass::Bulk, 0.9, 0);
+    let older_bulk = key(1, RequestClass::Bulk, 0.8, 0);
+    let fresh_int = key(50, RequestClass::Interactive, 0.1, 9);
+    // At tick `aging` the bulk entry has been passed over aging − 1
+    // times: not yet aged, interactive still wins.
+    assert_eq!(
+        pick_index(
+            &[old_bulk, key(50, RequestClass::Interactive, 0.1, 2)],
+            SchedPolicy::CostAware,
+            aging,
+            aging
+        ),
+        (1, false)
+    );
+    // One pop later they have been passed over `aging` times — aged,
+    // and they beat the interactive request.
+    let keys = [fresh_int, old_bulk, older_bulk];
+    let (k, aged) =
+        pick_index(&keys, SchedPolicy::CostAware, aging, 10);
+    assert!(aged);
+    assert_eq!(k, 1, "aged entries drain FIFO by id (0 before 1)");
+    // aging_after = 0 disables the boost entirely.
+    assert_eq!(
+        pick_index(&keys, SchedPolicy::CostAware, 0, 10),
+        (0, false)
+    );
+}
+
+/// The starvation bound, end to end against the production decision
+/// function: a 10:1 interactive:bulk adversarial mix where fresh
+/// interactive work arrives every pop.  Without aging the bulk request
+/// would wait forever; with aging it runs within `aging_after +
+/// backlog` pops, via the aged path, exactly once.
+#[test]
+fn adversarial_ten_to_one_mix_cannot_starve_bulk() {
+    let aging = 8u64;
+    // The bulk request is admitted at tick 0 into a backlog of one.
+    let mut backlog = vec![key(0, RequestClass::Bulk, 0.9, 0)];
+    let mut next_id = 1u64;
+    let mut aged_pops = 0u64;
+    let mut bulk_ran_at: Option<u64> = None;
+    for tick in 1..=(aging + 10) {
+        // Adversary: 10 interactive arrivals per bulk request — here,
+        // one cheap fresh interactive request admitted before every
+        // pop (a sustained 10:1 mix as seen by the scheduler, since
+        // the backlog never drains below the interactive supply).
+        backlog.push(key(next_id, RequestClass::Interactive, 0.0, tick - 1));
+        next_id += 1;
+        let (k, aged) =
+            pick_index(&backlog, SchedPolicy::CostAware, aging, tick);
+        if aged {
+            aged_pops += 1;
+        }
+        let popped = backlog.swap_remove(k);
+        if popped.class == RequestClass::Bulk {
+            assert!(
+                bulk_ran_at.replace(tick).is_none(),
+                "bulk request popped twice"
+            );
+        }
+    }
+    let ran_at = bulk_ran_at.expect("bulk request starved");
+    // Admitted at tick 0 with one competitor per pop: the bound is
+    // aging_after + backlog-at-admission + 1.
+    assert!(
+        ran_at <= aging + 2,
+        "bulk ran at pop {ran_at}, beyond the aging bound {}",
+        aging + 2
+    );
+    assert_eq!(aged_pops, 1, "the aged counter fired exactly once");
+}
+
+// ---------------------------------------------------------------------
+// Per-class windows
+// ---------------------------------------------------------------------
+
+/// A class at its own depth rejects even though the global window has
+/// room — and other classes keep being admitted.  Deterministic:
+/// capacity frees only on receive, and nothing receives here.
+#[test]
+fn class_depth_rejects_at_class_window_not_global() {
+    let (shared, ys) = generate_batch(&toeplitz_cfg(), 13, 6);
+    let mut classes = [ClassPolicy::default(); RequestClass::COUNT];
+    classes[RequestClass::Bulk.rank()] = ClassPolicy {
+        depth: Some(2),
+        policy: Some(SubmitPolicy::Reject),
+    };
+    let session = SessionEngine::new(
+        shared,
+        2,
+        SessionConfig {
+            solver: mk_solver(SolverKind::Fista, ParContext::sequential()),
+            queue_depth: 8,
+            policy: SubmitPolicy::Block,
+            classes,
+            ..Default::default()
+        },
+    );
+    let submit = |i: usize, class: RequestClass| {
+        session.submit_classed(
+            ys[i].clone(),
+            LambdaSpec::RatioOfMax(0.6),
+            class,
+        )
+    };
+    submit(0, RequestClass::Bulk).unwrap();
+    submit(1, RequestClass::Bulk).unwrap();
+    assert_eq!(session.outstanding_for(RequestClass::Bulk), 2);
+    // Third bulk request: class window full, global window (8) is not.
+    assert_eq!(
+        submit(2, RequestClass::Bulk).unwrap_err(),
+        SubmitError::WouldBlock
+    );
+    // Standard traffic is unaffected by the bulk window.
+    submit(3, RequestClass::Standard).unwrap();
+    submit(4, RequestClass::Standard).unwrap();
+    assert_eq!(session.outstanding(), 4);
+    let m = session.metrics();
+    assert_eq!(m.counter("session_rejected_bulk").get(), 1);
+    assert_eq!(m.counter("session_rejected_standard").get(), 0);
+    // Receiving one bulk completion reopens the class window.
+    let done = session.drain();
+    assert_eq!(done.len(), 4);
+    assert_eq!(session.outstanding_for(RequestClass::Bulk), 0);
+    submit(2, RequestClass::Bulk).unwrap();
+    assert_eq!(session.drain().len(), 1);
+}

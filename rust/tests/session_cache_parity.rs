@@ -106,6 +106,7 @@ fn cache_hit_equals_seeded_solve_across_grid() {
                         policy: SubmitPolicy::Block,
                         cache_capacity: B,
                         lambda_buckets: 16,
+                        ..Default::default()
                     },
                 );
                 // Pass 1: every request misses and runs the cold path.
@@ -180,6 +181,7 @@ fn capacity_zero_is_bitwise_a_cacheless_session() {
             policy: SubmitPolicy::Block,
             cache_capacity: 0,
             lambda_buckets: 16,
+            ..Default::default()
         },
     );
     for pass in 0..2 {
@@ -227,6 +229,7 @@ fn lambda_buckets_gate_cross_seeding() {
             policy: SubmitPolicy::Block,
             cache_capacity: 8,
             lambda_buckets: 4,
+            ..Default::default()
         },
     );
     let solve_one = |ratio: f64| {
@@ -294,6 +297,7 @@ fn eviction_during_replay_keeps_parity() {
             policy: SubmitPolicy::Block,
             cache_capacity: capacity,
             lambda_buckets: 16,
+            ..Default::default()
         },
     );
     let done = session.replay(&rhs, &order, 1);
