@@ -12,11 +12,15 @@
 //!
 //! Part 2, on a truncated-pulse Toeplitz dictionary in CSC at
 //! n = 100 000: one flat screening round versus the grouped round
-//! (`ScreenConfig::grouped`), masks asserted bitwise equal **before**
-//! any timing.  Adjacent Toeplitz atoms are near-duplicates, so most
-//! contiguous groups are certified screened by a single pivot bound
-//! and the grouped pass runs per-atom tests on a small fraction of n
-//! (`tested_fraction` in the emitted metrics).
+//! (`ScreenConfig::grouped`) versus the hierarchical round
+//! (`ScreenConfig::hierarchical`, default 1024 → 64 levels), masks
+//! asserted bitwise equal **before** any timing.  Adjacent Toeplitz
+//! atoms are near-duplicates, so most contiguous groups are certified
+//! screened by a single pivot bound and the grouped pass runs per-atom
+//! tests on a small fraction of n (`tested_fraction` in the emitted
+//! metrics; the hierarchical round additionally reports
+//! `tested_fraction_through_level_*` and must be ≤ the flat-grouped
+//! fraction — a coarse certification certifies at least as much).
 //!
 //! Emits `BENCH_screening_overhead.json`.
 //!
@@ -124,10 +128,14 @@ fn main() {
     let mut flat = ScreeningEngine::new();
     let mut grouped =
         ScreeningEngine::with_config(ScreenConfig::grouped(group_size));
+    let hier_sizes = ScreenConfig::DEFAULT_HIERARCHY;
+    let mut hier = ScreeningEngine::with_config(
+        ScreenConfig::hierarchical(&hier_sizes),
+    );
 
-    // Parity FIRST, timing second: the grouped mask must be bitwise
-    // the flat mask (this call also pays the one-off clustering build,
-    // keeping it out of the timed rounds).
+    // Parity FIRST, timing second: the grouped and hierarchical masks
+    // must be bitwise the flat mask (these calls also pay the one-off
+    // clustering builds, keeping them out of the timed rounds).
     let mask_flat = flat
         .compute_keep(&region, &pb, &state, &evb.atr, &mut flops, &ctx)
         .to_vec();
@@ -137,6 +145,13 @@ fn main() {
     assert_eq!(
         mask_flat, mask_grouped,
         "grouped screening mask diverged from flat — parity bug"
+    );
+    let mask_hier = hier
+        .compute_keep(&region, &pb, &state, &evb.atr, &mut flops, &ctx)
+        .to_vec();
+    assert_eq!(
+        mask_flat, mask_hier,
+        "hierarchical screening mask diverged from flat — parity bug"
     );
     let screened = mask_flat.iter().filter(|&&k| !k).count();
     println!(
@@ -153,9 +168,15 @@ fn main() {
             .compute_keep(&region, &pb, &state, &evb.atr, &mut flops, &ctx)
             .len()
     });
+    let s_hier = bench.report("hierarchical screening round", || {
+        hier.compute_keep(&region, &pb, &state, &evb.atr, &mut flops, &ctx)
+            .len()
+    });
 
     let stats = grouped.group_stats();
+    let hstats = hier.group_stats();
     let speedup = s_flat.mean / s_grp.mean.max(1e-12);
+    let hier_speedup = s_flat.mean / s_hier.mean.max(1e-12);
     println!(
         "  grouped: {:.2}x speedup, tested fraction {:.4} \
          ({} atoms certified by {} group tests per round)",
@@ -164,9 +185,27 @@ fn main() {
         stats.atoms_certified / stats.rounds.max(1),
         stats.groups_screened / stats.rounds.max(1),
     );
+    println!(
+        "  hierarchical {:?}: {:.2}x speedup, tested fraction {:.4}",
+        hier_sizes,
+        hier_speedup,
+        hstats.tested_fraction(),
+    );
+    for (l, ls) in hstats.levels().iter().enumerate() {
+        println!(
+            "    level {l} (size {}): {} tests, {} certified runs, \
+             {} atoms certified, tested fraction through level {:.4}",
+            ls.group_size,
+            ls.groups_tested,
+            ls.groups_screened,
+            ls.atoms_certified,
+            hstats.tested_fraction_through(l),
+        );
+    }
 
     log.record("large/flat round", &s_flat);
     log.record("large/grouped round", &s_grp);
+    log.record("large/hierarchical round", &s_hier);
     log.metric("large_m", m_big as u64);
     log.metric("large_n", n_big as u64);
     log.metric("group_size", group_size as u64);
@@ -177,11 +216,37 @@ fn main() {
         "atoms_certified_per_round",
         (stats.atoms_certified / stats.rounds.max(1)) as u64,
     );
+    log.metric("hier_speedup", hier_speedup);
+    log.metric("hier_tested_fraction", hstats.tested_fraction());
+    for (l, ls) in hstats.levels().iter().enumerate() {
+        log.metric(
+            &format!("hier_level{l}_group_size"),
+            ls.group_size as u64,
+        );
+        log.metric(
+            &format!("hier_level{l}_atoms_certified_total"),
+            ls.atoms_certified as u64,
+        );
+        log.metric(
+            &format!("tested_fraction_through_level_{l}"),
+            hstats.tested_fraction_through(l),
+        );
+    }
     log.write();
 
     assert!(
         stats.tested_fraction() < 1.0,
         "group tests never certified anything on the clustered dictionary"
+    );
+    // A coarse certification certifies at least as much as the flat
+    // grouped pass would: the hierarchical round may descend, but its
+    // finest level is the flat level, so its per-atom work cannot
+    // exceed the flat-grouped round's.
+    assert!(
+        hstats.tested_fraction() <= stats.tested_fraction() + 1e-12,
+        "hierarchical tested fraction {:.4} > flat-grouped {:.4}",
+        hstats.tested_fraction(),
+        stats.tested_fraction()
     );
     if strict {
         assert!(

@@ -4,6 +4,16 @@
 use super::{Ball, HalfSpace, EPS};
 use crate::linalg::{self};
 
+/// Relative inflation applied to the cap-rim branch of
+/// [`Dome::sup_norm`].  The rim expression is ~10 floating-point
+/// operations, so its relative rounding error is a few ulps (≲ 5e-15);
+/// inflating by 1e-13 makes the returned value provably dominate the
+/// exact supremum while costing a vanishing amount of group-test
+/// power.  The two ball-bound branches are exact upper bounds already
+/// and are **not** inflated, so a dome whose cut is inactive returns
+/// the enclosing ball's `‖c‖ + R` bit for bit.
+pub const SUP_NORM_FP_MARGIN: f64 = 1e-13;
+
 /// A dome: ball ∩ half-space.
 #[derive(Clone, Debug)]
 pub struct Dome {
@@ -116,6 +126,64 @@ impl Dome {
         let up = atc + r_an * self.f_cached(psi1);
         let dn = -atc + r_an * self.f_cached(-psi1);
         up.max(dn)
+    }
+
+    /// Closed-form `sup_{u∈D} ‖u‖` — the dual-norm factor of the joint
+    /// screening test, with the half-space cut **intersected** instead
+    /// of ignored.
+    ///
+    /// `‖u‖` is convex, so its maximum over `B(c,R) ∩ {⟨g,u⟩ ≤ δ}` is
+    /// attained on the boundary.  Two cases, with `d = (δ−⟨g,c⟩)/‖g‖`
+    /// the signed cut distance and `c_g = ⟨g,c⟩/‖g‖` the center's
+    /// coordinate along `ĝ = g/‖g‖`:
+    ///
+    /// * the ball's farthest-from-origin point `c·(1 + R/‖c‖)`
+    ///   satisfies the cut (`R·c_g ≤ d·‖c‖`, or the cut misses the
+    ///   ball entirely, `d ≥ R`) — the dome attains the ball supremum
+    ///   `‖c‖ + R`;
+    /// * otherwise the maximizer sits on the **cap rim**
+    ///   `{‖u−c‖ = R, ⟨g,u⟩ = δ}`: writing `u = c + d·ĝ + ρ·w` with
+    ///   `ρ = √(R²−d²)` and `w ⊥ ĝ` unit, `‖u‖²` is maximized by
+    ///   pointing `w` along the component of `c` orthogonal to `ĝ`
+    ///   (`c_⊥ = √(‖c‖²−c_g²)`), giving
+    ///
+    ///   ```text
+    ///     sup ‖u‖ = √( (c_g + d)² + (c_⊥ + ρ)² )
+    ///   ```
+    ///
+    ///   — exact, O(m), from quantities already cached at build time.
+    ///
+    /// The rim value is inflated by [`SUP_NORM_FP_MARGIN`] (so floating
+    /// point cannot round it below the true supremum) and clamped to
+    /// the ball bound (the rim point lies in the ball, so the exact rim
+    /// value never exceeds `‖c‖ + R`); degenerate cuts and `R ≈ 0`
+    /// balls fall back to the ball bound, and an (fp-)empty dome clamps
+    /// `d` to `−R`, which degrades gracefully to the nearest rim.
+    /// Strictly tighter than `‖c‖ + R` exactly when the cut is active —
+    /// the regime near convergence where the Hölder dome's half-space
+    /// carries all the information.
+    pub fn sup_norm(&self) -> f64 {
+        let c_norm = linalg::norm2(&self.ball.center);
+        let radius = self.ball.radius;
+        let ball_sup = c_norm + radius;
+        if self.half.is_degenerate() || radius < EPS {
+            return ball_sup;
+        }
+        let d = self.cut_distance();
+        if d >= radius {
+            return ball_sup; // whole ball satisfies the cut
+        }
+        let c_g = linalg::dot(&self.half.g, &self.ball.center) / self.g_norm;
+        if radius * c_g <= d * c_norm {
+            return ball_sup; // farthest point satisfies the cut
+        }
+        let d = d.max(-radius);
+        let rho = (radius * radius - d * d).max(0.0).sqrt();
+        let c_perp = (c_norm * c_norm - c_g * c_g).max(0.0).sqrt();
+        let along = c_g + d;
+        let across = c_perp + rho;
+        let rim = (along * along + across * across).sqrt();
+        (rim * (1.0 + SUP_NORM_FP_MARGIN)).min(ball_sup)
     }
 
     /// `Rad(D)` (eq. 32): half the diameter of the dome.
@@ -279,6 +347,133 @@ mod tests {
             }
             if best < 0.5 * rad {
                 return Err(format!("rad {rad} looks too large vs {best}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sup_norm_hand_cases() {
+        // Centered ball: every cut position still yields R (the rim is
+        // a sphere of radius R around the origin).
+        let d0 = Dome::new(
+            Ball::new(vec![0.0, 0.0], 1.0),
+            HalfSpace::new(vec![1.0, 0.0], 0.0),
+        );
+        assert!((d0.sup_norm() - 1.0).abs() < 1e-12);
+        // Off-center, cut active: B((1,0), 1) ∩ {u_x ≤ 0.5}.  Farthest
+        // ball point (2,0) violates; rim points (0.5, ±√0.75) have norm
+        // exactly 1 — strictly below the ball bound 2.
+        let d1 = Dome::new(
+            Ball::new(vec![1.0, 0.0], 1.0),
+            HalfSpace::new(vec![1.0, 0.0], 0.5),
+        );
+        assert!((d1.sup_norm() - 1.0).abs() < 1e-12);
+        // Cut inactive (δ beyond the ball): bitwise the ball bound.
+        let d2 = Dome::new(
+            Ball::new(vec![1.0, 0.0], 1.0),
+            HalfSpace::new(vec![1.0, 0.0], 5.0),
+        );
+        assert_eq!(d2.sup_norm().to_bits(), 2.0f64.to_bits());
+        // Tangent from outside (d = −R): the rim degenerates to the
+        // single point c − R·ĝ.
+        let d3 = Dome::new(
+            Ball::new(vec![2.0, 0.0], 1.0),
+            HalfSpace::new(vec![1.0, 0.0], 1.0),
+        );
+        assert!((d3.sup_norm() - 1.0).abs() < 1e-10);
+        // Radius 0: the point c, from either branch.
+        let d4 = Dome::new(
+            Ball::new(vec![3.0, 4.0], 0.0),
+            HalfSpace::new(vec![1.0, 0.0], 0.0),
+        );
+        assert!((d4.sup_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sup_norm_dominates_samples_and_ball_bound() {
+        Runner::new(41).cases(60).run("dome sup_norm bound", |g| {
+            let m = g.usize_in(2, 10);
+            let dome = random_dome(g, m);
+            let sup = dome.sup_norm();
+            let ball_sup =
+                linalg::norm2(&dome.ball.center) + dome.ball.radius;
+            if sup > ball_sup {
+                return Err(format!(
+                    "sup_norm {sup} exceeds ball bound {ball_sup}"
+                ));
+            }
+            for _ in 0..300 {
+                let mut u = g.rng().unit_ball(m);
+                for (ui, ci) in u.iter_mut().zip(&dome.ball.center) {
+                    *ui = ci + dome.ball.radius * *ui;
+                }
+                if dome.half.contains(&u, 0.0) {
+                    let nu = linalg::norm2(&u);
+                    if nu > sup + 1e-9 {
+                        return Err(format!(
+                            "member norm {nu} > sup_norm {sup}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sup_norm_is_attained_on_the_rim() {
+        // When the cut is active the bound must be tight: the rim point
+        // c + d·ĝ + ρ·ŵ (ŵ along c_⊥) is in the dome and attains it.
+        Runner::new(43).cases(40).run("dome sup_norm attained", |g| {
+            let m = g.usize_in(2, 8);
+            let c = g.vec_normal(m);
+            let radius = g.f64_in(0.1, 2.0);
+            let normal = g.vec_normal(m);
+            // force an active cut: d strictly inside (−R, R), on the
+            // origin side of the center
+            let d = g.f64_in(-0.9, 0.5) * radius;
+            let gn = linalg::norm2(&normal);
+            let delta = linalg::dot(&normal, &c) + d * gn;
+            let dome = Dome::new(
+                Ball::new(c.clone(), radius),
+                HalfSpace::new(normal.clone(), delta),
+            );
+            let sup = dome.sup_norm();
+            let c_norm = linalg::norm2(&c);
+            let c_g = linalg::dot(&normal, &c) / gn;
+            if radius * c_g <= d * c_norm {
+                return Ok(()); // ball branch: attained at c(1 + R/‖c‖)
+            }
+            // build the rim maximizer explicitly
+            let ghat: Vec<f64> = normal.iter().map(|v| v / gn).collect();
+            let mut w: Vec<f64> = c
+                .iter()
+                .zip(&ghat)
+                .map(|(ci, gi)| ci - c_g * gi)
+                .collect();
+            let wn = linalg::norm2(&w);
+            if wn < 1e-9 {
+                return Ok(()); // c ∥ g: any rim direction ties
+            }
+            for v in &mut w {
+                *v /= wn;
+            }
+            let rho = (radius * radius - d * d).max(0.0).sqrt();
+            let u: Vec<f64> = c
+                .iter()
+                .zip(&ghat)
+                .zip(&w)
+                .map(|((ci, gi), wi)| ci + d * gi + rho * wi)
+                .collect();
+            if !dome.contains(&u, 1e-9) {
+                return Err("rim maximizer not in dome".into());
+            }
+            let nu = linalg::norm2(&u);
+            if (nu - sup).abs() > 1e-9 * (1.0 + sup) {
+                return Err(format!(
+                    "sup_norm {sup} not attained: rim point norm {nu}"
+                ));
             }
             Ok(())
         });

@@ -194,12 +194,28 @@
 //! Toeplitz/convolutional family, where neighboring shifts are
 //! near-duplicates) most groups certify and the per-atom work
 //! collapses to a small fraction of n
-//! ([`screening::GroupPassStats::tested_fraction`]).  The contract
-//! matches compaction's exactly: `--group-screening` is purely a
-//! wall-clock knob — keep masks, `SolveReport`s and the flop meter
-//! are **bitwise identical** with grouping on or off, across threads,
-//! stores and compaction policies (`rust/tests/group_parity.rs`); the
-//! speedup is measured by `benches/screening_overhead.rs`
+//! ([`screening::GroupPassStats::tested_fraction`]).
+//!
+//! Two refinements sharpen both phases.  The group test needs
+//! `sup_{u∈R}‖u‖`, and for dome regions
+//! [`regions::SafeRegion::sup_dual_norm`] now evaluates the exact
+//! closed-form maximum of `‖u‖` over ball ∩ half-space
+//! ([`geometry::Dome::sup_norm`]) instead of conservatively using the
+//! circumscribing ball — strictly tighter whenever the cut is active,
+//! identical on spheres.  And `--group-hierarchy`
+//! ([`screening::ScreenConfig::hierarchical`],
+//! [`problem::ClusterHierarchy`]) stacks 2–3 clustering levels
+//! coarse-to-fine (default 1024 → 64 → atom): one coarse test can
+//! certify a thousand atoms, and failed coarse runs descend level by
+//! level rather than falling straight to per-atom work, with per-level
+//! savings in [`screening::GroupPassStats::per_level`].
+//!
+//! The contract matches compaction's exactly: `--group-screening` /
+//! `--group-hierarchy` are purely wall-clock knobs — keep masks,
+//! `SolveReport`s and the flop meter are **bitwise identical** with
+//! grouping on or off, flat or hierarchical, across threads, stores
+//! and compaction policies (`rust/tests/group_parity.rs`); the speedup
+//! is measured by `benches/screening_overhead.rs`
 //! (`BENCH_screening_overhead.json`).
 //!
 //! A map of how these layers stack — and why the bitwise-parity
@@ -249,13 +265,13 @@ pub mod prelude {
     pub use crate::geometry::{Ball, Dome, HalfSpace};
     pub use crate::par::ParContext;
     pub use crate::problem::{
-        AtomClustering, LambdaSpec, LassoProblem, PrimalDualEval,
-        SharedDict,
+        AtomClustering, ClusterHierarchy, LambdaSpec, LassoProblem,
+        PrimalDualEval, SharedDict,
     };
     pub use crate::regions::{RegionKind, SafeRegion};
     pub use crate::screening::{
-        GroupPassStats, GroupingPolicy, ScreenConfig, ScreeningEngine,
-        ScreeningState,
+        GroupLevelStats, GroupPassStats, GroupingPolicy, ScreenConfig,
+        ScreeningEngine, ScreeningState, MAX_GROUP_LEVELS,
     };
     pub use crate::solver::{
         solve, solve_many, solve_warm, solve_warm_ws, BatchRhs, Budget,

@@ -99,6 +99,19 @@ const GROUP_SIZE_FLAG: Flag = Flag::int(
      never changes results",
 );
 
+/// Hierarchical joint screening (`ScreenConfig::hierarchical`): a
+/// comma-separated coarse-to-fine level-size list.  Takes precedence
+/// over `--group-screening`.
+const GROUP_HIERARCHY_FLAG: Flag = Flag::str(
+    "group-hierarchy",
+    None,
+    "hierarchical joint screening: comma-separated level sizes, e.g. \
+     1024,64 (any order; deduplicated, at most 3 levels kept) — one \
+     coarse test can certify thousands of atoms, failures descend \
+     level by level; never changes results; overrides \
+     --group-screening",
+);
+
 /// Toeplitz pulse truncation (`InstanceConfig::pulse_cutoff`).
 const PULSE_CUTOFF_FLAG: Flag = Flag::num(
     "pulse-cutoff",
@@ -121,6 +134,7 @@ const SOLVE_FLAGS: &[Flag] = &[
     PULSE_CUTOFF_FLAG,
     GROUP_SCREENING_FLAG,
     GROUP_SIZE_FLAG,
+    GROUP_HIERARCHY_FLAG,
     Flag::str("region", Some("holder_dome"),
               "screening region: holder_dome | gap_dome | gap_sphere | \
                static_sphere | dynamic_sphere | none"),
@@ -143,6 +157,7 @@ const BATCH_FLAGS: &[Flag] = &[
     PULSE_CUTOFF_FLAG,
     GROUP_SCREENING_FLAG,
     GROUP_SIZE_FLAG,
+    GROUP_HIERARCHY_FLAG,
     Flag::int("batch", Some("32"),
               "right-hand sides solved over the one shared dictionary \
                store (each gets its own lambda = lam-ratio * lam_max)"),
@@ -167,6 +182,7 @@ const PATH_FLAGS: &[Flag] = &[
     PULSE_CUTOFF_FLAG,
     GROUP_SCREENING_FLAG,
     GROUP_SIZE_FLAG,
+    GROUP_HIERARCHY_FLAG,
     Flag::str("region", Some("holder_dome"), "screening region or none"),
     Flag::int("points", Some("20"), "lambda grid points"),
     Flag::num("lam-min", Some("0.1"), "smallest lambda / lambda_max"),
@@ -410,9 +426,27 @@ fn compaction_from_args(args: &Args) -> CompactionPolicy {
     ))
 }
 
-/// Joint-screening configuration (`--group-screening`,
-/// `--group-size`); default off.
+/// Joint-screening configuration (`--group-screening`, `--group-size`,
+/// `--group-hierarchy`); default off.  An explicit hierarchy wins over
+/// the flat switch.
 fn screen_from_args(args: &Args) -> ScreenConfig {
+    if let Some(spec) = args.str("group-hierarchy") {
+        let sizes: Vec<usize> = spec
+            .split(',')
+            .filter_map(|t| t.trim().parse::<usize>().ok())
+            .collect();
+        if sizes.is_empty() {
+            eprintln!(
+                "warning: --group-hierarchy {spec:?} has no valid \
+                 sizes; using the default {:?}",
+                ScreenConfig::DEFAULT_HIERARCHY
+            );
+            return ScreenConfig::hierarchical(
+                &ScreenConfig::DEFAULT_HIERARCHY,
+            );
+        }
+        return ScreenConfig::hierarchical(&sizes);
+    }
     if args.switch("group-screening") {
         ScreenConfig::grouped(
             args.int_or("group-size", ScreenConfig::DEFAULT_GROUP_SIZE),

@@ -28,6 +28,17 @@
 //! once and cached inside [`crate::problem::SharedDict`] (lazily, on
 //! the first grouped screening round) and amortized across every RHS,
 //! session and cache hit that shares the store.
+//!
+//! ## Hierarchies
+//!
+//! A [`ClusterHierarchy`] stacks 2–3 clusterings of strictly
+//! decreasing group size (e.g. 1024 → 64 → atom): one coarse test can
+//! certify a thousand atoms at once, and a failed coarse test
+//! *descends* to the finer level instead of falling straight through
+//! to per-atom work.  Every level is an ordinary [`AtomClustering`] —
+//! same contiguous blocks, same certified-upper-bound radii and
+//! member→rep distances — so the safety/dominance argument of the flat
+//! grouped pass applies level by level, unchanged.
 
 use crate::sparse::DictStore;
 
@@ -162,6 +173,68 @@ impl AtomClustering {
     }
 }
 
+/// A coarse-to-fine stack of [`AtomClustering`]s for hierarchical
+/// joint screening (see the module docs).  Level 0 is the coarsest;
+/// the implicit final level is the per-atom test.
+///
+/// Levels are held behind `Arc` so the screening engine can hold a
+/// handle per solve while [`crate::problem::SharedDict`] keeps the
+/// build cached across every RHS sharing the dictionary.
+#[derive(Clone, Debug)]
+pub struct ClusterHierarchy {
+    levels: Vec<std::sync::Arc<AtomClustering>>,
+}
+
+impl ClusterHierarchy {
+    /// Sanitize a requested level-size list: clamp each to ≥ 1, sort
+    /// descending, drop duplicates, and cap at
+    /// [`crate::screening::MAX_GROUP_LEVELS`] (keeping the finest
+    /// sizes, whose tests are the cheapest to waste).  The result is
+    /// strictly decreasing and non-empty whenever the input held any
+    /// positive size; an empty input yields an empty list (grouping
+    /// disabled upstream).
+    pub fn sanitize_sizes(sizes: &[usize]) -> Vec<usize> {
+        let mut s: Vec<usize> =
+            sizes.iter().map(|&v| v.max(1)).collect();
+        s.sort_unstable_by(|a, b| b.cmp(a));
+        s.dedup();
+        let max = crate::screening::MAX_GROUP_LEVELS;
+        if s.len() > max {
+            s.drain(..s.len() - max);
+        }
+        s
+    }
+
+    /// Build one [`AtomClustering`] per (sanitized) level size —
+    /// coarse to fine.  Cost: one densified column pass per atom per
+    /// level, once per dictionary.
+    pub fn build(
+        store: &DictStore,
+        col_norms: &[f64],
+        sizes: &[usize],
+    ) -> Self {
+        let levels = Self::sanitize_sizes(sizes)
+            .into_iter()
+            .map(|gs| {
+                std::sync::Arc::new(AtomClustering::build(
+                    store, col_norms, gs,
+                ))
+            })
+            .collect();
+        ClusterHierarchy { levels }
+    }
+
+    /// The per-level clusterings, coarsest first.
+    pub fn levels(&self) -> &[std::sync::Arc<AtomClustering>] {
+        &self.levels
+    }
+
+    /// Group sizes, coarsest first (strictly decreasing).
+    pub fn sizes(&self) -> Vec<usize> {
+        self.levels.iter().map(|c| c.group_size()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +301,55 @@ mod tests {
         // group_size 0 clamps to 1 instead of dividing by zero.
         let clamped = AtomClustering::build(&store, &norms, 0);
         assert_eq!(clamped.group_size(), 1);
+    }
+
+    #[test]
+    fn hierarchy_sanitizes_and_orders_levels() {
+        // Unordered, duplicated, zero-containing input comes out
+        // strictly decreasing, clamped and capped.
+        assert_eq!(
+            ClusterHierarchy::sanitize_sizes(&[64, 1024, 64, 0]),
+            vec![1024, 64, 1]
+        );
+        assert_eq!(
+            ClusterHierarchy::sanitize_sizes(&[8, 512, 64, 4096, 1024]),
+            vec![512, 64, 8] // capped at MAX_GROUP_LEVELS finest sizes
+        );
+        assert_eq!(ClusterHierarchy::sanitize_sizes(&[]), Vec::<usize>::new());
+        let (store, norms) = dict(35, 10, 50);
+        let h = ClusterHierarchy::build(&store, &norms, &[16, 4]);
+        assert_eq!(h.sizes(), vec![16, 4]);
+        assert_eq!(h.levels().len(), 2);
+        assert_eq!(h.levels()[0].group_size(), 16);
+        assert_eq!(h.levels()[1].group_size(), 4);
+        assert_eq!(h.levels()[0].num_groups(), 4);
+        assert_eq!(h.levels()[1].num_groups(), 13);
+    }
+
+    #[test]
+    fn hierarchy_levels_match_standalone_clusterings_bitwise() {
+        // Each level must be exactly the flat clustering at that size —
+        // the hierarchy adds structure, never different arithmetic.
+        let (store, norms) = dict(36, 11, 41);
+        let h = ClusterHierarchy::build(&store, &norms, &[12, 3]);
+        for level in h.levels() {
+            let flat =
+                AtomClustering::build(&store, &norms, level.group_size());
+            assert_eq!(level.num_groups(), flat.num_groups());
+            for j in 0..41 {
+                assert_eq!(
+                    level.dist_to_rep(j).to_bits(),
+                    flat.dist_to_rep(j).to_bits()
+                );
+            }
+            for g in 0..flat.num_groups() {
+                assert_eq!(
+                    level.radius(g).to_bits(),
+                    flat.radius(g).to_bits()
+                );
+                assert_eq!(level.rep(g), flat.rep(g));
+            }
+        }
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::sparse::DictStore;
 
 pub mod cluster;
 
-pub use cluster::AtomClustering;
+pub use cluster::{AtomClustering, ClusterHierarchy};
 
 /// Guard value shared with the Python layer (`kernels/ref.py::EPS`).
 pub const EPS: f64 = 1e-12;
@@ -136,6 +136,11 @@ struct SharedDictInner {
     /// ask for a *different* group size (the slot is rebuilt, and the
     /// previous `Arc` stays valid for whoever still holds it).
     clustering: Mutex<Option<Arc<AtomClustering>>>,
+    /// Lazily built multi-level clustering for **hierarchical** joint
+    /// screening ([`ClusterHierarchy`]), cached beside the flat slot
+    /// under the same rebuild-on-size-change discipline (keyed on the
+    /// sanitized level-size list).
+    hierarchy: Mutex<Option<Arc<ClusterHierarchy>>>,
 }
 
 impl SharedDict {
@@ -153,6 +158,7 @@ impl SharedDict {
                 col_nnz,
                 lipschitz,
                 clustering: Mutex::new(None),
+                hierarchy: Mutex::new(None),
             }),
         }
     }
@@ -204,6 +210,31 @@ impl SharedDict {
             &self.inner.store,
             &self.inner.col_norms,
             group_size,
+        ));
+        *slot = Some(built.clone());
+        built
+    }
+
+    /// The hierarchical joint-screening clustering for these level
+    /// sizes (coarsest first; sanitized via
+    /// [`ClusterHierarchy::sanitize_sizes`]), building and caching it
+    /// on first use — the multi-level sibling of
+    /// [`clustering`](Self::clustering), under the same contract:
+    /// repeat calls with the same (sanitized) sizes are an `Arc` bump,
+    /// a different list rebuilds the slot, and previously returned
+    /// handles stay valid across the rebuild.
+    pub fn hierarchy(&self, sizes: &[usize]) -> Arc<ClusterHierarchy> {
+        let want = ClusterHierarchy::sanitize_sizes(sizes);
+        let mut slot = self.inner.hierarchy.lock().unwrap();
+        if let Some(h) = slot.as_ref() {
+            if h.sizes() == want {
+                return h.clone();
+            }
+        }
+        let built = Arc::new(ClusterHierarchy::build(
+            &self.inner.store,
+            &self.inner.col_norms,
+            &want,
         ));
         *slot = Some(built.clone());
         built
@@ -628,5 +659,27 @@ mod tests {
         assert!(!Arc::ptr_eq(&c8, &c16));
         // the old handle still answers after the slot was rebuilt
         assert_eq!(c8.num_groups(), 5);
+    }
+
+    /// The hierarchy cache: same (sanitized) sizes reuse the build —
+    /// including permutations that sanitize to the same list — a new
+    /// list rebuilds, and old handles survive.
+    #[test]
+    fn hierarchy_cache_reuses_and_rebuilds() {
+        let mut g = Gen::for_case(14, 0);
+        let a = g.dictionary(10, 64);
+        let shared = SharedDict::new(DictStore::Dense(a));
+        let h = shared.hierarchy(&[16, 4]);
+        assert_eq!(h.sizes(), vec![16, 4]);
+        let h2 = shared.hierarchy(&[4, 16]); // sanitizes identically
+        assert!(Arc::ptr_eq(&h, &h2), "same sanitized sizes must reuse");
+        let h3 = shared.hierarchy(&[32, 8]);
+        assert_eq!(h3.sizes(), vec![32, 8]);
+        assert!(!Arc::ptr_eq(&h, &h3));
+        // the old handle still answers after the rebuild
+        assert_eq!(h.levels().len(), 2);
+        // the flat clustering slot is untouched by hierarchy builds
+        let c = shared.clustering(16);
+        assert_eq!(c.group_size(), 16);
     }
 }

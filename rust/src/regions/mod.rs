@@ -356,16 +356,23 @@ impl SafeRegion {
 
     /// Upper bound on `sup_{u∈R} ‖u‖` — the dual-norm factor of the
     /// joint screening test.  For spheres this is exact
-    /// (`‖center‖ + radius`); for domes we bound over the enclosing
-    /// ball, ignoring the half-space cut.  That is conservative: it
-    /// can only weaken group tests (fewer groups certified at once),
-    /// never admit an unsafe one.  O(m), once per screening round.
+    /// (`‖center‖ + radius`); for domes it is the closed-form maximum
+    /// over **ball ∩ half-space** ([`Dome::sup_norm`]): when the ball's
+    /// farthest-from-origin point violates the cut, the maximizer sits
+    /// on the cap rim and the cut shrinks the bound — strictly tighter
+    /// exactly where the Hölder dome is strictly smaller than the GAP
+    /// sphere, so group tests certify more runs near convergence.
+    /// Never exceeds the enclosing-ball value (asserted by the
+    /// `dome_sup_never_exceeds_ball_sup` property), and conservatively
+    /// fp-inflated on the rim branch
+    /// ([`crate::geometry::dome::SUP_NORM_FP_MARGIN`]) so floating
+    /// point cannot round it below the true supremum.  O(m), once per
+    /// screening round.
     pub fn sup_dual_norm(&self) -> f64 {
-        let b = match &self.geom {
-            RegionGeom::Sphere(b) => b,
-            RegionGeom::Dome(d) => &d.ball,
-        };
-        linalg::norm2(&b.center) + b.radius
+        match &self.geom {
+            RegionGeom::Sphere(b) => linalg::norm2(&b.center) + b.radius,
+            RegionGeom::Dome(d) => d.sup_norm(),
+        }
     }
 
     /// The joint screening test bound (Herzet & Drémeau): for any atom
@@ -653,6 +660,19 @@ mod tests {
             for kind in RegionKind::ALL {
                 let region = SafeRegion::build(kind, &p, &x, &ev);
                 let sup_u = region.sup_dual_norm();
+                // The dome-aware sup must never exceed the enclosing
+                // ball's — the conservative envelope the flat grouped
+                // pass shipped with.
+                if let RegionGeom::Dome(d) = &region.geom {
+                    let ball_sup =
+                        linalg::norm2(&d.ball.center) + d.ball.radius;
+                    if sup_u > ball_sup {
+                        return Err(format!(
+                            "{}: dome sup {sup_u} > ball sup {ball_sup}",
+                            kind.name()
+                        ));
+                    }
+                }
                 // treat a random contiguous window as one cluster,
                 // pivoting on its first atom
                 let start = g.usize_in(0, n - 1);
@@ -683,6 +703,80 @@ mod tests {
                             "{} atom {i}: member bound {mb} >= group \
                              bound {gb} (pivot {pivot})",
                             kind.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The dome-aware `sup_dual_norm` path at every cut regime the
+    /// geometry admits — active, inactive, tangent from either side,
+    /// and a radius-0 ball — checked against the explicit (slow-path)
+    /// member bounds: the group bound must dominate each member's
+    /// per-atom bound, and the dome sup must never exceed the
+    /// enclosing-ball sup.
+    #[test]
+    fn group_bound_dominates_on_synthetic_domes() {
+        Runner::new(137).cases(25).run("synthetic dome dominance", |g| {
+            let m = g.usize_in(3, 12);
+            let n = 12;
+            let a = g.dictionary(m, n);
+            let center = g.vec_normal(m);
+            let normal = g.vec_normal(m);
+            let gn = linalg::norm2(&normal);
+            let cases: [(f64, f64); 6] = [
+                (g.f64_in(0.1, 1.5), g.f64_in(-0.95, 0.0)), // cut active
+                (g.f64_in(0.1, 1.5), g.f64_in(0.0, 0.95)),  // maybe active
+                (g.f64_in(0.1, 1.5), 2.0), // inactive (misses the ball)
+                (g.f64_in(0.1, 1.5), 1.0), // tangent, whole ball inside
+                (g.f64_in(0.1, 1.5), -1.0), // tangent, single-point dome
+                (0.0, 0.5),                 // radius-0 ball
+            ];
+            for (case, (radius, dpos)) in cases.into_iter().enumerate() {
+                let delta = linalg::dot(&normal, &center)
+                    + dpos * radius * gn;
+                let dome = Dome::new(
+                    Ball::new(center.clone(), radius),
+                    HalfSpace::new(normal.clone(), delta),
+                );
+                let region = SafeRegion {
+                    kind: RegionKind::HolderDome,
+                    geom: RegionGeom::Dome(dome),
+                    combo_c: (0.0, 0.0),
+                    combo_g: None,
+                };
+                let sup_u = region.sup_dual_norm();
+                let ball_sup = linalg::norm2(&center) + radius;
+                if sup_u > ball_sup {
+                    return Err(format!(
+                        "case {case}: dome sup {sup_u} > ball \
+                         sup {ball_sup}"
+                    ));
+                }
+                if dpos >= 1.0 && sup_u.to_bits() != ball_sup.to_bits() {
+                    return Err(format!(
+                        "case {case}: inactive cut must return the \
+                         ball sup bitwise ({sup_u} vs {ball_sup})"
+                    ));
+                }
+                let pivot = 0;
+                let pb = region.max_abs_inner(a.col(pivot));
+                for i in 0..n {
+                    let diff: Vec<f64> = a
+                        .col(i)
+                        .iter()
+                        .zip(a.col(pivot))
+                        .map(|(x, y)| x - y)
+                        .collect();
+                    let dist = linalg::norm2(&diff);
+                    let gb = region.group_bound(pb, dist, sup_u);
+                    let mb = region.max_abs_inner(a.col(i));
+                    if mb >= gb {
+                        return Err(format!(
+                            "case {case} atom {i}: member bound {mb} \
+                             >= group bound {gb}"
                         ));
                     }
                 }

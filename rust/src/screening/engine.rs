@@ -44,6 +44,21 @@
 //! [`CompactionPolicy`] applies to the working set as a whole, so
 //! grouping fades out exactly where compaction kicks in.
 //!
+//! ## Hierarchical descent
+//!
+//! With [`GroupingPolicy::Hierarchical`] the same idea stacks
+//! coarse-to-fine: the round segments the active list at the
+//! *coarsest* level first, and a failed (or too-short) coarse run is
+//! re-segmented at the next level instead of falling straight to
+//! per-atom tests.  One 1024-atom test can retire what would otherwise
+//! be sixteen 64-atom tests, while a failed coarse test costs a single
+//! extra bound evaluation before the fine level gets its chance.  The
+//! implicit last level is always the per-atom body, so the flat
+//! contiguous policy is exactly a one-level hierarchy and both run the
+//! same descent code.  Sharding still splits on the *coarsest* level's
+//! segment boundaries.  Per-level savings are reported via
+//! [`GroupPassStats::per_level`].
+//!
 //! **Parity contract**: the keep mask is bitwise identical with
 //! grouping on or off (see [`crate::regions::GROUP_FP_MARGIN`] for
 //! why that survives floating point), and the flop meter charges the
@@ -56,25 +71,27 @@
 //! [`SolverConfig::seed_region`]: crate::solver::SolverConfig::seed_region
 //! [`RegionKind::Sequential`]: crate::regions::RegionKind::Sequential
 //! [`GroupingPolicy::Contiguous`]: super::GroupingPolicy::Contiguous
+//! [`GroupingPolicy::Hierarchical`]: super::GroupingPolicy::Hierarchical
 
 use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
 use std::sync::Arc;
 
-use super::{GroupingPolicy, ScreenConfig, ScreeningState};
+use super::{GroupingPolicy, ScreenConfig, ScreeningState, MAX_GROUP_LEVELS};
 use crate::flops::FlopCounter;
 use crate::par::ParContext;
-use crate::problem::{AtomClustering, LassoProblem};
+use crate::problem::{AtomClustering, ClusterHierarchy, LassoProblem};
 use crate::regions::SafeRegion;
 use crate::workset::{CompactionPolicy, WorkingSet};
 
 /// Stateless screening executor; holds scratch to avoid per-round
 /// allocation, plus the grouped-pass configuration and its lazily
-/// fetched clustering handle.
+/// fetched clustering levels (coarsest first; one entry for the flat
+/// contiguous policy).
 #[derive(Default)]
 pub struct ScreeningEngine {
     keep: Vec<bool>,
     config: ScreenConfig,
-    cluster: Option<Arc<AtomClustering>>,
+    levels: Vec<Arc<AtomClustering>>,
     gstats: GroupCounters,
 }
 
@@ -94,14 +111,35 @@ pub struct ScreenOutcome {
 pub struct GroupPassStats {
     /// Grouped screening rounds run.
     pub rounds: usize,
-    /// Group tests evaluated (one pivot bound + one combine each).
+    /// Group tests evaluated (one pivot bound + one combine each),
+    /// summed over every level.
     pub groups_tested: usize,
-    /// Group tests that certified their whole run screened.
+    /// Group tests that certified their whole run screened, summed
+    /// over every level.
     pub groups_screened: usize,
     /// Atoms certified screened by a group test — no individual test.
     pub atoms_certified: usize,
     /// Atoms that received the ordinary per-atom test.
     pub atoms_tested: usize,
+    /// Number of explicit clustering levels (0 when grouping is
+    /// disabled, 1 for the flat contiguous policy).
+    pub num_levels: usize,
+    /// Per-level breakdown of the aggregate counters, coarsest first;
+    /// slots at `num_levels..` are zeros.
+    pub per_level: [GroupLevelStats; MAX_GROUP_LEVELS],
+}
+
+/// One clustering level's slice of [`GroupPassStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GroupLevelStats {
+    /// The level's block size (coarsest level has the largest).
+    pub group_size: usize,
+    /// Group tests evaluated at this level.
+    pub groups_tested: usize,
+    /// Group tests at this level that certified their whole run.
+    pub groups_screened: usize,
+    /// Atoms certified screened at this level.
+    pub atoms_certified: usize,
 }
 
 impl GroupPassStats {
@@ -115,17 +153,41 @@ impl GroupPassStats {
             self.atoms_tested as f64 / total as f64
         }
     }
+
+    /// The populated per-level entries, coarsest first.
+    pub fn levels(&self) -> &[GroupLevelStats] {
+        &self.per_level[..self.num_levels]
+    }
+
+    /// Fraction of processed atoms still untested after the
+    /// certifications of levels `0..=level` — non-increasing in
+    /// `level`, and equal to [`tested_fraction`](Self::tested_fraction)
+    /// at the last level.  `level` past the end clamps.
+    pub fn tested_fraction_through(&self, level: usize) -> f64 {
+        let total = self.atoms_tested + self.atoms_certified;
+        if total == 0 {
+            return 1.0;
+        }
+        let hi = (level + 1).min(self.num_levels);
+        let certified: usize = self.per_level[..hi]
+            .iter()
+            .map(|l| l.atoms_certified)
+            .sum();
+        (total - certified) as f64 / total as f64
+    }
 }
 
 /// Shard-safe accumulators behind [`GroupPassStats`] (relaxed atomics:
-/// the counts are diagnostics, never part of the result).
+/// the counts are diagnostics, never part of the result).  Group
+/// counters are per level; `atoms_tested` belongs to the implicit
+/// per-atom level.
 #[derive(Debug, Default)]
 struct GroupCounters {
     rounds: AtomicUsize,
-    groups_tested: AtomicUsize,
-    groups_screened: AtomicUsize,
-    atoms_certified: AtomicUsize,
     atoms_tested: AtomicUsize,
+    groups_tested: [AtomicUsize; MAX_GROUP_LEVELS],
+    groups_screened: [AtomicUsize; MAX_GROUP_LEVELS],
+    atoms_certified: [AtomicUsize; MAX_GROUP_LEVELS],
 }
 
 /// One stretch of the active list, by *position* `[start, end)`.
@@ -187,6 +249,109 @@ fn build_segments(
     segs
 }
 
+/// Borrowed context of one grouped round; [`process_segment`] /
+/// [`descend`] are mutually recursive over the clustering levels
+/// (coarsest = 0, per-atom past the last).  `Sync` so shard workers
+/// can share one instance.
+///
+/// [`process_segment`]: Descent::process_segment
+/// [`descend`]: Descent::descend
+struct Descent<'a, F: Fn(usize) -> (f64, f64) + Sync> {
+    levels: &'a [Arc<AtomClustering>],
+    active: &'a [usize],
+    atr: &'a [f64],
+    region: &'a SafeRegion,
+    stat_at: F,
+    lam: f64,
+    u_max: f64,
+    min_runs: [usize; MAX_GROUP_LEVELS],
+    gstats: &'a GroupCounters,
+}
+
+impl<F: Fn(usize) -> (f64, f64) + Sync> Descent<'_, F> {
+    /// Run one group test on a `Some(g)` segment at `level`: on
+    /// certification the run's slots stay false (the mask is
+    /// false-initialized), otherwise — and for `None` segments — the
+    /// stretch descends one level.
+    fn process_segment(
+        &self,
+        level: usize,
+        seg: Segment,
+        dst: &mut [bool],
+        base: usize,
+    ) {
+        if let Some(g) = seg.group {
+            let cluster = &self.levels[level];
+            self.gstats.groups_tested[level].fetch_add(1, Relaxed);
+            // Pivot on the first *active* member p = active[start]:
+            // ‖a_i − a_p‖ ≤ radius(g) + dist_to_rep(p) for every
+            // member i of the run (triangle inequality through the
+            // representative).
+            let (aty_p, nrm_p) = (self.stat_at)(seg.start);
+            let pb = self.region.max_abs_inner_stat(
+                aty_p,
+                self.atr[seg.start],
+                nrm_p,
+            );
+            let slack = cluster.radius(g)
+                + cluster.dist_to_rep(self.active[seg.start]);
+            if self.region.group_bound(pb, slack, self.u_max) < self.lam
+            {
+                // Whole run certified screened: the group bound
+                // dominates every member's per-atom bound, so the
+                // flat pass would clear these slots too.
+                self.gstats.groups_screened[level].fetch_add(1, Relaxed);
+                self.gstats.atoms_certified[level]
+                    .fetch_add(seg.end - seg.start, Relaxed);
+                return;
+            }
+        }
+        self.descend(level + 1, seg.start, seg.end, dst, base);
+    }
+
+    /// Re-segment positions `[s, e)` at `level` and process each run;
+    /// past the finest level this is the flat pass's per-atom body.
+    fn descend(
+        &self,
+        level: usize,
+        s: usize,
+        e: usize,
+        dst: &mut [bool],
+        base: usize,
+    ) {
+        if level >= self.levels.len() {
+            self.gstats.atoms_tested.fetch_add(e - s, Relaxed);
+            for k in s..e {
+                let (aty_k, nrm_k) = (self.stat_at)(k);
+                let bound = self.region.max_abs_inner_stat(
+                    aty_k,
+                    self.atr[k],
+                    nrm_k,
+                );
+                dst[k - base] = bound >= self.lam;
+            }
+            return;
+        }
+        // Runs are recomputed on the sub-slice; the `Some(g)` ids stay
+        // correct because they come from the original atom indices.
+        let gs = self.levels[level].group_size();
+        for seg in
+            build_segments(&self.active[s..e], gs, self.min_runs[level])
+        {
+            self.process_segment(
+                level,
+                Segment {
+                    start: seg.start + s,
+                    end: seg.end + s,
+                    group: seg.group,
+                },
+                dst,
+                base,
+            );
+        }
+    }
+}
+
 impl ScreeningEngine {
     pub fn new() -> Self {
         Self::default()
@@ -207,12 +372,34 @@ impl ScreeningEngine {
     /// Cumulative grouped-pass diagnostics (zeros when grouping never
     /// ran).
     pub fn group_stats(&self) -> GroupPassStats {
+        let sizes = ClusterHierarchy::sanitize_sizes(
+            self.config.grouping.level_sizes(),
+        );
+        let mut per_level =
+            [GroupLevelStats::default(); MAX_GROUP_LEVELS];
+        let (mut gt, mut gs, mut ac) = (0usize, 0usize, 0usize);
+        for (l, &group_size) in sizes.iter().enumerate() {
+            let s = GroupLevelStats {
+                group_size,
+                groups_tested: self.gstats.groups_tested[l].load(Relaxed),
+                groups_screened: self.gstats.groups_screened[l]
+                    .load(Relaxed),
+                atoms_certified: self.gstats.atoms_certified[l]
+                    .load(Relaxed),
+            };
+            gt += s.groups_tested;
+            gs += s.groups_screened;
+            ac += s.atoms_certified;
+            per_level[l] = s;
+        }
         GroupPassStats {
             rounds: self.gstats.rounds.load(Relaxed),
-            groups_tested: self.gstats.groups_tested.load(Relaxed),
-            groups_screened: self.gstats.groups_screened.load(Relaxed),
-            atoms_certified: self.gstats.atoms_certified.load(Relaxed),
+            groups_tested: gt,
+            groups_screened: gs,
+            atoms_certified: ac,
             atoms_tested: self.gstats.atoms_tested.load(Relaxed),
+            num_levels: sizes.len(),
+            per_level,
         }
     }
 
@@ -271,12 +458,10 @@ impl ScreeningEngine {
         let lam = p.lam() * (1.0 - 1e-9);
         self.keep.clear();
         self.keep.resize(active.len(), false);
-        if let GroupingPolicy::Contiguous { group_size } =
-            self.config.grouping
-        {
+        if self.config.grouping != GroupingPolicy::Disabled {
             if !active.is_empty() {
                 self.grouped_pass(
-                    region, p, state, ws, atr_compact, lam, group_size, ctx,
+                    region, p, state, ws, atr_compact, lam, ctx,
                 );
             }
             // Same flat-pass charges as below: grouping is wall-clock
@@ -353,10 +538,12 @@ impl ScreeningEngine {
         &self.keep
     }
 
-    /// The two-phase grouped round (module docs): group tests over
-    /// contiguous active runs first, the flat per-atom body inside
-    /// whatever survives.  Writes `self.keep`; bitwise identical to
-    /// the flat pass by the group-bound dominance argument.
+    /// The grouped round (module docs): group tests over contiguous
+    /// active runs at each clustering level, coarsest first; a failed
+    /// (or too-short) run descends one level, and the finest failures
+    /// run *exactly* the flat pass's per-atom body.  Writes
+    /// `self.keep`; bitwise identical to the flat pass by the
+    /// group-bound dominance argument, at every depth.
     #[allow(clippy::too_many_arguments)]
     fn grouped_pass(
         &mut self,
@@ -366,23 +553,34 @@ impl ScreeningEngine {
         ws: &WorkingSet,
         atr_compact: &[f64],
         lam: f64,
-        group_size: usize,
         ctx: &ParContext,
     ) {
         let active = state.active();
         // First grouped round of this engine: fetch (or build) the
-        // dictionary-wide clustering once; every later round and every
-        // sibling solve over the same `SharedDict` reuses it.
-        let cached = matches!(
-            &self.cluster,
-            Some(c) if c.group_size() == group_size.max(1)
+        // level clusterings once; every later round and every sibling
+        // solve over the same `SharedDict` reuses them.  The flat
+        // contiguous policy is the one-level hierarchy and keeps using
+        // the flat clustering cache slot.
+        let want = ClusterHierarchy::sanitize_sizes(
+            self.config.grouping.level_sizes(),
         );
+        let cached = self.levels.len() == want.len()
+            && self
+                .levels
+                .iter()
+                .zip(&want)
+                .all(|(c, &gs)| c.group_size() == gs);
         if !cached {
-            self.cluster = Some(p.shared().clustering(group_size));
+            self.levels = if want.len() == 1 {
+                vec![p.shared().clustering(want[0])]
+            } else {
+                p.shared().hierarchy(&want).levels().to_vec()
+            };
         }
-        let cluster = self.cluster.as_ref().unwrap().clone();
-        let min_run = min_group_run(cluster.group_size(), ws.policy());
-        let segments = build_segments(active, cluster.group_size(), min_run);
+        let mut min_runs = [usize::MAX; MAX_GROUP_LEVELS];
+        for (l, c) in self.levels.iter().enumerate() {
+            min_runs[l] = min_group_run(c.group_size(), ws.policy());
+        }
         let u_max = region.sup_dual_norm();
         self.gstats.rounds.fetch_add(1, Relaxed);
 
@@ -391,8 +589,8 @@ impl ScreeningEngine {
         let norms_full = p.col_norms();
         // Per-position stats from whichever source the flat pass would
         // read — the compact caches are position-aligned bitwise
-        // copies, so the bound arithmetic below is the flat pass's
-        // exactly.
+        // copies, so the bound arithmetic in the descent is the flat
+        // pass's exactly.
         let stat_at = move |k: usize| -> (f64, f64) {
             match compact {
                 Some((aty_c, norms_c)) => (aty_c[k], norms_c[k]),
@@ -402,40 +600,25 @@ impl ScreeningEngine {
                 }
             }
         };
-        let cluster_ref: &AtomClustering = &cluster;
-        let gstats = &self.gstats;
+        let cx = Descent {
+            levels: &self.levels,
+            active,
+            atr: atr_compact,
+            region,
+            stat_at,
+            lam,
+            u_max,
+            min_runs,
+            gstats: &self.gstats,
+        };
+        let segments = build_segments(
+            active,
+            self.levels[0].group_size(),
+            min_runs[0],
+        );
         let proc = |segs: &[Segment], dst: &mut [bool], base: usize| {
             for seg in segs {
-                let (s, e) = (seg.start, seg.end);
-                if let Some(g) = seg.group {
-                    gstats.groups_tested.fetch_add(1, Relaxed);
-                    // Pivot on the first *active* member: ‖a_i − a_s‖
-                    // ≤ radius(g) + dist_to_rep(active[s]) for every
-                    // member i of the run (triangle inequality through
-                    // the representative).
-                    let (aty_p, nrm_p) = stat_at(s);
-                    let pb = region
-                        .max_abs_inner_stat(aty_p, atr_compact[s], nrm_p);
-                    let slack = cluster_ref.radius(g)
-                        + cluster_ref.dist_to_rep(active[s]);
-                    if region.group_bound(pb, slack, u_max) < lam {
-                        // Whole run certified screened: the group
-                        // bound dominates every member's per-atom
-                        // bound, so the flat pass would clear these
-                        // slots too.  `dst` is false-initialized —
-                        // nothing to write.
-                        gstats.groups_screened.fetch_add(1, Relaxed);
-                        gstats.atoms_certified.fetch_add(e - s, Relaxed);
-                        continue;
-                    }
-                }
-                gstats.atoms_tested.fetch_add(e - s, Relaxed);
-                for k in s..e {
-                    let (aty_k, nrm_k) = stat_at(k);
-                    let bound = region
-                        .max_abs_inner_stat(aty_k, atr_compact[k], nrm_k);
-                    dst[k - base] = bound >= lam;
-                }
+                cx.process_segment(0, *seg, dst, base);
             }
         };
         let shards = ctx.shards_for(active.len());
@@ -974,6 +1157,244 @@ mod tests {
             "no group certified on exact-duplicate blocks: {stats:?}"
         );
         assert!(stats.tested_fraction() < 1.0);
+        // Flat grouping is the one-level hierarchy in the stats too.
+        assert_eq!(stats.num_levels, 1);
+        assert_eq!(stats.levels().len(), 1);
+        assert_eq!(stats.per_level[0].group_size, gsize);
+        assert_eq!(
+            stats.per_level[0].atoms_certified,
+            stats.atoms_certified
+        );
+        assert_eq!(stats.per_level[1], GroupLevelStats::default());
+    }
+
+    /// Tentpole parity contract one layer up: the hierarchical mask is
+    /// bitwise the flat mask for every region kind, level-size list
+    /// (including degenerate shapes), and thread count.
+    #[test]
+    fn hierarchical_mask_matches_flat_bitwise() {
+        use super::super::ScreenConfig;
+        Runner::new(251).cases(6).run("hierarchical keep parity", |g| {
+            let (p, _) = make(g);
+            let mut x = vec![0.0; p.n()];
+            let step = p.default_step();
+            for _ in 0..3 {
+                let ev = p.eval(&x);
+                for i in 0..p.n() {
+                    x[i] = linalg::soft_threshold_scalar(
+                        x[i] + step * ev.atr[i],
+                        step * p.lam(),
+                    );
+                }
+            }
+            let ev = p.eval(&x);
+            let n = p.n();
+            let shapes: Vec<Vec<usize>> = vec![
+                vec![16, 4],
+                vec![n, 5],
+                vec![2 * n, 16, 4],
+                vec![n, 1],
+                vec![64], // collapses to flat Contiguous
+            ];
+            for kind in RegionKind::ALL {
+                let region = SafeRegion::build(kind, &p, &x, &ev);
+                let state = ScreeningState::new(p.n());
+                let mut flat = ScreeningEngine::new();
+                let mut flops = FlopCounter::new();
+                let base = flat
+                    .compute_keep(
+                        &region,
+                        &p,
+                        &state,
+                        &ev.atr,
+                        &mut flops,
+                        &ParContext::sequential(),
+                    )
+                    .to_vec();
+                for shape in &shapes {
+                    let mut hier = ScreeningEngine::with_config(
+                        ScreenConfig::hierarchical(shape),
+                    );
+                    for threads in [1usize, 4] {
+                        let ctx = ParContext::new_pool(threads, 1);
+                        let mask = hier
+                            .compute_keep(
+                                &region, &p, &state, &ev.atr, &mut flops,
+                                &ctx,
+                            )
+                            .to_vec();
+                        if mask != base {
+                            return Err(format!(
+                                "{}: hierarchical mask diverged at \
+                                 levels {shape:?}, {threads} threads",
+                                kind.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Hierarchical rounds charge exactly the flat cost model, like
+    /// flat-grouped ones.
+    #[test]
+    fn hierarchical_round_charges_flat_flops() {
+        use super::super::ScreenConfig;
+        let mut g = Gen::for_case(19, 0);
+        let (p, x) = make(&mut g);
+        let ev = p.eval(&x);
+        for kind in RegionKind::ALL {
+            let region = SafeRegion::build(kind, &p, &x, &ev);
+            let state = ScreeningState::new(p.n());
+            let mut f_flat = FlopCounter::new();
+            let mut f_hier = FlopCounter::new();
+            ScreeningEngine::new().compute_keep(
+                &region,
+                &p,
+                &state,
+                &ev.atr,
+                &mut f_flat,
+                &ParContext::sequential(),
+            );
+            ScreeningEngine::with_config(ScreenConfig::hierarchical(&[
+                16, 4,
+            ]))
+            .compute_keep(
+                &region,
+                &p,
+                &state,
+                &ev.atr,
+                &mut f_hier,
+                &ParContext::sequential(),
+            );
+            assert_eq!(
+                f_flat.total(),
+                f_hier.total(),
+                "{}: hierarchical round charged differently",
+                kind.name()
+            );
+        }
+    }
+
+    /// On the exact-duplicate-block dictionary the *coarse* level must
+    /// do the certifying, and the per-level counters must reconcile
+    /// with the aggregates.
+    #[test]
+    fn hierarchy_coarse_level_certifies_on_clustered_dictionary() {
+        use super::super::ScreenConfig;
+        use crate::linalg::Mat;
+        let mut g = Gen::for_case(78, 0);
+        let (m, n, block) = (8usize, 64usize, 16usize);
+        let mut cols = Vec::with_capacity(m * n);
+        for _ in 0..(n / block) {
+            let mut base = g.vec_normal(m);
+            let nb = linalg::norm2(&base).max(1e-9);
+            for v in &mut base {
+                *v /= nb;
+            }
+            for _ in 0..block {
+                cols.extend_from_slice(&base);
+            }
+        }
+        let a = Mat::from_col_major(m, n, cols);
+        let y = g.observation(m);
+        let mut aty = vec![0.0; n];
+        linalg::gemv_t(&a, &y, &mut aty);
+        let lam = 0.9 * linalg::norm_inf(&aty).max(1e-9);
+        let p = LassoProblem::new(a, y, lam);
+        let x = vec![0.0; p.n()];
+        let ev = p.eval(&x);
+        let region =
+            SafeRegion::build(RegionKind::StaticSphere, &p, &x, &ev);
+        let state = ScreeningState::new(p.n());
+        let mut flops = FlopCounter::new();
+        let base = ScreeningEngine::new()
+            .compute_keep(
+                &region,
+                &p,
+                &state,
+                &ev.atr,
+                &mut flops,
+                &ParContext::sequential(),
+            )
+            .to_vec();
+        assert!(base.iter().any(|&k| !k), "setup: nothing screened");
+        // Coarse level = the duplicate block size, fine level inside.
+        let mut hier = ScreeningEngine::with_config(
+            ScreenConfig::hierarchical(&[block, 4]),
+        );
+        let mask = hier
+            .compute_keep(
+                &region,
+                &p,
+                &state,
+                &ev.atr,
+                &mut flops,
+                &ParContext::sequential(),
+            )
+            .to_vec();
+        assert_eq!(mask, base, "hierarchical mask diverged");
+        let stats = hier.group_stats();
+        assert_eq!(stats.rounds, 1);
+        assert_eq!(stats.num_levels, 2);
+        assert_eq!(stats.per_level[0].group_size, block);
+        assert_eq!(stats.per_level[1].group_size, 4);
+        assert!(
+            stats.per_level[0].atoms_certified > 0,
+            "coarse level certified nothing: {stats:?}"
+        );
+        // Aggregates are the per-level sums.
+        assert_eq!(
+            stats.atoms_certified,
+            stats
+                .levels()
+                .iter()
+                .map(|l| l.atoms_certified)
+                .sum::<usize>()
+        );
+        assert_eq!(
+            stats.groups_tested,
+            stats.levels().iter().map(|l| l.groups_tested).sum::<usize>()
+        );
+        // The cumulative fraction is non-increasing in level depth and
+        // lands on the aggregate tested fraction.
+        let f0 = stats.tested_fraction_through(0);
+        let f1 = stats.tested_fraction_through(1);
+        assert!(f0 <= 1.0 && f1 <= f0);
+        assert_eq!(f1, stats.tested_fraction());
+        assert!(stats.tested_fraction() < 1.0);
+    }
+
+    #[test]
+    fn per_level_fraction_helpers() {
+        let mut s = GroupPassStats::default();
+        // Untouched stats read as "everything tested".
+        assert_eq!(s.tested_fraction(), 1.0);
+        assert_eq!(s.tested_fraction_through(0), 1.0);
+        assert!(s.levels().is_empty());
+        s.num_levels = 2;
+        s.per_level[0] = GroupLevelStats {
+            group_size: 16,
+            groups_tested: 4,
+            groups_screened: 2,
+            atoms_certified: 32,
+        };
+        s.per_level[1] = GroupLevelStats {
+            group_size: 4,
+            groups_tested: 6,
+            groups_screened: 2,
+            atoms_certified: 8,
+        };
+        s.atoms_certified = 40;
+        s.atoms_tested = 60;
+        assert_eq!(s.tested_fraction(), 0.6);
+        assert_eq!(s.tested_fraction_through(0), 0.68);
+        assert_eq!(s.tested_fraction_through(1), 0.6);
+        // Past-the-end level clamps to the last.
+        assert_eq!(s.tested_fraction_through(7), 0.6);
+        assert_eq!(s.levels().len(), 2);
     }
 
     #[test]

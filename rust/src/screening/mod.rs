@@ -15,7 +15,13 @@
 
 pub mod engine;
 
-pub use engine::{GroupPassStats, ScreeningEngine};
+pub use engine::{GroupLevelStats, GroupPassStats, ScreeningEngine};
+
+/// Maximum depth of a hierarchical grouping (coarse → fine levels
+/// before the implicit per-atom level).  Fixed so the policy and its
+/// stats stay `Copy` — three explicit levels on top of the atom level
+/// is already one more than the ROADMAP's 1024 → 64 → atom shape.
+pub const MAX_GROUP_LEVELS: usize = 3;
 
 /// Whether (and how) screening rounds run joint **group tests** before
 /// falling back to per-atom tests (see [`engine`] and
@@ -33,6 +39,30 @@ pub enum GroupingPolicy {
     /// (`group = j / group_size`) — natural clusters for the shifted
     /// Toeplitz/convolutional dictionary family.
     Contiguous { group_size: usize },
+    /// A coarse-to-fine stack of contiguous block sizes (e.g.
+    /// 1024 → 64 → atom): one coarse test can certify a thousand atoms,
+    /// and a failed coarse test descends to the next level instead of
+    /// falling straight to per-atom work
+    /// ([`crate::problem::ClusterHierarchy`]).  `sizes[..len]` holds
+    /// the strictly decreasing level sizes, coarsest first (fixed-size
+    /// storage keeps the policy `Copy`); the slots beyond `len` are 0
+    /// and ignored.
+    Hierarchical { sizes: [usize; MAX_GROUP_LEVELS], len: usize },
+}
+
+impl GroupingPolicy {
+    /// The explicit level sizes, coarsest first — empty for
+    /// [`Disabled`](Self::Disabled), one entry for
+    /// [`Contiguous`](Self::Contiguous).
+    pub fn level_sizes(&self) -> &[usize] {
+        match self {
+            GroupingPolicy::Disabled => &[],
+            GroupingPolicy::Contiguous { group_size } => {
+                std::slice::from_ref(group_size)
+            }
+            GroupingPolicy::Hierarchical { sizes, len } => &sizes[..*len],
+        }
+    }
 }
 
 impl Default for GroupingPolicy {
@@ -54,6 +84,13 @@ impl ScreenConfig {
     /// enough that Toeplitz shift clusters stay tight.
     pub const DEFAULT_GROUP_SIZE: usize = 64;
 
+    /// Default level sizes of `--group-hierarchy`: a coarse 1024-block
+    /// level certifying thousands of atoms per test over the fine
+    /// [`DEFAULT_GROUP_SIZE`](Self::DEFAULT_GROUP_SIZE) level —
+    /// the ROADMAP's 1024 → 64 → atom shape.
+    pub const DEFAULT_HIERARCHY: [usize; 2] =
+        [1024, Self::DEFAULT_GROUP_SIZE];
+
     /// Group screening on, with contiguous blocks of `group_size`
     /// (clamped to ≥ 1) atoms.
     pub fn grouped(group_size: usize) -> Self {
@@ -61,6 +98,34 @@ impl ScreenConfig {
             grouping: GroupingPolicy::Contiguous {
                 group_size: group_size.max(1),
             },
+        }
+    }
+
+    /// Hierarchical group screening over the given level sizes
+    /// (any order / duplicates — sanitized to a strictly decreasing
+    /// coarse-to-fine list via
+    /// [`ClusterHierarchy::sanitize_sizes`]).  An empty (or
+    /// all-degenerate) list falls back to the flat default-size
+    /// grouping rather than silently disabling screening structure.
+    ///
+    /// [`ClusterHierarchy::sanitize_sizes`]:
+    ///     crate::problem::ClusterHierarchy::sanitize_sizes
+    pub fn hierarchical(level_sizes: &[usize]) -> Self {
+        let clean =
+            crate::problem::ClusterHierarchy::sanitize_sizes(level_sizes);
+        match clean.len() {
+            0 => Self::grouped(Self::DEFAULT_GROUP_SIZE),
+            1 => Self::grouped(clean[0]),
+            _ => {
+                let mut sizes = [0usize; MAX_GROUP_LEVELS];
+                sizes[..clean.len()].copy_from_slice(&clean);
+                ScreenConfig {
+                    grouping: GroupingPolicy::Hierarchical {
+                        sizes,
+                        len: clean.len(),
+                    },
+                }
+            }
         }
     }
 }
@@ -204,5 +269,36 @@ mod tests {
     fn retain_wrong_len_panics() {
         let mut st = ScreeningState::new(3);
         st.retain(&[true]);
+    }
+
+    #[test]
+    fn hierarchical_config_sanitizes() {
+        // Two clean levels.
+        let c = ScreenConfig::hierarchical(&[1024, 64]);
+        assert_eq!(c.grouping.level_sizes(), &[1024, 64]);
+        // Unordered + duplicate input sanitizes; single survivor
+        // collapses to the flat grouping.
+        let c = ScreenConfig::hierarchical(&[64, 64]);
+        assert_eq!(
+            c.grouping,
+            GroupingPolicy::Contiguous { group_size: 64 }
+        );
+        // Empty falls back to the flat default size.
+        let c = ScreenConfig::hierarchical(&[]);
+        assert_eq!(
+            c.grouping,
+            GroupingPolicy::Contiguous {
+                group_size: ScreenConfig::DEFAULT_GROUP_SIZE
+            }
+        );
+        // Overlong lists keep the finest MAX_GROUP_LEVELS sizes.
+        let c = ScreenConfig::hierarchical(&[4096, 1024, 256, 64]);
+        assert_eq!(c.grouping.level_sizes(), &[1024, 256, 64]);
+        // Policy accessors for the other variants.
+        assert_eq!(GroupingPolicy::Disabled.level_sizes(), &[] as &[usize]);
+        assert_eq!(
+            ScreenConfig::grouped(8).grouping.level_sizes(),
+            &[8]
+        );
     }
 }

@@ -1,7 +1,9 @@
 //! Parity tests for the joint (grouped) screening pass: turning
-//! `ScreenConfig::grouped` on — at any group size, on any thread
-//! count, over either dictionary store, under any compaction policy —
-//! must be **bitwise invisible** in the `SolveReport`, flops included.
+//! `ScreenConfig::grouped` — or the hierarchical
+//! `ScreenConfig::hierarchical` — on, at any group size or level-size
+//! list, on any thread count, over either dictionary store, under any
+//! compaction policy, must be **bitwise invisible** in the
+//! `SolveReport`, flops included.
 //!
 //! This is the safety net for the group-bound design promise: a group
 //! test only ever *certifies* atoms the flat per-atom pass would also
@@ -254,4 +256,122 @@ fn grouped_flop_totals_match_flat_exactly() {
     let flat = solve(&p, &mk(ScreenConfig::default()));
     let grouped = solve(&p, &mk(ScreenConfig::grouped(32)));
     assert_eq!(flat.flops, grouped.flops, "flop meter saw the grouping");
+}
+
+/// The hierarchical acceptance-level guarantee: for every solver and
+/// thread count, the hierarchical report equals both the flat and the
+/// flat-grouped reports bit for bit — the three modes are one solve.
+#[test]
+fn hierarchical_solve_reports_bitwise_match_flat_and_grouped() {
+    let (pd, _) = toeplitz_pair(400, 256, 937);
+    for kind in [SolverKind::Fista, SolverKind::Ista, SolverKind::Cd] {
+        let mk = |par: ParContext, screen: ScreenConfig| SolverConfig {
+            kind,
+            budget: fixed_iters(40),
+            region: Some(RegionKind::HolderDome),
+            par,
+            screen,
+            ..Default::default()
+        };
+        let base = solve(
+            &pd,
+            &mk(ParContext::sequential(), ScreenConfig::default()),
+        );
+        assert!(base.screened > 0, "{kind:?}: screening never fired");
+        let grouped = solve(
+            &pd,
+            &mk(ParContext::sequential(), ScreenConfig::grouped(16)),
+        );
+        base.assert_bitwise_eq(&grouped, &format!("grouped {kind:?}"));
+        for threads in [1usize, 8] {
+            let rep = solve(
+                &pd,
+                &mk(
+                    ParContext::new_pool(threads, 1),
+                    ScreenConfig::hierarchical(&[128, 16]),
+                ),
+            );
+            base.assert_bitwise_eq(
+                &rep,
+                &format!("hierarchical {kind:?} {threads}t"),
+            );
+        }
+    }
+}
+
+/// Hierarchical grouping composes with the CSC store: a hierarchical
+/// CSC solve matches the flat dense solve of the same matrix bitwise.
+#[test]
+fn hierarchical_csc_solve_matches_flat_dense() {
+    let (pd, pc) = toeplitz_pair(400, 192, 941);
+    let mk = |screen: ScreenConfig, par: ParContext| SolverConfig {
+        kind: SolverKind::Fista,
+        budget: fixed_iters(40),
+        region: Some(RegionKind::HolderDome),
+        screen,
+        par,
+        ..Default::default()
+    };
+    let base =
+        solve(&pd, &mk(ScreenConfig::default(), ParContext::sequential()));
+    assert!(base.screened > 0, "screening never fired");
+    for threads in [1usize, 8] {
+        let rep = solve(
+            &pc,
+            &mk(
+                ScreenConfig::hierarchical(&[96, 16]),
+                ParContext::new_pool(threads, 1),
+            ),
+        );
+        base.assert_bitwise_eq(
+            &rep,
+            &format!("hierarchical csc {threads}t"),
+        );
+    }
+}
+
+/// Degenerate level shapes are still bitwise invisible: a coarsest
+/// level swallowing the dictionary (or more), a finest level of one
+/// atom per group, the maximum three levels, and a list that
+/// sanitizes down to a single (flat) level.
+#[test]
+fn degenerate_hierarchy_shapes_are_bitwise_invisible() {
+    let p = gaussian(947, 40, 300, 0.7);
+    let n = p.n();
+    let mk = |screen: ScreenConfig| SolverConfig {
+        kind: SolverKind::Ista,
+        budget: Budget::gap(1e-10),
+        region: Some(RegionKind::HolderDome),
+        screen,
+        ..Default::default()
+    };
+    let base = solve(&p, &mk(ScreenConfig::default()));
+    assert!(base.screened > 0, "screening never fired");
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![n, 1],
+        vec![2 * n, 64],
+        vec![2 * n, n, 64],
+        vec![64, 64, 64], // collapses to one flat level
+        vec![17, 5],      // sizes that do not divide each other
+    ];
+    for shape in &shapes {
+        let rep = solve(&p, &mk(ScreenConfig::hierarchical(shape)));
+        base.assert_bitwise_eq(&rep, &format!("hierarchy {shape:?}"));
+    }
+}
+
+/// And the flop meter cannot tell the hierarchy apart either.
+#[test]
+fn hierarchical_flop_totals_match_flat_exactly() {
+    let p = gaussian(953, 30, 200, 0.6);
+    let mk = |screen: ScreenConfig| SolverConfig {
+        kind: SolverKind::Fista,
+        budget: fixed_iters(25),
+        region: Some(RegionKind::GapDome),
+        screen,
+        ..Default::default()
+    };
+    let flat = solve(&p, &mk(ScreenConfig::default()));
+    let hier = solve(&p, &mk(ScreenConfig::hierarchical(&[64, 8])));
+    assert_eq!(flat.flops, hier.flops, "flop meter saw the hierarchy");
 }

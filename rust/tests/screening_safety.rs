@@ -170,6 +170,92 @@ fn group_screening_is_safe_on_clustered_toeplitz() {
     }
 }
 
+/// Hierarchical twin of the group-screening grids: a coarse-level
+/// certification is two dominance steps away from the per-atom test
+/// (coarse group bound ≥ fine group bound ≥ member bound), so the
+/// never-screens-the-final-support bar must hold across solvers,
+/// regions and level shapes — Gaussian (loose clusters) and Toeplitz
+/// (tight shift clusters, the dangerous direction) both.
+#[test]
+fn hierarchical_screening_never_screens_the_final_support() {
+    let mut cfg = InstanceConfig::paper(DictKind::Gaussian, 0.5);
+    cfg.m = 30;
+    cfg.n = 100;
+    let p = generate(&cfg, 4).problem;
+    let support = reference_support(&p, 1e-12, 1e-4);
+    assert!(!support.is_empty(), "degenerate instance (empty support)");
+    let shapes: [&[usize]; 3] = [&[64, 8], &[200, 25, 5], &[100, 1]];
+    for kind in SOLVERS {
+        for region in RegionKind::ALL {
+            for shape in shapes {
+                let rep = solve(
+                    &p,
+                    &SolverConfig {
+                        kind,
+                        budget: Budget::gap(1e-10),
+                        region: Some(region),
+                        screen: ScreenConfig::hierarchical(shape),
+                        ..Default::default()
+                    },
+                );
+                assert_eq!(
+                    rep.stop,
+                    StopReason::Converged,
+                    "{} + {} hierarchical({shape:?})",
+                    kind.name(),
+                    region.name()
+                );
+                for &i in &support {
+                    assert!(
+                        rep.x[i] != 0.0,
+                        "{} + {} hierarchical({shape:?}) screened \
+                         support atom {i}",
+                        kind.name(),
+                        region.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// ... and on the clustered Toeplitz dictionary, where coarse tests
+/// genuinely certify.
+#[test]
+fn hierarchical_screening_is_safe_on_clustered_toeplitz() {
+    let mut cfg = InstanceConfig::paper(DictKind::Toeplitz, 0.8);
+    cfg.m = 100;
+    cfg.n = 120;
+    let p = generate(&cfg, 3).problem;
+    let support = reference_support(&p, 1e-10, 1e-3);
+    assert!(!support.is_empty(), "degenerate instance (empty support)");
+    for region in RegionKind::ALL {
+        let rep = solve(
+            &p,
+            &SolverConfig {
+                budget: Budget::gap(1e-9),
+                region: Some(region),
+                screen: ScreenConfig::hierarchical(&[32, 8]),
+                ..Default::default()
+            },
+        );
+        assert_eq!(
+            rep.stop,
+            StopReason::Converged,
+            "{} hierarchical([32, 8]) on toeplitz",
+            region.name()
+        );
+        for &i in &support {
+            assert!(
+                rep.x[i] != 0.0,
+                "{} hierarchical([32, 8]) screened toeplitz support \
+                 atom {i}",
+                region.name()
+            );
+        }
+    }
+}
+
 #[test]
 fn no_region_screens_the_support_randomized() {
     // Random shapes and λ via the in-tree property runner.  (Gaussian
